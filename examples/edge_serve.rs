@@ -1,0 +1,84 @@
+//! Edge-serving demo: batched next-token inference over the INT-code
+//! deployment artifact (`fwd_logits_q`, Pallas qmatmul kernel), with a
+//! client thread firing requests through an mpsc queue and the batcher
+//! padding partial batches — the paper's motivating deployment scenario.
+//!
+//! ```bash
+//! cargo run --release --offline --example edge_serve -- 96
+//! ```
+
+use anyhow::Result;
+use faquant::config::RunConfig;
+use faquant::coordinator::Pipeline;
+use faquant::eval::{calib_ids, canonical_tokenizer};
+use faquant::runtime::Runtime;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut cfg = RunConfig::new("pico")?;
+    cfg.train_steps = 100;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    let (qm, _) = pipe.quantize(&params, Some(&calib))?;
+    let (packed, fp) = qm.compression();
+    println!(
+        "quantized model: {} KiB packed ({:.2}x smaller than fp32)",
+        packed / 1024,
+        fp as f32 / packed as f32
+    );
+
+    // Client side: one producer thread enqueues token sequences.
+    let tok = canonical_tokenizer(&cfg.model);
+    let ids = calib_ids(&cfg.model, &tok, n_requests + 8, 31337);
+    let seqs = faquant::corpus::Batcher::new(1, cfg.model.seq).eval_batches(&ids)?;
+    let (tx, rx) = mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..n_requests {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(faquant::serve::Request {
+            tokens: seqs[i % seqs.len()].data().to_vec(),
+            respond: rtx,
+        })?;
+        responders.push(rrx);
+    }
+    drop(tx); // close the queue: server drains and exits
+
+    let report = faquant::serve::serve_requests(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        rx,
+        Duration::from_millis(2),
+    )?;
+
+    // Every client sees its own next-token distribution.
+    let mut answered = 0;
+    for r in responders {
+        if let Ok(resp) = r.recv() {
+            assert_eq!(resp.next_logits.len(), cfg.model.vocab);
+            assert!(resp.done_at >= resp.queued_at);
+            answered += 1;
+        }
+    }
+    println!(
+        "answered {answered}/{} | {} batches, mean fill {:.0}% | \
+         p50 {:.2} ms, p95 {:.2} ms | {:.1} req/s",
+        report.requests,
+        report.batches,
+        report.mean_batch_fill * 100.0,
+        report.p50_ms,
+        report.p95_ms,
+        report.throughput_rps
+    );
+    Ok(())
+}

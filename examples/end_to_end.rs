@@ -1,0 +1,138 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real small workload:
+//!   1. trains a transformer LM for a few hundred steps via the AOT
+//!      `train_step` artifact (L2 fwd/bwd + AdamW), logging the loss curve;
+//!   2. calibrates on the captured activations (L1 absmean kernel on-graph);
+//!   3. quantizes with RTN / AWQ / FAQ (L3 grid search over the Pallas
+//!      `scaled_fakequant` loss artifact);
+//!   4. evaluates perplexity on both synthetic corpora + all six zero-shot
+//!      suites per method (the paper's Table-1 row for this model);
+//!   5. serves batched requests through the INT-code `fwd_logits_q`
+//!      deployment artifact (L1 qmatmul kernel), reporting latency.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example end_to_end
+//! ```
+//! Results are printed as markdown and recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use faquant::benchkit::{f4, Table};
+use faquant::config::{Method, RunConfig};
+use faquant::coordinator::Pipeline;
+use faquant::eval::{canonical_tokenizer, eval_all};
+use faquant::runtime::Runtime;
+use faquant::train::{ensure_checkpoint, fit_tokenizer, train};
+use std::path::Path;
+use std::time::Duration;
+
+const MODEL: &str = "nano";
+const STEPS: usize = 400;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut cfg = RunConfig::new(MODEL)?;
+    cfg.train_steps = STEPS;
+    cfg.eval_seqs = 16;
+    cfg.task_items = 32;
+
+    // ---- 1. train (or show the cached curve by retraining a stub) ------
+    println!("## end-to-end: {MODEL} ({} params)\n", cfg.model.param_count());
+    let outcome = ensure_checkpoint(&rt, &cfg.model, &cfg.runs_dir, STEPS, 17)?;
+    if outcome.cached {
+        println!("checkpoint cached; sampling a fresh 40-step curve for the log:");
+        let init = faquant::model::Params::init(&cfg.model, 17);
+        let (_tok, ids) = fit_tokenizer(&cfg.model, 40);
+        let (_p, curve) = train(&rt, &cfg.model, &init, &ids, 40, 10)?;
+        for (s, l) in curve {
+            println!("  step {s:>4}  loss {l:.4}");
+        }
+    } else {
+        println!("loss curve ({} steps):", STEPS);
+        for (s, l) in &outcome.curve {
+            println!("  step {s:>4}  loss {l:.4}");
+        }
+    }
+    let params = outcome.params;
+
+    // ---- 2. calibrate ---------------------------------------------------
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (calib, secs) = pipe.calibrate(&params)?;
+    println!("\ncalibration: N={} seqs in {secs:.1}s", cfg.calib_seqs);
+
+    // ---- 3+4. quantize with each method and evaluate --------------------
+    let tok = canonical_tokenizer(&cfg.model);
+    let mut table = Table::new(
+        &format!("{MODEL} @ 3-bit (group {})", cfg.quant.group),
+        &[
+            "Quant", "wikitext2", "c4", "arc_challenge", "hellaswag", "winogrande",
+            "arc_easy", "boolq", "piqa",
+        ],
+    );
+    let mut faq_model = None;
+    for method in [Method::Fp, Method::Rtn, Method::Awq, Method::Faq] {
+        let eval_params = if method == Method::Fp {
+            params.clone()
+        } else {
+            let mut c = cfg.clone();
+            c.quant.method = method;
+            let p = Pipeline::new(&rt, c);
+            let (qm, _) = p.quantize(&params, Some(&calib))?;
+            let fq = qm.fq_params.clone();
+            if method == Method::Faq {
+                faq_model = Some(qm);
+            }
+            fq
+        };
+        let row = eval_all(&rt, &cfg.model, &eval_params, &tok, cfg.eval_seqs, cfg.task_items)?;
+        let mut cells = vec![method.name().to_string(), f4(row.ppl_wiki), f4(row.ppl_c4)];
+        for (_, acc) in &row.accs {
+            cells.push(f4(*acc));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.markdown());
+
+    // ---- 5. serve through the quantized deployment artifact -------------
+    let qm = faq_model.expect("FAQ ran");
+    let (packed, fp) = qm.compression();
+    println!(
+        "deployment bundle: {} KiB packed vs {} KiB fp32 ({:.2}x)",
+        packed / 1024,
+        fp / 1024,
+        fp as f32 / packed as f32
+    );
+    let ids = faquant::eval::calib_ids(&cfg.model, &tok, 40, 4242);
+    let seqs = faquant::corpus::Batcher::new(1, cfg.model.seq).eval_batches(&ids)?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut resp = Vec::new();
+    for i in 0..32 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(faquant::serve::Request {
+            tokens: seqs[i % seqs.len()].data().to_vec(),
+            respond: rtx,
+        })?;
+        resp.push(rrx);
+    }
+    drop(tx);
+    let rep = faquant::serve::serve_requests(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        rx,
+        Duration::from_millis(5),
+    )?;
+    let ok = resp.into_iter().filter(|r| r.recv().is_ok()).count();
+    println!(
+        "served {ok}/{} requests, {} batches (fill {:.0}%), p50 {:.1} ms p95 {:.1} ms, {:.1} req/s",
+        rep.requests,
+        rep.batches,
+        rep.mean_batch_fill * 100.0,
+        rep.p50_ms,
+        rep.p95_ms,
+        rep.throughput_rps
+    );
+    println!("\nend_to_end OK — all three layers composed.");
+    Ok(())
+}

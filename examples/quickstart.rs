@@ -1,0 +1,55 @@
+//! Quickstart: quantize a tiny trained LM with FAQ in ~10 seconds.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Walks the full public API surface once: runtime -> pipeline ->
+//! checkpoint -> calibration -> FAQ quantization -> perplexity eval.
+
+use anyhow::Result;
+use faquant::config::{Method, RunConfig};
+use faquant::coordinator::Pipeline;
+use faquant::runtime::Runtime;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifact registry + PJRT CPU client.
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    println!("platform: {}", rt.platform());
+
+    // 2. Configure a run: pico model, FAQ at 3 bits, small budgets.
+    let mut cfg = RunConfig::new("pico")?;
+    cfg.train_steps = 100;
+    cfg.eval_seqs = 8;
+    cfg.task_items = 16;
+    cfg.quant.method = Method::Faq;
+    cfg.quant.bits = 3;
+
+    // 3. Run the pipeline: checkpoint -> calibrate -> quantize -> eval.
+    let pipe = Pipeline::new(&rt, cfg);
+    let out = pipe.run()?;
+
+    let qm = out.quantized.expect("FAQ quantizes");
+    let (packed, fp) = qm.compression();
+    println!("\n== quickstart result ==");
+    println!("mean reconstruction loss: {:.4e}", qm.mean_loss());
+    println!(
+        "packed weights: {} KiB (fp32 {} KiB, {:.2}x smaller)",
+        packed / 1024,
+        fp / 1024,
+        fp as f32 / packed as f32
+    );
+    for l in qm.linears.iter().take(4) {
+        println!(
+            "  blk{}.{:<5} alpha={:.2} window={} gamma={:.2} loss={:.3e}",
+            l.block, l.role, l.alpha, l.window_used, l.gamma_used, l.loss
+        );
+    }
+    let row = out.eval.expect("pipeline evaluates");
+    println!(
+        "perplexity: synth-wikitext2 {:.3}, synth-c4 {:.3}",
+        row.ppl_wiki, row.ppl_c4
+    );
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: jax entrypoints -> artifacts/<cfg>/<name>.hlo.txt + manifest.
+
+HLO *text* (NOT `lowered.compile()` / proto `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the rust `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Incremental: a sha256 over python/compile/**/*.py and the lowering
+parameters is stored in artifacts/.srchash — if unchanged and every
+expected file exists, the build is a no-op (so `make artifacts` is cheap
+on the rust iteration loop).
+
+The manifest (artifacts/manifest.txt) is a line-based format parsed by
+rust/src/runtime/registry.rs:
+    config <name> key=value ...
+    param <cfg> <idx> <name> <d0>x<d1>...
+    artifact <cfg> <entry> <relpath> nargs=<n> nouts=<n>
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import pathlib
+import sys
+
+import jax
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def src_hash(params: str) -> str:
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    h.update(params.encode())
+    return h.hexdigest()
+
+
+def lower_one(fn, arg_specs) -> str:
+    # keep_unused=True: the artifact ABI is the canonical parameter list —
+    # entrypoints like fwd_capture deliberately ignore some params (e.g.
+    # lm_head) and the rust side always passes the full set.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*arg_specs))
+
+
+def build(out_dir: pathlib.Path, cfg_names, group: int, loss_rows: int, force: bool) -> None:
+    params = f"configs={','.join(cfg_names)};group={group};loss_rows={loss_rows};v3"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    hash_file = out_dir / ".srchash"
+    manifest_file = out_dir / "manifest.txt"
+    want = src_hash(params)
+
+    manifest = [
+        "# faquant artifact manifest v1",
+        f"group {group}",
+        f"loss_rows {loss_rows}",
+    ]
+    expected = [manifest_file]
+    plans = []  # (cfg_name, entry, relpath, fn, specs)
+    for name in cfg_names:
+        cfg = M.CONFIGS[name]
+        manifest.append(
+            f"config {cfg.name} n_layer={cfg.n_layer} d_model={cfg.d_model} "
+            f"n_head={cfg.n_head} d_ff={cfg.d_ff} vocab={cfg.vocab} "
+            f"seq={cfg.seq} batch={cfg.batch}"
+        )
+        for idx, (pname, shape) in enumerate(M.param_specs(cfg)):
+            dims = "x".join(str(d) for d in shape) if shape else "scalar"
+            manifest.append(f"param {cfg.name} {idx} {pname} {dims}")
+        for entry, fn, specs in M.entrypoints(cfg, group=group, loss_rows=loss_rows):
+            rel = f"{cfg.name}/{entry}.hlo.txt"
+            expected.append(out_dir / rel)
+            plans.append((cfg.name, entry, rel, fn, specs))
+            manifest.append(f"artifact {cfg.name} {entry} {rel} nargs={len(specs)}")
+
+    if (
+        not force
+        and hash_file.exists()
+        and hash_file.read_text().strip() == want
+        and all(p.exists() for p in expected)
+    ):
+        print(f"artifacts up to date ({len(plans)} HLO modules)")
+        return
+
+    for cfg_name, entry, rel, fn, specs in plans:
+        path = out_dir / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        text = lower_one(fn, specs)
+        path.write_text(text)
+        print(f"  lowered {cfg_name}/{entry}: {len(specs)} args, {len(text)//1024} KiB")
+
+    manifest_file.write_text("\n".join(manifest) + "\n")
+    hash_file.write_text(want)
+    print(f"wrote {manifest_file} ({len(plans)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="pico,nano,tiny,small")
+    ap.add_argument("--group", type=int, default=64)
+    ap.add_argument("--loss-rows", type=int, default=512)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build(
+        pathlib.Path(args.out),
+        [c for c in args.configs.split(",") if c],
+        args.group,
+        args.loss_rows,
+        args.force,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the paper's compute hot-spots, plus the pure-jnp
+# reference oracles in ref.py. All kernels lower with interpret=True so the
+# surrounding jax program AOT-lowers to plain HLO runnable on CPU PJRT.
+from .absmean import absmean
+from .attention import attention
+from .fakequant import fakequant, scaled_fakequant
+from .qmatmul import qmatmul
+
+__all__ = ["absmean", "attention", "fakequant", "scaled_fakequant", "qmatmul"]

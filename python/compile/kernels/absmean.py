@@ -1,0 +1,45 @@
+"""Pallas kernel: per-channel mean of |a| over the row (token) dimension.
+
+Calibration statistics capture (phase A): every linear's input activation
+a [rows, n] is reduced to the per-channel mean magnitude that drives the
+AWQ/FAQ scale rule s = a_bar ** alpha.
+
+TPU mapping: rows stream HBM->VMEM in block_r chunks; the channel axis n
+stays whole on the lane dimension so the reduction is a column-sum VPU op
+accumulated into a VMEM-resident output row. Output aliasing across grid
+steps implements the accumulator (sequential grid on TPU guarantees
+ordering; interpret mode preserves it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _abssum_kernel(a_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(jnp.abs(a_ref[...]), axis=0, keepdims=True)
+
+
+def absmean(a: jnp.ndarray, *, block_r: int = 128) -> jnp.ndarray:
+    """Mean |a| per channel. a: [rows, n] -> [n]. rows % block_r == 0."""
+    rows, n = a.shape
+    block_r = min(block_r, rows)
+    assert rows % block_r == 0, f"rows={rows} % block_r={block_r} != 0"
+    grid = (rows // block_r,)
+    out = pl.pallas_call(
+        _abssum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), a.dtype),
+        interpret=True,
+    )(a)
+    return out[0] / jnp.float32(rows)

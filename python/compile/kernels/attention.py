@@ -1,0 +1,56 @@
+"""Pallas kernel: causal multi-head self-attention.
+
+The transformer forward's compute hot-spot. One grid step owns one
+(batch, head) pair with the full (T, head_dim) Q/K/V panels resident in
+VMEM — at T=128, hd<=64 that is 3 * 32 KiB, trivially VMEM-fit, so the
+FlashAttention streaming decomposition is unnecessary at these shapes
+(DESIGN.md §7); the QK^T and PV contractions hit the MXU directly and the
+softmax runs on the VPU over the lane-aligned T axis.
+
+Numerics: max-subtracted softmax in f32, additive -1e30 causal mask —
+bit-compatible with ref.ref_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0]  # [T, hd]
+    k = k_ref[0]
+    v = v_ref[0]
+    t = q.shape[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    logits = jnp.where(col <= row, logits, -1e30)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal MHA. q,k,v: [B, H, T, hd] -> [B, H, T, hd]."""
+    b, h, t, hd = q.shape
+    scale = 1.0 / float(hd) ** 0.5
+    qf = q.reshape(b * h, t, hd)
+    kf = k.reshape(b * h, t, hd)
+    vf = v.reshape(b * h, t, hd)
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, hd), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, hd)

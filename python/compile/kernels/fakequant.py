@@ -1,0 +1,78 @@
+"""Pallas kernel: asymmetric group fake-quantization of a weight matrix.
+
+This is the hot spot of the AWQ/FAQ calibration grid search: for every
+candidate alpha, the scaled weight `W * s` must be quantize-dequantized and
+the layer reconstruction loss evaluated. The kernel tiles W into
+(group, block_m) stripes so each grid step owns exactly one quantization
+group per output-column block.
+
+TPU mapping (DESIGN.md §7): the group axis (rows) streams HBM->VMEM one
+stripe at a time; the output-column axis sits on the 128-wide lane
+dimension so min/max/round are full-width VPU ops. A (group=32, bm=128)
+f32 tile is 16 KiB — far under VMEM, leaving room for double buffering.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(m: int, prefer: int = 128) -> int:
+    """Largest power-of-two block <= prefer that divides m (min 8)."""
+    b = prefer
+    while b > 8 and m % b != 0:
+        b //= 2
+    assert m % b == 0, f"no power-of-two block divides m={m}"
+    return b
+
+
+def _fakequant_kernel(w_ref, o_ref, *, qmax: float):
+    """One (group, block_m) stripe: asym quant-dequant along axis 0."""
+    w = w_ref[...]  # [group, bm]
+    lo = jnp.min(w, axis=0, keepdims=True)
+    hi = jnp.max(w, axis=0, keepdims=True)
+    delta = (hi - lo) / qmax
+    degen = delta <= 0.0
+    delta = jnp.where(degen, jnp.where(jnp.abs(lo) > 0.0, jnp.abs(lo), 1.0), delta)
+    z = jnp.round(-lo / delta)
+    q = jnp.clip(jnp.round(w / delta) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * delta
+
+
+def fakequant(w: jnp.ndarray, *, bits: int, group: int, block_m: int = 128) -> jnp.ndarray:
+    """Asymmetric group quant-dequant of w [n, m] along the input (row) dim.
+
+    Requires n % group == 0 and m % block_m == 0 (callers pick block_m to
+    divide m; model shapes are multiples of 64).
+    """
+    n, m = w.shape
+    assert n % group == 0, f"n={n} % group={group} != 0"
+    block_m = pick_block(m, prefer=block_m)
+    qmax = float(2**bits - 1)
+    grid = (n // group, m // block_m)
+    return pl.pallas_call(
+        functools.partial(_fakequant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((group, block_m), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((group, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), w.dtype),
+        interpret=True,
+    )(w)
+
+
+def scaled_fakequant(
+    w: jnp.ndarray, s: jnp.ndarray, *, bits: int, group: int, block_m: int = 128
+) -> jnp.ndarray:
+    """AWQ/FAQ weight transform: fakequant(W * diag(s)) / diag(s).
+
+    The row scaling and un-scaling are elementwise and fuse into the
+    surrounding HLO; the grouped min/max/round core runs in the kernel.
+    """
+    ws = w * s[:, None]
+    return fakequant(ws, bits=bits, group=group, block_m=block_m) / s[:, None]

@@ -1,0 +1,73 @@
+"""Pallas kernel: quantized linear — (a * inv_s) @ dequant(q).
+
+The deployed inference path (edge serving / quantized eval): weights live
+as low-bit integer codes plus per-(group, out-col) dequant params; the
+kernel dequantizes one (group, block_m) weight stripe into VMEM and feeds
+the MXU, so INT->FP conversion is hidden behind the systolic pipeline
+(DESIGN.md §7 — the TPU analogue of AWQ's fused CUDA INTxFP GEMM).
+
+Grid: (S/block_s, m/block_m, n/group). The k axis (quant groups) is the
+innermost sequential dimension; the f32 accumulator lives in the output
+block, initialized at k == 0. Each k step consumes exactly one quant group
+so delta/z are scalars-per-column, keeping the dequant a rank-1 VPU op.
+
+Codes are carried as f32 holding integer values: XLA CPU (and the MXU
+story) prefer f32 multiplies, and 2^bits-1 <= 15 is exactly representable.
+Packing to int3/int4 words is the rust store's job (quant/packing.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(a_ref, q_ref, d_ref, z_ref, is_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...] * is_ref[...]  # [bs, g] scaled activations
+    deq = (q_ref[...] - z_ref[...]) * d_ref[...]  # [g, bm] dequant stripe
+    o_ref[...] += jnp.dot(a, deq, preferred_element_type=jnp.float32)
+
+
+def qmatmul(
+    a: jnp.ndarray,
+    q: jnp.ndarray,
+    delta: jnp.ndarray,
+    z: jnp.ndarray,
+    inv_s: jnp.ndarray,
+    *,
+    group: int,
+    block_s: int = 128,
+    block_m: int = 128,
+) -> jnp.ndarray:
+    """Quantized matmul. a [S,n] f32; q [n,m] f32-coded ints; delta,z [n/g,m];
+    inv_s [n]. Returns [S, m] f32."""
+    from .fakequant import pick_block
+
+    s_rows, n = a.shape
+    n2, m = q.shape
+    assert n == n2 and n % group == 0
+    block_s = pick_block(s_rows, prefer=block_s)
+    block_m = pick_block(m, prefer=block_m)
+    grid = (s_rows // block_s, m // block_m, n // group)
+    inv_s2 = inv_s.reshape(1, n)
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((group, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, group), lambda i, j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s_rows, m), jnp.float32),
+        interpret=True,
+    )(a, q, delta, z, inv_s2)

@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package must
+match its `ref_*` counterpart to float32 tolerance (pytest + hypothesis in
+python/tests/). They are also used directly by model.py when a shape is too
+small/ragged to tile (the kernels require block-aligned shapes).
+
+Quantization convention (asymmetric, group-wise along the *input* dim):
+  W: [n, m]  (y = a @ W, input channels are rows)
+  groups of size g along n; each (group, output-column) pair has its own
+  step `delta` and integer zero-point `z`:
+      delta = (max - min) / (2^b - 1)
+      z     = round(-min / delta)
+      q     = clip(round(w / delta) + z, 0, 2^b - 1)
+      deq   = (q - z) * delta
+This mirrors AWQ's deployed INTxFP scheme (paper Sec. 2.1 uses the
+symmetric form for exposition; Sec. 3.1 states asymmetric is used).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_group_minmax(w: jnp.ndarray, group: int):
+    """Per-(group, out-col) min/max. w: [n, m] -> ([n//g, m], [n//g, m])."""
+    n, m = w.shape
+    assert n % group == 0, f"n={n} not divisible by group={group}"
+    wg = w.reshape(n // group, group, m)
+    return wg.min(axis=1), wg.max(axis=1)
+
+
+def ref_fakequant(w: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Asymmetric group quant-dequant of w [n, m] along input dim."""
+    n, m = w.shape
+    qmax = float(2**bits - 1)
+    lo, hi = ref_group_minmax(w, group)
+    delta = (hi - lo) / qmax
+    # Guard all-equal groups (delta == 0): pick delta = |lo| (or 1 if the
+    # group is all-zero) so the constant reconstructs exactly with integer
+    # codes: q = 0, z = round(-lo/delta) in {-1, 0, 1}.
+    degen = delta <= 0.0
+    delta = jnp.where(degen, jnp.where(jnp.abs(lo) > 0.0, jnp.abs(lo), 1.0), delta)
+    z = jnp.round(-lo / delta)
+    wg = w.reshape(n // group, group, m)
+    q = jnp.clip(jnp.round(wg / delta[:, None, :]) + z[:, None, :], 0.0, qmax)
+    deq = (q - z[:, None, :]) * delta[:, None, :]
+    return deq.reshape(n, m)
+
+
+def ref_scaled_fakequant(w: jnp.ndarray, s: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """AWQ/FAQ transform: fakequant(W * s) / s with per-input-channel s [n]."""
+    ws = w * s[:, None]
+    return ref_fakequant(ws, bits, group) / s[:, None]
+
+
+def ref_absmean(a: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel mean |a| over rows. a: [rows, n] -> [n]."""
+    return jnp.mean(jnp.abs(a), axis=0)
+
+
+def ref_quantize_ints(w: jnp.ndarray, bits: int, group: int):
+    """Integer-domain quantization: returns (q int [n,m], delta [n//g,m], z [n//g,m])."""
+    n, m = w.shape
+    qmax = float(2**bits - 1)
+    lo, hi = ref_group_minmax(w, group)
+    delta = (hi - lo) / qmax
+    degen = delta <= 0.0
+    delta = jnp.where(degen, jnp.where(jnp.abs(lo) > 0.0, jnp.abs(lo), 1.0), delta)
+    z = jnp.round(-lo / delta)
+    wg = w.reshape(n // group, group, m)
+    q = jnp.clip(jnp.round(wg / delta[:, None, :]) + z[:, None, :], 0.0, qmax)
+    return q.reshape(n, m), delta, z
+
+
+def ref_qmatmul(
+    a: jnp.ndarray,
+    q: jnp.ndarray,
+    delta: jnp.ndarray,
+    z: jnp.ndarray,
+    inv_s: jnp.ndarray,
+    group: int,
+) -> jnp.ndarray:
+    """Quantized linear: (a * inv_s) @ dequant(q).
+
+    a: [S, n] activations; q: [n, m] integer codes (stored as f32 or i8);
+    delta, z: [n//g, m]; inv_s: [n] reciprocal AWQ channel scale.
+    """
+    n, m = q.shape
+    qg = q.astype(jnp.float32).reshape(n // group, group, m)
+    deq = ((qg - z[:, None, :]) * delta[:, None, :]).reshape(n, m)
+    return (a * inv_s[None, :]) @ deq
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal multi-head attention. q,k,v: [B, H, T, hd] -> [B, H, T, hd]."""
+    _, _, t, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,387 @@
+"""L2: the transformer compute graphs, AOT-lowered to HLO text artifacts.
+
+GPT-style decoder-only LM family (S4 in DESIGN.md). Everything here runs
+at BUILD TIME only — `aot.py` lowers the jitted entrypoints once and the
+rust coordinator executes the resulting HLO on the PJRT CPU client.
+
+Entrypoints (shapes fixed per ModelCfg; see DESIGN.md §6):
+  fwd_logits    (params…, tokens[B,T])           -> logits[B,T,V]
+  fwd_capture   (params…, tokens[B,T])           -> per-role acts + absmean stats
+  fwd_logits_q  (qparams…, tokens[B,T])          -> logits via the qmatmul kernel
+  layer_loss    (a[S,n], w[n,m], s[n])           -> scalar recon loss (per role/bits)
+  train_step    (params…, m…, v…, step, tok[B,T+1]) -> updated state + loss
+
+Parameter convention: weights are [n_in, n_out] (y = a @ W); AWQ/FAQ scale
+vectors index the *input* channel (rows). The canonical flat parameter
+order is defined by `param_specs` and mirrored by rust/src/model/.
+
+Differentiability note: pallas_call has no VJP, so `train_step` uses the
+pure-jnp reference ops (ref.py) while the inference/capture graphs use the
+Pallas kernels; pytest asserts both paths agree (test_model.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import absmean, attention, qmatmul, scaled_fakequant
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Configs — must match rust/src/model/config.rs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    vocab: int
+    seq: int = 128
+    batch: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+
+CONFIGS: Dict[str, ModelCfg] = {
+    c.name: c
+    for c in [
+        ModelCfg("pico", n_layer=2, d_model=64, n_head=2, d_ff=256, vocab=256),
+        ModelCfg("nano", n_layer=4, d_model=128, n_head=4, d_ff=512, vocab=384),
+        ModelCfg("tiny", n_layer=6, d_model=192, n_head=6, d_ff=768, vocab=384),
+        ModelCfg("small", n_layer=8, d_model=256, n_head=8, d_ff=1024, vocab=512),
+    ]
+}
+
+# The four quantizable linear roles per block and their [n_in, n_out] shapes.
+ROLES = ("qkv", "o", "up", "down")
+
+
+def role_shape(cfg: ModelCfg, role: str) -> Tuple[int, int]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "qkv": (d, 3 * d),
+        "o": (d, d),
+        "up": (d, ff),
+        "down": (ff, d),
+    }[role]
+
+
+def param_specs(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical flat parameter order: (name, shape) — shared with rust."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for b in range(cfg.n_layer):
+        specs.append((f"blk{b}.ln1_g", (cfg.d_model,)))
+        specs.append((f"blk{b}.w_qkv", role_shape(cfg, "qkv")))
+        specs.append((f"blk{b}.w_o", role_shape(cfg, "o")))
+        specs.append((f"blk{b}.ln2_g", (cfg.d_model,)))
+        specs.append((f"blk{b}.w_up", role_shape(cfg, "up")))
+        specs.append((f"blk{b}.w_down", role_shape(cfg, "down")))
+    specs.append(("lnf_g", (cfg.d_model,)))
+    specs.append(("w_head", (cfg.d_model, cfg.vocab)))
+    return specs
+
+
+def unflatten(cfg: ModelCfg, flat: Tuple[jnp.ndarray, ...]) -> Dict[str, jnp.ndarray]:
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), f"{len(flat)} params != {len(specs)} specs"
+    return {name: arr for (name, _), arr in zip(specs, flat)}
+
+
+# --------------------------------------------------------------------------
+# Core ops
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _split_heads(x: jnp.ndarray, n_head: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_head, d // n_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def _block_fwd(cfg: ModelCfg, p: Dict[str, jnp.ndarray], b: int, x: jnp.ndarray, use_pallas: bool):
+    """One transformer block. Returns (x_out, role_inputs dict)."""
+    attn_fn = attention if use_pallas else ref.ref_attention
+    h = rmsnorm(x, p[f"blk{b}.ln1_g"])  # qkv_in
+    qkv = h @ p[f"blk{b}.w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q, k, v = (_split_heads(t, cfg.n_head) for t in (q, k, v))
+    att = _merge_heads(attn_fn(q, k, v))  # o_in
+    x = x + att @ p[f"blk{b}.w_o"]
+    h2 = rmsnorm(x, p[f"blk{b}.ln2_g"])  # up_in
+    u = jax.nn.gelu(h2 @ p[f"blk{b}.w_up"])  # down_in
+    x = x + u @ p[f"blk{b}.w_down"]
+    return x, {"qkv": h, "o": att, "up": h2, "down": u}
+
+
+def _forward(cfg: ModelCfg, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray, use_pallas: bool):
+    """Full forward. Returns (logits, list of per-block role inputs)."""
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    roles = []
+    for blk in range(cfg.n_layer):
+        x, r = _block_fwd(cfg, p, blk, x, use_pallas)
+        roles.append(r)
+    logits = rmsnorm(x, p["lnf_g"]) @ p["w_head"]
+    return logits, roles
+
+
+# --------------------------------------------------------------------------
+# Entrypoints
+# --------------------------------------------------------------------------
+
+
+def fwd_logits(cfg: ModelCfg, *args):
+    """(params…, tokens) -> (logits,). Inference graph with Pallas attention."""
+    tokens = args[-1]
+    p = unflatten(cfg, args[:-1])
+    logits, _ = _forward(cfg, p, tokens, use_pallas=True)
+    return (logits,)
+
+
+def fwd_capture(cfg: ModelCfg, *args):
+    """(params…, tokens) -> calibration capture.
+
+    Returns, in order:
+      acts_qkv  [L, R, d]   acts_o [L, R, d]   acts_up [L, R, d]
+      acts_down [L, R, ff]
+      stats_qkv [L, d]      stats_o [L, d]     stats_up [L, d]
+      stats_down[L, ff]
+    where R = B*T rows. Stats are per-channel mean |a| via the Pallas
+    absmean kernel — the inputs to the AWQ/FAQ scale rule.
+    """
+    tokens = args[-1]
+    p = unflatten(cfg, args[:-1])
+    _, roles = _forward(cfg, p, tokens, use_pallas=True)
+    outs = []
+    for role in ROLES:
+        acts = jnp.stack(
+            [r[role].reshape(-1, r[role].shape[-1]) for r in roles]
+        )  # [L, R, n]
+        outs.append(acts)
+    for role in ROLES:
+        stats = jnp.stack(
+            [absmean(r[role].reshape(-1, r[role].shape[-1])) for r in roles]
+        )  # [L, n]
+        outs.append(stats)
+    return tuple(outs)
+
+
+def layer_loss(a: jnp.ndarray, w: jnp.ndarray, s: jnp.ndarray, *, bits: int, group: int):
+    """Grid-search objective (paper eq. 3/7): MSE between the FP layer output
+    and the output with W quantized under channel scale s."""
+    y_fp = a @ w
+    wq = scaled_fakequant(w, s, bits=bits, group=group)
+    y_q = a @ wq
+    d = y_q - y_fp
+    return (jnp.mean(d * d),)
+
+
+def layer_loss_sweep(
+    a: jnp.ndarray, w: jnp.ndarray, scales: jnp.ndarray, *, bits: int, group: int
+):
+    """Whole-alpha-grid objective (§Perf): evaluates the recon loss for all
+    candidate scale vectors in ONE execution — scales [n_alpha, n] ->
+    losses [n_alpha]. Unrolled at trace time (pallas_call has no batching
+    rule); XLA fuses the shared a@w across candidates."""
+    y_fp = a @ w
+    losses = []
+    for i in range(scales.shape[0]):
+        wq = scaled_fakequant(w, scales[i], bits=bits, group=group)
+        d = a @ wq - y_fp
+        losses.append(jnp.mean(d * d))
+    return (jnp.stack(losses),)
+
+
+def fakequant_artifact(w: jnp.ndarray, s: jnp.ndarray, *, bits: int, group: int):
+    """Standalone scaled-fakequant for rust<->python bit-parity tests."""
+    return (scaled_fakequant(w, s, bits=bits, group=group),)
+
+
+def fwd_logits_q(cfg: ModelCfg, group: int, *args):
+    """Quantized-deployment forward: every block linear is executed by the
+    qmatmul Pallas kernel from integer codes + dequant params.
+
+    Flat arg order (mirrored by rust/src/runtime/registry.rs):
+      tok_emb, pos_emb,
+      per block: ln1_g, [q,delta,z,inv_s] x (qkv,o,up,down), ln2_g
+                 — i.e. ln1_g, qkv4, o4, ln2_g, up4, down4 —
+      lnf_g, w_head, tokens
+    """
+    it = iter(args)
+
+    def nxt():
+        return next(it)
+
+    tok_emb, pos_emb = nxt(), nxt()
+    blocks = []
+    for _ in range(cfg.n_layer):
+        ln1 = nxt()
+        qkv = tuple(nxt() for _ in range(4))
+        o = tuple(nxt() for _ in range(4))
+        ln2 = nxt()
+        up = tuple(nxt() for _ in range(4))
+        down = tuple(nxt() for _ in range(4))
+        blocks.append((ln1, qkv, o, ln2, up, down))
+    lnf_g, w_head, tokens = nxt(), nxt(), nxt()
+    rest = list(it)
+    assert not rest, f"{len(rest)} extra args to fwd_logits_q"
+
+    bsz, t = tokens.shape
+    d = cfg.d_model
+
+    def qlin(x2d, qp):
+        q, delta, z, inv_s = qp
+        return qmatmul(x2d, q, delta, z, inv_s, group=group)
+
+    x = tok_emb[tokens] + pos_emb[None, :t, :]
+    for ln1, qkvp, op, ln2, upp, downp in blocks:
+        h = rmsnorm(x, ln1)
+        qkv = qlin(h.reshape(bsz * t, d), qkvp).reshape(bsz, t, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(tt, cfg.n_head) for tt in (q, k, v))
+        att = _merge_heads(attention(q, k, v))
+        x = x + qlin(att.reshape(bsz * t, d), op).reshape(bsz, t, d)
+        h2 = rmsnorm(x, ln2)
+        u = jax.nn.gelu(qlin(h2.reshape(bsz * t, d), upp).reshape(bsz, t, cfg.d_ff))
+        x = x + qlin(u.reshape(bsz * t, cfg.d_ff), downp).reshape(bsz, t, d)
+    logits = rmsnorm(x, lnf_g) @ w_head
+    return (logits,)
+
+
+# --------------------------------------------------------------------------
+# Training (S5): fwd/bwd + AdamW, pure-jnp ops (differentiable)
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY, LR = 0.9, 0.95, 1e-8, 0.01, 3e-3
+
+
+def _loss_fn(cfg: ModelCfg, flat_params, tokens: jnp.ndarray):
+    """Next-token cross-entropy. tokens: [B, T+1] int32."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    p = unflatten(cfg, flat_params)
+    logits, _ = _forward(cfg, p, inp, use_pallas=False)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(cfg: ModelCfg, *args):
+    """(params… , m…, v…, step, tokens[B,T+1]) -> (params'…, m'…, v'…, loss)."""
+    n = len(param_specs(cfg))
+    params = args[:n]
+    ms = args[n : 2 * n]
+    vs = args[2 * n : 3 * n]
+    step, tokens = args[3 * n], args[3 * n + 1]
+
+    loss, grads = jax.value_and_grad(lambda fp: _loss_fn(cfg, fp, tokens))(params)
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_p, new_m, new_v = [], [], []
+    for (name, _), p, m, v, g in zip(param_specs(cfg), params, ms, vs, grads):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + ADAM_EPS)
+        decay = 0.0 if name.endswith("_g") or "emb" in name else WEIGHT_DECAY
+        p = p - LR * (upd + decay * p)
+        new_p.append(p)
+        new_m.append(m)
+        new_v.append(v)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (step, loss)
+
+
+# --------------------------------------------------------------------------
+# Shape specs for AOT lowering
+# --------------------------------------------------------------------------
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def fwd_arg_specs(cfg: ModelCfg):
+    return [f32(s) for _, s in param_specs(cfg)] + [i32((cfg.batch, cfg.seq))]
+
+
+def train_arg_specs(cfg: ModelCfg):
+    ps = [f32(s) for _, s in param_specs(cfg)]
+    return ps + ps + ps + [f32(())] + [i32((cfg.batch, cfg.seq + 1))]
+
+
+def qfwd_arg_specs(cfg: ModelCfg, group: int):
+    specs = [f32((cfg.vocab, cfg.d_model)), f32((cfg.seq, cfg.d_model))]
+    for _ in range(cfg.n_layer):
+        specs.append(f32((cfg.d_model,)))  # ln1_g
+        for role in ("qkv", "o"):
+            n, m = role_shape(cfg, role)
+            specs += [f32((n, m)), f32((n // group, m)), f32((n // group, m)), f32((n,))]
+        specs.append(f32((cfg.d_model,)))  # ln2_g
+        for role in ("up", "down"):
+            n, m = role_shape(cfg, role)
+            specs += [f32((n, m)), f32((n // group, m)), f32((n // group, m)), f32((n,))]
+    specs += [f32((cfg.d_model,)), f32((cfg.d_model, cfg.vocab))]
+    specs += [i32((cfg.batch, cfg.seq))]
+    return specs
+
+
+def layer_loss_arg_specs(cfg: ModelCfg, role: str, loss_rows: int):
+    n, m = role_shape(cfg, role)
+    return [f32((loss_rows, n)), f32((n, m)), f32((n,))]
+
+
+N_ALPHA = 20  # alpha-grid size baked into the sweep artifacts
+
+
+def entrypoints(cfg: ModelCfg, *, group: int, loss_rows: int, bits_list=(3, 4)):
+    """All (name, fn, arg_specs) triples to lower for one model config."""
+    eps = [
+        ("fwd_logits", functools.partial(fwd_logits, cfg), fwd_arg_specs(cfg)),
+        ("fwd_capture", functools.partial(fwd_capture, cfg), fwd_arg_specs(cfg)),
+        ("fwd_logits_q", functools.partial(fwd_logits_q, cfg, group), qfwd_arg_specs(cfg, group)),
+        ("train_step", functools.partial(train_step, cfg), train_arg_specs(cfg)),
+    ]
+    for role in ROLES:
+        n, m = role_shape(cfg, role)
+        for bits in bits_list:
+            eps.append(
+                (
+                    f"layer_loss_{role}_b{bits}",
+                    functools.partial(layer_loss, bits=bits, group=group),
+                    layer_loss_arg_specs(cfg, role, loss_rows),
+                )
+            )
+            eps.append(
+                (
+                    f"layer_loss_sweep_{role}_b{bits}",
+                    functools.partial(layer_loss_sweep, bits=bits, group=group),
+                    [f32((loss_rows, n)), f32((n, m)), f32((N_ALPHA, n))],
+                )
+            )
+    return eps

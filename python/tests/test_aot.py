@@ -1,0 +1,68 @@
+"""AOT lowering tests: artifact files, manifest format, incremental no-op."""
+
+import pathlib
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(out, ["pico"], group=64, loss_rows=128, force=True)
+    return out
+
+
+def test_all_files_exist(built):
+    cfg = M.CONFIGS["pico"]
+    for entry, _, _ in M.entrypoints(cfg, group=64, loss_rows=128):
+        p = built / "pico" / f"{entry}.hlo.txt"
+        assert p.exists(), entry
+        text = p.read_text()
+        assert "ENTRY" in text, f"{entry} is not HLO text"
+
+
+def test_manifest_structure(built):
+    lines = (built / "manifest.txt").read_text().splitlines()
+    kinds = {}
+    for line in lines:
+        if not line or line.startswith("#"):
+            continue
+        kinds.setdefault(line.split()[0], []).append(line)
+    assert kinds["group"][0] == "group 64"
+    assert kinds["loss_rows"][0] == "loss_rows 128"
+    assert len(kinds["config"]) == 1
+    # param count: 2 emb + 6/block + lnf + head
+    cfg = M.CONFIGS["pico"]
+    assert len(kinds["param"]) == 2 + 6 * cfg.n_layer + 2
+    assert len(kinds["artifact"]) == len(M.entrypoints(cfg, group=64, loss_rows=128))
+    # nargs recorded for every artifact
+    for a in kinds["artifact"]:
+        assert "nargs=" in a
+
+
+def test_incremental_noop(built, capsys):
+    aot.build(built, ["pico"], group=64, loss_rows=128, force=False)
+    out = capsys.readouterr().out
+    assert "up to date" in out
+
+
+def test_param_change_invalidates(built):
+    want_before = aot.src_hash("configs=pico;group=64;loss_rows=128;v3")
+    want_after = aot.src_hash("configs=pico;group=32;loss_rows=128;v3")
+    assert want_before != want_after
+
+
+def test_entrypoint_arity_matches_manifest(built):
+    cfg = M.CONFIGS["pico"]
+    lines = (built / "manifest.txt").read_text().splitlines()
+    recorded = {}
+    for line in lines:
+        if line.startswith("artifact "):
+            toks = line.split()
+            recorded[toks[2]] = int(toks[4].split("=")[1])
+    for entry, _, specs in M.entrypoints(cfg, group=64, loss_rows=128):
+        assert recorded[entry] == len(specs), entry

@@ -1,0 +1,181 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle in ref.py. Hypothesis
+sweeps shapes/dtypes/values; fixed seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import absmean, attention, fakequant, qmatmul, scaled_fakequant
+from compile.kernels import ref
+from compile.kernels.fakequant import pick_block
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def arr(r, shape, scale=1.0, offset=0.0):
+    return jnp.asarray(r.normal(offset, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fakequant
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_groups=st.integers(1, 8),
+    group=st.sampled_from([16, 32, 64]),
+    m=st.sampled_from([32, 64, 128, 192, 256]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fakequant_matches_ref(n_groups, group, m, bits, seed):
+    w = arr(rng(seed), (n_groups * group, m), scale=2.0)
+    got = fakequant(w, bits=bits, group=group)
+    want = ref.ref_fakequant(w, bits, group)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+    scale_mag=st.floats(0.1, 4.0),
+)
+def test_scaled_fakequant_matches_ref(bits, seed, scale_mag):
+    r = rng(seed)
+    w = arr(r, (128, 96), scale=1.5)
+    s = jnp.asarray((np.abs(r.normal(0, scale_mag, 128)) + 0.2).astype(np.float32))
+    got = scaled_fakequant(w, s, bits=bits, group=32)
+    want = ref.ref_scaled_fakequant(w, s, bits, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fakequant_idempotent():
+    """Quantizing an already-quantized matrix is a fixed point."""
+    w = arr(rng(7), (64, 64), scale=3.0)
+    once = ref.ref_fakequant(w, 4, 32)
+    twice = ref.ref_fakequant(once, 4, 32)
+    np.testing.assert_allclose(once, twice, rtol=1e-5, atol=1e-6)
+
+
+def test_fakequant_constant_group():
+    """All-equal groups (delta==0 guard) dequantize to the constant."""
+    w = jnp.full((32, 16), 0.7, dtype=jnp.float32)
+    got = fakequant(w, bits=3, group=32)
+    np.testing.assert_allclose(got, w, atol=1e-6)
+
+
+def test_fakequant_error_decreases_with_bits():
+    w = arr(rng(11), (256, 64), scale=1.0)
+    errs = [
+        float(jnp.mean((ref.ref_fakequant(w, b, 32) - w) ** 2)) for b in (2, 3, 4, 8)
+    ]
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_pick_block():
+    assert pick_block(256) == 128
+    assert pick_block(192) == 64
+    assert pick_block(64) == 64
+    assert pick_block(24) == 8
+
+
+# ------------------------------------------------------------------ absmean
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.sampled_from([128, 256, 512]),
+    n=st.sampled_from([16, 64, 96, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_absmean_matches_ref(rows, n, seed):
+    a = arr(rng(seed), (rows, n), scale=2.0, offset=0.3)
+    np.testing.assert_allclose(absmean(a), ref.ref_absmean(a), rtol=1e-5, atol=1e-6)
+
+
+def test_absmean_nonneg_and_zero():
+    a = jnp.zeros((128, 32))
+    assert float(jnp.max(absmean(a))) == 0.0
+    a2 = arr(rng(3), (128, 32))
+    assert float(jnp.min(absmean(a2))) >= 0.0
+
+
+# ------------------------------------------------------------------ qmatmul
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s_rows=st.sampled_from([64, 128]),
+    n_groups=st.integers(1, 4),
+    m=st.sampled_from([32, 64, 128]),
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(s_rows, n_groups, m, bits, seed):
+    r = rng(seed)
+    group = 32
+    n = n_groups * group
+    w = arr(r, (n, m), scale=1.2)
+    a = arr(r, (s_rows, n))
+    inv_s = jnp.asarray((np.abs(r.normal(0, 1, n)) + 0.3).astype(np.float32))
+    q, d, z = ref.ref_quantize_ints(w, bits, group)
+    got = qmatmul(a, q, d, z, inv_s, group=group)
+    want = ref.ref_qmatmul(a, q, d, z, inv_s, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_equals_fp_matmul_at_high_bits():
+    """8-bit quantized matmul approximates the FP product closely."""
+    r = rng(5)
+    w = arr(r, (64, 64))
+    a = arr(r, (64, 64))
+    q, d, z = ref.ref_quantize_ints(w, 8, 32)
+    ones = jnp.ones(64)
+    got = qmatmul(a, q, d, z, ones, group=32)
+    np.testing.assert_allclose(got, a @ w, rtol=0.05, atol=0.25)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([16, 64, 128]),
+    hd=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, t, hd, seed):
+    r = rng(seed)
+    q, k, v = (arr(r, (b, h, t, hd)) for _ in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.ref_attention(q, k, v), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_attention_is_causal():
+    """Changing future tokens must not change past outputs."""
+    r = rng(9)
+    q, k, v = (arr(r, (1, 2, 32, 16)) for _ in range(3))
+    out1 = np.asarray(attention(q, k, v))
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = np.asarray(attention(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :, :20], out2[:, :, :20], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(out1[:, :, 20:], out2[:, :, 20:])
+
+
+def test_attention_rows_softmax_normalized():
+    """With v = ones, attention output is exactly ones (probs sum to 1)."""
+    r = rng(13)
+    q, k = arr(r, (1, 1, 32, 16)), arr(r, (1, 1, 32, 16))
+    v = jnp.ones((1, 1, 32, 16))
+    np.testing.assert_allclose(attention(q, k, v), v, rtol=1e-5, atol=1e-5)

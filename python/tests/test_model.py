@@ -1,0 +1,157 @@
+"""L2 model graph tests: shapes, pallas-vs-jnp path agreement, training
+step sanity, capture statistics semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+CFG = M.CONFIGS["pico"]
+
+
+def init_params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    flat = []
+    for name, shape in M.param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            flat.append(jnp.ones(shape))
+        else:
+            scale = 0.08 if "emb" in name else 1.0 / np.sqrt(shape[0])
+            flat.append(scale * jax.random.normal(sub, shape))
+    return tuple(flat)
+
+
+def toks(cfg, seed=1, extra=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(
+        r.integers(0, cfg.vocab, (cfg.batch, cfg.seq + extra)).astype(np.int32)
+    )
+
+
+PARAMS = init_params(CFG)
+TOKENS = toks(CFG)
+
+
+def test_param_specs_count():
+    # 2 embeddings + 6 per block + final ln + head
+    assert len(M.param_specs(CFG)) == 2 + 6 * CFG.n_layer + 2
+
+
+def test_fwd_logits_shape():
+    (logits,) = M.fwd_logits(CFG, *PARAMS, TOKENS)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_pallas_and_jnp_paths_agree():
+    p = M.unflatten(CFG, PARAMS)
+    lp, _ = M._forward(CFG, p, TOKENS, use_pallas=True)
+    lr, _ = M._forward(CFG, p, TOKENS, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-4)
+
+
+def test_capture_shapes_and_stats():
+    outs = M.fwd_capture(CFG, *PARAMS, TOKENS)
+    L, R, d, ff = CFG.n_layer, CFG.batch * CFG.seq, CFG.d_model, CFG.d_ff
+    acts_qkv, acts_o, acts_up, acts_down = outs[:4]
+    st_qkv, st_o, st_up, st_down = outs[4:]
+    assert acts_qkv.shape == (L, R, d) and acts_down.shape == (L, R, ff)
+    assert st_qkv.shape == (L, d) and st_down.shape == (L, ff)
+    # Stats must equal mean |acts| computed directly.
+    np.testing.assert_allclose(
+        st_qkv[0], ref.ref_absmean(acts_qkv[0]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        st_down[-1], ref.ref_absmean(acts_down[-1]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_capture_acts_feed_layer_loss():
+    """Captured qkv activations + the block's weight give a finite loss that
+    increases when bits decrease."""
+    outs = M.fwd_capture(CFG, *PARAMS, TOKENS)
+    acts_qkv = outs[0]
+    p = M.unflatten(CFG, PARAMS)
+    a = acts_qkv[0][:256]
+    w = p["blk0.w_qkv"]
+    s = jnp.ones(w.shape[0])
+    (l3,) = M.layer_loss(a, w, s, bits=3, group=32)
+    (l4,) = M.layer_loss(a, w, s, bits=4, group=32)
+    assert float(l3) > float(l4) > 0.0
+
+
+def test_train_step_decreases_loss():
+    cfg = CFG
+    n = len(M.param_specs(cfg))
+    params = list(init_params(cfg, seed=3))
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    step = jnp.float32(0.0)
+    t = toks(cfg, seed=5, extra=1)
+    first = None
+    fn = jax.jit(lambda *a: M.train_step(cfg, *a))
+    for it in range(8):
+        out = fn(*params, *ms, *vs, step, t)
+        params = list(out[:n])
+        ms = list(out[n : 2 * n])
+        vs = list(out[2 * n : 3 * n])
+        step, loss = out[3 * n], out[3 * n + 1]
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (first, float(loss))
+    assert float(step) == 8.0
+
+
+def test_fwd_logits_q_matches_fakequant_eval():
+    """The quantized-deployment graph (qmatmul kernel from int codes) must
+    agree with running fwd_logits on host-side fake-quantized weights."""
+    cfg = CFG
+    group, bits = 32, 4
+    p = M.unflatten(cfg, PARAMS)
+
+    qargs = [p["tok_emb"], p["pos_emb"]]
+    fq_flat = []
+    for name, shape in M.param_specs(cfg):
+        arr = p[name]
+        if ".w_" in name:
+            s = jnp.ones(arr.shape[0])
+            fq_flat.append(ref.ref_scaled_fakequant(arr, s, bits, group))
+        else:
+            fq_flat.append(arr)
+    for b in range(cfg.n_layer):
+        qargs.append(p[f"blk{b}.ln1_g"])
+        for role, wname in (("qkv", "w_qkv"), ("o", "w_o")):
+            w = p[f"blk{b}.{wname}"]
+            q, d, z = ref.ref_quantize_ints(w, bits, group)
+            qargs += [q, d, z, jnp.ones(w.shape[0])]
+        qargs.append(p[f"blk{b}.ln2_g"])
+        for role, wname in (("up", "w_up"), ("down", "w_down")):
+            w = p[f"blk{b}.{wname}"]
+            q, d, z = ref.ref_quantize_ints(w, bits, group)
+            qargs += [q, d, z, jnp.ones(w.shape[0])]
+    qargs += [p["lnf_g"], p["w_head"], TOKENS]
+
+    (logits_q,) = M.fwd_logits_q(cfg, group, *qargs)
+    (logits_fq,) = M.fwd_logits(cfg, *fq_flat, TOKENS)
+    np.testing.assert_allclose(logits_q, logits_fq, rtol=2e-3, atol=2e-3)
+
+
+def test_qfwd_arg_specs_count():
+    specs = M.qfwd_arg_specs(CFG, 32)
+    # 2 emb + per-block (2 ln + 4 roles x 4 tensors) + lnf + head + tokens
+    assert len(specs) == 2 + CFG.n_layer * 18 + 3
+
+
+def test_loss_fn_matches_manual_xent():
+    t = toks(CFG, seed=7, extra=1)
+    loss = M._loss_fn(CFG, PARAMS, t)
+    p = M.unflatten(CFG, PARAMS)
+    logits, _ = M._forward(CFG, p, t[:, :-1], use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    gold = jnp.take_along_axis(logp, t[:, 1:][..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(float(loss), float(-gold.mean()), rtol=1e-5)

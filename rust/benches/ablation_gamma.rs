@@ -1,0 +1,22 @@
+//! Ablation: FAQ fusion factor gamma (paper §3.1 fixes gamma = 0.85 via
+//! pre-search — this bench regenerates that pre-search). gamma = 1.0
+//! degenerates to AWQ; small gamma over-trusts the future layers.
+//!
+//! ```bash
+//! cargo bench --offline --bench ablation_gamma
+//! ```
+
+mod common;
+
+use faquant::eval::report::ablation_gamma;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = common::base_cfg();
+    let model = common::models("nano")[0].clone();
+    let t0 = std::time::Instant::now();
+    let table =
+        ablation_gamma(&rt, &model, &cfg, &[0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95]).expect("sweep");
+    println!("{}", table.markdown());
+    println!("gamma ablation in {:.1}s", t0.elapsed().as_secs_f32());
+}

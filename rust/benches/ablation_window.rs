@@ -1,0 +1,20 @@
+//! Ablation: FAQ preview window length + layer-wise vs window-wise
+//! preview (paper Sec. 2.2 defines both; §3.1 pre-searches window = 3).
+//!
+//! ```bash
+//! cargo bench --offline --bench ablation_window
+//! ```
+
+mod common;
+
+use faquant::eval::report::ablation_window;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = common::base_cfg();
+    let model = common::models("nano")[0].clone();
+    let t0 = std::time::Instant::now();
+    let table = ablation_window(&rt, &model, &cfg, &[1, 2, 3, 4]).expect("sweep");
+    println!("{}", table.markdown());
+    println!("window ablation in {:.1}s", t0.elapsed().as_secs_f32());
+}

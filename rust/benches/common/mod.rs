@@ -1,0 +1,42 @@
+//! Shared bench scaffolding: runtime bring-up + budget knobs.
+//!
+//! All paper-table benches run real pipelines; budgets are sized so the
+//! full `cargo bench` sweep finishes on a single CPU core. Environment
+//! overrides:
+//!   FAQUANT_BENCH_MODELS   comma list (default per-bench)
+//!   FAQUANT_BENCH_STEPS    training steps (default 300)
+//!   FAQUANT_BENCH_EVAL     eval seqs per corpus (default 12)
+//!   FAQUANT_BENCH_ITEMS    items per suite (default 24)
+
+use faquant::config::RunConfig;
+use faquant::runtime::Runtime;
+use std::path::Path;
+
+pub fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before benching")
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[allow(dead_code)]
+pub fn models(default: &str) -> Vec<String> {
+    std::env::var("FAQUANT_BENCH_MODELS")
+        .unwrap_or_else(|_| default.to_string())
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+pub fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::new("pico").expect("preset");
+    cfg.train_steps = env_usize("FAQUANT_BENCH_STEPS", 300);
+    cfg.eval_seqs = env_usize("FAQUANT_BENCH_EVAL", 12);
+    cfg.task_items = env_usize("FAQUANT_BENCH_ITEMS", 24);
+    cfg
+}

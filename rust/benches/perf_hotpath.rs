@@ -1,0 +1,120 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! Times the three request-path stages in isolation so the optimization
+//! loop can attribute regressions:
+//!   1. grid-search step  — one layer_loss execution (L1 fakequant path)
+//!   2. capture batch     — one fwd_capture execution (L1 absmean path)
+//!   3. eval batch        — one fwd_logits execution (attention kernel)
+//!   4. qserve batch      — one fwd_logits_q execution (qmatmul kernel)
+//!   5. host quantize     — rust-side scaled_quantize_ints + bit-pack
+//!
+//! Also reports the coordinator-overhead ratio (time outside PJRT execute
+//! during a full search) — the L3 perf target is < 5% (DESIGN.md §9).
+//!
+//! ```bash
+//! cargo bench --offline --bench perf_hotpath
+//! ```
+
+mod common;
+
+use faquant::benchkit::{bench, report};
+use faquant::calib::capture;
+use faquant::config::RunConfig;
+use faquant::coordinator::Pipeline;
+use faquant::corpus::Batcher;
+use faquant::eval::{calib_ids, canonical_tokenizer};
+use faquant::quant::{packing, scaled_quantize_ints, search_alpha};
+use faquant::runtime::{lit_f32, lit_i32, Runtime};
+use faquant::serve::qmodel_literals;
+use faquant::tensor::Rng;
+
+fn main() {
+    let rt: Runtime = common::runtime();
+    let mut cfg: RunConfig = common::base_cfg();
+    cfg.model = faquant::config::ModelConfig::preset("nano").expect("preset");
+
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().expect("checkpoint");
+    let (calib, _) = pipe.calibrate(&params).expect("calibrate");
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).expect("quantize");
+
+    let tok = canonical_tokenizer(&cfg.model);
+    let ids = calib_ids(&cfg.model, &tok, 8, 1);
+    let batch = Batcher::new(cfg.model.batch, cfg.model.seq)
+        .eval_batches(&ids)
+        .expect("batch")[0]
+        .clone();
+
+    // 1. grid-search single step (the calibration hot path).
+    let w = params.role_weight(0, "qkv").expect("w").clone();
+    let acts = calib.acts_for(0, 0).clone();
+    let stats = calib.stats_for(0, 0).to_vec();
+    let s = bench("grid_search_20alphas(qkv)", 1, 5, || {
+        search_alpha(&rt, &cfg.model.name, "qkv", 3, &acts, &w, &stats, 20).expect("search");
+    });
+    println!("{}", report(&s));
+
+    // 2. capture batch.
+    let s = bench("fwd_capture(batch=4xT128)", 1, 5, || {
+        capture(&rt, &cfg.model, &params, std::slice::from_ref(&batch), 1).expect("capture");
+    });
+    println!("{}", report(&s));
+
+    // 3. eval batch (fp path).
+    let mut args = Vec::new();
+    for t in &params.tensors {
+        args.push(lit_f32(t).expect("lit"));
+    }
+    args.push(lit_i32(&batch).expect("lit"));
+    let s = bench("fwd_logits(batch=4xT128)", 1, 8, || {
+        rt.exec(&cfg.model.name, "fwd_logits", &args).expect("exec");
+    });
+    println!("{}", report(&s));
+    let eval_its = s.throughput(1.0);
+
+    // 4. quantized serve batch (int-code path).
+    let mut qargs = qmodel_literals(&params, &qm).expect("qlits");
+    qargs.push(lit_i32(&batch).expect("lit"));
+    let s = bench("fwd_logits_q(batch=4xT128)", 1, 8, || {
+        rt.exec(&cfg.model.name, "fwd_logits_q", &qargs).expect("exec");
+    });
+    println!("{}", report(&s));
+    println!(
+        "  -> quantized/fp batch throughput ratio: {:.2}x",
+        s.throughput(1.0) / eval_its
+    );
+
+    // 5. host-side quantize + pack (per linear).
+    let mut rng = Rng::new(1);
+    let wbig = faquant::tensor::Tensor::randn(&mut rng, &[512, 512], 1.0);
+    let sv = vec![1.0f32; 512];
+    let s = bench("host_quantize_pack(512x512,b3)", 1, 10, || {
+        let (ints, _) = scaled_quantize_ints(&wbig, &sv, 3, 64).expect("q");
+        let _ = packing::pack(&ints.q, 3).expect("pack");
+    });
+    println!("{}", report(&s));
+
+    // Coordinator-overhead ratio over a fresh full search.
+    let rt2 = common::runtime();
+    let pipe2 = Pipeline::new(&rt2, cfg.clone());
+    let (p2, _) = pipe2.checkpoint().expect("ckpt");
+    let (c2, _) = pipe2.calibrate(&p2).expect("calib");
+    let compile_before: f32 = rt2.stats().values().map(|s| s.compile_secs).sum();
+    let exec_before: f32 = rt2.stats().values().map(|s| s.exec_secs).sum();
+    let t0 = std::time::Instant::now();
+    let _ = pipe2.quantize(&p2, Some(&c2)).expect("quantize");
+    let wall = t0.elapsed().as_secs_f32();
+    let stats = rt2.stats();
+    let inside: f32 =
+        stats.values().map(|s| s.exec_secs).sum::<f32>() - exec_before;
+    // First-use executable compilation is a one-time cost, not coordinator
+    // overhead — exclude it from the ratio.
+    let compile: f32 =
+        stats.values().map(|s| s.compile_secs).sum::<f32>() - compile_before;
+    let steady = (wall - compile).max(1e-6);
+    println!(
+        "search wall {wall:.2}s (compile {compile:.2}s), steady-state {steady:.2}s, \
+         inside PJRT {inside:.2}s -> coordinator overhead {:.1}%",
+        (1.0 - inside / steady) * 100.0
+    );
+}

@@ -1,0 +1,31 @@
+//! Regenerates the paper's **Table 1**: models x {FP, RTN, AWQ, FAQ} x
+//! {wikitext2 ppl, c4 ppl, six zero-shot accuracies} at 3-bit.
+//!
+//! Expected reproduction *shape* (not absolute values — our substrate is
+//! tiny trained LMs on synthetic corpora, DESIGN.md §4/5): FAQ <= AWQ <
+//! RTN on perplexity for most cells, FP best everywhere.
+//!
+//! ```bash
+//! cargo bench --offline --bench table1_main
+//! FAQUANT_BENCH_MODELS=pico,nano,tiny,small cargo bench --offline --bench table1_main
+//! ```
+
+mod common;
+
+use faquant::eval::report::table1;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = common::base_cfg();
+    let models = common::models("pico,nano,tiny");
+    let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let t0 = std::time::Instant::now();
+    let table = table1(&rt, &refs, &cfg).expect("table1");
+    println!("{}", table.markdown());
+    println!(
+        "table1 regenerated in {:.1}s ({} models; exec time inside PJRT: {:.1}s)",
+        t0.elapsed().as_secs_f32(),
+        refs.len(),
+        rt.total_exec_secs()
+    );
+}

@@ -1,0 +1,25 @@
+//! Regenerates the paper's **Table 2**: boolq accuracy at 3-bit vs 4-bit
+//! for each method.
+//!
+//! Expected shape: FAQ's advantage over AWQ is larger at 3-bit and
+//! shrinks (or disappears) at 4-bit — lower bit-widths amplify the error
+//! accumulation FAQ's preview mitigates.
+//!
+//! ```bash
+//! cargo bench --offline --bench table2_bits
+//! ```
+
+mod common;
+
+use faquant::eval::report::table2;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = common::base_cfg();
+    let models = common::models("pico,nano");
+    let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let t0 = std::time::Instant::now();
+    let table = table2(&rt, &refs, &cfg).expect("table2");
+    println!("{}", table.markdown());
+    println!("table2 regenerated in {:.1}s", t0.elapsed().as_secs_f32());
+}

@@ -1,0 +1,26 @@
+//! Regenerates the paper's **Table 3**: calibration-set-size robustness.
+//! AWQ vs FAQ at N in {16, 32, 64, 128} calibration sequences, each N
+//! drawn with a different seed (disjoint biased samples); reports per-N
+//! perplexity plus mean/std across N.
+//!
+//! Expected shape: FAQ's std across N is lower than AWQ's (the preview
+//! window averages activation statistics over layers, damping sampling
+//! bias), and FAQ's mean is <= AWQ's.
+//!
+//! ```bash
+//! cargo bench --offline --bench table3_calib
+//! ```
+
+mod common;
+
+use faquant::eval::report::table3;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = common::base_cfg();
+    let model = common::models("nano")[0].clone();
+    let t0 = std::time::Instant::now();
+    let table = table3(&rt, &model, &cfg, &[16, 32, 64, 128]).expect("table3");
+    println!("{}", table.markdown());
+    println!("table3 regenerated in {:.1}s", t0.elapsed().as_secs_f32());
+}

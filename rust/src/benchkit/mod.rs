@@ -1,0 +1,167 @@
+//! Mini-criterion (S15): timing harness + table reporter.
+//!
+//! criterion is not in the offline registry, so `cargo bench` targets use
+//! this: warmup, fixed-iteration timing, mean/std/p50/p95, and a markdown
+//! table printer used by every paper-table bench to emit rows in the same
+//! format the paper reports.
+
+use crate::tensor::{mean_std, percentile};
+use std::time::Instant;
+
+/// Timing summary of one benchmark case (all times in seconds).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f32,
+    pub std: f32,
+    pub p50: f32,
+    pub p95: f32,
+    pub min: f32,
+}
+
+impl Sample {
+    pub fn throughput(&self, units_per_iter: f32) -> f32 {
+        if self.mean <= 0.0 {
+            return 0.0;
+        }
+        units_per_iter / self.mean
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f32());
+    }
+    let (mean, std) = mean_std(&times);
+    Sample {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean,
+        std,
+        p50: percentile(&times, 50.0),
+        p95: percentile(&times, 95.0),
+        min: times.iter().copied().fold(f32::INFINITY, f32::min),
+    }
+}
+
+/// Render a bench sample as a one-line report.
+pub fn report(s: &Sample) -> String {
+    format!(
+        "{:<40} {:>10.4}s ±{:>8.4} (p50 {:.4}s, p95 {:.4}s, n={})",
+        s.name, s.mean, s.std, s.p50, s.p95, s.iters
+    )
+}
+
+/// Markdown table builder for paper-style result grids.
+#[derive(Default, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format as GitHub markdown (printed by benches, pasted into
+    /// EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", cols.join(" | "))
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n### {}\n\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float like the paper (4 decimal places).
+pub fn f4(x: f32) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean >= 0.0 && s.min <= s.p95);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Demo", &["model", "ppl"]);
+        t.row(vec!["pico".into(), f4(12.3456)]);
+        let md = t.markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| pico"));
+        assert!(md.contains("12.3456"));
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Sample {
+            name: "t".into(),
+            iters: 1,
+            mean: 0.5,
+            std: 0.0,
+            p50: 0.5,
+            p95: 0.5,
+            min: 0.5,
+        };
+        assert_eq!(s.throughput(10.0), 20.0);
+    }
+}

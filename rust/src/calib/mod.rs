@@ -1,0 +1,230 @@
+//! Calibration pipeline (S9, phase A): activation capture + the FAQ
+//! preview window.
+//!
+//! One full-precision forward pass per calibration batch through the
+//! `fwd_capture` artifact yields, for every (block, role):
+//! - per-channel mean |a| statistics (Pallas `absmean` on-graph), and
+//! - the raw activation rows, reservoir-sampled down to `loss_rows` rows
+//!   used as the grid-search objective's input sample.
+
+mod window;
+
+pub use window::{faq_stats, fused_stats, preview_stats};
+
+use crate::config::ModelConfig;
+use crate::model::{Params, ROLES};
+use crate::runtime::{tensor_f32, Runtime};
+use crate::tensor::{Rng, Tensor, TensorI32};
+use anyhow::{bail, Result};
+
+/// Per-(block, role) calibration data.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub cfg: ModelConfig,
+    /// Batches consumed.
+    pub n_batches: usize,
+    /// stats[block][role] = per-channel mean |a| (len = n_in of the role),
+    /// averaged over calibration batches.
+    pub stats: Vec<Vec<Vec<f32>>>,
+    /// acts[block][role] = sampled activation rows [loss_rows, n_in].
+    pub acts: Vec<Vec<Tensor>>,
+}
+
+impl CalibStats {
+    pub fn stats_for(&self, block: usize, role_idx: usize) -> &[f32] {
+        &self.stats[block][role_idx]
+    }
+
+    pub fn acts_for(&self, block: usize, role_idx: usize) -> &Tensor {
+        &self.acts[block][role_idx]
+    }
+
+    /// Stats of one role across all blocks (the preview window's input).
+    pub fn role_stats_per_layer(&self, role_idx: usize) -> Vec<&[f32]> {
+        self.stats.iter().map(|b| b[role_idx].as_slice()).collect()
+    }
+}
+
+/// Reservoir sampler over activation rows for one (block, role).
+struct Reservoir {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+    filled: usize,
+    seen: usize,
+}
+
+impl Reservoir {
+    fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+            filled: 0,
+            seen: 0,
+        }
+    }
+
+    fn push_batch(&mut self, acts: &Tensor, rng: &mut Rng) {
+        let shape = acts.shape();
+        debug_assert_eq!(shape[1], self.cols);
+        for r in 0..shape[0] {
+            self.seen += 1;
+            if self.filled < self.rows {
+                let dst = self.filled * self.cols;
+                self.data[dst..dst + self.cols].copy_from_slice(acts.row(r));
+                self.filled += 1;
+            } else {
+                // Classic reservoir: replace slot with prob rows/seen.
+                let j = rng.below(self.seen);
+                if j < self.rows {
+                    let dst = j * self.cols;
+                    self.data[dst..dst + self.cols].copy_from_slice(acts.row(r));
+                }
+            }
+        }
+    }
+
+    fn finish(self) -> Result<Tensor> {
+        if self.filled < self.rows {
+            bail!(
+                "calibration set too small: reservoir has {}/{} rows",
+                self.filled,
+                self.rows
+            );
+        }
+        Tensor::from_vec(&[self.rows, self.cols], self.data)
+    }
+}
+
+/// Run the capture pass over `batches` and aggregate.
+pub fn capture(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    batches: &[TensorI32],
+    seed: u64,
+) -> Result<CalibStats> {
+    if batches.is_empty() {
+        bail!("capture: no calibration batches");
+    }
+    let loss_rows = rt.manifest.loss_rows;
+    let mut rng = Rng::new(seed ^ 0xCA11B);
+    let l = cfg.n_layer;
+
+    let role_dims: Vec<usize> = ROLES
+        .iter()
+        .map(|r| crate::model::role_shape(cfg, r).0)
+        .collect();
+    let mut stat_acc: Vec<Vec<Vec<f64>>> = (0..l)
+        .map(|_| role_dims.iter().map(|&n| vec![0.0f64; n]).collect())
+        .collect();
+    let mut reservoirs: Vec<Vec<Reservoir>> = (0..l)
+        .map(|_| {
+            role_dims
+                .iter()
+                .map(|&n| Reservoir::new(loss_rows, n))
+                .collect()
+        })
+        .collect();
+
+    // §Perf: parameters uploaded once for the whole calibration pass.
+    let param_bufs = params
+        .tensors
+        .iter()
+        .map(|t| rt.upload_f32(t))
+        .collect::<Result<Vec<_>, _>>()?;
+
+    for batch in batches {
+        let tok_buf = rt.upload_i32(batch)?;
+        let mut args: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+        args.push(&tok_buf);
+        let outs = rt.exec_b(&cfg.name, "fwd_capture", &args)?;
+        if outs.len() != 8 {
+            bail!("fwd_capture returned {} outputs, want 8", outs.len());
+        }
+        // outs[0..4] = acts per role [L, R, n]; outs[4..8] = stats [L, n].
+        for (ri, _) in ROLES.iter().enumerate() {
+            let acts = tensor_f32(&outs[ri])?;
+            let stats = tensor_f32(&outs[4 + ri])?;
+            for b in 0..l {
+                let a_b = acts.index0(b);
+                reservoirs[b][ri].push_batch(&a_b, &mut rng);
+                let s_b = stats.index0(b);
+                for (acc, &v) in stat_acc[b][ri].iter_mut().zip(s_b.data()) {
+                    *acc += v as f64;
+                }
+            }
+        }
+    }
+
+    let nb = batches.len();
+    let stats: Vec<Vec<Vec<f32>>> = stat_acc
+        .into_iter()
+        .map(|per_block| {
+            per_block
+                .into_iter()
+                .map(|acc| acc.into_iter().map(|v| (v / nb as f64) as f32).collect())
+                .collect()
+        })
+        .collect();
+    let acts: Vec<Vec<Tensor>> = reservoirs
+        .into_iter()
+        .map(|per_block| {
+            per_block
+                .into_iter()
+                .map(|r| r.finish())
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    Ok(CalibStats {
+        cfg: cfg.clone(),
+        n_batches: nb,
+        stats,
+        acts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_fills_then_samples() {
+        let mut rng = Rng::new(1);
+        let mut res = Reservoir::new(4, 2);
+        let batch =
+            Tensor::from_vec(&[6, 2], (0..12).map(|i| i as f32).collect()).unwrap();
+        res.push_batch(&batch, &mut rng);
+        assert_eq!(res.filled, 4);
+        assert_eq!(res.seen, 6);
+        let t = res.finish().unwrap();
+        assert_eq!(t.shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn reservoir_underfill_errors() {
+        let mut rng = Rng::new(2);
+        let mut res = Reservoir::new(10, 2);
+        let batch = Tensor::zeros(&[3, 2]);
+        res.push_batch(&batch, &mut rng);
+        assert!(res.finish().is_err());
+    }
+
+    #[test]
+    fn reservoir_keeps_row_distribution() {
+        // After many batches every row value should appear with roughly
+        // uniform probability; check the mean lands near the stream mean.
+        let mut rng = Rng::new(3);
+        let mut res = Reservoir::new(32, 1);
+        for chunk in 0..64 {
+            let vals: Vec<f32> = (0..16).map(|i| (chunk * 16 + i) as f32).collect();
+            let t = Tensor::from_vec(&[16, 1], vals).unwrap();
+            res.push_batch(&t, &mut rng);
+        }
+        let t = res.finish().unwrap();
+        let stream_mean = (64.0 * 16.0 - 1.0) / 2.0;
+        assert!((t.mean() - stream_mean).abs() < stream_mean * 0.35);
+    }
+}

@@ -1,0 +1,158 @@
+//! The FAQ preview window (paper Sec. 2.2, eq. 4–5).
+//!
+//! For layer i and a preview length j:
+//! - layer-wise preview:  a_pvw = a_{i+j}            (single future layer)
+//! - window-wise preview: a_pvw = mean(a_{i+1} … a_{i+j})
+//!
+//! then the fused statistics  ã_i = γ·a_i + (1−γ)·a_pvw  drive the scale
+//! rule instead of a_i alone. Near the end of the network the window is
+//! clipped to the available future layers; the last layer has no future
+//! and falls back to pure AWQ (γ effectively 1) — documented behaviour,
+//! covered by tests.
+//!
+//! Preview statistics are only meaningful between tensors with the same
+//! channel dimension, so the window aggregates the *same role* across
+//! future blocks (qkv with qkv, down with down, …) — see DESIGN.md §3.
+
+/// Window/layer-wise preview over per-layer stats of one role.
+///
+/// `per_layer[l]` is the per-channel stat vector of layer `l`. Returns
+/// `None` when `layer` has no future layer (preview impossible).
+pub fn preview_stats(
+    per_layer: &[&[f32]],
+    layer: usize,
+    window: usize,
+    layerwise: bool,
+) -> Option<Vec<f32>> {
+    let n_layers = per_layer.len();
+    assert!(layer < n_layers, "layer {layer} out of range {n_layers}");
+    assert!(window >= 1, "window must be >= 1");
+    if layer + 1 >= n_layers {
+        return None;
+    }
+    if layerwise {
+        // Single future layer at distance `window`, clipped to the last.
+        let target = (layer + window).min(n_layers - 1);
+        return Some(per_layer[target].to_vec());
+    }
+    let hi = (layer + window).min(n_layers - 1);
+    let n = per_layer[layer].len();
+    let mut acc = vec![0.0f32; n];
+    let mut count = 0usize;
+    for l in (layer + 1)..=hi {
+        debug_assert_eq!(per_layer[l].len(), n, "role channel dim drift");
+        for (a, &v) in acc.iter_mut().zip(per_layer[l]) {
+            *a += v;
+        }
+        count += 1;
+    }
+    for a in &mut acc {
+        *a /= count as f32;
+    }
+    Some(acc)
+}
+
+/// Fused statistics  ã = γ·current + (1−γ)·preview  (paper eq. 5).
+pub fn fused_stats(current: &[f32], preview: &[f32], gamma: f32) -> Vec<f32> {
+    debug_assert_eq!(current.len(), preview.len());
+    current
+        .iter()
+        .zip(preview)
+        .map(|(&c, &p)| gamma * c + (1.0 - gamma) * p)
+        .collect()
+}
+
+/// The effective FAQ statistics for one layer: fused when a preview
+/// exists, current-layer stats otherwise (last-layer fallback).
+pub fn faq_stats(
+    per_layer: &[&[f32]],
+    layer: usize,
+    window: usize,
+    gamma: f32,
+    layerwise: bool,
+) -> Vec<f32> {
+    match preview_stats(per_layer, layer, window, layerwise) {
+        Some(pvw) => fused_stats(per_layer[layer], &pvw, gamma),
+        None => per_layer[layer].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<Vec<f32>> {
+        vec![
+            vec![1.0, 1.0],
+            vec![2.0, 0.0],
+            vec![4.0, 8.0],
+            vec![6.0, 4.0],
+        ]
+    }
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|x| x.as_slice()).collect()
+    }
+
+    #[test]
+    fn window_averages_future_layers() {
+        let ls = layers();
+        let p = preview_stats(&refs(&ls), 0, 2, false).unwrap();
+        // mean of layers 1, 2
+        assert_eq!(p, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn window_clips_at_network_end() {
+        let ls = layers();
+        let p = preview_stats(&refs(&ls), 2, 5, false).unwrap();
+        assert_eq!(p, vec![6.0, 4.0]); // only layer 3 remains
+    }
+
+    #[test]
+    fn last_layer_has_no_preview() {
+        let ls = layers();
+        assert!(preview_stats(&refs(&ls), 3, 3, false).is_none());
+        // faq_stats falls back to AWQ (current stats).
+        let f = faq_stats(&refs(&ls), 3, 3, 0.85, false);
+        assert_eq!(f, ls[3]);
+    }
+
+    #[test]
+    fn layerwise_picks_single_layer() {
+        let ls = layers();
+        let p = preview_stats(&refs(&ls), 0, 2, true).unwrap();
+        assert_eq!(p, ls[2]);
+        // distance clipped to the last layer
+        let p = preview_stats(&refs(&ls), 1, 9, true).unwrap();
+        assert_eq!(p, ls[3]);
+    }
+
+    #[test]
+    fn window_one_equals_layerwise_one() {
+        let ls = layers();
+        let a = preview_stats(&refs(&ls), 1, 1, false).unwrap();
+        let b = preview_stats(&refs(&ls), 1, 1, true).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fusion_interpolates() {
+        let f = fused_stats(&[1.0, 0.0], &[0.0, 1.0], 0.85);
+        assert!((f[0] - 0.85).abs() < 1e-6);
+        assert!((f[1] - 0.15).abs() < 1e-6);
+        // gamma=1 is pure AWQ
+        assert_eq!(fused_stats(&[3.0], &[9.0], 1.0), vec![3.0]);
+    }
+
+    #[test]
+    fn gamma_one_faq_equals_awq() {
+        let ls = layers();
+        for layer in 0..ls.len() {
+            let f = faq_stats(&refs(&ls), layer, 3, 1.0, false);
+            for (a, b) in f.iter().zip(&ls[layer]) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+}

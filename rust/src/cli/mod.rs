@@ -1,0 +1,152 @@
+//! CLI argument parser (S14): subcommand + `--flag value` / `--flag`.
+//!
+//! clap is not in the offline registry. The grammar is intentionally
+//! small: `faquant <subcommand> [--key value]... [--switch]...` with
+//! typed accessors and unknown-flag rejection at `finish()`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        if subcommand.starts_with('-') {
+            bail!("expected a subcommand before flags, got '{subcommand}'");
+        }
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if name.is_empty() {
+                bail!("bare '--' not supported");
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                }
+                _ => switches.push(name.to_string()),
+            }
+        }
+        Ok(Self {
+            subcommand,
+            flags,
+            switches,
+            consumed: Default::default(),
+        })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} '{v}' is not a float")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Reject flags that no accessor ever looked at (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag '--{k}' for subcommand '{}'", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("quantize --model tiny --bits 3 --verbose");
+        assert_eq!(a.subcommand, "quantize");
+        assert_eq!(a.get_or("model", "pico"), "tiny");
+        assert_eq!(a.get_usize("bits", 4).unwrap(), 3);
+        assert!(a.has("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("eval");
+        assert_eq!(a.get_or("model", "pico"), "pico");
+        assert_eq!(a.get_f32("gamma", 0.85).unwrap(), 0.85);
+        assert!(!a.has("full-search"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("eval --oops 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("eval --bits three");
+        assert!(a.get_usize("bits", 4).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::parse(["eval".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn flag_before_subcommand_rejected() {
+        assert!(Args::parse(["--model".into(), "x".into()]).is_err());
+    }
+}

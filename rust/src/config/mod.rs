@@ -1,0 +1,294 @@
+//! Configuration system (S13): model presets, quantization settings, run
+//! configuration, and a TOML-lite file format (no serde/toml offline).
+
+mod toml_lite;
+
+pub use toml_lite::{parse_toml, TomlDoc, TomlValue};
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Transformer architecture preset. MUST mirror python/compile/model.py
+/// `CONFIGS` — the manifest cross-checks this at registry load.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Result<Self> {
+        let (n_layer, d_model, n_head, d_ff, vocab) = match name {
+            "pico" => (2, 64, 2, 256, 256),
+            "nano" => (4, 128, 4, 512, 384),
+            "tiny" => (6, 192, 6, 768, 384),
+            "small" => (8, 256, 8, 1024, 512),
+            other => bail!("unknown model preset '{other}'"),
+        };
+        Ok(Self {
+            name: name.to_string(),
+            n_layer,
+            d_model,
+            n_head,
+            d_ff,
+            vocab,
+            seq: 128,
+            batch: 4,
+        })
+    }
+
+    pub fn all_presets() -> Vec<&'static str> {
+        vec!["pico", "nano", "tiny", "small"]
+    }
+
+    /// Total parameter count (all tensors in the canonical spec).
+    pub fn param_count(&self) -> usize {
+        crate::model::param_specs(self)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Quantization method selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full-precision reference (no quantization).
+    Fp,
+    /// Round-to-nearest baseline: no activation awareness.
+    Rtn,
+    /// AWQ baseline: current-layer activation scale + alpha grid search.
+    Awq,
+    /// The paper: future-aware fused activation scale (Sec. 2.2).
+    Faq,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fp" | "fp16" | "fp32" => Method::Fp,
+            "rtn" => Method::Rtn,
+            "awq" => Method::Awq,
+            "faq" => Method::Faq,
+            other => bail!("unknown method '{other}' (fp|rtn|awq|faq)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "FP",
+            Method::Rtn => "RTN",
+            Method::Awq => "AWQ",
+            Method::Faq => "FAQ",
+        }
+    }
+}
+
+/// Quantization hyperparameters (paper Sec. 2.2 + Sec. 3.1).
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub method: Method,
+    /// Bit width b (3 or 4 in the paper's evaluation).
+    pub bits: u32,
+    /// Quantization group size along the input-channel dim.
+    pub group: usize,
+    /// Alpha grid for the scale exponent search (AWQ Sec. 3.1: 20 points).
+    pub alpha_grid: usize,
+    /// FAQ fusion factor gamma (pre-searched 0.85).
+    pub gamma: f32,
+    /// FAQ preview window length j (pre-searched 3).
+    pub window: usize,
+    /// Full greedy search over (alpha, j, gamma) instead of the
+    /// pre-searched configuration (paper eq. 8; expensive).
+    pub full_search: bool,
+    /// Use layer-wise preview (single future layer at distance `window`)
+    /// instead of the window-wise soft average — ablation mode.
+    pub layerwise_preview: bool,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::Faq,
+            bits: 3,
+            group: 64,
+            alpha_grid: 20,
+            gamma: 0.85,
+            window: 3,
+            full_search: false,
+            layerwise_preview: false,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn with_method(method: Method) -> Self {
+        Self {
+            method,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=8).contains(&self.bits) {
+            bail!("bits={} out of range [2, 8]", self.bits);
+        }
+        if self.group == 0 || self.group % 8 != 0 {
+            bail!("group={} must be a positive multiple of 8", self.group);
+        }
+        if !(0.0..=1.0).contains(&self.gamma) {
+            bail!("gamma={} must be in [0, 1]", self.gamma);
+        }
+        if self.window == 0 {
+            bail!("window must be >= 1");
+        }
+        if self.alpha_grid < 2 {
+            bail!("alpha_grid must be >= 2");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level run configuration (CLI flags / TOML file).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub quant: QuantConfig,
+    /// Number of calibration sequences N (Table 3 varies this).
+    pub calib_seqs: usize,
+    /// Calibration corpus seed (distinct seeds = disjoint samples).
+    pub calib_seed: u64,
+    /// Training steps for the checkpoint (0 = random init).
+    pub train_steps: usize,
+    /// Number of evaluation sequences per corpus.
+    pub eval_seqs: usize,
+    /// Items per zero-shot suite.
+    pub task_items: usize,
+    /// artifacts/ directory.
+    pub artifacts_dir: String,
+    /// runs/ directory (checkpoints, reports).
+    pub runs_dir: String,
+}
+
+impl RunConfig {
+    pub fn new(model: &str) -> Result<Self> {
+        Ok(Self {
+            model: ModelConfig::preset(model)?,
+            quant: QuantConfig::default(),
+            calib_seqs: 64,
+            calib_seed: 1234,
+            train_steps: 200,
+            eval_seqs: 32,
+            task_items: 64,
+            artifacts_dir: "artifacts".into(),
+            runs_dir: "runs".into(),
+        })
+    }
+
+    /// Load overrides from a TOML-lite file (sections [model], [quant], [run]).
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let doc = parse_toml(&text)?;
+        if let Some(name) = doc.get_str("model", "preset") {
+            self.model = ModelConfig::preset(&name)?;
+        }
+        if let Some(m) = doc.get_str("quant", "method") {
+            self.quant.method = Method::parse(&m)?;
+        }
+        if let Some(b) = doc.get_int("quant", "bits") {
+            self.quant.bits = b as u32;
+        }
+        if let Some(g) = doc.get_int("quant", "group") {
+            self.quant.group = g as usize;
+        }
+        if let Some(g) = doc.get_float("quant", "gamma") {
+            self.quant.gamma = g as f32;
+        }
+        if let Some(w) = doc.get_int("quant", "window") {
+            self.quant.window = w as usize;
+        }
+        if let Some(f) = doc.get_bool("quant", "full_search") {
+            self.quant.full_search = f;
+        }
+        if let Some(n) = doc.get_int("run", "calib_seqs") {
+            self.calib_seqs = n as usize;
+        }
+        if let Some(n) = doc.get_int("run", "train_steps") {
+            self.train_steps = n as usize;
+        }
+        if let Some(n) = doc.get_int("run", "eval_seqs") {
+            self.eval_seqs = n as usize;
+        }
+        if let Some(s) = doc.get_str("run", "artifacts_dir") {
+            self.artifacts_dir = s;
+        }
+        if let Some(s) = doc.get_str("run", "runs_dir") {
+            self.runs_dir = s;
+        }
+        self.quant.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse() {
+        for name in ModelConfig::all_presets() {
+            let cfg = ModelConfig::preset(name).unwrap();
+            assert_eq!(cfg.d_model % cfg.n_head, 0);
+            assert!(cfg.param_count() > 0);
+        }
+        assert!(ModelConfig::preset("mega").is_err());
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("rtn", Method::Rtn),
+            ("AWQ", Method::Awq),
+            ("faq", Method::Faq),
+            ("fp16", Method::Fp),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("gptq").is_err());
+    }
+
+    #[test]
+    fn quant_validation() {
+        let mut q = QuantConfig::default();
+        q.validate().unwrap();
+        q.bits = 1;
+        assert!(q.validate().is_err());
+        q.bits = 4;
+        q.gamma = 1.5;
+        assert!(q.validate().is_err());
+    }
+
+    #[test]
+    fn run_config_from_file() {
+        let p = std::env::temp_dir().join(format!("faquant_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &p,
+            "[model]\npreset = \"nano\"\n[quant]\nmethod = \"awq\"\nbits = 4\ngamma = 0.7\n[run]\ncalib_seqs = 16\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::new("pico").unwrap();
+        rc.apply_file(&p).unwrap();
+        assert_eq!(rc.model.name, "nano");
+        assert_eq!(rc.quant.method, Method::Awq);
+        assert_eq!(rc.quant.bits, 4);
+        assert!((rc.quant.gamma - 0.7).abs() < 1e-6);
+        assert_eq!(rc.calib_seqs, 16);
+        std::fs::remove_file(p).ok();
+    }
+}

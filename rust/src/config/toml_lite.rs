@@ -1,0 +1,164 @@
+//! TOML-lite parser: the subset of TOML the run configs use.
+//!
+//! Supported: `[section]` headers, `key = value` with string ("..."),
+//! integer, float, boolean values, `#` comments, blank lines. No nesting,
+//! arrays-of-tables, or multi-line strings — config files stay flat.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Parsed document: (section, key) -> value. Keys before any section
+/// header live in section "".
+#[derive(Default, Debug)]
+pub struct TomlDoc {
+    map: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.starts_with('"') {
+        if !raw.ends_with('"') || raw.len() < 2 {
+            bail!("line {line_no}: unterminated string");
+        }
+        return Ok(TomlValue::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {line_no}: cannot parse value '{raw}'")
+}
+
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // Strip comments outside strings (values here never contain '#').
+        let line = match raw_line.find('#') {
+            Some(pos) if !raw_line[..pos].contains('"') || raw_line[..pos].matches('"').count() % 2 == 0 => {
+                &raw_line[..pos]
+            }
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let Some(name) = stripped.strip_suffix(']') else {
+                bail!("line {line_no}: malformed section header '{line}'");
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {line_no}: expected 'key = value', got '{line}'");
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {line_no}: empty key");
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        doc.map.insert((section.clone(), key.to_string()), value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = parse_toml(
+            "top = 1\n[a]\ns = \"hi\"\ni = -3\nf = 2.5\nb = true\n# comment\n[b]\nx = 0 # trailing\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s").as_deref(), Some("hi"));
+        assert_eq!(doc.get_int("a", "i"), Some(-3));
+        assert_eq!(doc.get_float("a", "f"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_int("b", "x"), Some(0));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse_toml("[q]\ngamma = 1\n").unwrap();
+        assert_eq!(doc.get_float("q", "gamma"), Some(1.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("k = \"unterminated\n").is_err());
+        assert!(parse_toml("k = what\n").is_err());
+    }
+
+    #[test]
+    fn wrong_type_returns_none() {
+        let doc = parse_toml("[a]\nx = 5\n").unwrap();
+        assert_eq!(doc.get_str("a", "x"), None);
+        assert_eq!(doc.get_bool("a", "x"), None);
+    }
+}

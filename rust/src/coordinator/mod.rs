@@ -1,0 +1,198 @@
+//! The end-to-end PTQ pipeline (S9): checkpoint -> calibration capture ->
+//! per-linear scale search -> quantize + pack -> evaluate -> report.
+//!
+//! This is the L3 "coordination" layer: it owns artifact scheduling (the
+//! FAQ preview's future-layer dependency is resolved by the two-phase
+//! capture-then-search schedule, DESIGN.md §2), progress reporting, and
+//! run metrics. The compute itself always happens inside HLO artifacts.
+
+mod progress;
+mod workpool;
+
+pub use progress::Progress;
+pub use workpool::WorkPool;
+
+use crate::calib::{capture, CalibStats};
+use crate::config::{Method, QuantConfig, RunConfig};
+use crate::corpus::Batcher;
+use crate::eval::{calib_ids, canonical_tokenizer, eval_all, EvalRow};
+use crate::model::Params;
+use crate::quant::{quantize_model, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::train::ensure_checkpoint;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Everything a pipeline run produces.
+pub struct PipelineOutcome {
+    pub params: Params,
+    pub calib: Option<CalibStats>,
+    pub quantized: Option<QuantizedModel>,
+    pub eval: Option<EvalRow>,
+    pub timings: Timings,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Timings {
+    pub train_secs: f32,
+    pub capture_secs: f32,
+    pub search_secs: f32,
+    pub eval_secs: f32,
+}
+
+/// The pipeline driver. Construct once per run configuration; stages can
+/// be invoked individually (benches) or end-to-end via [`Pipeline::run`].
+pub struct Pipeline<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub progress: Progress,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Self {
+        Self {
+            rt,
+            cfg,
+            progress: Progress::default(),
+        }
+    }
+
+    /// Stage 1: trained checkpoint (cached under runs/).
+    pub fn checkpoint(&self) -> Result<(Params, f32)> {
+        let t0 = Instant::now();
+        let out = ensure_checkpoint(
+            self.rt,
+            &self.cfg.model,
+            &self.cfg.runs_dir,
+            self.cfg.train_steps,
+            17,
+        )?;
+        if out.cached {
+            self.progress.log(&format!(
+                "checkpoint: cached ({} params)",
+                out.params.param_count()
+            ));
+        } else {
+            let first = out.curve.first().map(|c| c.1).unwrap_or(f32::NAN);
+            let last = out.curve.last().map(|c| c.1).unwrap_or(f32::NAN);
+            self.progress.log(&format!(
+                "checkpoint: trained {} steps, loss {first:.3} -> {last:.3}",
+                self.cfg.train_steps
+            ));
+        }
+        Ok((out.params, t0.elapsed().as_secs_f32()))
+    }
+
+    /// Stage 2 (phase A): calibration capture over N sequences.
+    pub fn calibrate(&self, params: &Params) -> Result<(CalibStats, f32)> {
+        let t0 = Instant::now();
+        let tok = canonical_tokenizer(&self.cfg.model);
+        let ids = calib_ids(&self.cfg.model, &tok, self.cfg.calib_seqs, self.cfg.calib_seed);
+        let batcher = Batcher::new(self.cfg.model.batch, self.cfg.model.seq);
+        let mut batches = batcher.eval_batches(&ids)?;
+        batches.truncate(self.cfg.calib_seqs.div_ceil(self.cfg.model.batch));
+        let stats = capture(self.rt, &self.cfg.model, params, &batches, self.cfg.calib_seed)?;
+        self.progress.log(&format!(
+            "calibration: {} batches captured (N={} seqs)",
+            stats.n_batches, self.cfg.calib_seqs
+        ));
+        Ok((stats, t0.elapsed().as_secs_f32()))
+    }
+
+    /// Stage 3 (phase B): per-linear search + quantize + pack.
+    pub fn quantize(
+        &self,
+        params: &Params,
+        calib: Option<&CalibStats>,
+    ) -> Result<(QuantizedModel, f32)> {
+        let t0 = Instant::now();
+        let qm = quantize_model(self.rt, &self.cfg.quant, params, calib)?;
+        let (packed, fp) = qm.compression();
+        self.progress.log(&format!(
+            "quantize[{} b{}]: mean recon loss {:.5e}, packed {packed} B vs fp {fp} B ({:.2}x)",
+            self.cfg.quant.method.name(),
+            self.cfg.quant.bits,
+            qm.mean_loss(),
+            fp as f32 / packed as f32
+        ));
+        Ok((qm, t0.elapsed().as_secs_f32()))
+    }
+
+    /// Stage 4: full Table-1 metric row for a parameter set.
+    pub fn evaluate(&self, params: &Params) -> Result<(EvalRow, f32)> {
+        let t0 = Instant::now();
+        let tok = canonical_tokenizer(&self.cfg.model);
+        let row = eval_all(
+            self.rt,
+            &self.cfg.model,
+            params,
+            &tok,
+            self.cfg.eval_seqs,
+            self.cfg.task_items,
+        )?;
+        self.progress.log(&format!(
+            "eval: ppl wiki {:.4} / c4 {:.4}",
+            row.ppl_wiki, row.ppl_c4
+        ));
+        Ok((row, t0.elapsed().as_secs_f32()))
+    }
+
+    /// End-to-end: checkpoint -> (calibrate) -> (quantize) -> evaluate.
+    ///
+    /// `Method::Fp` skips calibration/quantization and evaluates the
+    /// full-precision checkpoint (Table 1's FP16 row).
+    pub fn run(&self) -> Result<PipelineOutcome> {
+        let mut timings = Timings::default();
+        let (params, t) = self.checkpoint()?;
+        timings.train_secs = t;
+
+        let method = self.cfg.quant.method;
+        let needs_calib = matches!(method, Method::Awq | Method::Faq)
+            || (method == Method::Rtn && self.cfg.quant.full_search);
+        let calib = if needs_calib || method == Method::Rtn {
+            // RTN also captures so its recon loss is measurable.
+            let (c, t) = self.calibrate(&params)?;
+            timings.capture_secs = t;
+            Some(c)
+        } else {
+            None
+        };
+
+        let (quantized, eval_params) = if method == Method::Fp {
+            (None, params.clone())
+        } else {
+            let (qm, t) = self.quantize(&params, calib.as_ref())?;
+            timings.search_secs = t;
+            let p = qm.fq_params.clone();
+            (Some(qm), p)
+        };
+
+        let (eval, t) = self.evaluate(&eval_params)?;
+        timings.eval_secs = t;
+
+        Ok(PipelineOutcome {
+            params,
+            calib,
+            quantized,
+            eval: Some(eval),
+            timings,
+        })
+    }
+}
+
+/// Convenience: quantize-only run for a given method, reusing an existing
+/// checkpoint + calibration (the benches sweep methods this way).
+pub fn quantize_with_method(
+    rt: &Runtime,
+    base: &RunConfig,
+    method: Method,
+    params: &Params,
+    calib: &CalibStats,
+) -> Result<QuantizedModel> {
+    let mut qcfg = QuantConfig {
+        method,
+        ..base.quant.clone()
+    };
+    qcfg.method = method;
+    quantize_model(rt, &qcfg, params, Some(calib))
+}

@@ -1,0 +1,51 @@
+//! Progress/metrics reporting for long pipeline runs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Stamped, optionally-silenced progress logger.
+pub struct Progress {
+    start: Instant,
+    quiet: AtomicBool,
+}
+
+impl Default for Progress {
+    fn default() -> Self {
+        Self {
+            start: Instant::now(),
+            quiet: AtomicBool::new(std::env::var("FAQUANT_QUIET").is_ok()),
+        }
+    }
+}
+
+impl Progress {
+    pub fn quiet() -> Self {
+        let p = Self::default();
+        p.quiet.store(true, Ordering::Relaxed);
+        p
+    }
+
+    pub fn log(&self, msg: &str) {
+        if !self.quiet.load(Ordering::Relaxed) {
+            eprintln!("[{:8.2}s] {msg}", self.start.elapsed().as_secs_f32());
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f32 {
+        self.start.elapsed().as_secs_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotone() {
+        let p = Progress::quiet();
+        let a = p.elapsed_secs();
+        let b = p.elapsed_secs();
+        assert!(b >= a);
+        p.log("silenced");
+    }
+}

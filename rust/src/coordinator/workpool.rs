@@ -1,0 +1,116 @@
+//! Bounded worker pool over std::thread (no tokio offline).
+//!
+//! Used for CPU-side parallel work that does not touch the PJRT runtime
+//! (task-suite construction, packing, host fakequant sweeps). PJRT
+//! executables stay on the owning thread — see runtime/mod.rs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` closures on `workers` threads; results return in job order.
+pub fn run_jobs<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let workers = workers.max(1).min(jobs.len().max(1));
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, f)) => {
+                    // A send failure means the receiver is gone; stop.
+                    if tx.send((idx, f())).is_err() {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }));
+    }
+    drop(tx);
+    let mut results: Vec<Option<T>> = Vec::new();
+    for (idx, val) in rx {
+        if results.len() <= idx {
+            results.resize_with(idx + 1, || None);
+        }
+        results[idx] = Some(val);
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    results.into_iter().map(|r| r.expect("job lost")).collect()
+}
+
+/// Simple reusable pool facade (keeps a worker count).
+pub struct WorkPool {
+    pub workers: usize,
+}
+
+impl WorkPool {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn auto() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn map<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        run_jobs(self.workers, jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..20)
+            .map(|i| {
+                Box::new(move || {
+                    // Vary work so completion order differs from job order.
+                    let mut acc = 0usize;
+                    for k in 0..((20 - i) * 1000) {
+                        acc = acc.wrapping_add(k);
+                    }
+                    std::hint::black_box(acc);
+                    i * 2
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = run_jobs(4, jobs);
+        assert_eq!(out, (0..20).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        let out: Vec<usize> = run_jobs(1, vec![|| 7usize]);
+        assert_eq!(out, vec![7]);
+        let empty: Vec<usize> = run_jobs(4, Vec::<fn() -> usize>::new());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn pool_facade() {
+        let pool = WorkPool::new(2);
+        let out = pool.map((0..5).map(|i| move || i + 1).collect::<Vec<_>>());
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        assert!(WorkPool::auto().workers >= 1);
+    }
+}

@@ -1,0 +1,102 @@
+//! Token-stream batcher: fixed-shape [B, T] (or [B, T+1]) i32 batches.
+//!
+//! The HLO artifacts have frozen batch/seq shapes, so the batcher's job is
+//! to slice a token stream into exactly-shaped tensors. Training batches
+//! carry T+1 tokens (input + shifted target); eval/calibration batches
+//! carry T.
+
+use crate::tensor::TensorI32;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Self { batch, seq }
+    }
+
+    /// Split a stream into consecutive sequences of `len` tokens.
+    fn sequences(&self, ids: &[i32], len: usize) -> Vec<Vec<i32>> {
+        ids.chunks_exact(len).map(|c| c.to_vec()).collect()
+    }
+
+    /// Pack the stream into [B, len] batches, dropping the remainder.
+    fn batches_of(&self, ids: &[i32], len: usize) -> Result<Vec<TensorI32>> {
+        let seqs = self.sequences(ids, len);
+        if seqs.len() < self.batch {
+            bail!(
+                "stream of {} tokens yields {} sequences < batch {}",
+                ids.len(),
+                seqs.len(),
+                self.batch
+            );
+        }
+        Ok(seqs
+            .chunks_exact(self.batch)
+            .map(|group| {
+                let mut data = Vec::with_capacity(self.batch * len);
+                for s in group {
+                    data.extend_from_slice(s);
+                }
+                TensorI32::from_vec(&[self.batch, len], data).expect("shape by construction")
+            })
+            .collect())
+    }
+
+    /// Evaluation / calibration batches: [B, T].
+    pub fn eval_batches(&self, ids: &[i32]) -> Result<Vec<TensorI32>> {
+        self.batches_of(ids, self.seq)
+    }
+
+    /// Training batches: [B, T+1] (input plus next-token target).
+    pub fn train_batches(&self, ids: &[i32]) -> Result<Vec<TensorI32>> {
+        self.batches_of(ids, self.seq + 1)
+    }
+
+    /// Tokens consumed per training batch (sizing helper for generators).
+    pub fn train_tokens_per_batch(&self) -> usize {
+        self.batch * (self.seq + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_batches_shape_and_content() {
+        let b = Batcher::new(2, 3);
+        let ids: Vec<i32> = (0..14).collect();
+        let batches = b.eval_batches(&ids).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].shape(), &[2, 3]);
+        assert_eq!(batches[0].data(), &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(batches[1].data(), &[6, 7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn train_batches_have_extra_token() {
+        let b = Batcher::new(2, 3);
+        let ids: Vec<i32> = (0..16).collect();
+        let batches = b.train_batches(&ids).unwrap();
+        assert_eq!(batches[0].shape(), &[2, 4]);
+    }
+
+    #[test]
+    fn too_short_stream_errors() {
+        let b = Batcher::new(4, 128);
+        assert!(b.eval_batches(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn remainder_dropped() {
+        let b = Batcher::new(1, 4);
+        let ids: Vec<i32> = (0..10).collect();
+        let batches = b.eval_batches(&ids).unwrap();
+        assert_eq!(batches.len(), 2); // 8 of 10 tokens used
+    }
+}

@@ -1,0 +1,24 @@
+//! Synthetic corpora, tokenizer, and batcher (S3).
+//!
+//! The paper calibrates on WikiText2/C4 and evaluates perplexity on both.
+//! Offline we simulate the *domain gap* that matters for Table 1 and
+//! Table 3 with two structured generators (DESIGN.md §4):
+//!
+//! - `synth-wiki`: sentence-structured Zipf bigram text — long sentences,
+//!   low noise, strong bigram coherence (the "clean" corpus).
+//! - `synth-c4`:  web-crawl-like mix — flatter unigram distribution,
+//!   shorter fragments, numeric/url noise tokens (the "noisy" corpus).
+//!
+//! Both emit *text*; the [`Tokenizer`] fits a word vocabulary by frequency
+//! and the [`Batcher`] packs token streams into fixed [B, T] batches — the
+//! same pipeline a real deployment would run.
+
+mod batcher;
+mod generator;
+mod tokenizer;
+mod words;
+
+pub use batcher::Batcher;
+pub use generator::{CorpusKind, Generator};
+pub use tokenizer::{Tokenizer, EOS, UNK};
+pub use words::wordlist;

@@ -1,0 +1,166 @@
+//! Word-level tokenizer with frequency-fitted vocabulary.
+//!
+//! ids: 0 = `<unk>`, 1 = `<eos>` (sentence boundary), 2.. = words by
+//! descending corpus frequency. Lowercases and strips trailing
+//! punctuation, keeping the pipeline honest (text in, ids out) without a
+//! BPE dependency.
+
+use crate::tensor::TensorI32;
+use anyhow::Result;
+use std::collections::HashMap;
+
+pub const UNK: i32 = 0;
+pub const EOS: i32 = 1;
+const RESERVED: usize = 2;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    words: Vec<String>,
+}
+
+fn normalize(tok: &str) -> (String, bool) {
+    let ends_sentence = tok.ends_with('.') || tok.ends_with('!') || tok.ends_with('?');
+    let w = tok
+        .trim_matches(|c: char| !c.is_ascii_alphanumeric())
+        .to_lowercase();
+    (w, ends_sentence)
+}
+
+impl Tokenizer {
+    /// Fit a vocabulary of `vocab_size` entries (incl. reserved) on text.
+    pub fn fit(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size > RESERVED);
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for tok in text.split_whitespace() {
+            let (w, _) = normalize(tok);
+            if !w.is_empty() {
+                *counts.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut by_freq: Vec<(String, usize)> = counts.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        by_freq.truncate(vocab_size - RESERVED);
+        let mut vocab = HashMap::with_capacity(by_freq.len());
+        let mut words = vec!["<unk>".to_string(), "<eos>".to_string()];
+        for (i, (w, _)) in by_freq.iter().enumerate() {
+            vocab.insert(w.clone(), (i + RESERVED) as i32);
+            words.push(w.clone());
+        }
+        Self { vocab, words }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids = Vec::new();
+        for tok in text.split_whitespace() {
+            let (w, eos) = normalize(tok);
+            if !w.is_empty() {
+                ids.push(*self.vocab.get(&w).unwrap_or(&UNK));
+            }
+            if eos {
+                ids.push(EOS);
+            }
+        }
+        ids
+    }
+
+    pub fn encode_words(&self, words: &[String]) -> Vec<i32> {
+        words
+            .iter()
+            .map(|w| *self.vocab.get(&w.to_lowercase()).unwrap_or(&UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.words
+                    .get(i.max(0) as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<oob>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Unknown-token rate of an encoded stream (pipeline health metric).
+    pub fn unk_rate(&self, ids: &[i32]) -> f32 {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        ids.iter().filter(|&&i| i == UNK).count() as f32 / ids.len() as f32
+    }
+
+    /// Encode into a fixed-shape tensor, truncating or erroring if short.
+    pub fn encode_exact(&self, text: &str, len: usize) -> Result<TensorI32> {
+        let mut ids = self.encode(text);
+        if ids.len() < len {
+            anyhow::bail!("text too short: {} < {} tokens", ids.len(), len);
+        }
+        ids.truncate(len);
+        TensorI32::from_vec(&[len], ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_encode_decode() {
+        let text = "The cat sat. The cat ran. A dog sat.";
+        let tok = Tokenizer::fit(text, 10);
+        let ids = tok.encode("the cat sat.");
+        assert_eq!(ids.last(), Some(&EOS));
+        assert!(ids[..ids.len() - 1].iter().all(|&i| i >= RESERVED as i32));
+        let dec = tok.decode(&ids);
+        assert!(dec.contains("cat"));
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tok = Tokenizer::fit("alpha beta gamma", 5);
+        let ids = tok.encode("zeta");
+        assert_eq!(ids, vec![UNK]);
+        assert_eq!(tok.unk_rate(&ids), 1.0);
+    }
+
+    #[test]
+    fn vocab_size_capped() {
+        let text: String = (0..100).map(|i| format!("w{i} ")).collect();
+        let tok = Tokenizer::fit(&text, 20);
+        assert_eq!(tok.vocab_size(), 20);
+    }
+
+    #[test]
+    fn frequency_order() {
+        let tok = Tokenizer::fit("b b b a a c", 10);
+        let b = tok.encode("b")[0];
+        let a = tok.encode("a")[0];
+        let c = tok.encode("c")[0];
+        assert!(b < a && a < c);
+    }
+
+    #[test]
+    fn encode_exact_shapes() {
+        let tok = Tokenizer::fit("x y z. x y. z x y.", 8);
+        let t = tok.encode_exact("x y z. x y. z x y.", 5).unwrap();
+        assert_eq!(t.shape(), &[5]);
+        assert!(tok.encode_exact("x", 5).is_err());
+    }
+
+    #[test]
+    fn real_corpus_low_unk() {
+        use crate::corpus::{CorpusKind, Generator};
+        let mut g = Generator::new(CorpusKind::SynthWiki, 1);
+        let fit_text = g.text(30_000);
+        let tok = Tokenizer::fit(&fit_text, 384);
+        let mut g2 = Generator::new(CorpusKind::SynthWiki, 99);
+        let ids = tok.encode(&g2.text(5_000));
+        assert!(tok.unk_rate(&ids) < 0.2, "unk rate {}", tok.unk_rate(&ids));
+    }
+}

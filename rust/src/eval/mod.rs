@@ -1,0 +1,317 @@
+//! Evaluation harness (S11): perplexity + synthetic zero-shot suites.
+//!
+//! Perplexity runs the `fwd_logits` artifact over fixed-shape eval
+//! batches and computes token-level cross-entropy host-side. The zero-shot
+//! suites are structure-matched stand-ins for the paper's task list
+//! (DESIGN.md §4): each item is a context plus K candidate continuations
+//! scored by length-normalized logprob, exactly the decision rule
+//! lm-eval-harness applies to PIQA/ARC/BoolQ/HellaSwag/WinoGrande.
+
+pub mod report;
+pub mod tasks;
+
+pub use tasks::{task_suites, SuiteSpec, TaskSuite};
+
+use crate::config::ModelConfig;
+use crate::corpus::{Batcher, CorpusKind, Generator, Tokenizer};
+use crate::model::Params;
+use crate::runtime::{tensor_f32, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+/// Device-resident parameter set (§Perf): uploaded once, reused across
+/// every evaluation batch instead of re-copying all weights per call.
+pub struct DeviceParams {
+    bufs: Vec<PjRtBuffer>,
+}
+
+/// Upload a parameter set to the device.
+pub fn upload_params(rt: &Runtime, params: &Params) -> Result<DeviceParams> {
+    let bufs = params
+        .tensors
+        .iter()
+        .map(|t| rt.upload_f32(t))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DeviceParams { bufs })
+}
+
+/// Canonical tokenizer: fit once on a fixed wiki+c4 mixture so train,
+/// calibration, and eval all share the same vocabulary (and c4's noise
+/// tokens get vocabulary slots instead of collapsing to <unk>).
+pub fn canonical_tokenizer(cfg: &ModelConfig) -> Tokenizer {
+    let mut wiki = Generator::new(CorpusKind::SynthWiki, 42);
+    let mut c4 = Generator::new(CorpusKind::SynthC4, 42);
+    let mut text = wiki.text(120_000);
+    text.push_str(&c4.text(60_000));
+    Tokenizer::fit(&text, cfg.vocab)
+}
+
+/// Token stream for an eval corpus (disjoint seeds from training).
+pub fn eval_ids(cfg: &ModelConfig, kind: CorpusKind, tok: &Tokenizer, seqs: usize) -> Vec<i32> {
+    let seed = match kind {
+        CorpusKind::SynthWiki => 555,
+        CorpusKind::SynthC4 => 556,
+    };
+    let mut gen = Generator::new(kind, seed);
+    let need = (seqs + 2) * cfg.seq + 64;
+    tok.encode(&gen.text(need * 2))
+}
+
+/// Calibration token stream: seed varies with `calib_seed` so Table 3 can
+/// draw disjoint biased samples.
+pub fn calib_ids(
+    cfg: &ModelConfig,
+    tok: &Tokenizer,
+    seqs: usize,
+    calib_seed: u64,
+) -> Vec<i32> {
+    let mut gen = Generator::new(CorpusKind::SynthWiki, 9000 + calib_seed);
+    let need = (seqs + 2) * cfg.seq + 64;
+    tok.encode(&gen.text(need * 2))
+}
+
+/// Run `fwd_logits` on one batch, returning logits [B, T, V].
+fn forward_logits(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    dp: &DeviceParams,
+    batch: &crate::tensor::TensorI32,
+) -> Result<Tensor> {
+    let tok_buf = rt.upload_i32(batch)?;
+    let mut args: Vec<&PjRtBuffer> = dp.bufs.iter().collect();
+    args.push(&tok_buf);
+    let outs = rt.exec_b(&cfg.name, "fwd_logits", &args)?;
+    tensor_f32(&outs[0])
+}
+
+/// Per-position logprob of the realized next token.
+///
+/// logits [B, T, V], tokens [B, T]: returns, for each (b, t < T-1),
+/// log softmax(logits[b, t])[tokens[b, t+1]].
+fn next_token_logprobs(
+    logits: &Tensor,
+    tokens: &crate::tensor::TensorI32,
+) -> Vec<Vec<f32>> {
+    let shape = logits.shape();
+    let (b, t, v) = (shape[0], shape[1], shape[2]);
+    let data = logits.data();
+    let toks = tokens.data();
+    let mut out = Vec::with_capacity(b);
+    for bi in 0..b {
+        let mut row = Vec::with_capacity(t - 1);
+        for ti in 0..t - 1 {
+            let base = (bi * t + ti) * v;
+            let slice = &data[base..base + v];
+            let mx = slice.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse = mx + slice.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
+            let gold = toks[bi * t + ti + 1] as usize;
+            row.push(slice[gold] - lse);
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Corpus perplexity of `params` over `seqs` sequences of `kind`.
+pub fn perplexity(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    tok: &Tokenizer,
+    kind: CorpusKind,
+    seqs: usize,
+) -> Result<f32> {
+    let dp = upload_params(rt, params)?;
+    perplexity_d(rt, cfg, &dp, tok, kind, seqs)
+}
+
+/// Perplexity with pre-uploaded parameters (shared across corpora/suites).
+pub fn perplexity_d(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    dp: &DeviceParams,
+    tok: &Tokenizer,
+    kind: CorpusKind,
+    seqs: usize,
+) -> Result<f32> {
+    let ids = eval_ids(cfg, kind, tok, seqs);
+    let batcher = Batcher::new(cfg.batch, cfg.seq);
+    let mut batches = batcher.eval_batches(&ids)?;
+    batches.truncate(seqs.div_ceil(cfg.batch));
+    if batches.is_empty() {
+        bail!("no eval batches for {}", kind.label());
+    }
+    let mut nll_sum = 0f64;
+    let mut count = 0usize;
+    for batch in &batches {
+        let logits = forward_logits(rt, cfg, dp, batch)?;
+        for row in next_token_logprobs(&logits, batch) {
+            for lp in row {
+                nll_sum -= lp as f64;
+                count += 1;
+            }
+        }
+    }
+    Ok(((nll_sum / count as f64).exp()) as f32)
+}
+
+/// Score a batch of candidate sequences: length-normalized logprob of the
+/// last `cont_len` tokens of each row.
+fn score_continuations(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    dp: &DeviceParams,
+    rows: &[Vec<i32>],
+    cont_len: usize,
+) -> Result<Vec<f32>> {
+    let t = cfg.seq;
+    let b = cfg.batch;
+    let mut scores = vec![0.0f32; rows.len()];
+    for (chunk_idx, chunk) in rows.chunks(b).enumerate() {
+        // Pad the final partial batch by repeating the last row.
+        let mut data = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let row = chunk.get(i).unwrap_or_else(|| chunk.last().unwrap());
+            debug_assert_eq!(row.len(), t);
+            data.extend_from_slice(row);
+        }
+        let batch = crate::tensor::TensorI32::from_vec(&[b, t], data)?;
+        let logits = forward_logits(rt, cfg, dp, &batch)?;
+        let lps = next_token_logprobs(&logits, &batch);
+        for (i, row_lp) in lps.iter().enumerate().take(chunk.len()) {
+            // Continuation occupies the last cont_len positions; the
+            // prediction of token at position p comes from index p-1.
+            let lo = t - 1 - cont_len;
+            let s: f32 = row_lp[lo..].iter().sum();
+            scores[chunk_idx * b + i] = s / cont_len as f32;
+        }
+    }
+    Ok(scores)
+}
+
+/// Accuracy of `params` on one synthetic suite.
+pub fn suite_accuracy(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    suite: &TaskSuite,
+) -> Result<f32> {
+    let dp = upload_params(rt, params)?;
+    suite_accuracy_d(rt, cfg, &dp, suite)
+}
+
+/// Suite accuracy with pre-uploaded parameters.
+pub fn suite_accuracy_d(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    dp: &DeviceParams,
+    suite: &TaskSuite,
+) -> Result<f32> {
+    let mut correct = 0usize;
+    for item in &suite.items {
+        let scores = score_continuations(rt, cfg, dp, &item.options, suite.spec.cont_len)?;
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f32 / suite.items.len().max(1) as f32)
+}
+
+/// Full metric row: (wikitext2 ppl, c4 ppl, suite accuracies in suite order).
+pub struct EvalRow {
+    pub ppl_wiki: f32,
+    pub ppl_c4: f32,
+    pub accs: Vec<(String, f32)>,
+}
+
+/// Evaluate everything Table 1 reports for one parameter set.
+pub fn eval_all(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    tok: &Tokenizer,
+    eval_seqs: usize,
+    task_items: usize,
+) -> Result<EvalRow> {
+    // §Perf: one parameter upload serves every corpus and suite.
+    let dp = upload_params(rt, params)?;
+    let ppl_wiki = perplexity_d(rt, cfg, &dp, tok, CorpusKind::SynthWiki, eval_seqs)?;
+    let ppl_c4 = perplexity_d(rt, cfg, &dp, tok, CorpusKind::SynthC4, eval_seqs)?;
+    let mut accs = Vec::new();
+    for suite in task_suites(cfg, tok, task_items)? {
+        let acc = suite_accuracy_d(rt, cfg, &dp, &suite)?;
+        accs.push((suite.spec.name.to_string(), acc));
+    }
+    Ok(EvalRow {
+        ppl_wiki,
+        ppl_c4,
+        accs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorI32;
+
+    #[test]
+    fn logprob_indexing() {
+        // V=2, T=3, B=1; uniform logits => logprob = ln(0.5) everywhere.
+        let logits = Tensor::from_vec(&[1, 3, 2], vec![0.0; 6]).unwrap();
+        let toks = TensorI32::from_vec(&[1, 3], vec![0, 1, 0]).unwrap();
+        let lps = next_token_logprobs(&logits, &toks);
+        assert_eq!(lps[0].len(), 2);
+        for lp in &lps[0] {
+            assert!((lp - 0.5f32.ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn logprob_prefers_high_logit() {
+        // Position 0 predicts token 1; make logit[1] large.
+        let logits = Tensor::from_vec(&[1, 2, 2], vec![0.0, 5.0, 0.0, 0.0]).unwrap();
+        let toks = TensorI32::from_vec(&[1, 2], vec![0, 1]).unwrap();
+        let lps = next_token_logprobs(&logits, &toks);
+        assert!(lps[0][0] > -0.05); // nearly certain
+    }
+
+    #[test]
+    fn canonical_tokenizer_is_stable() {
+        let cfg = ModelConfig::preset("pico").unwrap();
+        let a = canonical_tokenizer(&cfg);
+        let b = canonical_tokenizer(&cfg);
+        assert_eq!(a.vocab_size(), b.vocab_size());
+        assert_eq!(a.encode("the cat"), b.encode("the cat"));
+        assert!(a.vocab_size() <= cfg.vocab);
+    }
+
+    #[test]
+    fn eval_and_calib_ids_in_vocab_range() {
+        let cfg = ModelConfig::preset("pico").unwrap();
+        let tok = canonical_tokenizer(&cfg);
+        for ids in [
+            eval_ids(&cfg, CorpusKind::SynthWiki, &tok, 4),
+            eval_ids(&cfg, CorpusKind::SynthC4, &tok, 4),
+            calib_ids(&cfg, &tok, 4, 0),
+        ] {
+            assert!(ids.len() >= 4 * cfg.seq);
+            assert!(ids.iter().all(|&i| (i as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn calib_seeds_give_different_streams() {
+        let cfg = ModelConfig::preset("pico").unwrap();
+        let tok = canonical_tokenizer(&cfg);
+        let a = calib_ids(&cfg, &tok, 4, 1);
+        let b = calib_ids(&cfg, &tok, 4, 2);
+        assert_ne!(a, b);
+    }
+}

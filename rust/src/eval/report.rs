@@ -1,0 +1,270 @@
+//! Paper-table generators: the shared engine behind `faquant table*`
+//! subcommands and the `rust/benches/table*` bench targets.
+//!
+//! Each function regenerates one table of the paper's evaluation section
+//! with our models/corpora (DESIGN.md §5) and returns a markdown
+//! [`Table`]. Checkpoints and calibration captures are computed once per
+//! model and shared across methods, exactly like the paper's protocol.
+
+use crate::benchkit::{f4, Table};
+use crate::calib::CalibStats;
+use crate::config::{Method, RunConfig};
+use crate::coordinator::Pipeline;
+use crate::eval::{canonical_tokenizer, eval_all, EvalRow};
+use crate::model::Params;
+use crate::runtime::Runtime;
+use crate::tensor::mean_std;
+use anyhow::Result;
+
+/// Methods in the paper's row order.
+pub const METHODS: [Method; 4] = [Method::Fp, Method::Rtn, Method::Awq, Method::Faq];
+
+fn eval_params(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    params: &Params,
+) -> Result<EvalRow> {
+    let tok = canonical_tokenizer(&cfg.model);
+    eval_all(rt, &cfg.model, params, &tok, cfg.eval_seqs, cfg.task_items)
+}
+
+/// Run all four methods for one model, reusing checkpoint + calibration.
+pub fn method_rows(
+    rt: &Runtime,
+    base: &RunConfig,
+    methods: &[Method],
+) -> Result<Vec<(Method, EvalRow)>> {
+    let pipe = Pipeline::new(rt, base.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    let mut rows = Vec::new();
+    for &m in methods {
+        let row = if m == Method::Fp {
+            eval_params(rt, base, &params)?
+        } else {
+            let mut cfg = base.clone();
+            cfg.quant.method = m;
+            let pipe_m = Pipeline::new(rt, cfg.clone());
+            let (qm, _) = pipe_m.quantize(&params, Some(&calib))?;
+            eval_params(rt, &cfg, &qm.fq_params)?
+        };
+        rows.push((m, row));
+    }
+    Ok(rows)
+}
+
+/// Table 1: the main grid — models x methods x (2 PPL + 6 accuracy).
+pub fn table1(rt: &Runtime, models: &[&str], base: &RunConfig) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — perplexity (down) and accuracy (up), weight-only 3-bit",
+        &[
+            "LLM", "Quant", "wikitext2", "c4", "arc_challenge", "hellaswag",
+            "winogrande", "arc_easy", "boolq", "piqa",
+        ],
+    );
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = crate::config::ModelConfig::preset(model)?;
+        for (m, row) in method_rows(rt, &cfg, &METHODS)? {
+            let mut cells = vec![
+                model.to_string(),
+                m.name().to_string(),
+                f4(row.ppl_wiki),
+                f4(row.ppl_c4),
+            ];
+            for (_, acc) in &row.accs {
+                cells.push(f4(*acc));
+            }
+            t.row(cells);
+        }
+    }
+    Ok(t)
+}
+
+/// Table 2: 3-bit vs 4-bit boolq accuracy.
+pub fn table2(rt: &Runtime, models: &[&str], base: &RunConfig) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 2 — boolq accuracy at 3-bit vs 4-bit",
+        &["LLM", "Quant", "3bit", "4bit"],
+    );
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = crate::config::ModelConfig::preset(model)?;
+        let mut per_method: Vec<(Method, Vec<f32>)> =
+            METHODS.iter().map(|&m| (m, Vec::new())).collect();
+        for bits in [3u32, 4] {
+            let mut c = cfg.clone();
+            c.quant.bits = bits;
+            for (i, (m, row)) in method_rows(rt, &c, &METHODS)?.into_iter().enumerate() {
+                debug_assert_eq!(per_method[i].0, m);
+                let boolq = row
+                    .accs
+                    .iter()
+                    .find(|(n, _)| n == "boolq")
+                    .map(|(_, a)| *a)
+                    .unwrap_or(f32::NAN);
+                per_method[i].1.push(boolq);
+            }
+        }
+        for (m, accs) in per_method {
+            t.row(vec![
+                model.to_string(),
+                m.name().to_string(),
+                f4(accs[0]),
+                f4(accs[1]),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Table 3: calibration-set-size robustness, AWQ vs FAQ.
+///
+/// For each N, the calibration sample is drawn with a distinct seed
+/// (disjoint biased samples); the paper reports per-N PPL plus mean/std
+/// across N — lower std = more robust to calibration bias.
+pub fn table3(rt: &Runtime, model: &str, base: &RunConfig, ns: &[usize]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — calibration-size robustness (AWQ vs FAQ)",
+        &["Model", "Method", "N", "wikitext2", "c4"],
+    );
+    let mut cfg = base.clone();
+    cfg.model = crate::config::ModelConfig::preset(model)?;
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+
+    for &method in &[Method::Awq, Method::Faq] {
+        let mut wikis = Vec::new();
+        let mut c4s = Vec::new();
+        for (i, &n) in ns.iter().enumerate() {
+            let mut c = cfg.clone();
+            c.quant.method = method;
+            c.calib_seqs = n;
+            c.calib_seed = 100 + i as u64; // disjoint samples per N
+            let pipe_n = Pipeline::new(rt, c.clone());
+            let (calib, _) = pipe_n.calibrate(&params)?;
+            let (qm, _) = pipe_n.quantize(&params, Some(&calib))?;
+            // Table 3 reports perplexity only — skip the task suites.
+            let tok = canonical_tokenizer(&c.model);
+            let wiki = crate::eval::perplexity(
+                rt, &c.model, &qm.fq_params, &tok,
+                crate::corpus::CorpusKind::SynthWiki, c.eval_seqs,
+            )?;
+            let c4 = crate::eval::perplexity(
+                rt, &c.model, &qm.fq_params, &tok,
+                crate::corpus::CorpusKind::SynthC4, c.eval_seqs,
+            )?;
+            wikis.push(wiki);
+            c4s.push(c4);
+            t.row(vec![
+                model.to_string(),
+                method.name().to_string(),
+                n.to_string(),
+                f4(wiki),
+                f4(c4),
+            ]);
+        }
+        let (mw, sw) = mean_std(&wikis);
+        let (mc, sc) = mean_std(&c4s);
+        t.row(vec![
+            model.to_string(),
+            method.name().to_string(),
+            "Mean".into(),
+            f4(mw),
+            f4(mc),
+        ]);
+        t.row(vec![
+            model.to_string(),
+            method.name().to_string(),
+            "Std".into(),
+            f4(sw),
+            f4(sc),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Hyperparameter ablation: sweep gamma at fixed window (paper §3.1's
+/// pre-search, regenerated).
+pub fn ablation_gamma(
+    rt: &Runtime,
+    model: &str,
+    base: &RunConfig,
+    gammas: &[f32],
+) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — FAQ fusion factor gamma (window = 3)",
+        &["Model", "gamma", "wikitext2", "c4", "mean recon loss"],
+    );
+    let mut cfg = base.clone();
+    cfg.model = crate::config::ModelConfig::preset(model)?;
+    cfg.quant.method = Method::Faq;
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    for &g in gammas {
+        let mut c = cfg.clone();
+        c.quant.gamma = g;
+        let pipe_g = Pipeline::new(rt, c.clone());
+        let (qm, _) = pipe_g.quantize(&params, Some(&calib))?;
+        let row = eval_params(rt, &c, &qm.fq_params)?;
+        t.row(vec![
+            model.to_string(),
+            format!("{g:.2}"),
+            f4(row.ppl_wiki),
+            f4(row.ppl_c4),
+            format!("{:.5e}", qm.mean_loss()),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Hyperparameter ablation: sweep window length at fixed gamma, plus the
+/// layer-wise preview variant (paper Sec. 2.2's two preview modes).
+pub fn ablation_window(
+    rt: &Runtime,
+    model: &str,
+    base: &RunConfig,
+    windows: &[usize],
+) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — FAQ preview window (gamma = 0.85) + layer-wise variant",
+        &["Model", "preview", "window", "wikitext2", "c4", "mean recon loss"],
+    );
+    let mut cfg = base.clone();
+    cfg.model = crate::config::ModelConfig::preset(model)?;
+    cfg.quant.method = Method::Faq;
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    for &layerwise in &[false, true] {
+        for &w in windows {
+            let mut c = cfg.clone();
+            c.quant.window = w;
+            c.quant.layerwise_preview = layerwise;
+            let pipe_w = Pipeline::new(rt, c.clone());
+            let (qm, _) = pipe_w.quantize(&params, Some(&calib))?;
+            let row = eval_params(rt, &c, &qm.fq_params)?;
+            t.row(vec![
+                model.to_string(),
+                if layerwise { "layer-wise" } else { "window-wise" }.to_string(),
+                w.to_string(),
+                f4(row.ppl_wiki),
+                f4(row.ppl_c4),
+                format!("{:.5e}", qm.mean_loss()),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Shared quick profile used by table3/ablation benches.
+pub fn shared_calib(
+    rt: &Runtime,
+    cfg: &RunConfig,
+) -> Result<(Params, CalibStats)> {
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    Ok((params, calib))
+}

@@ -1,0 +1,44 @@
+//! # faquant — Future-Aware Quantization
+//!
+//! Rust + JAX + Pallas reproduction of *"Enhancing Post-Training
+//! Quantization via Future Activation Awareness"* (Lv et al., 2026).
+//!
+//! The crate is the Layer-3 coordinator of the three-layer architecture
+//! (see DESIGN.md): all request-path work — training loops, calibration,
+//! the AWQ/FAQ scale search, quantization, packing, evaluation, serving —
+//! runs in rust against AOT-compiled HLO artifacts produced once by
+//! `python/compile/aot.py` and executed through the PJRT CPU client.
+//!
+//! Public API tour:
+//! - [`config`] — run/model/quant configuration (TOML-lite, presets)
+//! - [`tensor`] — host tensor math + deterministic PRNG
+//! - [`store`] — `.fqt` binary tensor checkpoints
+//! - [`corpus`] — synthetic corpora, tokenizer, batcher
+//! - [`model`] — transformer parameter layout and checkpoints
+//! - [`runtime`] — PJRT artifact registry and executor
+//! - [`train`] — training driver over the `train_step` artifact
+//! - [`calib`] — calibration capture and the FAQ preview window
+//! - [`quant`] — RTN / AWQ / FAQ quantizers, grid search, bit-packing
+//! - [`coordinator`] — the end-to-end PTQ pipeline
+//! - [`eval`] — perplexity and synthetic zero-shot suites
+//! - [`serve`] — batched quantized-model serving demo
+//! - [`benchkit`] / [`testutil`] — in-repo bench + property-test kits
+
+pub mod benchkit;
+pub mod calib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod store;
+pub mod tensor;
+pub mod testutil;
+pub mod train;
+
+/// Crate-wide result alias (anyhow is the only error dependency offline).
+pub type Result<T> = anyhow::Result<T>;

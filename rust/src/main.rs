@@ -1,0 +1,270 @@
+//! faquant — CLI entrypoint for the Future-Aware Quantization framework.
+//!
+//! Subcommands:
+//!   train      — train (or reuse) a checkpoint for a model preset
+//!   quantize   — run the PTQ pipeline (calibrate + search + pack)
+//!   eval       — quantize then evaluate the full Table-1 metric row
+//!   table1/2/3 — regenerate the paper's tables
+//!   ablation   — gamma/window hyperparameter sweeps
+//!   serve      — batched serving demo on the quantized artifact
+//!   inspect    — artifact/manifest inventory
+//!
+//! Every subcommand accepts `--artifacts DIR` (default: artifacts) and
+//! `--runs DIR` (default: runs). Run `faquant help` for flag details.
+
+use anyhow::Result;
+use faquant::cli::Args;
+use faquant::config::{Method, RunConfig};
+use faquant::coordinator::Pipeline;
+use faquant::eval::report;
+use faquant::runtime::Runtime;
+use std::path::Path;
+
+const HELP: &str = "\
+faquant — Future-Aware Quantization (FAQ) reproduction
+
+USAGE: faquant <subcommand> [flags]
+
+SUBCOMMANDS
+  train     --model M [--steps N]            train/reuse a checkpoint
+  quantize  --model M [--method fp|rtn|awq|faq] [--bits B] [--gamma G]
+            [--window J] [--full-search] [--calib-seqs N]
+  eval      (same flags as quantize)         quantize + full metric row
+  table1    [--models a,b,c]                 paper Table 1 grid
+  table2    [--models a,b]                   paper Table 2 (3 vs 4 bit)
+  table3    [--model M] [--ns 16,32,64,128]  paper Table 3 (calib bias)
+  ablation  --sweep gamma|window [--model M] hyperparameter sweeps
+  serve     --model M [--requests N]         quantized serving demo
+  inspect                                    list artifacts + configs
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default artifacts)
+  --runs DIR        run/checkpoint directory (default runs)
+  --steps N         training steps (default 200)
+  --eval-seqs N     eval sequences per corpus (default 32)
+  --task-items N    items per zero-shot suite (default 64)
+";
+
+fn run_cfg(args: &Args, model: &str) -> Result<RunConfig> {
+    let mut cfg = RunConfig::new(model)?;
+    if let Some(f) = args.get("config") {
+        cfg.apply_file(Path::new(&f))?;
+    }
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    cfg.runs_dir = args.get_or("runs", &cfg.runs_dir);
+    cfg.train_steps = args.get_usize("steps", cfg.train_steps)?;
+    cfg.eval_seqs = args.get_usize("eval-seqs", cfg.eval_seqs)?;
+    cfg.task_items = args.get_usize("task-items", cfg.task_items)?;
+    cfg.calib_seqs = args.get_usize("calib-seqs", cfg.calib_seqs)?;
+    cfg.calib_seed = args.get_u64("calib-seed", cfg.calib_seed)?;
+    cfg.quant.method = Method::parse(&args.get_or("method", "faq"))?;
+    cfg.quant.bits = args.get_usize("bits", cfg.quant.bits as usize)? as u32;
+    cfg.quant.gamma = args.get_f32("gamma", cfg.quant.gamma)?;
+    cfg.quant.window = args.get_usize("window", cfg.quant.window)?;
+    cfg.quant.full_search = args.has("full-search");
+    cfg.quant.layerwise_preview = args.has("layerwise-preview");
+    cfg.quant.validate()?;
+    Ok(cfg)
+}
+
+fn models_flag(args: &Args, default: &str) -> Vec<String> {
+    args.get_or("models", default)
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            return Ok(());
+        }
+        _ => {}
+    }
+
+    let cfg = run_cfg(&args, &args.get_or("model", "nano"))?;
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+
+    match args.subcommand.as_str() {
+        "inspect" => {
+            println!("platform: {}", rt.platform());
+            println!(
+                "group={} loss_rows={}",
+                rt.manifest.group, rt.manifest.loss_rows
+            );
+            let mut names: Vec<_> = rt.manifest.configs.keys().collect();
+            names.sort();
+            for name in names {
+                let c = &rt.manifest.configs[name];
+                println!(
+                    "config {name}: L={} d={} h={} ff={} V={} ({} params)",
+                    c.n_layer,
+                    c.d_model,
+                    c.n_head,
+                    c.d_ff,
+                    c.vocab,
+                    c.param_count()
+                );
+            }
+            println!("{} artifacts", rt.manifest.artifacts.len());
+        }
+        "train" => {
+            let pipe = Pipeline::new(&rt, cfg.clone());
+            let (params, secs) = pipe.checkpoint()?;
+            println!(
+                "checkpoint ready: {} params in {secs:.1}s -> {}",
+                params.param_count(),
+                faquant::train::checkpoint_path(&cfg.runs_dir, &cfg.model, cfg.train_steps)
+                    .display()
+            );
+        }
+        "quantize" => {
+            let pipe = Pipeline::new(&rt, cfg.clone());
+            let (params, _) = pipe.checkpoint()?;
+            let (calib, _) = pipe.calibrate(&params)?;
+            let (qm, secs) = pipe.quantize(&params, Some(&calib))?;
+            let (packed, fp) = qm.compression();
+            println!(
+                "{} b{}: mean recon loss {:.5e}, {packed} B packed vs {fp} B fp32 \
+                 ({:.2}x), search {secs:.1}s",
+                cfg.quant.method.name(),
+                cfg.quant.bits,
+                qm.mean_loss(),
+                fp as f32 / packed as f32
+            );
+            for l in qm.linears.iter().take(8) {
+                println!(
+                    "  blk{}.{:<5} alpha={:.2} loss={:.4e} window={} gamma={:.2}",
+                    l.block, l.role, l.alpha, l.loss, l.window_used, l.gamma_used
+                );
+            }
+        }
+        "eval" => {
+            let pipe = Pipeline::new(&rt, cfg.clone());
+            let out = pipe.run()?;
+            let row = out.eval.expect("pipeline evaluates");
+            println!(
+                "{} {} b{}: wikitext2 {:.4}  c4 {:.4}",
+                cfg.model.name,
+                cfg.quant.method.name(),
+                cfg.quant.bits,
+                row.ppl_wiki,
+                row.ppl_c4
+            );
+            for (name, acc) in &row.accs {
+                println!("  {name:<14} {acc:.4}");
+            }
+            println!(
+                "timings: train {:.1}s capture {:.1}s search {:.1}s eval {:.1}s",
+                out.timings.train_secs,
+                out.timings.capture_secs,
+                out.timings.search_secs,
+                out.timings.eval_secs
+            );
+        }
+        "table1" => {
+            let models = models_flag(&args, "pico,nano,tiny");
+            let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+            let t = report::table1(&rt, &refs, &cfg)?;
+            println!("{}", t.markdown());
+        }
+        "table2" => {
+            let models = models_flag(&args, "pico,nano");
+            let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+            let t = report::table2(&rt, &refs, &cfg)?;
+            println!("{}", t.markdown());
+        }
+        "table3" => {
+            let ns: Vec<usize> = args
+                .get_or("ns", "16,32,64,128")
+                .split(',')
+                .map(|s| s.parse().unwrap_or(16))
+                .collect();
+            let t = report::table3(&rt, &args.get_or("model", "nano"), &cfg, &ns)?;
+            println!("{}", t.markdown());
+        }
+        "ablation" => {
+            let model = args.get_or("model", "nano");
+            match args.get_or("sweep", "gamma").as_str() {
+                "gamma" => {
+                    let t = report::ablation_gamma(
+                        &rt,
+                        &model,
+                        &cfg,
+                        &[0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95],
+                    )?;
+                    println!("{}", t.markdown());
+                }
+                "window" => {
+                    let t = report::ablation_window(&rt, &model, &cfg, &[1, 2, 3, 4])?;
+                    println!("{}", t.markdown());
+                }
+                other => anyhow::bail!("unknown sweep '{other}' (gamma|window)"),
+            }
+        }
+        "serve" => {
+            let n_requests = args.get_usize("requests", 64)?;
+            serve_demo(&rt, &cfg, n_requests)?;
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}' — run `faquant help`");
+        }
+    }
+    args.finish()?;
+    Ok(())
+}
+
+/// Serving demo: quantize, then fire `n` requests through the batcher.
+fn serve_demo(rt: &Runtime, cfg: &RunConfig, n_requests: usize) -> Result<()> {
+    use faquant::corpus::Batcher;
+    use faquant::eval::calib_ids;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    let (qm, _) = pipe.quantize(&params, Some(&calib))?;
+
+    let tok = faquant::eval::canonical_tokenizer(&cfg.model);
+    let ids = calib_ids(&cfg.model, &tok, n_requests + cfg.model.batch, 777);
+    let batcher = Batcher::new(1, cfg.model.seq);
+    let seqs = batcher.eval_batches(&ids)?;
+
+    let (tx, rx) = mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..n_requests {
+        let (rtx, rrx) = mpsc::channel();
+        let tokens = seqs[i % seqs.len()].data().to_vec();
+        tx.send(faquant::serve::Request {
+            tokens,
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    drop(tx);
+    let rep = faquant::serve::serve_requests(
+        rt,
+        &cfg.model,
+        &params,
+        &qm,
+        rx,
+        Duration::from_millis(5),
+    )?;
+    let mut got = 0;
+    for r in responders {
+        if r.recv().is_ok() {
+            got += 1;
+        }
+    }
+    println!(
+        "served {}/{} requests in {} batches (fill {:.0}%), p50 {:.1} ms, p95 {:.1} ms, {:.1} req/s",
+        got, rep.requests, rep.batches, rep.mean_batch_fill * 100.0, rep.p50_ms, rep.p95_ms,
+        rep.throughput_rps
+    );
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Model parameter layout, initialization, and checkpoints (S4).
+//!
+//! The canonical flat parameter order mirrors python/compile/model.py
+//! `param_specs` exactly — the runtime registry cross-checks it against
+//! the artifact manifest at load.
+
+use crate::config::ModelConfig;
+use crate::store::TensorStore;
+use crate::tensor::{Rng, Tensor};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The four quantizable linear roles per block, in block order.
+pub const ROLES: [&str; 4] = ["qkv", "o", "up", "down"];
+
+/// [n_in, n_out] of a role's weight.
+pub fn role_shape(cfg: &ModelConfig, role: &str) -> (usize, usize) {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    match role {
+        "qkv" => (d, 3 * d),
+        "o" => (d, d),
+        "up" => (d, ff),
+        "down" => (ff, d),
+        other => panic!("unknown role {other}"),
+    }
+}
+
+/// Weight tensor name of (block, role), e.g. `blk2.w_up`.
+pub fn role_param(block: usize, role: &str) -> String {
+    format!("blk{block}.w_{role}")
+}
+
+/// Canonical flat parameter spec: (name, shape) in artifact argument order.
+pub fn param_specs(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d_model;
+    let mut specs: Vec<(String, Vec<usize>)> = vec![
+        ("tok_emb".into(), vec![cfg.vocab, d]),
+        ("pos_emb".into(), vec![cfg.seq, d]),
+    ];
+    for b in 0..cfg.n_layer {
+        specs.push((format!("blk{b}.ln1_g"), vec![d]));
+        let (n, m) = role_shape(cfg, "qkv");
+        specs.push((format!("blk{b}.w_qkv"), vec![n, m]));
+        let (n, m) = role_shape(cfg, "o");
+        specs.push((format!("blk{b}.w_o"), vec![n, m]));
+        specs.push((format!("blk{b}.ln2_g"), vec![d]));
+        let (n, m) = role_shape(cfg, "up");
+        specs.push((format!("blk{b}.w_up"), vec![n, m]));
+        let (n, m) = role_shape(cfg, "down");
+        specs.push((format!("blk{b}.w_down"), vec![n, m]));
+    }
+    specs.push(("lnf_g".into(), vec![d]));
+    specs.push(("w_head".into(), vec![d, cfg.vocab]));
+    specs
+}
+
+/// A model's full parameter set in canonical order.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub cfg: ModelConfig,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    /// Random init: normals scaled by 1/sqrt(fan_in) for linears, small
+    /// for embeddings, ones for norm gains — matches test_model.py.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tensors = param_specs(cfg)
+            .iter()
+            .map(|(name, shape)| {
+                if name.ends_with("_g") {
+                    Tensor::ones(shape)
+                } else if name.contains("emb") {
+                    Tensor::randn(&mut rng, shape, 0.08)
+                } else {
+                    let std = 1.0 / (shape[0] as f32).sqrt();
+                    Tensor::randn(&mut rng, shape, std)
+                }
+            })
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            tensors,
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let idx = self.index_of(name)?;
+        Ok(&self.tensors[idx])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let idx = self.index_of(name)?;
+        if self.tensors[idx].shape() != t.shape() {
+            bail!(
+                "set {name}: shape {:?} != expected {:?}",
+                t.shape(),
+                self.tensors[idx].shape()
+            );
+        }
+        self.tensors[idx] = t;
+        Ok(())
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        param_specs(&self.cfg)
+            .iter()
+            .position(|(n, _)| n == name)
+            .with_context(|| format!("unknown param '{name}'"))
+    }
+
+    /// Weight of (block, role).
+    pub fn role_weight(&self, block: usize, role: &str) -> Result<&Tensor> {
+        self.get(&role_param(block, role))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut store = TensorStore::new();
+        for ((name, _), t) in param_specs(&self.cfg).iter().zip(&self.tensors) {
+            store.insert(name, t.clone());
+        }
+        store.insert(
+            "__meta.n_layer",
+            Tensor::from_vec(&[], vec![self.cfg.n_layer as f32])?,
+        );
+        store.save(path)
+    }
+
+    pub fn load(cfg: &ModelConfig, path: &Path) -> Result<Self> {
+        let store = TensorStore::load(path)?;
+        let tensors = param_specs(cfg)
+            .iter()
+            .map(|(name, shape)| {
+                let t = store.get(name)?;
+                if t.shape() != &shape[..] {
+                    bail!(
+                        "checkpoint {name}: shape {:?} != expected {:?}",
+                        t.shape(),
+                        shape
+                    );
+                }
+                Ok(t.clone())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            cfg: cfg.clone(),
+            tensors,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("pico").unwrap()
+    }
+
+    #[test]
+    fn spec_count_matches_formula() {
+        let c = cfg();
+        assert_eq!(param_specs(&c).len(), 2 + 6 * c.n_layer + 2);
+    }
+
+    #[test]
+    fn init_shapes_and_norm_gains() {
+        let p = Params::init(&cfg(), 1);
+        assert_eq!(p.tensors.len(), param_specs(&cfg()).len());
+        let g = p.get("blk0.ln1_g").unwrap();
+        assert!(g.data().iter().all(|&x| x == 1.0));
+        let (n, m) = role_shape(&cfg(), "qkv");
+        assert_eq!(p.role_weight(0, "qkv").unwrap().shape(), &[n, m]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = cfg();
+        let p = Params::init(&c, 2);
+        let path = std::env::temp_dir().join(format!("faquant_ckpt_{}.fqt", std::process::id()));
+        p.save(&path).unwrap();
+        let q = Params::load(&c, &path).unwrap();
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_config() {
+        let p = Params::init(&cfg(), 3);
+        let path = std::env::temp_dir().join(format!("faquant_ckpt2_{}.fqt", std::process::id()));
+        p.save(&path).unwrap();
+        let nano = ModelConfig::preset("nano").unwrap();
+        assert!(Params::load(&nano, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn set_checks_shape() {
+        let mut p = Params::init(&cfg(), 4);
+        assert!(p.set("lnf_g", Tensor::zeros(&[999])).is_err());
+        let d = cfg().d_model;
+        p.set("lnf_g", Tensor::zeros(&[d])).unwrap();
+        assert_eq!(p.get("lnf_g").unwrap().sum(), 0.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Host-side asymmetric group quantization — the bit-exact rust mirror of
+//! `python/compile/kernels/ref.py::ref_fakequant` / `ref_quantize_ints`.
+//!
+//! Used for RTN (no scale search) and for materializing the final
+//! quantized model after the scale search picks s. Parity with the Pallas
+//! kernel is asserted by `rust/tests/integration.rs` against the
+//! `layer_loss`/`fwd_logits` artifacts.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Integer codes + dequant parameters of one quantized weight matrix.
+#[derive(Clone, Debug)]
+pub struct QuantInts {
+    /// n_in (rows, input channels).
+    pub n: usize,
+    /// n_out (cols).
+    pub m: usize,
+    pub bits: u32,
+    pub group: usize,
+    /// Codes in [0, 2^bits - 1], row-major [n, m], one byte each
+    /// (bit-packing for storage lives in `packing.rs`).
+    pub q: Vec<u8>,
+    /// Per-(group, col) step size [n/group, m].
+    pub delta: Vec<f32>,
+    /// Per-(group, col) zero point [n/group, m] (f32; can be ±1 for
+    /// degenerate constant groups).
+    pub zero: Vec<f32>,
+}
+
+impl QuantInts {
+    /// Dequantize back to f32 (without any channel scale).
+    pub fn dequant(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.n * self.m];
+        let ng = self.n / self.group;
+        for g in 0..ng {
+            for r in 0..self.group {
+                let row = g * self.group + r;
+                for c in 0..self.m {
+                    let d = self.delta[g * self.m + c];
+                    let z = self.zero[g * self.m + c];
+                    out[row * self.m + c] = (self.q[row * self.m + c] as f32 - z) * d;
+                }
+            }
+        }
+        Tensor::from_vec(&[self.n, self.m], out).expect("shape by construction")
+    }
+
+    /// Deployment-path byte footprint: packed codes + f32 dequant params.
+    pub fn packed_bytes(&self) -> usize {
+        let code_bits = self.n * self.m * self.bits as usize;
+        code_bits.div_ceil(8) + (self.delta.len() + self.zero.len()) * 4
+    }
+}
+
+/// Quantize `w` [n, m] to integer codes, groups of `group` rows per column.
+pub fn quantize_ints(w: &Tensor, bits: u32, group: usize) -> Result<QuantInts> {
+    let shape = w.shape();
+    if shape.len() != 2 {
+        bail!("quantize_ints wants 2-D weight, got {shape:?}");
+    }
+    let (n, m) = (shape[0], shape[1]);
+    if n % group != 0 {
+        bail!("n={n} not divisible by group={group}");
+    }
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let ng = n / group;
+    let mut q = vec![0u8; n * m];
+    let mut delta = vec![0.0f32; ng * m];
+    let mut zero = vec![0.0f32; ng * m];
+    let data = w.data();
+    for g in 0..ng {
+        for c in 0..m {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for r in 0..group {
+                let v = data[(g * group + r) * m + c];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            // Degenerate guard — must match ref.py: delta = |lo| (or 1).
+            let mut d = (hi - lo) / qmax;
+            if d <= 0.0 {
+                d = if lo.abs() > 0.0 { lo.abs() } else { 1.0 };
+            }
+            let z = (-lo / d).round();
+            delta[g * m + c] = d;
+            zero[g * m + c] = z;
+            for r in 0..group {
+                let row = g * group + r;
+                let v = data[row * m + c];
+                let code = ((v / d).round() + z).clamp(0.0, qmax);
+                q[row * m + c] = code as u8;
+            }
+        }
+    }
+    Ok(QuantInts {
+        n,
+        m,
+        bits,
+        group,
+        q,
+        delta,
+        zero,
+    })
+}
+
+/// Fake-quantize: quantize + dequantize in one step (no channel scale).
+pub fn fakequant(w: &Tensor, bits: u32, group: usize) -> Result<Tensor> {
+    Ok(quantize_ints(w, bits, group)?.dequant())
+}
+
+/// AWQ/FAQ weight transform: `fakequant(W * diag(s)) / diag(s)`.
+pub fn scaled_fakequant(w: &Tensor, s: &[f32], bits: u32, group: usize) -> Result<Tensor> {
+    let ws = w.mul_rows(s)?;
+    fakequant(&ws, bits, group)?.div_rows(s)
+}
+
+/// Scaled integer quantization for deployment: codes of `W * diag(s)`
+/// plus the reciprocal channel scale to apply to activations.
+pub fn scaled_quantize_ints(
+    w: &Tensor,
+    s: &[f32],
+    bits: u32,
+    group: usize,
+) -> Result<(QuantInts, Vec<f32>)> {
+    let ws = w.mul_rows(s)?;
+    let ints = quantize_ints(&ws, bits, group)?;
+    let inv_s: Vec<f32> = s.iter().map(|&x| 1.0 / x).collect();
+    Ok((ints, inv_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[64, 16], 2.0);
+        for bits in [2u32, 3, 4, 8] {
+            let ints = quantize_ints(&w, bits, 32).unwrap();
+            let qmax = (1u32 << bits) - 1;
+            assert!(ints.q.iter().all(|&c| (c as u32) <= qmax));
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[128, 32], 1.0);
+        let errs: Vec<f32> = [2u32, 3, 4, 8]
+            .iter()
+            .map(|&b| fakequant(&w, b, 32).unwrap().mse(&w))
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[0] > pair[1], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[64, 8], 3.0);
+        let once = fakequant(&w, 4, 32).unwrap();
+        let twice = fakequant(&once, 4, 32).unwrap();
+        for (a, b) in once.data().iter().zip(twice.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let w = Tensor::full(&[32, 4], 0.7);
+        let fq = fakequant(&w, 3, 32).unwrap();
+        for &v in fq.data() {
+            assert!((v - 0.7).abs() < 1e-6, "{v}");
+        }
+        let z = Tensor::zeros(&[32, 4]);
+        let fqz = fakequant(&z, 3, 32).unwrap();
+        assert_eq!(fqz.sum(), 0.0);
+    }
+
+    #[test]
+    fn scaled_fakequant_protects_high_scale_channels() {
+        // Boosting a channel's scale shrinks its relative quantization
+        // error — AWQ's core mechanism (paper Sec. 2.1).
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&mut rng, &[64, 32], 1.0);
+        let mut s = vec![1.0f32; 64];
+        let plain = scaled_fakequant(&w, &s, 3, 32).unwrap();
+        s[5] = 4.0;
+        let boosted = scaled_fakequant(&w, &s, 3, 32).unwrap();
+        let row_err = |fq: &Tensor, r: usize| -> f32 {
+            (0..32)
+                .map(|c| (fq.at2(r, c) - w.at2(r, c)).powi(2))
+                .sum::<f32>()
+        };
+        assert!(row_err(&boosted, 5) < row_err(&plain, 5));
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&mut rng, &[64, 64], 1.0);
+        let i3 = quantize_ints(&w, 3, 32).unwrap();
+        let i4 = quantize_ints(&w, 4, 32).unwrap();
+        assert!(i3.packed_bytes() < i4.packed_bytes());
+        // 64*64 codes at 4 bits = 2048 bytes + 2*2*64*2 params * 4B.
+        assert_eq!(i4.packed_bytes(), 2048 + 2 * 2 * 64 * 4);
+    }
+
+    #[test]
+    fn dequant_matches_fakequant() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&mut rng, &[32, 16], 1.5);
+        let fq = fakequant(&w, 4, 16).unwrap();
+        let dq = quantize_ints(&w, 4, 16).unwrap().dequant();
+        assert_eq!(fq, dq);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let w = Tensor::zeros(&[30, 4]);
+        assert!(quantize_ints(&w, 4, 32).is_err());
+        let w3 = Tensor::zeros(&[2, 2, 2]);
+        assert!(quantize_ints(&w3, 4, 2).is_err());
+    }
+}

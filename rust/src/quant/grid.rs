@@ -1,0 +1,112 @@
+//! Alpha grid search (paper eq. 3/8) — the calibration hot path.
+//!
+//! For each candidate alpha, build s = normalize(stats^alpha), then
+//! evaluate the layer reconstruction loss ‖a·W − a·Q(W,s)‖² with the
+//! `layer_loss_<role>_b<bits>` HLO artifact (Pallas `scaled_fakequant` +
+//! two matmuls, fused by XLA). The activation sample `a` and weight `W`
+//! are uploaded once per search; only the scale vector changes per step.
+
+use crate::quant::scale::{alpha_grid, alpha_scale};
+use crate::runtime::{scalar_f32, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Grid size baked into the `layer_loss_sweep_*` artifacts (model.N_ALPHA).
+pub const SWEEP_N_ALPHA: usize = 20;
+
+/// Result of one scale search.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub alpha: f32,
+    pub loss: f32,
+    pub scale: Vec<f32>,
+    /// Losses over the whole grid (ablation/telemetry).
+    pub grid_losses: Vec<(f32, f32)>,
+}
+
+/// Search alpha over the grid, minimizing the recon loss of (acts, w).
+pub fn search_alpha(
+    rt: &Runtime,
+    cfg_name: &str,
+    role: &str,
+    bits: u32,
+    acts: &Tensor,
+    w: &Tensor,
+    stats: &[f32],
+    n_grid: usize,
+) -> Result<SearchResult> {
+    let entry = format!("layer_loss_{role}_b{bits}");
+    if stats.len() != w.shape()[0] {
+        bail!(
+            "stats len {} != weight n_in {}",
+            stats.len(),
+            w.shape()[0]
+        );
+    }
+    // §Perf: the activation sample and weight are uploaded to the device
+    // once per search; only the scale candidates change.
+    let a_buf = rt.upload_f32(acts)?;
+    let w_buf = rt.upload_f32(w)?;
+    let alphas = alpha_grid(n_grid);
+    let scales: Vec<Vec<f32>> = alphas.iter().map(|&a| alpha_scale(stats, a)).collect();
+
+    // §Perf iteration 2: when the grid size matches the baked sweep
+    // artifact, evaluate ALL candidates in one execution (20x fewer
+    // dispatches); otherwise fall back to the per-alpha loop.
+    let sweep_entry = format!("layer_loss_sweep_{role}_b{bits}");
+    let losses: Vec<f32> = if rt.manifest.artifact(cfg_name, &sweep_entry).is_ok()
+        && n_grid == SWEEP_N_ALPHA
+    {
+        let n = stats.len();
+        let mut flat = Vec::with_capacity(n_grid * n);
+        for s in &scales {
+            flat.extend_from_slice(s);
+        }
+        let s_t = Tensor::from_vec(&[n_grid, n], flat)?;
+        let outs = rt.exec_b(cfg_name, &sweep_entry, &[&a_buf, &w_buf, &rt.upload_f32(&s_t)?])?;
+        crate::runtime::tensor_f32(&outs[0])?.into_vec()
+    } else {
+        let mut v = Vec::with_capacity(n_grid);
+        for s in &scales {
+            let s_t = Tensor::from_vec(&[s.len()], s.clone())?;
+            let outs = rt.exec_b(cfg_name, &entry, &[&a_buf, &w_buf, &rt.upload_f32(&s_t)?])?;
+            v.push(scalar_f32(&outs[0])?);
+        }
+        v
+    };
+
+    let mut best_i = 0;
+    for (i, &l) in losses.iter().enumerate() {
+        if l < losses[best_i] {
+            best_i = i;
+        }
+    }
+    let grid_losses: Vec<(f32, f32)> = alphas.iter().copied().zip(losses.iter().copied()).collect();
+    Ok(SearchResult {
+        alpha: alphas[best_i],
+        loss: losses[best_i],
+        scale: scales[best_i].clone(),
+        grid_losses,
+    })
+}
+
+/// Evaluate the recon loss for one explicit scale vector (FAQ full search
+/// re-uses this for its (alpha, j, gamma) triples).
+pub fn eval_scale(
+    rt: &Runtime,
+    cfg_name: &str,
+    role: &str,
+    bits: u32,
+    acts: &Tensor,
+    w: &Tensor,
+    scale: &[f32],
+) -> Result<f32> {
+    let entry = format!("layer_loss_{role}_b{bits}");
+    let s_t = Tensor::from_vec(&[scale.len()], scale.to_vec())?;
+    let outs = rt.exec_b(
+        cfg_name,
+        &entry,
+        &[&rt.upload_f32(acts)?, &rt.upload_f32(w)?, &rt.upload_f32(&s_t)?],
+    )?;
+    scalar_f32(&outs[0])
+}

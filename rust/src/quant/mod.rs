@@ -1,0 +1,307 @@
+//! Quantizers (S8): RTN and AWQ baselines + FAQ, the paper's method.
+//!
+//! All three share the same mechanics — asymmetric group quantization of
+//! each block linear under a per-input-channel scale s — and differ only
+//! in *which activation statistics* drive s (paper Sec. 2.2):
+//!
+//! - RTN:  s = 1 (no activation awareness, no search)
+//! - AWQ:  s = normalize(ā_i^α), ā_i = current layer's mean |a|
+//! - FAQ:  s = normalize(ã_i^α), ã_i = γ·ā_i + (1−γ)·mean(ā_{i+1..i+j})
+//!
+//! α is grid-searched per linear against the layer reconstruction loss
+//! (executed as an HLO artifact — grid.rs). FAQ defaults to the paper's
+//! pre-searched configuration (γ = 0.85, window = 3) and optionally runs
+//! the full (α, j, γ) greedy search of eq. 8.
+
+mod fakequant;
+mod grid;
+pub mod packing;
+mod scale;
+
+pub use fakequant::{fakequant, quantize_ints, scaled_fakequant, scaled_quantize_ints, QuantInts};
+pub use grid::{eval_scale, search_alpha, SearchResult};
+pub use scale::{alpha_grid, alpha_scale, STAT_FLOOR};
+
+use crate::calib::{faq_stats, CalibStats};
+use crate::config::{Method, ModelConfig, QuantConfig};
+use crate::model::{role_param, Params, ROLES};
+use crate::runtime::Runtime;
+use anyhow::{bail, Context, Result};
+
+/// One quantized block linear: search outcome + deployment tensors.
+#[derive(Clone, Debug)]
+pub struct LinearQuant {
+    pub block: usize,
+    pub role: &'static str,
+    /// Chosen scale exponent (0 for RTN).
+    pub alpha: f32,
+    /// Reconstruction loss at the chosen configuration.
+    pub loss: f32,
+    /// Effective preview window used (0 = no preview / RTN / AWQ).
+    pub window_used: usize,
+    /// Effective fusion factor (1.0 when no preview).
+    pub gamma_used: f32,
+    /// Per-input-channel scale s.
+    pub scale: Vec<f32>,
+    /// Integer codes + dequant params of W·diag(s).
+    pub ints: QuantInts,
+    /// Reciprocal channel scale folded into activations at runtime.
+    pub inv_s: Vec<f32>,
+    /// Bit-packed codes (edge storage format).
+    pub packed: Vec<u32>,
+}
+
+/// A fully quantized model: fake-quant params for the eval path plus the
+/// integer deployment bundle per linear.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub cfg: ModelConfig,
+    pub qcfg: QuantConfig,
+    /// Full parameter set with every block linear replaced by its
+    /// fake-quantized version (drives the `fwd_logits` eval path).
+    pub fq_params: Params,
+    pub linears: Vec<LinearQuant>,
+}
+
+impl QuantizedModel {
+    /// Total packed weight bytes (codes + dequant params) vs FP32 bytes —
+    /// the compression headline.
+    pub fn compression(&self) -> (usize, usize) {
+        let packed: usize = self
+            .linears
+            .iter()
+            .map(|l| l.ints.packed_bytes() + l.inv_s.len() * 4)
+            .sum();
+        let fp: usize = self
+            .linears
+            .iter()
+            .map(|l| l.ints.n * l.ints.m * 4)
+            .sum();
+        (packed, fp)
+    }
+
+    pub fn linear(&self, block: usize, role: &str) -> Option<&LinearQuant> {
+        self.linears
+            .iter()
+            .find(|l| l.block == block && l.role == role)
+    }
+
+    /// Mean reconstruction loss across linears (summary metric).
+    pub fn mean_loss(&self) -> f32 {
+        if self.linears.is_empty() {
+            return 0.0;
+        }
+        self.linears.iter().map(|l| l.loss).sum::<f32>() / self.linears.len() as f32
+    }
+}
+
+/// FAQ full-search grids (paper eq. 8). Kept small: the paper itself
+/// recommends the pre-searched configuration to avoid this cost.
+const FULL_SEARCH_GAMMAS: [f32; 5] = [0.6, 0.7, 0.8, 0.85, 0.95];
+
+/// Quantize every block linear of `params` with the configured method.
+///
+/// `calib` is required for AWQ/FAQ (activation statistics + loss sample)
+/// and unused by RTN. `Method::Fp` is rejected — there is nothing to do.
+pub fn quantize_model(
+    rt: &Runtime,
+    qcfg: &QuantConfig,
+    params: &Params,
+    calib: Option<&CalibStats>,
+) -> Result<QuantizedModel> {
+    qcfg.validate()?;
+    let cfg = params.cfg.clone();
+    if qcfg.method == Method::Fp {
+        bail!("quantize_model called with Method::Fp");
+    }
+    if matches!(qcfg.method, Method::Awq | Method::Faq) && calib.is_none() {
+        bail!("{} requires calibration statistics", qcfg.method.name());
+    }
+    let group = rt.manifest.group;
+    if group != qcfg.group {
+        bail!(
+            "artifact group={group} but quant config group={} — rebuild artifacts",
+            qcfg.group
+        );
+    }
+
+    let mut fq_params = params.clone();
+    let mut linears = Vec::with_capacity(cfg.n_layer * ROLES.len());
+
+    for block in 0..cfg.n_layer {
+        for (ri, role) in ROLES.iter().enumerate() {
+            let w = params.role_weight(block, role)?;
+            let lq = match qcfg.method {
+                Method::Fp => unreachable!(),
+                Method::Rtn => {
+                    let n = w.shape()[0];
+                    let ones = vec![1.0f32; n];
+                    let loss = match calib {
+                        Some(c) => eval_scale(
+                            rt,
+                            &cfg.name,
+                            role,
+                            qcfg.bits,
+                            c.acts_for(block, ri),
+                            w,
+                            &ones,
+                        )?,
+                        None => f32::NAN,
+                    };
+                    build_linear(block, role, 0.0, loss, 0, 1.0, ones, w, qcfg, group)?
+                }
+                Method::Awq => {
+                    let c = calib.unwrap();
+                    let stats = c.stats_for(block, ri);
+                    let sr = search_alpha(
+                        rt,
+                        &cfg.name,
+                        role,
+                        qcfg.bits,
+                        c.acts_for(block, ri),
+                        w,
+                        stats,
+                        qcfg.alpha_grid,
+                    )?;
+                    build_linear(block, role, sr.alpha, sr.loss, 0, 1.0, sr.scale, w, qcfg, group)?
+                }
+                Method::Faq => {
+                    let c = calib.unwrap();
+                    quantize_faq_linear(rt, &cfg, qcfg, c, block, ri, role, w, group)?
+                }
+            };
+            fq_params.set(
+                &role_param(block, role),
+                scaled_fakequant(w, &lq.scale, qcfg.bits, group)?,
+            )?;
+            linears.push(lq);
+        }
+    }
+
+    Ok(QuantizedModel {
+        cfg,
+        qcfg: qcfg.clone(),
+        fq_params,
+        linears,
+    })
+}
+
+/// FAQ per-linear quantization: pre-searched (γ, j) + α grid by default,
+/// full greedy (α, j, γ) search when configured (paper eq. 8).
+#[allow(clippy::too_many_arguments)]
+fn quantize_faq_linear(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    qcfg: &QuantConfig,
+    c: &CalibStats,
+    block: usize,
+    ri: usize,
+    role: &'static str,
+    w: &crate::tensor::Tensor,
+    group: usize,
+) -> Result<LinearQuant> {
+    let per_layer = c.role_stats_per_layer(ri);
+    let acts = c.acts_for(block, ri);
+    let has_future = block + 1 < cfg.n_layer;
+
+    let candidates: Vec<(usize, f32)> = if !has_future {
+        vec![(0, 1.0)] // last block: AWQ fallback
+    } else if qcfg.full_search {
+        let max_j = (cfg.n_layer - 1 - block).min(4).max(1);
+        let mut v = Vec::new();
+        for j in 1..=max_j {
+            for &g in &FULL_SEARCH_GAMMAS {
+                v.push((j, g));
+            }
+        }
+        v
+    } else {
+        vec![(qcfg.window, qcfg.gamma)]
+    };
+
+    let mut best: Option<(SearchResult, usize, f32)> = None;
+    for (j, gamma) in candidates {
+        let stats = if j == 0 {
+            per_layer[block].to_vec()
+        } else {
+            faq_stats(&per_layer, block, j, gamma, qcfg.layerwise_preview)
+        };
+        let sr = search_alpha(
+            rt,
+            &cfg.name,
+            role,
+            qcfg.bits,
+            acts,
+            w,
+            &stats,
+            qcfg.alpha_grid,
+        )?;
+        let better = match &best {
+            None => true,
+            Some((b, _, _)) => sr.loss < b.loss,
+        };
+        if better {
+            best = Some((sr, j, gamma));
+        }
+    }
+    let (sr, j, gamma) = best.context("no FAQ candidates")?;
+    let gamma_used = if j == 0 { 1.0 } else { gamma };
+    build_linear(block, role, sr.alpha, sr.loss, j, gamma_used, sr.scale, w, qcfg, group)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_linear(
+    block: usize,
+    role: &'static str,
+    alpha: f32,
+    loss: f32,
+    window_used: usize,
+    gamma_used: f32,
+    scale: Vec<f32>,
+    w: &crate::tensor::Tensor,
+    qcfg: &QuantConfig,
+    group: usize,
+) -> Result<LinearQuant> {
+    let (ints, inv_s) = scaled_quantize_ints(w, &scale, qcfg.bits, group)?;
+    let packed = packing::pack(&ints.q, qcfg.bits)?;
+    Ok(LinearQuant {
+        block,
+        role,
+        alpha,
+        loss,
+        window_used,
+        gamma_used,
+        scale,
+        ints,
+        inv_s,
+        packed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Rng, Tensor};
+
+    #[test]
+    fn compression_headline_is_real() {
+        // Direct check on the deployment bundle: a 3-bit packed linear is
+        // >6x smaller than FP32 when group=32 amortizes dequant params.
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[256, 128], 1.0);
+        let ints = quantize_ints(&w, 3, 32).unwrap();
+        let fp_bytes = 256 * 128 * 4;
+        assert!(ints.packed_bytes() * 6 < fp_bytes);
+    }
+
+    #[test]
+    fn fp_method_rejected() {
+        // quantize_model(Method::Fp) must bail — needs no runtime to test
+        // the validation order (validate -> method check happens before
+        // any artifact access only if calib checks pass), so construct the
+        // error through QuantConfig directly.
+        let q = QuantConfig::with_method(Method::Fp);
+        assert!(q.validate().is_ok());
+        // The bail itself is covered by the pipeline integration test.
+    }
+}

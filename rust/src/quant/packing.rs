@@ -1,0 +1,132 @@
+//! Bit-packing for low-bit integer codes (S10).
+//!
+//! Edge-deployment storage: codes of width `bits` are packed contiguously
+//! into a little-endian u32 bit-stream (codes may straddle word
+//! boundaries; 3-bit packing wastes zero bits). Round-trip is exact for
+//! any bits in [1, 8].
+
+use anyhow::{bail, Result};
+
+/// Pack `codes` (each < 2^bits) into a dense u32 bit-stream.
+pub fn pack(codes: &[u8], bits: u32) -> Result<Vec<u32>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits={bits} out of range [1, 8]");
+    }
+    let limit = (1u32 << bits) as u16;
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u32; total_bits.div_ceil(32)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        if (c as u16) >= limit {
+            bail!("code {c} does not fit in {bits} bits");
+        }
+        let word = bitpos / 32;
+        let off = (bitpos % 32) as u32;
+        out[word] |= (c as u32) << off;
+        let spill = off + bits;
+        if spill > 32 {
+            out[word + 1] |= (c as u32) >> (32 - off);
+        }
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Unpack `count` codes of width `bits` from a bit-stream.
+pub fn unpack(words: &[u32], bits: u32, count: usize) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits={bits} out of range [1, 8]");
+    }
+    let need_bits = count * bits as usize;
+    if words.len() * 32 < need_bits {
+        bail!(
+            "stream of {} words too short for {count} codes of {bits} bits",
+            words.len()
+        );
+    }
+    let mask = (1u32 << bits) - 1;
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let word = bitpos / 32;
+        let off = (bitpos % 32) as u32;
+        let mut v = words[word] >> off;
+        let spill = off + bits;
+        if spill > 32 {
+            v |= words[word + 1] << (32 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Packed size in bytes for `count` codes of width `bits`.
+pub fn packed_bytes(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(32) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::testutil::{forall, Pair, UsizeIn};
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Rng::new(1);
+        for bits in 1..=8u32 {
+            let max = (1u16 << bits) as usize;
+            let codes: Vec<u8> = (0..1000).map(|_| rng.below(max) as u8).collect();
+            let packed = pack(&codes, bits).unwrap();
+            let back = unpack(&packed, bits, codes.len()).unwrap();
+            assert_eq!(codes, back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_lengths() {
+        forall(7, 60, &Pair(UsizeIn(0, 500), UsizeIn(1, 8)), |&(len, bits)| {
+            let bits = bits as u32;
+            let mut rng = Rng::new(len as u64 * 31 + bits as u64);
+            let max = (1u16 << bits) as usize;
+            let codes: Vec<u8> = (0..len).map(|_| rng.below(max.max(1)) as u8).collect();
+            let packed = pack(&codes, bits).map_err(|e| e.to_string())?;
+            let back = unpack(&packed, bits, len).map_err(|e| e.to_string())?;
+            if back != codes {
+                return Err("roundtrip mismatch".into());
+            }
+            if packed.len() * 4 != packed_bytes(len, bits) {
+                return Err("size accounting mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compression_ratio() {
+        // 3-bit packing: 1024 codes -> 3072 bits -> 96 u32 words.
+        assert_eq!(packed_bytes(1024, 3), 384);
+        // vs 1024 bytes unpacked: 2.67x smaller.
+        assert!(packed_bytes(1024, 3) * 8 < 1024 * 4);
+    }
+
+    #[test]
+    fn oversized_code_rejected() {
+        assert!(pack(&[8], 3).is_err());
+        assert!(pack(&[7], 3).is_ok());
+    }
+
+    #[test]
+    fn short_stream_rejected() {
+        assert!(unpack(&[0u32], 8, 5).is_err());
+    }
+
+    #[test]
+    fn straddling_word_boundary() {
+        // 3-bit codes: code #10 starts at bit 30 and straddles words 0/1.
+        let codes: Vec<u8> = (0..22).map(|i| (i % 8) as u8).collect();
+        let packed = pack(&codes, 3).unwrap();
+        assert_eq!(unpack(&packed, 3, 22).unwrap(), codes);
+    }
+}

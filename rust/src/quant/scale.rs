@@ -1,0 +1,95 @@
+//! Channel-scale rules (paper Sec. 2.1 / 2.2).
+//!
+//! AWQ's base rule: s = a_bar^alpha over the per-channel mean activation
+//! magnitude a_bar, normalized by sqrt(max(s) * min(s)) so the scale is
+//! centred around 1 (matches the AWQ reference implementation; keeps the
+//! folded weights in a sane dynamic range). FAQ changes only *which*
+//! a_bar goes in: the fused current+preview statistics (calib::window).
+
+/// Numerical floor for activation stats (dead channels).
+pub const STAT_FLOOR: f32 = 1e-6;
+
+/// s = normalize(stats ^ alpha). `stats` are per-channel mean |a|.
+pub fn alpha_scale(stats: &[f32], alpha: f32) -> Vec<f32> {
+    let mut s: Vec<f32> = stats
+        .iter()
+        .map(|&x| x.max(STAT_FLOOR).powf(alpha))
+        .collect();
+    // Normalize: s <- s / sqrt(max * min) keeps geometric centre at 1.
+    let mx = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mn = s.iter().copied().fold(f32::INFINITY, f32::min);
+    let denom = (mx * mn).sqrt();
+    if denom.is_finite() && denom > 0.0 {
+        for v in &mut s {
+            *v /= denom;
+        }
+    }
+    // Clamp away from zero: s multiplies weight rows and is inverted on
+    // the activation side.
+    for v in &mut s {
+        *v = v.max(1e-4);
+    }
+    s
+}
+
+/// The alpha grid searched by AWQ/FAQ: `n` points over [0, 1].
+/// alpha = 0 degenerates to RTN (s = 1 after normalization).
+pub fn alpha_grid(n: usize) -> Vec<f32> {
+    assert!(n >= 2);
+    (0..n).map(|i| i as f32 / (n - 1) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_zero_is_identity_scale() {
+        let s = alpha_scale(&[0.1, 2.0, 30.0], 0.0);
+        for v in s {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn higher_alpha_spreads_scales() {
+        let stats = [0.1f32, 1.0, 10.0];
+        let s_lo = alpha_scale(&stats, 0.25);
+        let s_hi = alpha_scale(&stats, 1.0);
+        let spread = |s: &[f32]| s.iter().cloned().fold(f32::MIN, f32::max)
+            / s.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread(&s_hi) > spread(&s_lo));
+    }
+
+    #[test]
+    fn monotone_in_stats() {
+        let s = alpha_scale(&[0.5, 1.0, 2.0, 4.0], 0.5);
+        for pair in s.windows(2) {
+            assert!(pair[0] < pair[1]);
+        }
+    }
+
+    #[test]
+    fn normalization_centres_at_one() {
+        let s = alpha_scale(&[0.25, 1.0, 4.0], 1.0);
+        let mx = s.iter().cloned().fold(f32::MIN, f32::max);
+        let mn = s.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(((mx * mn).sqrt() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dead_channels_floored() {
+        let s = alpha_scale(&[0.0, 1.0], 1.0);
+        assert!(s[0] > 0.0);
+        assert!(s.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn grid_covers_unit_interval() {
+        let g = alpha_grid(20);
+        assert_eq!(g.len(), 20);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(*g.last().unwrap(), 1.0);
+        assert!(g.windows(2).all(|w| w[1] > w[0]));
+    }
+}

@@ -1,0 +1,81 @@
+//! Tensor <-> xla::Literal conversions.
+//!
+//! Host is little-endian (x86_64/aarch64 linux); literals are created from
+//! raw LE bytes and read back with `to_vec`, so conversions are cheap
+//! memcpys.
+
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal};
+
+fn as_bytes_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 has no padding; alignment of u8 is 1; LE host.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn as_bytes_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// f32 tensor -> literal with the same shape.
+pub fn lit_f32(t: &Tensor) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, t.shape(), as_bytes_f32(t.data()))
+        .context("create f32 literal")
+}
+
+/// i32 tensor -> literal with the same shape.
+pub fn lit_i32(t: &TensorI32) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, t.shape(), as_bytes_i32(t.data()))
+        .context("create i32 literal")
+}
+
+/// f32 scalar literal (shape []).
+pub fn lit_scalar(v: f32) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &[], as_bytes_f32(&[v]))
+        .context("create scalar literal")
+}
+
+/// Literal -> f32 tensor (shape taken from the literal).
+pub fn tensor_f32(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec().context("literal to f32 vec")?;
+    Tensor::from_vec(&dims, data)
+}
+
+/// Literal -> f32 scalar.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v: f32 = lit.get_first_element().context("scalar literal read")?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&mut rng, &[3, 4], 1.0);
+        let lit = lit_f32(&t).unwrap();
+        let back = tensor_f32(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_shape_preserved() {
+        let t = TensorI32::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let lit = lit_i32(&t).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar(7.25).unwrap();
+        assert_eq!(scalar_f32(&lit).unwrap(), 7.25);
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime (S7): load AOT HLO-text artifacts, compile once, execute
+//! from the L3 hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Executables are compiled on first use
+//! and cached for the process lifetime; all entrypoints lower with
+//! `return_tuple=True`, so outputs are always un-tupled here.
+//!
+//! The runtime also keeps lightweight counters (`ExecStats`) used by the
+//! perf pass to verify the coordinator is executor-bound (DESIGN.md §9).
+
+mod literals;
+mod registry;
+
+pub use literals::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32};
+pub use registry::{ArtifactInfo, Manifest};
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Cumulative execution statistics (per entry name).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: usize,
+    pub compile_secs: f32,
+    pub exec_secs: f32,
+}
+
+/// The process-wide runtime: one PJRT CPU client + executable cache.
+///
+/// Not `Sync` (PJRT pointers are not thread-safe here); multi-threaded
+/// users own a `Runtime` per dedicated executor thread (see
+/// [`crate::serve`]).
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for (cfg, entry).
+    pub fn executable(&self, cfg: &str, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = (cfg.to_string(), entry.to_string());
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.artifact(cfg, entry)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.path)
+            .with_context(|| format!("parse HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile {cfg}/{entry}"))?,
+        );
+        let dt = t0.elapsed().as_secs_f32();
+        self.stats
+            .borrow_mut()
+            .entry(format!("{cfg}/{entry}"))
+            .or_default()
+            .compile_secs += dt;
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact: checks arity, runs, un-tuples the output.
+    pub fn exec(&self, cfg: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let info = self.manifest.artifact(cfg, entry)?;
+        if args.len() != info.nargs {
+            anyhow::bail!(
+                "{cfg}/{entry}: got {} args, artifact wants {}",
+                args.len(),
+                info.nargs
+            );
+        }
+        let exe = self.executable(cfg, entry)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("execute {cfg}/{entry}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("download result literal")?;
+        let outs = lit.to_tuple().context("untuple result")?;
+        let dt = t0.elapsed().as_secs_f32();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{cfg}/{entry}")).or_default();
+        s.calls += 1;
+        s.exec_secs += dt;
+        Ok(outs)
+    }
+
+    /// Upload a host tensor to a device-resident buffer (§Perf: weights
+    /// and activation samples are uploaded once and reused across many
+    /// executions instead of re-copying a Literal per call).
+    pub fn upload_f32(&self, t: &crate::tensor::Tensor) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .context("upload f32 buffer")
+    }
+
+    /// Upload a host literal to a device buffer (used for pre-built
+    /// literal bundles like the serving weight set).
+    pub fn upload_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("upload literal buffer")
+    }
+
+    /// Upload an i32 host tensor to a device buffer.
+    pub fn upload_i32(&self, t: &crate::tensor::TensorI32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .context("upload i32 buffer")
+    }
+
+    /// Execute with device-resident input buffers (no per-call host
+    /// copies of the arguments). Output handling identical to [`exec`].
+    pub fn exec_b<L: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        cfg: &str,
+        entry: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let info = self.manifest.artifact(cfg, entry)?;
+        if args.len() != info.nargs {
+            anyhow::bail!(
+                "{cfg}/{entry}: got {} buffer args, artifact wants {}",
+                args.len(),
+                info.nargs
+            );
+        }
+        let exe = self.executable(cfg, entry)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(args)
+            .with_context(|| format!("execute_b {cfg}/{entry}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("download result literal")?;
+        let outs = lit.to_tuple().context("untuple result")?;
+        let dt = t0.elapsed().as_secs_f32();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{cfg}/{entry}")).or_default();
+        s.calls += 1;
+        s.exec_secs += dt;
+        Ok(outs)
+    }
+
+    /// Warm the executable cache for a set of entries.
+    pub fn warmup(&self, cfg: &str, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.executable(cfg, e)?;
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Total seconds spent inside PJRT `execute` calls.
+    pub fn total_exec_secs(&self) -> f32 {
+        self.stats.borrow().values().map(|s| s.exec_secs).sum()
+    }
+}

@@ -1,0 +1,255 @@
+//! Artifact manifest parser.
+//!
+//! `artifacts/manifest.txt` is written by python/compile/aot.py (line
+//! format documented there). The registry is the single source of truth
+//! for which HLO modules exist, their argument counts, and the canonical
+//! parameter order per model config — cross-checked against the rust-side
+//! presets so L2 and L3 can never drift silently.
+
+use crate::config::ModelConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub cfg: String,
+    pub entry: String,
+    pub path: PathBuf,
+    pub nargs: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub group: usize,
+    pub loss_rows: usize,
+    pub configs: HashMap<String, ModelConfig>,
+    /// cfg -> canonical (name, shape) parameter list.
+    pub params: HashMap<String, Vec<(String, Vec<usize>)>>,
+    /// (cfg, entry) -> artifact.
+    pub artifacts: HashMap<(String, String), ArtifactInfo>,
+}
+
+fn kv(tok: &str, line_no: usize) -> Result<(&str, &str)> {
+    tok.split_once('=')
+        .with_context(|| format!("manifest line {line_no}: expected key=value, got '{tok}'"))
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let mut m = Manifest::default();
+        for (i, line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            match toks.next().unwrap() {
+                "group" => {
+                    m.group = toks
+                        .next()
+                        .context("group value missing")?
+                        .parse()
+                        .context("group not an int")?;
+                }
+                "loss_rows" => {
+                    m.loss_rows = toks
+                        .next()
+                        .context("loss_rows value missing")?
+                        .parse()
+                        .context("loss_rows not an int")?;
+                }
+                "config" => {
+                    let name = toks.next().context("config name missing")?.to_string();
+                    let mut fields: HashMap<&str, usize> = HashMap::new();
+                    for tok in toks {
+                        let (k, v) = kv(tok, line_no)?;
+                        fields.insert(
+                            k,
+                            v.parse()
+                                .with_context(|| format!("line {line_no}: bad int '{v}'"))?,
+                        );
+                    }
+                    let get = |k: &str| -> Result<usize> {
+                        fields
+                            .get(k)
+                            .copied()
+                            .with_context(|| format!("line {line_no}: missing field {k}"))
+                    };
+                    let cfg = ModelConfig {
+                        name: name.clone(),
+                        n_layer: get("n_layer")?,
+                        d_model: get("d_model")?,
+                        n_head: get("n_head")?,
+                        d_ff: get("d_ff")?,
+                        vocab: get("vocab")?,
+                        seq: get("seq")?,
+                        batch: get("batch")?,
+                    };
+                    m.configs.insert(name, cfg);
+                }
+                "param" => {
+                    let cfg = toks.next().context("param cfg missing")?.to_string();
+                    let idx: usize = toks.next().context("param idx missing")?.parse()?;
+                    let pname = toks.next().context("param name missing")?.to_string();
+                    let dims_raw = toks.next().context("param dims missing")?;
+                    let shape: Vec<usize> = if dims_raw == "scalar" {
+                        vec![]
+                    } else {
+                        dims_raw
+                            .split('x')
+                            .map(|d| d.parse().map_err(anyhow::Error::from))
+                            .collect::<Result<_>>()?
+                    };
+                    let list = m.params.entry(cfg).or_default();
+                    if list.len() != idx {
+                        bail!("line {line_no}: param idx {idx} out of order (have {})", list.len());
+                    }
+                    list.push((pname, shape));
+                }
+                "artifact" => {
+                    let cfg = toks.next().context("artifact cfg missing")?.to_string();
+                    let entry = toks.next().context("artifact entry missing")?.to_string();
+                    let rel = toks.next().context("artifact path missing")?;
+                    let (k, v) = kv(toks.next().context("nargs missing")?, line_no)?;
+                    if k != "nargs" {
+                        bail!("line {line_no}: expected nargs=, got {k}=");
+                    }
+                    m.artifacts.insert(
+                        (cfg.clone(), entry.clone()),
+                        ArtifactInfo {
+                            cfg,
+                            entry,
+                            path: artifacts_dir.join(rel),
+                            nargs: v.parse()?,
+                        },
+                    );
+                }
+                other => bail!("manifest line {line_no}: unknown record '{other}'"),
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check manifest configs + param lists against rust presets.
+    fn validate(&self) -> Result<()> {
+        for (name, cfg) in &self.configs {
+            if let Ok(preset) = ModelConfig::preset(name) {
+                if *cfg != preset {
+                    bail!(
+                        "manifest config '{name}' disagrees with rust preset: \
+                         {cfg:?} vs {preset:?} — rebuild artifacts"
+                    );
+                }
+            }
+            let specs = crate::model::param_specs(cfg);
+            let manifest_specs = self
+                .params
+                .get(name)
+                .with_context(|| format!("manifest has no params for '{name}'"))?;
+            if specs.len() != manifest_specs.len() {
+                bail!(
+                    "param count mismatch for '{name}': rust {} vs manifest {}",
+                    specs.len(),
+                    manifest_specs.len()
+                );
+            }
+            for ((rn, rs), (mn, ms)) in specs.iter().zip(manifest_specs) {
+                if rn != mn || rs != ms {
+                    bail!(
+                        "param order drift for '{name}': rust ({rn}, {rs:?}) vs \
+                         manifest ({mn}, {ms:?})"
+                    );
+                }
+            }
+        }
+        if self.group == 0 || self.loss_rows == 0 {
+            bail!("manifest missing group/loss_rows headers");
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, cfg: &str, entry: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(&(cfg.to_string(), entry.to_string()))
+            .with_context(|| format!("no artifact '{entry}' for config '{cfg}'"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest — rebuild artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("faquant_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.group > 0);
+            assert!(!m.configs.is_empty());
+            let pico = m.config("pico").unwrap();
+            assert_eq!(pico.d_model, 64);
+            assert!(m.artifact("pico", "fwd_logits").is_ok());
+            assert!(m.artifact("pico", "no_such").is_err());
+        }
+    }
+
+    #[test]
+    fn rejects_param_drift() {
+        let d = tmpdir("drift");
+        write_manifest(
+            &d,
+            "group 32\nloss_rows 512\n\
+             config pico n_layer=2 d_model=64 n_head=2 d_ff=256 vocab=256 seq=128 batch=4\n\
+             param pico 0 WRONG_NAME 256x64\n",
+        );
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(d).ok();
+    }
+
+    #[test]
+    fn rejects_config_drift() {
+        let d = tmpdir("cfgdrift");
+        write_manifest(
+            &d,
+            "group 32\nloss_rows 512\n\
+             config pico n_layer=9 d_model=64 n_head=2 d_ff=256 vocab=256 seq=128 batch=4\n",
+        );
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(d).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let d = tmpdir("none");
+        let err = Manifest::load(&d.join("nope")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(d).ok();
+    }
+}

@@ -1,0 +1,199 @@
+//! Edge-serving demo (S12): batched inference over the quantized
+//! deployment artifact (`fwd_logits_q`) with a request queue, a timeout
+//! batcher, and latency accounting.
+//!
+//! The PJRT runtime is not `Sync`, so the server owns it on a dedicated
+//! executor thread; clients talk over mpsc channels. The batcher collects
+//! up to `batch` requests or flushes after `max_wait`; partial batches are
+//! padded (fixed-shape artifacts) and pad rows discarded.
+
+use crate::config::ModelConfig;
+use crate::model::{Params, ROLES};
+use crate::quant::QuantizedModel;
+use crate::runtime::{lit_f32, tensor_f32, Runtime};
+use crate::tensor::{percentile, Tensor, TensorI32};
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request: a full token sequence; the response carries the
+/// logits of the final position (next-token distribution).
+pub struct Request {
+    pub tokens: Vec<i32>,
+    pub respond: mpsc::Sender<Response>,
+}
+
+pub struct Response {
+    pub next_logits: Vec<f32>,
+    pub queued_at: Instant,
+    pub done_at: Instant,
+}
+
+/// Latency/throughput summary of a serving run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_fill: f32,
+    pub p50_ms: f32,
+    pub p95_ms: f32,
+    pub throughput_rps: f32,
+}
+
+/// Build the flat argument prefix for `fwd_logits_q` from a quantized
+/// model (everything except the trailing tokens tensor).
+///
+/// Arg order (must mirror python model.fwd_logits_q): tok_emb, pos_emb,
+/// per block [ln1, qkv{q,d,z,inv}, o{...}, ln2, up{...}, down{...}],
+/// lnf_g, w_head.
+pub fn qmodel_literals(params: &Params, qm: &QuantizedModel) -> Result<Vec<xla::Literal>> {
+    let cfg = &qm.cfg;
+    let mut lits = Vec::new();
+    lits.push(lit_f32(params.get("tok_emb")?)?);
+    lits.push(lit_f32(params.get("pos_emb")?)?);
+    for b in 0..cfg.n_layer {
+        lits.push(lit_f32(params.get(&format!("blk{b}.ln1_g"))?)?);
+        for role in ["qkv", "o"] {
+            push_linear(&mut lits, qm, b, role)?;
+        }
+        lits.push(lit_f32(params.get(&format!("blk{b}.ln2_g"))?)?);
+        for role in ["up", "down"] {
+            push_linear(&mut lits, qm, b, role)?;
+        }
+    }
+    lits.push(lit_f32(params.get("lnf_g")?)?);
+    lits.push(lit_f32(params.get("w_head")?)?);
+    Ok(lits)
+}
+
+/// Upload a literal bundle to device-resident buffers.
+fn upload_literals(rt: &Runtime, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+    lits.iter().map(|l| rt.upload_literal(l)).collect()
+}
+
+fn push_linear(
+    lits: &mut Vec<xla::Literal>,
+    qm: &QuantizedModel,
+    block: usize,
+    role: &str,
+) -> Result<()> {
+    let lq = qm
+        .linear(block, role)
+        .ok_or_else(|| anyhow::anyhow!("missing linear blk{block}.{role}"))?;
+    debug_assert!(ROLES.contains(&role));
+    let ints = &lq.ints;
+    let ng = ints.n / ints.group;
+    // Codes travel as f32 (qmatmul kernel contract; see kernels/qmatmul.py).
+    let q_f32: Vec<f32> = ints.q.iter().map(|&c| c as f32).collect();
+    lits.push(lit_f32(&Tensor::from_vec(&[ints.n, ints.m], q_f32)?)?);
+    lits.push(lit_f32(&Tensor::from_vec(&[ng, ints.m], ints.delta.clone())?)?);
+    lits.push(lit_f32(&Tensor::from_vec(&[ng, ints.m], ints.zero.clone())?)?);
+    lits.push(lit_f32(&Tensor::from_vec(&[ints.n], lq.inv_s.clone())?)?);
+    Ok(())
+}
+
+/// Run the serving loop over a closed set of requests (demo/benchmark
+/// mode): consumes the receiver until disconnect, returns the report.
+pub fn serve_requests(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    rx: mpsc::Receiver<Request>,
+    max_wait: Duration,
+) -> Result<ServeReport> {
+    // §Perf: the INT-code weight bundle lives on-device for the whole
+    // serving session; only token batches cross the host boundary.
+    let weight_lits = qmodel_literals(params, qm)?;
+    let weight_bufs = upload_literals(rt, &weight_lits)?;
+    let (b, t, v) = (cfg.batch, cfg.seq, cfg.vocab);
+    let mut latencies_ms: Vec<f32> = Vec::new();
+    let mut fills: Vec<f32> = Vec::new();
+    let mut batches = 0usize;
+    let started = Instant::now();
+    let mut pending: Vec<(Request, Instant)> = Vec::new();
+    let mut done = false;
+
+    while !done || !pending.is_empty() {
+        // Fill the batch window.
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < b && !done {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(req) => pending.push((req, Instant::now())),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        let take = pending.len().min(b);
+        let group: Vec<(Request, Instant)> = pending.drain(..take).collect();
+        fills.push(take as f32 / b as f32);
+
+        // Assemble the fixed-shape batch, padding with the last row.
+        let mut data = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let (req, _) = &group[i.min(take - 1)];
+            if req.tokens.len() != t {
+                bail!("request seq len {} != {t}", req.tokens.len());
+            }
+            data.extend_from_slice(&req.tokens);
+        }
+        let batch = TensorI32::from_vec(&[b, t], data)?;
+        let tok_buf = rt.upload_i32(&batch)?;
+        let mut args: Vec<&xla::PjRtBuffer> = weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let outs = rt.exec_b(&cfg.name, "fwd_logits_q", &args)?;
+        let logits = tensor_f32(&outs[0])?; // [B, T, V]
+        let now = Instant::now();
+        batches += 1;
+
+        for (i, (req, queued)) in group.into_iter().enumerate() {
+            let base = (i * t + (t - 1)) * v;
+            let next = logits.data()[base..base + v].to_vec();
+            latencies_ms.push(now.duration_since(queued).as_secs_f32() * 1e3);
+            // Receiver may have hung up; that's the client's business.
+            let _ = req.respond.send(Response {
+                next_logits: next,
+                queued_at: queued,
+                done_at: now,
+            });
+        }
+    }
+
+    let total = started.elapsed().as_secs_f32();
+    let n = latencies_ms.len();
+    Ok(ServeReport {
+        requests: n,
+        batches,
+        mean_batch_fill: if fills.is_empty() {
+            0.0
+        } else {
+            fills.iter().sum::<f32>() / fills.len() as f32
+        },
+        p50_ms: percentile(&latencies_ms, 50.0),
+        p95_ms: percentile(&latencies_ms, 95.0),
+        throughput_rps: if total > 0.0 { n as f32 / total } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_fields_sane() {
+        let r = ServeReport {
+            requests: 10,
+            batches: 3,
+            mean_batch_fill: 0.83,
+            p50_ms: 5.0,
+            p95_ms: 9.0,
+            throughput_rps: 100.0,
+        };
+        assert!(r.p95_ms >= r.p50_ms);
+        assert!(r.mean_batch_fill <= 1.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! `.fqt` binary tensor store (S2): named-tensor checkpoints.
+//!
+//! Little-endian layout:
+//! ```text
+//! magic   b"FQT1"
+//! u32     n_entries
+//! entry*: u16 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
+//!         u8 ndim | u64 dims[ndim] | raw LE payload
+//! ```
+//! Used for model checkpoints (rust writes, rust reads), quantized model
+//! bundles, and calibration stat dumps. Python never reads these — the
+//! rust coordinator uploads tensors to PJRT directly.
+
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FQT1";
+
+/// An ordered collection of named tensors.
+#[derive(Default, Clone, Debug)]
+pub struct TensorStore {
+    f32s: BTreeMap<String, Tensor>,
+    i32s: BTreeMap<String, TensorI32>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.f32s.insert(name.to_string(), t);
+    }
+
+    pub fn insert_i32(&mut self, name: &str, t: TensorI32) {
+        self.i32s.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.f32s
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in store"))
+    }
+
+    pub fn get_i32(&self, name: &str) -> Result<&TensorI32> {
+        self.i32s
+            .get(name)
+            .with_context(|| format!("i32 tensor '{name}' not in store"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.f32s.contains_key(name) || self.i32s.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.f32s
+            .keys()
+            .chain(self.i32s.keys())
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.f32s.len() + self.i32s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.f32s {
+            write_header(&mut w, name, 0, t.shape())?;
+            for v in t.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for (name, t) in &self.i32s {
+            write_header(&mut w, name, 1, t.shape())?;
+            for v in t.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let n = read_u32(&mut r)? as usize;
+        let mut store = Self::new();
+        for _ in 0..n {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf8")?;
+            let dtype = read_u8(&mut r)?;
+            let ndim = read_u8(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            match dtype {
+                0 => {
+                    let mut data = vec![0f32; numel];
+                    let mut buf = vec![0u8; numel * 4];
+                    r.read_exact(&mut buf)?;
+                    for (i, c) in buf.chunks_exact(4).enumerate() {
+                        data[i] = f32::from_le_bytes(c.try_into().unwrap());
+                    }
+                    store.insert(&name, Tensor::from_vec(&shape, data)?);
+                }
+                1 => {
+                    let mut data = vec![0i32; numel];
+                    let mut buf = vec![0u8; numel * 4];
+                    r.read_exact(&mut buf)?;
+                    for (i, c) in buf.chunks_exact(4).enumerate() {
+                        data[i] = i32::from_le_bytes(c.try_into().unwrap());
+                    }
+                    store.insert_i32(&name, TensorI32::from_vec(&shape, data)?);
+                }
+                d => bail!("unknown dtype {d}"),
+            }
+        }
+        Ok(store)
+    }
+}
+
+fn write_header(w: &mut impl Write, name: &str, dtype: u8, shape: &[usize]) -> Result<()> {
+    w.write_all(&(name.len() as u16).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&[dtype, shape.len() as u8])?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("faquant_store_{name}_{}.fqt", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_f32_i32() {
+        let mut s = TensorStore::new();
+        let mut rng = Rng::new(1);
+        s.insert("w.a", Tensor::randn(&mut rng, &[3, 5], 1.0));
+        s.insert("w.b", Tensor::randn(&mut rng, &[7], 0.5));
+        s.insert_i32(
+            "tok",
+            TensorI32::from_vec(&[2, 3], vec![1, -2, 3, 4, 5, 6]).unwrap(),
+        );
+        let p = tmp("rt");
+        s.save(&p).unwrap();
+        let back = TensorStore::load(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("w.a").unwrap(), s.get("w.a").unwrap());
+        assert_eq!(back.get("w.b").unwrap(), s.get("w.b").unwrap());
+        assert_eq!(back.get_i32("tok").unwrap(), s.get_i32("tok").unwrap());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let s = TensorStore::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(TensorStore::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scalar_shape_roundtrip() {
+        let mut s = TensorStore::new();
+        s.insert("step", Tensor::from_vec(&[], vec![42.0]).unwrap());
+        let p = tmp("scalar");
+        s.save(&p).unwrap();
+        let back = TensorStore::load(&p).unwrap();
+        assert_eq!(back.get("step").unwrap().data(), &[42.0]);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,235 @@
+//! Host-side tensor library (S1).
+//!
+//! Minimal dense f32 tensors for weight manipulation, statistics, and the
+//! host halves of quantization. No external ndarray/rand crates exist in
+//! the offline registry, so shapes, ops, and the PRNG live here.
+//!
+//! Deliberately *not* a compute engine: anything heavier than a stats
+//! reduction or a one-off matmul belongs in an HLO artifact executed by
+//! [`crate::runtime`].
+
+mod ops;
+mod rng;
+mod stats;
+
+pub use rng::Rng;
+pub use stats::*;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from raw parts; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            );
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    /// Standard-normal init scaled by `std`.
+    pub fn randn(rng: &mut Rng, shape: &[usize], std: f32) -> Self {
+        let numel: usize = shape.iter().product();
+        let data = (0..numel).map(|_| rng.normal() * std).collect();
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape (same number of elements).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            bail!("reshape {:?} -> {:?}: numel mismatch", self.shape, shape);
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// 2-D accessor: element (i, j) of an [r, c] tensor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy rows [lo, hi) of a 2-D tensor into a new tensor.
+    pub fn rows(&self, lo: usize, hi: usize) -> Tensor {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        Tensor {
+            shape: vec![hi - lo, c],
+            data: self.data[lo * c..hi * c].to_vec(),
+        }
+    }
+
+    /// Gather the given rows of a 2-D tensor into a new [idx.len(), c] tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        let mut data = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor {
+            shape: vec![idx.len(), c],
+            data,
+        }
+    }
+
+    /// Slice the leading dimension at index `i` (e.g. [L, R, n] -> [R, n]).
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(self.shape.len() >= 2 && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+}
+
+/// Dense row-major i32 tensor (token ids, integer codes on the wire).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel, data.len());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_numel() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|i| i as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.shape(), &[3, 4]);
+        assert_eq!(r.at2(2, 3), 11.0);
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn row_and_gather() {
+        let t = Tensor::from_vec(&[3, 2], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.row(1), &[2., 3.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[4., 5., 0., 1.]);
+    }
+
+    #[test]
+    fn index0_slices_leading_dim() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.index0(1);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = Tensor::randn(&mut r1, &[4, 4], 1.0);
+        let b = Tensor::randn(&mut r2, &[4, 4], 1.0);
+        assert_eq!(a, b);
+    }
+}

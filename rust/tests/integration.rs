@@ -1,0 +1,245 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; each test skips (with a
+//! loud message) when artifacts/ is missing so `cargo test` stays usable
+//! on a fresh checkout.
+
+use faquant::config::ModelConfig;
+use faquant::model::Params;
+use faquant::quant::{alpha_scale, scaled_fakequant};
+use faquant::runtime::{lit_f32, lit_i32, scalar_f32, tensor_f32, Runtime};
+use faquant::tensor::{Rng, Tensor, TensorI32};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn cfg() -> ModelConfig {
+    ModelConfig::preset("pico").unwrap()
+}
+
+fn tokens(cfg: &ModelConfig, seed: u64) -> TensorI32 {
+    let mut rng = Rng::new(seed);
+    let data: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    TensorI32::from_vec(&[cfg.batch, cfg.seq], data).unwrap()
+}
+
+#[test]
+fn fwd_logits_shape_and_finite() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let params = Params::init(&cfg, 1);
+    let mut args: Vec<_> = params.tensors.iter().map(|t| lit_f32(t).unwrap()).collect();
+    args.push(lit_i32(&tokens(&cfg, 2)).unwrap());
+    let outs = rt.exec(&cfg.name, "fwd_logits", &args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let logits = tensor_f32(&outs[0]).unwrap();
+    assert_eq!(logits.shape(), &[cfg.batch, cfg.seq, cfg.vocab]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn arity_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let err = match rt.exec(&cfg.name, "fwd_logits", &[]) {
+        Ok(_) => panic!("empty-arg exec unexpectedly succeeded"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("args"), "{err}");
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.exec("pico", "nonexistent", &[]).is_err());
+    assert!(rt.exec("unknown_cfg", "fwd_logits", &[]).is_err());
+}
+
+/// The layer_loss artifact (Pallas scaled_fakequant on-graph) must agree
+/// with the rust host implementation of the same math — the bit-parity
+/// check that lets the coordinator quantize host-side after searching
+/// device-side.
+#[test]
+fn layer_loss_matches_host_fakequant() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let group = rt.manifest.group;
+    let rows = rt.manifest.loss_rows;
+    let mut rng = Rng::new(3);
+    let (n, m) = faquant::model::role_shape(&cfg, "qkv");
+    let a = Tensor::randn(&mut rng, &[rows, n], 1.0);
+    let w = Tensor::randn(&mut rng, &[n, m], 0.5);
+    let stats: Vec<f32> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+
+    for bits in [3u32, 4] {
+        for alpha in [0.0f32, 0.5, 1.0] {
+            let s = alpha_scale(&stats, alpha);
+            let s_t = Tensor::from_vec(&[n], s.clone()).unwrap();
+            let outs = rt
+                .exec(
+                    &cfg.name,
+                    &format!("layer_loss_qkv_b{bits}"),
+                    &[
+                        lit_f32(&a).unwrap(),
+                        lit_f32(&w).unwrap(),
+                        lit_f32(&s_t).unwrap(),
+                    ],
+                )
+                .unwrap();
+            let device_loss = scalar_f32(&outs[0]).unwrap();
+
+            let wq = scaled_fakequant(&w, &s, bits, group).unwrap();
+            let host_loss = a.matmul(&wq).unwrap().mse(&a.matmul(&w).unwrap());
+            let rel = (device_loss - host_loss).abs() / host_loss.max(1e-9);
+            assert!(
+                rel < 2e-2,
+                "bits={bits} alpha={alpha}: device {device_loss} vs host {host_loss}"
+            );
+        }
+    }
+}
+
+/// fwd_capture's stats outputs must equal mean |acts| of its acts outputs
+/// (the Pallas absmean kernel vs the activations it summarizes).
+#[test]
+fn capture_stats_consistent_with_acts() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let params = Params::init(&cfg, 4);
+    let mut args: Vec<_> = params.tensors.iter().map(|t| lit_f32(t).unwrap()).collect();
+    args.push(lit_i32(&tokens(&cfg, 5)).unwrap());
+    let outs = rt.exec(&cfg.name, "fwd_capture", &args).unwrap();
+    assert_eq!(outs.len(), 8);
+    for ri in 0..4 {
+        let acts = tensor_f32(&outs[ri]).unwrap();
+        let stats = tensor_f32(&outs[4 + ri]).unwrap();
+        for b in 0..cfg.n_layer {
+            let a_b = acts.index0(b);
+            let want = a_b.absmean_cols();
+            let got = stats.index0(b);
+            for (g, w) in got.data().iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "role {ri} block {b}: {g} vs {w}");
+            }
+        }
+    }
+}
+
+/// One train_step execution: shapes round-trip, loss finite, step
+/// counter increments, parameters actually move.
+#[test]
+fn train_step_executes_and_updates() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let params = Params::init(&cfg, 6);
+    let n = params.tensors.len();
+    let zeros: Vec<Tensor> = params.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect();
+    let mut rng = Rng::new(7);
+    let t_train = TensorI32::from_vec(
+        &[cfg.batch, cfg.seq + 1],
+        (0..cfg.batch * (cfg.seq + 1))
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect(),
+    )
+    .unwrap();
+
+    let mut args = Vec::new();
+    for t in params.tensors.iter().chain(zeros.iter()).chain(zeros.iter()) {
+        args.push(lit_f32(t).unwrap());
+    }
+    args.push(faquant::runtime::lit_scalar(0.0).unwrap());
+    args.push(lit_i32(&t_train).unwrap());
+    let outs = rt.exec(&cfg.name, "train_step", &args).unwrap();
+    assert_eq!(outs.len(), 3 * n + 2);
+
+    let step = scalar_f32(&outs[3 * n]).unwrap();
+    let loss = scalar_f32(&outs[3 * n + 1]).unwrap();
+    assert_eq!(step, 1.0);
+    assert!(loss.is_finite() && loss > 0.0);
+    // Random-init loss should be near ln(vocab).
+    let uniform = (cfg.vocab as f32).ln();
+    assert!((loss - uniform).abs() < 1.5, "loss {loss} vs ln(V) {uniform}");
+
+    let new_w = tensor_f32(&outs[params.index_of("blk0.w_qkv").unwrap()]).unwrap();
+    let old_w = params.get("blk0.w_qkv").unwrap();
+    assert!(new_w.mse(old_w) > 0.0, "weights did not move");
+}
+
+/// fwd_logits_q (int codes + qmatmul kernel) must agree with fwd_logits
+/// on host-fakequantized weights — the deployment-path equivalence.
+#[test]
+fn quantized_forward_matches_fakequant_forward() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    let group = rt.manifest.group;
+    let params = Params::init(&cfg, 8);
+    let bits = 4u32;
+
+    // Host-side quantize every block linear with s = 1.
+    let mut fq_params = params.clone();
+    let mut qm_linears = Vec::new();
+    for b in 0..cfg.n_layer {
+        for role in faquant::model::ROLES {
+            let w = params.role_weight(b, role).unwrap();
+            let ones = vec![1.0f32; w.shape()[0]];
+            let fq = scaled_fakequant(w, &ones, bits, group).unwrap();
+            fq_params
+                .set(&faquant::model::role_param(b, role), fq)
+                .unwrap();
+            let (ints, inv_s) =
+                faquant::quant::scaled_quantize_ints(w, &ones, bits, group).unwrap();
+            let packed = faquant::quant::packing::pack(&ints.q, bits).unwrap();
+            qm_linears.push(faquant::quant::LinearQuant {
+                block: b,
+                role,
+                alpha: 0.0,
+                loss: 0.0,
+                window_used: 0,
+                gamma_used: 1.0,
+                scale: ones.clone(),
+                ints,
+                inv_s,
+                packed,
+            });
+        }
+    }
+    let qm = faquant::quant::QuantizedModel {
+        cfg: cfg.clone(),
+        qcfg: faquant::config::QuantConfig::default(),
+        fq_params: fq_params.clone(),
+        linears: qm_linears,
+    };
+
+    let toks = tokens(&cfg, 9);
+    // Path A: fwd_logits on fake-quantized weights.
+    let mut args: Vec<_> = fq_params.tensors.iter().map(|t| lit_f32(t).unwrap()).collect();
+    args.push(lit_i32(&toks).unwrap());
+    let a = tensor_f32(&rt.exec(&cfg.name, "fwd_logits", &args).unwrap()[0]).unwrap();
+
+    // Path B: fwd_logits_q on integer codes.
+    let mut qargs = faquant::serve::qmodel_literals(&params, &qm).unwrap();
+    qargs.push(lit_i32(&toks).unwrap());
+    let b = tensor_f32(&rt.exec(&cfg.name, "fwd_logits_q", &qargs).unwrap()[0]).unwrap();
+
+    let mse = a.mse(&b);
+    assert!(mse < 1e-4, "deployment path diverges: mse {mse}");
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime() else { return };
+    let cfg = cfg();
+    rt.warmup(&cfg.name, &["fwd_logits"]).unwrap();
+    let before = rt.stats()["pico/fwd_logits"].compile_secs;
+    rt.warmup(&cfg.name, &["fwd_logits"]).unwrap();
+    let after = rt.stats()["pico/fwd_logits"].compile_secs;
+    assert_eq!(before, after, "second warmup recompiled");
+}

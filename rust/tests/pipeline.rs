@@ -1,0 +1,193 @@
+//! End-to-end pipeline tests: train -> calibrate -> quantize (all
+//! methods) -> evaluate -> serve, on the pico model with tiny budgets.
+//!
+//! Uses a tempdir runs/ so tests never collide with user checkpoints.
+//! Skips when artifacts/ is missing.
+
+use faquant::config::{Method, RunConfig};
+use faquant::coordinator::Pipeline;
+use faquant::runtime::Runtime;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn test_cfg(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::new("pico").unwrap();
+    cfg.train_steps = 25;
+    cfg.calib_seqs = 8;
+    cfg.eval_seqs = 4;
+    cfg.task_items = 6;
+    cfg.runs_dir = std::env::temp_dir()
+        .join(format!("faquant_test_runs_{tag}_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+#[test]
+fn full_pipeline_all_methods() {
+    let Some(rt) = runtime() else { return };
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("all");
+
+    // Shared checkpoint + calibration.
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+
+    // Calibration invariants.
+    assert_eq!(calib.stats.len(), cfg.model.n_layer);
+    for b in 0..cfg.model.n_layer {
+        for ri in 0..4 {
+            let stats = calib.stats_for(b, ri);
+            assert!(stats.iter().all(|&v| v >= 0.0 && v.is_finite()));
+            let acts = calib.acts_for(b, ri);
+            assert_eq!(acts.shape()[0], rt.manifest.loss_rows);
+        }
+    }
+
+    let mut losses = std::collections::HashMap::new();
+    for method in [Method::Rtn, Method::Awq, Method::Faq] {
+        let mut c = cfg.clone();
+        c.quant.method = method;
+        let p = Pipeline::new(&rt, c);
+        let (qm, _) = p.quantize(&params, Some(&calib)).unwrap();
+        assert_eq!(qm.linears.len(), cfg.model.n_layer * 4);
+        // Compression headline: 3-bit should be >4x smaller than fp32.
+        let (packed, fp) = qm.compression();
+        assert!(fp > packed * 4, "compression too weak: {packed} vs {fp}");
+        // Codes fit in the bit width.
+        for l in &qm.linears {
+            let qmax = (1u32 << qm.qcfg.bits) - 1;
+            assert!(l.ints.q.iter().all(|&c| (c as u32) <= qmax));
+            assert!(l.loss.is_finite());
+        }
+        losses.insert(method.name(), qm.mean_loss());
+    }
+    // Activation-aware search must not be worse than RTN on its own
+    // objective (AWQ minimizes exactly this loss; alpha=0 = RTN is in
+    // the grid).
+    assert!(
+        losses["AWQ"] <= losses["RTN"] + 1e-9,
+        "AWQ {} > RTN {}",
+        losses["AWQ"],
+        losses["RTN"]
+    );
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn fp_pipeline_skips_quantization() {
+    let Some(rt) = runtime() else { return };
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let mut cfg = test_cfg("fp");
+    cfg.quant.method = Method::Fp;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let out = pipe.run().unwrap();
+    assert!(out.quantized.is_none());
+    let row = out.eval.unwrap();
+    assert!(row.ppl_wiki.is_finite() && row.ppl_wiki > 1.0);
+    assert!(row.ppl_c4.is_finite() && row.ppl_c4 > 1.0);
+    assert_eq!(row.accs.len(), 6);
+    for (name, acc) in &row.accs {
+        assert!((0.0..=1.0).contains(acc), "{name} acc {acc}");
+    }
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn quantized_eval_not_catastrophic() {
+    // 4-bit FAQ perplexity should stay within 2x of FP (sanity bound:
+    // quantization must degrade, not destroy).
+    let Some(rt) = runtime() else { return };
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let mut cfg = test_cfg("quality");
+    cfg.quant.bits = 4;
+    cfg.quant.method = Method::Faq;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+    let (fp_row, _) = pipe.evaluate(&params).unwrap();
+    let (q_row, _) = pipe.evaluate(&qm.fq_params).unwrap();
+    assert!(
+        q_row.ppl_wiki < fp_row.ppl_wiki * 2.0,
+        "4-bit FAQ ppl {} vs FP {}",
+        q_row.ppl_wiki,
+        fp_row.ppl_wiki
+    );
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn checkpoint_cache_reused() {
+    let Some(rt) = runtime() else { return };
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("cache");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (p1, _) = pipe.checkpoint().unwrap();
+    let out2 = faquant::train::ensure_checkpoint(
+        &rt,
+        &cfg.model,
+        &cfg.runs_dir,
+        cfg.train_steps,
+        17,
+    )
+    .unwrap();
+    assert!(out2.cached);
+    for (a, b) in p1.tensors.iter().zip(&out2.params.tensors) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_roundtrip_quantized() {
+    let Some(rt) = runtime() else { return };
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("serve");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..6 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let tokens: Vec<i32> = (0..cfg.model.seq)
+            .map(|k| ((k + i * 7) % cfg.model.vocab) as i32)
+            .collect();
+        tx.send(faquant::serve::Request {
+            tokens,
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    drop(tx);
+    let rep = faquant::serve::serve_requests(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        rx,
+        std::time::Duration::from_millis(1),
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 6);
+    assert!(rep.batches >= 2); // batch=4 -> at least 2 batches for 6 reqs
+    for r in responders {
+        let resp = r.recv().unwrap();
+        assert_eq!(resp.next_logits.len(), cfg.model.vocab);
+        assert!(resp.next_logits.iter().all(|v| v.is_finite()));
+    }
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}

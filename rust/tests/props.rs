@@ -1,0 +1,274 @@
+//! Property-based tests (mini-proptest) on quantizer invariants,
+//! including the paper's **Theorem 1** error-ordering claim.
+//!
+//! These run host-side only (no PJRT) so they execute in milliseconds and
+//! sweep many random cases.
+
+use faquant::calib::{faq_stats, fused_stats, preview_stats};
+use faquant::quant::{
+    alpha_grid, alpha_scale, fakequant, packing, quantize_ints, scaled_fakequant,
+};
+use faquant::tensor::{Rng, Tensor};
+use faquant::testutil::{forall, TensorGen, UsizeIn};
+
+// ---------------------------------------------------------------- packing
+
+#[test]
+fn prop_pack_roundtrip_via_quantints() {
+    forall(11, 40, &TensorGen { dims: vec![(32, 128), (8, 64)], multiple_of: 32, std: 1.5 }, |w| {
+        for bits in [2u32, 3, 4] {
+            let ints = quantize_ints(w, bits, 32).map_err(|e| e.to_string())?;
+            let packed = packing::pack(&ints.q, bits).map_err(|e| e.to_string())?;
+            let back = packing::unpack(&packed, bits, ints.q.len()).map_err(|e| e.to_string())?;
+            if back != ints.q {
+                return Err(format!("roundtrip mismatch at bits={bits}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- fakequant
+
+#[test]
+fn prop_fakequant_bounded_by_group_range() {
+    // Dequantized values stay within the observed [min, max] of their
+    // quantization group, up to delta/2 slack from zero-point rounding
+    // (z = round(-lo/delta) can shift the representable range by up to
+    // half a step — inherent to asymmetric integer zero points).
+    forall(12, 30, &TensorGen { dims: vec![(32, 96), (8, 32)], multiple_of: 32, std: 2.0 }, |w| {
+        let fq = fakequant(w, 3, 32).map_err(|e| e.to_string())?;
+        let (n, m) = (w.shape()[0], w.shape()[1]);
+        let qmax = 7.0f32;
+        for g in 0..n / 32 {
+            for c in 0..m {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for r in 0..32 {
+                    let v = w.at2(g * 32 + r, c);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let slack = (hi - lo) / qmax / 2.0 + 1e-4;
+                for r in 0..32 {
+                    let v = fq.at2(g * 32 + r, c);
+                    if v < lo - slack || v > hi + slack {
+                        return Err(format!("deq {v} outside [{lo}, {hi}] ± {slack}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alpha_zero_equals_plain_fakequant() {
+    // alpha = 0 normalizes to s = 1: AWQ/FAQ degenerate to RTN exactly.
+    forall(13, 25, &TensorGen { dims: vec![(32, 64), (8, 32)], multiple_of: 32, std: 1.0 }, |w| {
+        let mut rng = Rng::new(w.numel() as u64);
+        let stats: Vec<f32> = (0..w.shape()[0]).map(|_| rng.uniform() + 0.1).collect();
+        let s = alpha_scale(&stats, 0.0);
+        let a = scaled_fakequant(w, &s, 3, 32).map_err(|e| e.to_string())?;
+        let b = fakequant(w, 3, 32).map_err(|e| e.to_string())?;
+        if a.mse(&b) > 1e-8 {
+            return Err(format!("alpha=0 differs from RTN: mse {}", a.mse(&b)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_bits_never_worse() {
+    forall(14, 25, &TensorGen { dims: vec![(32, 96), (8, 48)], multiple_of: 32, std: 1.3 }, |w| {
+        let errs: Vec<f32> = [2u32, 4, 8]
+            .iter()
+            .map(|&b| fakequant(w, b, 32).unwrap().mse(w))
+            .collect();
+        if !(errs[0] >= errs[1] && errs[1] >= errs[2]) {
+            return Err(format!("non-monotone errors {errs:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- preview window
+
+#[test]
+fn prop_fused_stats_within_envelope() {
+    // Fused stats are a convex combination: bounded by min/max of inputs.
+    forall(15, 50, &UsizeIn(2, 16), |&n| {
+        let mut rng = Rng::new(n as u64 * 7 + 1);
+        let cur: Vec<f32> = (0..n).map(|_| rng.uniform() * 5.0).collect();
+        let pvw: Vec<f32> = (0..n).map(|_| rng.uniform() * 5.0).collect();
+        let gamma = rng.uniform();
+        let fused = fused_stats(&cur, &pvw, gamma);
+        for i in 0..n {
+            let lo = cur[i].min(pvw[i]) - 1e-6;
+            let hi = cur[i].max(pvw[i]) + 1e-6;
+            if fused[i] < lo || fused[i] > hi {
+                return Err(format!("fused[{i}]={} outside [{lo}, {hi}]", fused[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_preview_is_mean_of_members() {
+    forall(16, 40, &UsizeIn(3, 8), |&layers| {
+        let mut rng = Rng::new(layers as u64);
+        let stats: Vec<Vec<f32>> = (0..layers)
+            .map(|_| (0..4).map(|_| rng.uniform() * 3.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = stats.iter().map(|v| v.as_slice()).collect();
+        for layer in 0..layers - 1 {
+            for window in 1..=layers {
+                let Some(p) = preview_stats(&refs, layer, window, false) else {
+                    return Err("missing preview for non-last layer".into());
+                };
+                let hi = (layer + window).min(layers - 1);
+                for c in 0..4 {
+                    let want: f32 = (layer + 1..=hi).map(|l| stats[l][c]).sum::<f32>()
+                        / (hi - layer) as f32;
+                    if (p[c] - want).abs() > 1e-5 {
+                        return Err(format!("window mean wrong at layer {layer} w={window}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gamma_one_faq_is_awq() {
+    forall(17, 40, &UsizeIn(2, 6), |&layers| {
+        let mut rng = Rng::new(layers as u64 + 99);
+        let stats: Vec<Vec<f32>> = (0..layers)
+            .map(|_| (0..6).map(|_| rng.uniform() + 0.05).collect())
+            .collect();
+        let refs: Vec<&[f32]> = stats.iter().map(|v| v.as_slice()).collect();
+        for layer in 0..layers {
+            let f = faq_stats(&refs, layer, 3, 1.0, false);
+            for (a, b) in f.iter().zip(&stats[layer]) {
+                if (a - b).abs() > 1e-6 {
+                    return Err("gamma=1 FAQ != AWQ stats".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- Theorem 1
+
+/// Construct the theorem's scenario (paper Sec. 1 issue (i), "quantization
+/// bias"): the *biased calibration sample* understates channel `m_fut`,
+/// which is genuinely important — its true activation magnitude (revealed
+/// both by the future layers' statistics and by the deployment
+/// distribution) is large, and the weight rows it feeds are heavy
+/// (theorem assumption i). AWQ scales from the biased current-layer stats
+/// alone and under-protects row m_fut; FAQ fuses the future-layer
+/// statistics, recovers the protection, and achieves lower error on the
+/// TRUE activation distribution (delta_FAQ < delta_AWQ, eq. 9).
+fn theorem1_case(seed: u64) -> (f32, f32) {
+    let mut rng = Rng::new(seed);
+    let (n, m, group, bits) = (64usize, 64usize, 32usize, 3u32);
+    let m_cur = rng.below(n);
+    let mut m_fut = rng.below(n);
+    if m_fut == m_cur {
+        m_fut = (m_fut + 1) % n;
+    }
+
+    // Biased calibration sample: channel m_cur dominates, m_fut looks
+    // ordinary (the sample missed the contexts where m_fut fires).
+    let rows = 128;
+    let mut a_cal = Tensor::randn(&mut rng, &[rows, n], 0.5);
+    for r in 0..rows {
+        a_cal.data_mut()[r * n + m_cur] *= 20.0;
+    }
+    // True deployment activations: m_fut is in fact a large channel too.
+    let mut a_true = Tensor::randn(&mut rng, &[rows, n], 0.5);
+    for r in 0..rows {
+        a_true.data_mut()[r * n + m_cur] *= 20.0;
+        a_true.data_mut()[r * n + m_fut] *= 20.0;
+    }
+    // Weights: row m_fut heavy (assumption i — the (j,k) positions are
+    // large through layers i..I).
+    let mut w = Tensor::randn(&mut rng, &[n, m], 0.4);
+    for c in 0..m {
+        w.data_mut()[m_fut * m + c] *= 4.0;
+    }
+
+    // Stats: AWQ sees only the biased calibration; the future layers'
+    // activations reveal m_fut (it keeps growing downstream).
+    let cur_stats = a_cal.absmean_cols();
+    let mut fut_stats = cur_stats.clone();
+    fut_stats[m_fut] = 8.0;
+
+    let y_fp = a_true.matmul(&w).unwrap();
+    let best_err = |stats: &[f32]| -> f32 {
+        let mut best = f32::INFINITY;
+        for alpha in alpha_grid(10) {
+            let s = alpha_scale(stats, alpha);
+            let wq = scaled_fakequant(&w, &s, bits, group).unwrap();
+            // Alpha is chosen on calibration (as the method would), but
+            // delta is measured on the true distribution.
+            let err = a_true.matmul(&wq).unwrap().dist2(&y_fp);
+            best = best.min(err);
+        }
+        best
+    };
+    let awq = best_err(&cur_stats);
+    let faq = best_err(&fused_stats(&cur_stats, &fut_stats, 0.85));
+    (faq, awq)
+}
+
+#[test]
+fn theorem1_faq_error_below_awq() {
+    // Paper eq. 9: delta_FAQ < delta_AWQ under the outlier assumptions.
+    // Verified across many random instantiations of the construction;
+    // allow rare statistical ties but require strict inequality in the
+    // aggregate and in >= 70% of cases.
+    let mut wins = 0;
+    let mut total_faq = 0.0;
+    let mut total_awq = 0.0;
+    let cases = 20;
+    for seed in 0..cases {
+        let (faq, awq) = theorem1_case(seed as u64 * 1009 + 7);
+        total_faq += faq;
+        total_awq += awq;
+        if faq < awq {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins as f32 >= 0.7 * cases as f32,
+        "FAQ won only {wins}/{cases} cases"
+    );
+    assert!(
+        total_faq < total_awq,
+        "aggregate: FAQ {total_faq} !< AWQ {total_awq}"
+    );
+}
+
+#[test]
+fn theorem1_collapses_when_no_future_signal() {
+    // Control: if the future stats equal the current stats, FAQ == AWQ
+    // (the inequality is driven by the future information, not by the
+    // fusion arithmetic).
+    let mut rng = Rng::new(5);
+    let w = Tensor::randn(&mut rng, &[64, 32], 1.0);
+    let a = Tensor::randn(&mut rng, &[64, 64], 1.0);
+    let stats = a.absmean_cols();
+    let fused = fused_stats(&stats, &stats, 0.85);
+    for (x, y) in fused.iter().zip(&stats) {
+        assert!((x - y).abs() < 1e-6);
+    }
+    let s1 = alpha_scale(&stats, 0.5);
+    let s2 = alpha_scale(&fused, 0.5);
+    let q1 = scaled_fakequant(&w, &s1, 3, 32).unwrap();
+    let q2 = scaled_fakequant(&w, &s2, 3, 32).unwrap();
+    assert!(q1.mse(&q2) < 1e-10);
+}
