@@ -13,7 +13,8 @@ use faquant::runtime::Runtime;
 use std::path::Path;
 
 pub fn runtime() -> Runtime {
-    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before benching")
+    // Native backend by default; PJRT + AOT artifacts under --features pjrt.
+    Runtime::new(Path::new("artifacts")).expect("runtime bring-up")
 }
 
 pub fn env_usize(key: &str, default: usize) -> usize {

@@ -13,7 +13,7 @@ pub use window::{faq_stats, fused_stats, preview_stats};
 
 use crate::config::ModelConfig;
 use crate::model::{Params, ROLES};
-use crate::runtime::{tensor_f32, Runtime};
+use crate::runtime::{tensor_f32, Buffer, Runtime};
 use crate::tensor::{Rng, Tensor, TensorI32};
 use anyhow::{bail, Result};
 
@@ -137,7 +137,7 @@ pub fn capture(
 
     for batch in batches {
         let tok_buf = rt.upload_i32(batch)?;
-        let mut args: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+        let mut args: Vec<&Buffer> = param_bufs.iter().collect();
         args.push(&tok_buf);
         let outs = rt.exec_b(&cfg.name, "fwd_capture", &args)?;
         if outs.len() != 8 {

@@ -75,11 +75,17 @@ impl Tokenizer {
             .collect()
     }
 
+    /// Decode ids to words. Any id outside [0, vocab) — including
+    /// *negative* ids, which signal a corrupted stream — renders as
+    /// `<oob>`; mapping negatives to `<unk>` would mask the corruption.
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .map(|&i| {
+                if i < 0 {
+                    return "<oob>";
+                }
                 self.words
-                    .get(i.max(0) as usize)
+                    .get(i as usize)
                     .map(|s| s.as_str())
                     .unwrap_or("<oob>")
             })
@@ -119,6 +125,18 @@ mod tests {
         assert!(ids[..ids.len() - 1].iter().all(|&i| i >= RESERVED as i32));
         let dec = tok.decode(&ids);
         assert!(dec.contains("cat"));
+    }
+
+    #[test]
+    fn decode_reports_out_of_bounds_ids() {
+        let tok = Tokenizer::fit("alpha beta gamma", 5);
+        // Negative ids are corruption, not unknown words.
+        assert_eq!(tok.decode(&[-1]), "<oob>");
+        assert_eq!(tok.decode(&[i32::MIN]), "<oob>");
+        // Too-large ids likewise; valid ids still decode.
+        let big = tok.vocab_size() as i32 + 10;
+        let dec = tok.decode(&[0, -3, big]);
+        assert_eq!(dec, "<unk> <oob> <oob>");
     }
 
     #[test]

@@ -15,15 +15,14 @@ pub use tasks::{task_suites, SuiteSpec, TaskSuite};
 use crate::config::ModelConfig;
 use crate::corpus::{Batcher, CorpusKind, Generator, Tokenizer};
 use crate::model::Params;
-use crate::runtime::{tensor_f32, Runtime};
+use crate::runtime::{tensor_f32, Buffer, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
-use xla::PjRtBuffer;
 
-/// Device-resident parameter set (§Perf): uploaded once, reused across
-/// every evaluation batch instead of re-copying all weights per call.
+/// Uploaded parameter set (§Perf): uploaded once, reused across every
+/// evaluation batch instead of re-copying all weights per call.
 pub struct DeviceParams {
-    bufs: Vec<PjRtBuffer>,
+    bufs: Vec<Buffer>,
 }
 
 /// Upload a parameter set to the device.
@@ -79,7 +78,7 @@ fn forward_logits(
     batch: &crate::tensor::TensorI32,
 ) -> Result<Tensor> {
     let tok_buf = rt.upload_i32(batch)?;
-    let mut args: Vec<&PjRtBuffer> = dp.bufs.iter().collect();
+    let mut args: Vec<&Buffer> = dp.bufs.iter().collect();
     args.push(&tok_buf);
     let outs = rt.exec_b(&cfg.name, "fwd_logits", &args)?;
     tensor_f32(&outs[0])

@@ -6,8 +6,11 @@
 //! The crate is the Layer-3 coordinator of the three-layer architecture
 //! (see DESIGN.md): all request-path work — training loops, calibration,
 //! the AWQ/FAQ scale search, quantization, packing, evaluation, serving —
-//! runs in rust against AOT-compiled HLO artifacts produced once by
-//! `python/compile/aot.py` and executed through the PJRT CPU client.
+//! runs in rust against a pluggable execution backend. The default
+//! native backend executes every artifact entrypoint in-process on host
+//! tensors (no python, no artifacts directory); the optional `pjrt`
+//! feature swaps in the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py`, executed through the PJRT CPU client.
 //!
 //! Public API tour:
 //! - [`config`] — run/model/quant configuration (TOML-lite, presets)
@@ -15,7 +18,7 @@
 //! - [`store`] — `.fqt` binary tensor checkpoints
 //! - [`corpus`] — synthetic corpora, tokenizer, batcher
 //! - [`model`] — transformer parameter layout and checkpoints
-//! - [`runtime`] — PJRT artifact registry and executor
+//! - [`runtime`] — artifact registry + pluggable execution backends
 //! - [`train`] — training driver over the `train_step` artifact
 //! - [`calib`] — calibration capture and the FAQ preview window
 //! - [`quant`] — RTN / AWQ / FAQ quantizers, grid search, bit-packing

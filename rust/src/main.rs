@@ -86,7 +86,7 @@ fn main() -> Result<()> {
     }
 
     let cfg = run_cfg(&args, &args.get_or("model", "nano"))?;
-    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = Runtime::for_run(&cfg)?;
 
     match args.subcommand.as_str() {
         "inspect" => {

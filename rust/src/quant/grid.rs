@@ -9,7 +9,7 @@
 use crate::quant::scale::{alpha_grid, alpha_scale};
 use crate::runtime::{scalar_f32, Runtime};
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Grid size baked into the `layer_loss_sweep_*` artifacts (model.N_ALPHA).
 pub const SWEEP_N_ALPHA: usize = 20;
@@ -25,6 +25,7 @@ pub struct SearchResult {
 }
 
 /// Search alpha over the grid, minimizing the recon loss of (acts, w).
+#[allow(clippy::too_many_arguments)]
 pub fn search_alpha(
     rt: &Runtime,
     cfg_name: &str,
@@ -75,12 +76,8 @@ pub fn search_alpha(
         v
     };
 
-    let mut best_i = 0;
-    for (i, &l) in losses.iter().enumerate() {
-        if l < losses[best_i] {
-            best_i = i;
-        }
-    }
+    let best_i = best_finite_index(&losses)
+        .with_context(|| format!("search_alpha({entry}) found no finite loss"))?;
     let grid_losses: Vec<(f32, f32)> = alphas.iter().copied().zip(losses.iter().copied()).collect();
     Ok(SearchResult {
         alpha: alphas[best_i],
@@ -88,6 +85,27 @@ pub fn search_alpha(
         scale: scales[best_i].clone(),
         grid_losses,
     })
+}
+
+/// Index of the smallest *finite* loss. Non-finite losses (NaN from a
+/// degenerate scale, inf from overflow) are skipped instead of silently
+/// winning every `<` comparison; errors when no loss is finite so a
+/// NaN-loss alpha can never be returned as a search result.
+pub fn best_finite_index(losses: &[f32]) -> Result<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &l) in losses.iter().enumerate() {
+        if !l.is_finite() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => l < losses[b],
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best.with_context(|| format!("all {} grid losses are non-finite", losses.len()))
 }
 
 /// Evaluate the recon loss for one explicit scale vector (FAQ full search
@@ -109,4 +127,44 @@ pub fn eval_scale(
         &[&rt.upload_f32(acts)?, &rt.upload_f32(w)?, &rt.upload_f32(&s_t)?],
     )?;
     scalar_f32(&outs[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_finite_index_skips_nan_and_inf() {
+        // The original bug: losses[0] = NaN makes `l < losses[best_i]`
+        // false for every candidate, silently returning index 0.
+        assert_eq!(best_finite_index(&[f32::NAN, 2.0, 1.0]).unwrap(), 2);
+        assert_eq!(
+            best_finite_index(&[f32::INFINITY, 5.0, f32::NAN, 3.0]).unwrap(),
+            3
+        );
+        assert_eq!(best_finite_index(&[4.0, 2.0, 8.0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn best_finite_index_errors_when_all_nonfinite() {
+        let err = best_finite_index(&[f32::NAN, f32::INFINITY]).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        assert!(best_finite_index(&[]).is_err());
+    }
+
+    #[test]
+    fn search_alpha_on_native_backend_prefers_finite_minimum() {
+        // End-to-end through the native runtime: the search must return a
+        // finite loss and an alpha from the grid.
+        let rt = Runtime::native();
+        let mut rng = crate::tensor::Rng::new(9);
+        let n = 64;
+        let acts = Tensor::randn(&mut rng, &[32, n], 1.0);
+        let w = Tensor::randn(&mut rng, &[n, 16], 0.5);
+        let stats: Vec<f32> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let sr = search_alpha(&rt, "pico", "qkv", 3, &acts, &w, &stats, 5).unwrap();
+        assert!(sr.loss.is_finite());
+        assert!((0.0..=1.0).contains(&sr.alpha));
+        assert_eq!(sr.grid_losses.len(), 5);
+    }
 }

@@ -10,26 +10,27 @@
 pub const STAT_FLOOR: f32 = 1e-6;
 
 /// s = normalize(stats ^ alpha). `stats` are per-channel mean |a|.
+///
+/// Computed entirely in log space: log s_i = alpha * ln(max(stat, floor))
+/// centred by (max + min)/2 of the logs, then exponentiated. This is
+/// algebraically s / sqrt(max(s) * min(s)) but never forms the product
+/// max * min (which overflows f32 for high-dynamic-range stats) and never
+/// needs a post-normalization clamp (exp is strictly positive), so the
+/// geometric-centre invariant sqrt(max(s) * min(s)) = 1 and strict
+/// monotonicity in the stats hold for ANY finite input.
 pub fn alpha_scale(stats: &[f32], alpha: f32) -> Vec<f32> {
-    let mut s: Vec<f32> = stats
+    let logs: Vec<f32> = stats
         .iter()
-        .map(|&x| x.max(STAT_FLOOR).powf(alpha))
+        .map(|&x| alpha * x.max(STAT_FLOOR).ln())
         .collect();
-    // Normalize: s <- s / sqrt(max * min) keeps geometric centre at 1.
-    let mx = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mn = s.iter().copied().fold(f32::INFINITY, f32::min);
-    let denom = (mx * mn).sqrt();
-    if denom.is_finite() && denom > 0.0 {
-        for v in &mut s {
-            *v /= denom;
-        }
-    }
-    // Clamp away from zero: s multiplies weight rows and is inverted on
-    // the activation side.
-    for v in &mut s {
-        *v = v.max(1e-4);
-    }
-    s
+    let mx = logs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mn = logs.iter().copied().fold(f32::INFINITY, f32::min);
+    let centre = if mx.is_finite() && mn.is_finite() {
+        0.5 * (mx + mn)
+    } else {
+        0.0
+    };
+    logs.iter().map(|&l| (l - centre).exp()).collect()
 }
 
 /// The alpha grid searched by AWQ/FAQ: `n` points over [0, 1].
@@ -82,6 +83,49 @@ mod tests {
         let s = alpha_scale(&[0.0, 1.0], 1.0);
         assert!(s[0] > 0.0);
         assert!(s.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn high_dynamic_range_keeps_geometric_centre() {
+        // Regression: max(s) * min(s) used to overflow f32 here, skipping
+        // normalization and then clamping — breaking both invariants.
+        let s = alpha_scale(&[1e-25, 1e25], 1.0);
+        assert!(s.iter().all(|v| v.is_finite() && *v > 0.0));
+        let centre = s[0].ln() + s[1].ln();
+        assert!(centre.abs() < 1e-3, "log-centre {centre}");
+        assert!(s[0] < s[1]);
+    }
+
+    #[test]
+    fn prop_extreme_stats_keep_invariants() {
+        use crate::tensor::Rng;
+        use crate::testutil::{forall, UsizeIn};
+        forall(29, 60, &UsizeIn(2, 12), |&n| {
+            let mut rng = Rng::new(n as u64 * 131 + 7);
+            // Log-uniform magnitudes spanning 1e-30 .. 1e30.
+            let mut stats: Vec<f32> =
+                (0..n).map(|_| 10f32.powf(rng.range_f32(-30.0, 30.0))).collect();
+            stats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &alpha in &[0.0f32, 0.3, 1.0] {
+                let s = alpha_scale(&stats, alpha);
+                if s.iter().any(|v| !v.is_finite() || *v <= 0.0) {
+                    return Err(format!("alpha={alpha}: non-finite/non-positive {s:?}"));
+                }
+                let mx = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mn = s.iter().copied().fold(f32::INFINITY, f32::min);
+                let centre = mx.ln() + mn.ln();
+                if centre.abs() > 1e-3 {
+                    return Err(format!("alpha={alpha}: log-centre {centre}"));
+                }
+                // Monotone (non-strict: sub-floor stats collapse equal).
+                for w in s.windows(2) {
+                    if w[1] < w[0] * (1.0 - 1e-5) {
+                        return Err(format!("alpha={alpha}: not monotone {s:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

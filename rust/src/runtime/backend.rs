@@ -1,0 +1,54 @@
+//! The execution-backend abstraction.
+//!
+//! A [`Backend`] owns *how* an artifact entrypoint runs; the [`super::Runtime`]
+//! owns everything backend-independent: the manifest (which entries exist
+//! and their arities), argument-count checks, and [`super::ExecStats`]
+//! accounting. Two implementations exist:
+//!
+//! - [`super::native::NativeBackend`] — pure-Rust reference execution of
+//!   every entrypoint on host tensors (default; always available).
+//! - `PjrtBackend` (`pjrt` feature) — the original AOT-HLO path: compile
+//!   artifact text once per entry via the PJRT CPU client and execute on
+//!   device buffers.
+//!
+//! The contract mirrors `python/compile/model.py`: entry names, flat
+//! argument orders, and output orders are identical across backends, so
+//! the coordinator code above never branches on the backend.
+
+use super::registry::Manifest;
+use super::value::{Buffer, Value};
+use anyhow::Result;
+
+/// One execution backend: everything the runtime needs to run artifacts.
+pub trait Backend {
+    /// Human-readable platform tag (e.g. `native-cpu`, `cpu` for PJRT).
+    fn platform(&self) -> String;
+
+    /// Prepare an entry for execution (compile/warm caches). Returns the
+    /// seconds spent compiling — 0.0 for backends with nothing to do.
+    fn prepare(&self, manifest: &Manifest, cfg: &str, entry: &str) -> Result<f32>;
+
+    /// Execute an entry on host values. Arity is pre-checked by the
+    /// runtime against the manifest.
+    fn exec(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[Value],
+    ) -> Result<Vec<Value>>;
+
+    /// Execute an entry on uploaded buffers (§Perf: no per-call host
+    /// copies of the arguments on device backends).
+    fn exec_buffers(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[&Buffer],
+    ) -> Result<Vec<Value>>;
+
+    /// Upload a host value into a reusable buffer (by value: the native
+    /// backend keeps it as-is without another copy).
+    fn upload(&self, v: Value) -> Result<Buffer>;
+}

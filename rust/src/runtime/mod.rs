@@ -1,28 +1,38 @@
-//! PJRT runtime (S7): load AOT HLO-text artifacts, compile once, execute
-//! from the L3 hot path.
+//! Execution runtime (S7): the backend-neutral artifact executor.
 //!
-//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`. Executables are compiled on first use
-//! and cached for the process lifetime; all entrypoints lower with
-//! `return_tuple=True`, so outputs are always un-tupled here.
+//! The [`Runtime`] owns the artifact [`Manifest`] (which entrypoints
+//! exist, their arities, the canonical parameter orders), performs the
+//! argument-count checks, and keeps [`ExecStats`] counters; the actual
+//! execution is delegated to a pluggable [`Backend`]:
 //!
-//! The runtime also keeps lightweight counters (`ExecStats`) used by the
-//! perf pass to verify the coordinator is executor-bound (DESIGN.md §9).
+//! - **native** (default): [`native::NativeBackend`] runs every entry
+//!   in-process on host tensors — no artifacts directory, no python, no
+//!   external dependencies. Default builds always use it, so a fresh
+//!   offline checkout is runnable.
+//! - **pjrt** (`--features pjrt`): loads AOT HLO-text artifacts produced
+//!   by `python/compile/aot.py`, compiles each entry once via the PJRT
+//!   CPU client, and executes on device buffers (the original S7 path).
+//!
+//! The runtime is not `Sync` (the PJRT pointers are not thread-safe);
+//! multi-threaded users own a `Runtime` per dedicated executor thread
+//! (see [`crate::serve`]).
 
-mod literals;
+mod backend;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 mod registry;
+mod value;
 
-pub use literals::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32};
-pub use registry::{ArtifactInfo, Manifest};
+pub use backend::Backend;
+pub use registry::{ArtifactInfo, Manifest, NATIVE_GROUP, NATIVE_LOSS_ROWS};
+pub use value::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32, Buffer, Value};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
-use std::rc::Rc;
 use std::time::Instant;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 /// Cumulative execution statistics (per entry name).
 #[derive(Clone, Debug, Default)]
@@ -32,62 +42,92 @@ pub struct ExecStats {
     pub exec_secs: f32,
 }
 
-/// The process-wide runtime: one PJRT CPU client + executable cache.
-///
-/// Not `Sync` (PJRT pointers are not thread-safe here); multi-threaded
-/// users own a `Runtime` per dedicated executor thread (see
-/// [`crate::serve`]).
+/// The process-wide runtime: manifest + backend + stats.
 pub struct Runtime {
-    client: PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
     stats: RefCell<HashMap<String, ExecStats>>,
+    /// Entries already prepared (compiled/validated) — prepare runs once
+    /// per entry, keeping the per-exec hot path free of redundant lookups.
+    prepared: RefCell<HashSet<String>>,
 }
 
 impl Runtime {
+    /// Open a runtime for an artifacts directory.
+    ///
+    /// Default builds use the native CPU backend (which synthesizes its
+    /// manifest from the rust presets and ignores the directory). With
+    /// the `pjrt` feature this is the AOT/PJRT path, and a missing
+    /// `manifest.txt` is a loud error rather than a silent fallback.
+    #[cfg(feature = "pjrt")]
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        // A pjrt build asked for the AOT path explicitly — missing
+        // artifacts must fail loudly, not silently swap in the native
+        // backend (benches would record the wrong platform's numbers).
+        if !artifacts_dir.join("manifest.txt").exists() {
+            anyhow::bail!(
+                "pjrt build: {} has no manifest.txt — run `make artifacts` \
+                 (or build without --features pjrt for the native backend)",
+                artifacts_dir.display()
+            );
+        }
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let backend = Box::new(pjrt::PjrtBackend::new()?);
         Ok(Self {
-            client,
             manifest,
-            exes: RefCell::new(HashMap::new()),
+            backend,
             stats: RefCell::new(HashMap::new()),
+            prepared: RefCell::new(HashSet::new()),
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let _ = artifacts_dir;
+        Ok(Self::native())
     }
 
-    /// Compile (or fetch from cache) the executable for (cfg, entry).
-    pub fn executable(&self, cfg: &str, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        let key = (cfg.to_string(), entry.to_string());
-        if let Some(exe) = self.exes.borrow().get(&key) {
-            return Ok(exe.clone());
+    /// The always-available pure-Rust reference runtime.
+    pub fn native() -> Self {
+        Self {
+            manifest: Manifest::native(),
+            backend: Box::new(native::NativeBackend),
+            stats: RefCell::new(HashMap::new()),
+            prepared: RefCell::new(HashSet::new()),
         }
-        let info = self.manifest.artifact(cfg, entry)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&info.path)
-            .with_context(|| format!("parse HLO text {}", info.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compile {cfg}/{entry}"))?,
-        );
-        let dt = t0.elapsed().as_secs_f32();
-        self.stats
-            .borrow_mut()
-            .entry(format!("{cfg}/{entry}"))
-            .or_default()
-            .compile_secs += dt;
-        self.exes.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
     }
 
-    /// Execute an artifact: checks arity, runs, un-tuples the output.
-    pub fn exec(&self, cfg: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+    /// Native runtime with a custom quantization geometry (for runs with
+    /// a non-default `quant.group`; see [`Manifest::native_with`]).
+    pub fn native_with(group: usize, loss_rows: usize) -> Self {
+        Self {
+            manifest: Manifest::native_with(group, loss_rows),
+            backend: Box::new(native::NativeBackend),
+            stats: RefCell::new(HashMap::new()),
+            prepared: RefCell::new(HashSet::new()),
+        }
+    }
+
+    /// Runtime matched to a run configuration: opens `cfg.artifacts_dir`,
+    /// and on the native backend re-synthesizes the manifest so its
+    /// quantization group matches the run's (the native backend reads the
+    /// group dynamically; only the AOT path bakes it into artifacts).
+    /// Library callers with a non-default `quant.group` should use this
+    /// instead of [`Runtime::new`].
+    pub fn for_run(cfg: &crate::config::RunConfig) -> Result<Self> {
+        let rt = Self::new(Path::new(&cfg.artifacts_dir))?;
+        if rt.platform() == "native-cpu" && rt.manifest.group != cfg.quant.group {
+            return Ok(Self::native_with(cfg.quant.group, rt.manifest.loss_rows));
+        }
+        Ok(rt)
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Execute an artifact on host values: checks arity, runs, records stats.
+    pub fn exec(&self, cfg: &str, entry: &str, args: &[Value]) -> Result<Vec<Value>> {
         let info = self.manifest.artifact(cfg, entry)?;
         if args.len() != info.nargs {
             anyhow::bail!(
@@ -96,55 +136,24 @@ impl Runtime {
                 info.nargs
             );
         }
-        let exe = self.executable(cfg, entry)?;
+        // First-use compilation is accounted separately from execution
+        // (the §9 executor-bound ratio must not absorb compile time).
+        self.ensure_prepared(cfg, entry)?;
         let t0 = Instant::now();
-        let result = exe
-            .execute::<Literal>(args)
-            .with_context(|| format!("execute {cfg}/{entry}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("download result literal")?;
-        let outs = lit.to_tuple().context("untuple result")?;
-        let dt = t0.elapsed().as_secs_f32();
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(format!("{cfg}/{entry}")).or_default();
-        s.calls += 1;
-        s.exec_secs += dt;
+        let outs = self.backend.exec(&self.manifest, cfg, entry, args)?;
+        self.note_exec(cfg, entry, t0.elapsed().as_secs_f32());
         Ok(outs)
     }
 
-    /// Upload a host tensor to a device-resident buffer (§Perf: weights
-    /// and activation samples are uploaded once and reused across many
-    /// executions instead of re-copying a Literal per call).
-    pub fn upload_f32(&self, t: &crate::tensor::Tensor) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(t.data(), t.shape(), None)
-            .context("upload f32 buffer")
-    }
-
-    /// Upload a host literal to a device buffer (used for pre-built
-    /// literal bundles like the serving weight set).
-    pub fn upload_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, lit)
-            .context("upload literal buffer")
-    }
-
-    /// Upload an i32 host tensor to a device buffer.
-    pub fn upload_i32(&self, t: &crate::tensor::TensorI32) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(t.data(), t.shape(), None)
-            .context("upload i32 buffer")
-    }
-
-    /// Execute with device-resident input buffers (no per-call host
-    /// copies of the arguments). Output handling identical to [`exec`].
-    pub fn exec_b<L: std::borrow::Borrow<PjRtBuffer>>(
+    /// Execute with uploaded input buffers (§Perf: no per-call host copies
+    /// of the arguments on device backends). Output handling identical to
+    /// [`Runtime::exec`].
+    pub fn exec_b<L: std::borrow::Borrow<Buffer>>(
         &self,
         cfg: &str,
         entry: &str,
         args: &[L],
-    ) -> Result<Vec<Literal>> {
+    ) -> Result<Vec<Value>> {
         let info = self.manifest.artifact(cfg, entry)?;
         if args.len() != info.nargs {
             anyhow::bail!(
@@ -153,37 +162,141 @@ impl Runtime {
                 info.nargs
             );
         }
-        let exe = self.executable(cfg, entry)?;
+        let refs: Vec<&Buffer> = args.iter().map(|l| l.borrow()).collect();
+        self.ensure_prepared(cfg, entry)?;
         let t0 = Instant::now();
-        let result = exe
-            .execute_b(args)
-            .with_context(|| format!("execute_b {cfg}/{entry}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("download result literal")?;
-        let outs = lit.to_tuple().context("untuple result")?;
-        let dt = t0.elapsed().as_secs_f32();
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(format!("{cfg}/{entry}")).or_default();
-        s.calls += 1;
-        s.exec_secs += dt;
+        let outs = self
+            .backend
+            .exec_buffers(&self.manifest, cfg, entry, &refs)?;
+        self.note_exec(cfg, entry, t0.elapsed().as_secs_f32());
         Ok(outs)
     }
 
-    /// Warm the executable cache for a set of entries.
+    /// Upload a host tensor to a reusable buffer (§Perf: weights and
+    /// activation samples are uploaded once and reused across many
+    /// executions instead of re-copying per call).
+    pub fn upload_f32(&self, t: &crate::tensor::Tensor) -> Result<Buffer> {
+        self.backend.upload(Value::F32(t.clone()))
+    }
+
+    /// Upload an i32 host tensor.
+    pub fn upload_i32(&self, t: &crate::tensor::TensorI32) -> Result<Buffer> {
+        self.backend.upload(Value::I32(t.clone()))
+    }
+
+    /// Upload a pre-built value (used for literal bundles like the
+    /// serving weight set).
+    pub fn upload_literal(&self, v: &Value) -> Result<Buffer> {
+        self.backend.upload(v.clone())
+    }
+
+    /// Warm the backend for a set of entries (compiles on PJRT; validates
+    /// entry names on native).
     pub fn warmup(&self, cfg: &str, entries: &[&str]) -> Result<()> {
         for e in entries {
-            self.executable(cfg, e)?;
+            self.ensure_prepared(cfg, e)?;
         }
         Ok(())
+    }
+
+    /// Prepare (compile/validate) an entry exactly once per runtime,
+    /// recording the compile time under the entry's stats.
+    fn ensure_prepared(&self, cfg: &str, entry: &str) -> Result<()> {
+        let key = format!("{cfg}/{entry}");
+        if self.prepared.borrow().contains(&key) {
+            return Ok(());
+        }
+        let secs = self.backend.prepare(&self.manifest, cfg, entry)?;
+        self.stats
+            .borrow_mut()
+            .entry(key.clone())
+            .or_default()
+            .compile_secs += secs;
+        self.prepared.borrow_mut().insert(key);
+        Ok(())
+    }
+
+    fn note_exec(&self, cfg: &str, entry: &str, secs: f32) {
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{cfg}/{entry}")).or_default();
+        s.calls += 1;
+        s.exec_secs += secs;
     }
 
     pub fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.borrow().clone()
     }
 
-    /// Total seconds spent inside PJRT `execute` calls.
+    /// Total seconds spent inside backend execution calls.
     pub fn total_exec_secs(&self) -> f32 {
         self.stats.borrow().values().map(|s| s.exec_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Rng, TensorI32};
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn native_runtime_always_available() {
+        let rt = Runtime::new(Path::new("definitely/not/a/dir")).unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+        assert!(rt.manifest.config("pico").is_ok());
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn for_run_matches_quant_group_on_native() {
+        let mut cfg = crate::config::RunConfig::new("pico").unwrap();
+        cfg.quant.group = 32;
+        let rt = Runtime::for_run(&cfg).unwrap();
+        assert_eq!(rt.manifest.group, 32);
+        // Default group keeps the stock native manifest.
+        let rt = Runtime::for_run(&crate::config::RunConfig::new("pico").unwrap()).unwrap();
+        assert_eq!(rt.manifest.group, NATIVE_GROUP);
+    }
+
+    #[test]
+    fn exec_checks_arity_before_running() {
+        let rt = Runtime::native();
+        let err = rt.exec("pico", "fwd_logits", &[]).unwrap_err();
+        assert!(err.to_string().contains("args"), "{err}");
+    }
+
+    #[test]
+    fn exec_records_stats() {
+        let rt = Runtime::native();
+        let cfg = crate::config::ModelConfig::preset("pico").unwrap();
+        let params = crate::model::Params::init(&cfg, 1);
+        let mut rng = Rng::new(2);
+        let toks = TensorI32::from_vec(
+            &[cfg.batch, cfg.seq],
+            (0..cfg.batch * cfg.seq)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        )
+        .unwrap();
+        let mut args: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| lit_f32(t).unwrap())
+            .collect();
+        args.push(lit_i32(&toks).unwrap());
+        rt.exec("pico", "fwd_logits", &args).unwrap();
+        rt.exec("pico", "fwd_logits", &args).unwrap();
+        let stats = rt.stats();
+        assert_eq!(stats["pico/fwd_logits"].calls, 2);
+        assert!(rt.total_exec_secs() >= 0.0);
+    }
+
+    #[test]
+    fn warmup_validates_entries() {
+        let rt = Runtime::native();
+        rt.warmup("pico", &["fwd_logits", "train_step"]).unwrap();
+        assert!(rt.warmup("pico", &["nonexistent"]).is_err());
+        // Native warmup compiles nothing.
+        assert_eq!(rt.stats()["pico/fwd_logits"].compile_secs, 0.0);
     }
 }

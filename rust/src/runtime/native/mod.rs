@@ -1,0 +1,439 @@
+//! The native CPU execution backend: every artifact entrypoint the
+//! coordinator calls, implemented on host tensors with the exact math of
+//! `python/compile/model.py` + `kernels/ref.py`.
+//!
+//! This is the reference backend: always available, zero dependencies,
+//! deterministic — the path that makes `cargo test` and the end-to-end
+//! pipeline (train → calibrate → FAQ quantize → eval → serve) run on a
+//! fresh offline checkout. The PJRT/HLO backend (`pjrt` feature) is the
+//! accelerated drop-in with the same entry contract.
+
+mod nn;
+mod train;
+
+pub use nn::{ParamView, RMS_EPS};
+pub use train::loss_and_grads;
+
+use super::backend::Backend;
+use super::registry::Manifest;
+use super::value::{Buffer, Value};
+use crate::quant::scaled_fakequant;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// Pure-Rust reference backend (stateless; all state is in the args).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    fn run(
+        &self,
+        manifest: &Manifest,
+        cfg_name: &str,
+        entry: &str,
+        args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        if let Some(rest) = entry.strip_prefix("layer_loss_sweep_") {
+            let (_, bits) = parse_role_bits(rest)?;
+            return layer_loss_sweep(args, bits, manifest.group);
+        }
+        if let Some(rest) = entry.strip_prefix("layer_loss_") {
+            let (_, bits) = parse_role_bits(rest)?;
+            return layer_loss(args, bits, manifest.group);
+        }
+        let cfg = manifest.config(cfg_name)?;
+        match entry {
+            "fwd_logits" => fwd_logits(cfg, args),
+            "fwd_capture" => fwd_capture(cfg, args),
+            "fwd_logits_q" => fwd_logits_q(cfg, args, manifest.group),
+            "train_step" => train::train_step(cfg, args),
+            other => bail!("native backend has no entry '{other}'"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn prepare(&self, manifest: &Manifest, cfg: &str, entry: &str) -> Result<f32> {
+        // Nothing to compile; validating the entry keeps warmup's
+        // "unknown entry fails loudly" contract.
+        manifest.artifact(cfg, entry)?;
+        Ok(0.0)
+    }
+
+    fn exec(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = args.iter().collect();
+        self.run(manifest, cfg, entry, &refs)
+    }
+
+    fn exec_buffers(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[&Buffer],
+    ) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = args
+            .iter()
+            .map(|b| b.host())
+            .collect::<Result<Vec<_>>>()?;
+        self.run(manifest, cfg, entry, &refs)
+    }
+
+    fn upload(&self, v: Value) -> Result<Buffer> {
+        Ok(Buffer::Host(v))
+    }
+}
+
+/// `"qkv_b3"` -> `("qkv", 3)`.
+fn parse_role_bits(rest: &str) -> Result<(&str, u32)> {
+    let (role, bits) = rest
+        .rsplit_once("_b")
+        .with_context(|| format!("malformed layer_loss entry suffix '{rest}'"))?;
+    let bits: u32 = bits
+        .parse()
+        .with_context(|| format!("bad bit width in entry suffix '{rest}'"))?;
+    Ok((role, bits))
+}
+
+/// (params…, tokens) -> (logits [B, T, V],).
+fn fwd_logits(cfg: &crate::config::ModelConfig, args: &[&Value]) -> Result<Vec<Value>> {
+    let (params, tokens) = split_tokens(args)?;
+    let view = ParamView::from_values(cfg, params)?;
+    let fwd = nn::forward(cfg, &view, tokens, false)?;
+    Ok(vec![Value::F32(fwd.logits)])
+}
+
+/// (params…, tokens) -> per-role acts [L, R, n] x4, then stats [L, n] x4.
+fn fwd_capture(cfg: &crate::config::ModelConfig, args: &[&Value]) -> Result<Vec<Value>> {
+    let (params, tokens) = split_tokens(args)?;
+    let view = ParamView::from_values(cfg, params)?;
+    let fwd = nn::forward(cfg, &view, tokens, false)?;
+    let l = cfg.n_layer;
+    let r = fwd.b * fwd.t;
+    // Role inputs per block, in ROLES order (qkv, o, up, down).
+    fn role_of(blk: &nn::BlockCache, ri: usize) -> &Tensor {
+        match ri {
+            0 => &blk.h,
+            1 => &blk.att,
+            2 => &blk.h2,
+            _ => &blk.u,
+        }
+    }
+    let mut outs = Vec::with_capacity(8);
+    for ri in 0..4 {
+        let n = role_of(&fwd.blocks[0], ri).shape()[1];
+        let mut data = Vec::with_capacity(l * r * n);
+        for blk in &fwd.blocks {
+            data.extend_from_slice(role_of(blk, ri).data());
+        }
+        outs.push(Value::F32(Tensor::from_vec(&[l, r, n], data)?));
+    }
+    for ri in 0..4 {
+        let n = role_of(&fwd.blocks[0], ri).shape()[1];
+        let mut data = Vec::with_capacity(l * n);
+        for blk in &fwd.blocks {
+            data.extend_from_slice(&role_of(blk, ri).absmean_cols());
+        }
+        outs.push(Value::F32(Tensor::from_vec(&[l, n], data)?));
+    }
+    Ok(outs)
+}
+
+/// Split a (params…, tokens) argument list.
+fn split_tokens<'a>(
+    args: &'a [&'a Value],
+) -> Result<(&'a [&'a Value], &'a crate::tensor::TensorI32)> {
+    let (tokens, params) = args
+        .split_last()
+        .context("entry needs at least a tokens argument")?;
+    Ok((params, tokens.as_i32().context("trailing arg must be i32 tokens")?))
+}
+
+/// (a [S, n], w [n, m], s [n]) -> (scalar recon loss,).
+fn layer_loss(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
+    let (a, w, s) = loss_args(args)?;
+    let y_fp = a.matmul(w)?;
+    let wq = scaled_fakequant(w, s, bits, group)?;
+    let loss = a.matmul(&wq)?.mse(&y_fp);
+    Ok(vec![Value::F32(Tensor::from_vec(&[], vec![loss])?)])
+}
+
+/// (a [S, n], w [n, m], scales [n_alpha, n]) -> (losses [n_alpha],).
+/// The shared `a @ w` is computed once across candidates (§Perf).
+fn layer_loss_sweep(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
+    if args.len() != 3 {
+        bail!("layer_loss_sweep wants 3 args, got {}", args.len());
+    }
+    let a = args[0].as_f32()?;
+    let w = args[1].as_f32()?;
+    let scales = args[2].as_f32()?;
+    let sshape = scales.shape();
+    if a.shape().len() != 2 || w.shape().len() != 2 || a.shape()[1] != w.shape()[0] {
+        bail!("layer_loss_sweep shapes: a {:?} w {:?}", a.shape(), w.shape());
+    }
+    if sshape.len() != 2 || sshape[1] != w.shape()[0] {
+        bail!("sweep scales {:?} vs weight {:?}", sshape, w.shape());
+    }
+    let y_fp = a.matmul(w)?;
+    let mut losses = Vec::with_capacity(sshape[0]);
+    for i in 0..sshape[0] {
+        let wq = scaled_fakequant(w, scales.row(i), bits, group)?;
+        losses.push(a.matmul(&wq)?.mse(&y_fp));
+    }
+    let n_alpha = losses.len();
+    Ok(vec![Value::F32(Tensor::from_vec(&[n_alpha], losses)?)])
+}
+
+fn loss_args<'a>(args: &'a [&'a Value]) -> Result<(&'a Tensor, &'a Tensor, &'a [f32])> {
+    if args.len() != 3 {
+        bail!("layer_loss wants 3 args, got {}", args.len());
+    }
+    let a = args[0].as_f32()?;
+    let w = args[1].as_f32()?;
+    let s = args[2].as_f32()?;
+    if a.shape().len() != 2 || w.shape().len() != 2 || a.shape()[1] != w.shape()[0] {
+        bail!("layer_loss shapes: a {:?} w {:?}", a.shape(), w.shape());
+    }
+    if s.numel() != w.shape()[0] {
+        bail!("scale len {} != weight n_in {}", s.numel(), w.shape()[0]);
+    }
+    Ok((a, w, s.data()))
+}
+
+/// Quantized-deployment forward: `fwd_logits_q` from integer codes +
+/// dequant params (the `ref_qmatmul` contract: `(a * inv_s) @ dequant(q)`).
+fn fwd_logits_q(
+    cfg: &crate::config::ModelConfig,
+    args: &[&Value],
+    group: usize,
+) -> Result<Vec<Value>> {
+    let want = 2 + cfg.n_layer * 18 + 3;
+    if args.len() != want {
+        bail!("fwd_logits_q: got {} args, want {want}", args.len());
+    }
+    fn f32_at<'x>(args: &[&'x Value], i: usize, what: &str) -> Result<&'x Tensor> {
+        args.get(i)
+            .with_context(|| format!("missing arg {i} ({what})"))?
+            .as_f32()
+            .with_context(|| format!("arg {what} must be f32"))
+    }
+    struct QLin<'a> {
+        q: &'a Tensor,
+        delta: &'a Tensor,
+        zero: &'a Tensor,
+        inv_s: &'a Tensor,
+    }
+    let mut i = 0usize;
+    let tok_emb = f32_at(args, i, "tok_emb")?;
+    i += 1;
+    let pos_emb = f32_at(args, i, "pos_emb")?;
+    i += 1;
+    let mut blocks = Vec::with_capacity(cfg.n_layer);
+    for b in 0..cfg.n_layer {
+        let ln1 = f32_at(args, i, &format!("blk{b}.ln1_g"))?;
+        i += 1;
+        let mut lins = Vec::with_capacity(4);
+        for role in ["qkv", "o"] {
+            lins.push(QLin {
+                q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
+                delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
+                zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
+                inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
+            });
+            i += 4;
+        }
+        let ln2 = f32_at(args, i, &format!("blk{b}.ln2_g"))?;
+        i += 1;
+        for role in ["up", "down"] {
+            lins.push(QLin {
+                q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
+                delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
+                zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
+                inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
+            });
+            i += 4;
+        }
+        blocks.push((ln1, ln2, lins));
+    }
+    let lnf_g = f32_at(args, i, "lnf_g")?;
+    i += 1;
+    let w_head = f32_at(args, i, "w_head")?;
+    i += 1;
+    let tokens = args[i]
+        .as_i32()
+        .context("trailing fwd_logits_q arg must be i32 tokens")?;
+    if tokens.shape().len() != 2 {
+        bail!("fwd_logits_q tokens must be [B, T], got {:?}", tokens.shape());
+    }
+    let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+
+    // Dequantize codes: (q - z) * delta with per-(group, col) params.
+    let dequant = |l: &QLin| -> Result<Tensor> {
+        let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
+        if n % group != 0 {
+            bail!("codes n={n} not divisible by group={group}");
+        }
+        let ng = n / group;
+        if l.delta.shape() != [ng, m] || l.zero.shape() != [ng, m] || l.inv_s.numel() != n {
+            bail!(
+                "dequant params: delta {:?} zero {:?} inv_s {:?} for codes [{n}, {m}]",
+                l.delta.shape(),
+                l.zero.shape(),
+                l.inv_s.shape()
+            );
+        }
+        let mut out = vec![0.0f32; n * m];
+        for r in 0..n {
+            let g = r / group;
+            let qr = l.q.row(r);
+            let dr = l.delta.row(g);
+            let zr = l.zero.row(g);
+            let dst = &mut out[r * m..(r + 1) * m];
+            for c in 0..m {
+                dst[c] = (qr[c] - zr[c]) * dr[c];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    };
+    // Quantized linear: (x * inv_s per input channel) @ deq.
+    let qlin = |x: &Tensor, l: &QLin| -> Result<Tensor> {
+        let n = x.shape()[1];
+        if l.inv_s.numel() != n {
+            bail!("inv_s len {} != activation cols {n}", l.inv_s.numel());
+        }
+        let inv = l.inv_s.data();
+        let mut scaled = x.clone();
+        let rows = x.shape()[0];
+        for r in 0..rows {
+            let row = &mut scaled.data_mut()[r * n..(r + 1) * n];
+            for (v, &s) in row.iter_mut().zip(inv) {
+                *v *= s;
+            }
+        }
+        scaled.matmul(&dequant(l)?)
+    };
+
+    let mut x = nn::embed(tok_emb, pos_emb, tokens)?;
+    for (ln1, ln2, lins) in &blocks {
+        let (h, _) = nn::rmsnorm_fwd(&x, ln1.data())?;
+        let qkv = qlin(&h, &lins[0])?;
+        let (att, _) = nn::attention_fwd(&qkv, b, t, cfg.n_head, false)?;
+        let x_mid = x.add(&qlin(&att, &lins[1])?)?;
+        let (h2, _) = nn::rmsnorm_fwd(&x_mid, ln2.data())?;
+        let u = qlin(&h2, &lins[2])?.map(nn::gelu);
+        x = x_mid.add(&qlin(&u, &lins[3])?)?;
+    }
+    let (hf, _) = nn::rmsnorm_fwd(&x, lnf_g.data())?;
+    let logits = hf.matmul(w_head)?.reshape(&[b, t, cfg.vocab])?;
+    Ok(vec![Value::F32(logits)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::Params;
+    use crate::tensor::{Rng, TensorI32};
+
+    fn pico() -> ModelConfig {
+        ModelConfig::preset("pico").unwrap()
+    }
+
+    fn value_args(params: &Params, tokens: &TensorI32) -> Vec<Value> {
+        let mut v: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32(t.clone()))
+            .collect();
+        v.push(Value::I32(tokens.clone()));
+        v
+    }
+
+    fn tokens(cfg: &ModelConfig, seed: u64) -> TensorI32 {
+        let mut rng = Rng::new(seed);
+        TensorI32::from_vec(
+            &[cfg.batch, cfg.seq],
+            (0..cfg.batch * cfg.seq)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_role_bits_roundtrip() {
+        assert_eq!(parse_role_bits("qkv_b3").unwrap(), ("qkv", 3));
+        assert_eq!(parse_role_bits("down_b4").unwrap(), ("down", 4));
+        assert!(parse_role_bits("nounderscore").is_err());
+    }
+
+    #[test]
+    fn capture_acts_and_stats_consistent() {
+        let m = Manifest::native();
+        let cfg = pico();
+        let params = Params::init(&cfg, 3);
+        let toks = tokens(&cfg, 4);
+        let be = NativeBackend;
+        let outs = be
+            .exec(&m, &cfg.name, "fwd_capture", &value_args(&params, &toks))
+            .unwrap();
+        assert_eq!(outs.len(), 8);
+        for ri in 0..4 {
+            let acts = outs[ri].as_f32().unwrap();
+            let stats = outs[4 + ri].as_f32().unwrap();
+            assert_eq!(acts.shape()[0], cfg.n_layer);
+            assert_eq!(acts.shape()[1], cfg.batch * cfg.seq);
+            for b in 0..cfg.n_layer {
+                let want = acts.index0(b).absmean_cols();
+                let got = stats.index0(b);
+                for (g, w) in got.data().iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_matches_single_losses() {
+        let m = Manifest::native();
+        let be = NativeBackend;
+        let mut rng = Rng::new(5);
+        let (n, cols) = (64usize, 32usize);
+        let a = Value::F32(crate::tensor::Tensor::randn(&mut rng, &[16, n], 1.0));
+        let w = Value::F32(crate::tensor::Tensor::randn(&mut rng, &[n, cols], 0.5));
+        let scales: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.uniform() + 0.5).collect())
+            .collect();
+        let flat: Vec<f32> = scales.iter().flatten().copied().collect();
+        let sw = Value::F32(Tensor::from_vec(&[3, n], flat).unwrap());
+        let outs = be
+            .exec(&m, "pico", "layer_loss_sweep_qkv_b3", &[a.clone(), w.clone(), sw])
+            .unwrap();
+        let sweep = outs[0].as_f32().unwrap().clone();
+        for (i, s) in scales.iter().enumerate() {
+            let sv = Value::F32(Tensor::from_vec(&[n], s.clone()).unwrap());
+            let single = be
+                .exec(&m, "pico", "layer_loss_qkv_b3", &[a.clone(), w.clone(), sv])
+                .unwrap();
+            let single = crate::runtime::value::scalar_f32(&single[0]).unwrap();
+            assert!((single - sweep.data()[i]).abs() < 1e-9 + 1e-5 * single.abs());
+        }
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        let m = Manifest::native();
+        let be = NativeBackend;
+        assert!(be.exec(&m, "pico", "no_such_entry", &[]).is_err());
+    }
+}

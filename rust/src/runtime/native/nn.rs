@@ -1,0 +1,603 @@
+//! Pure-Rust transformer math for the native backend.
+//!
+//! Bit-for-bit the same graph as `python/compile/model.py` (`_forward` /
+//! `_block_fwd` with the `ref.py` attention): RMSNorm, causal multi-head
+//! attention with max-subtracted softmax, tanh-approximate GELU, residual
+//! stream, weight convention `y = a @ W` with `[n_in, n_out]` weights.
+//!
+//! Every forward keeps the per-block intermediates ([`BlockCache`]):
+//! they *are* the four quantizable role inputs `fwd_capture` returns
+//! (qkv_in = ln1 out, o_in = merged attention, up_in = ln2 out,
+//! down_in = gelu out), and they are exactly what the manual backward
+//! pass in [`super::train`] consumes.
+
+use crate::config::ModelConfig;
+use crate::model::param_specs;
+use crate::runtime::value::Value;
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{bail, Context, Result};
+
+pub const RMS_EPS: f32 = 1e-5;
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+/// Borrowed view over a flat parameter argument list in canonical order.
+pub struct ParamView<'a> {
+    pub cfg: ModelConfig,
+    names: Vec<String>,
+    tensors: Vec<&'a Tensor>,
+}
+
+impl<'a> ParamView<'a> {
+    /// Build from artifact arguments, checking count and every shape
+    /// against the canonical spec (the contract python lowers with).
+    pub fn from_values(cfg: &ModelConfig, args: &[&'a Value]) -> Result<Self> {
+        let tensors = args
+            .iter()
+            .map(|v| v.as_f32())
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_tensors(cfg, &tensors)
+    }
+
+    /// Build from borrowed tensors in canonical order, validating shapes.
+    pub fn from_tensors(cfg: &ModelConfig, args: &[&'a Tensor]) -> Result<Self> {
+        let specs = param_specs(cfg);
+        if args.len() != specs.len() {
+            bail!(
+                "{}: got {} parameter args, spec wants {}",
+                cfg.name,
+                args.len(),
+                specs.len()
+            );
+        }
+        let mut names = Vec::with_capacity(specs.len());
+        let mut tensors = Vec::with_capacity(specs.len());
+        for ((name, shape), &t) in specs.into_iter().zip(args) {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "param '{name}': shape {:?} != expected {:?}",
+                    t.shape(),
+                    shape
+                );
+            }
+            names.push(name);
+            tensors.push(t);
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            names,
+            tensors,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&'a Tensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.tensors[i])
+            .with_context(|| format!("unknown param '{name}'"))
+    }
+}
+
+/// Per-block forward intermediates (also the capture-role inputs).
+pub struct BlockCache {
+    /// Residual stream entering the block [R, d].
+    pub x_in: Tensor,
+    /// RMSNorm-1 reciprocal RMS per row.
+    pub inv1: Vec<f32>,
+    /// ln1 output = qkv role input [R, d].
+    pub h: Tensor,
+    /// Packed q/k/v projections [R, 3d].
+    pub qkv: Tensor,
+    /// Softmax probabilities per (batch, head): [T, T], zero above diag.
+    pub probs: Vec<Tensor>,
+    /// Merged attention output = o role input [R, d].
+    pub att: Tensor,
+    /// Residual stream after attention [R, d].
+    pub x_mid: Tensor,
+    /// RMSNorm-2 reciprocal RMS per row.
+    pub inv2: Vec<f32>,
+    /// ln2 output = up role input [R, d].
+    pub h2: Tensor,
+    /// Pre-GELU MLP activations [R, ff].
+    pub u_pre: Tensor,
+    /// GELU output = down role input [R, ff].
+    pub u: Tensor,
+}
+
+/// Full forward pass result with all caches.
+pub struct Fwd {
+    /// [B, T, V]
+    pub logits: Tensor,
+    pub blocks: Vec<BlockCache>,
+    /// Final residual stream [R, d].
+    pub x_f: Tensor,
+    /// Final RMSNorm reciprocal RMS per row.
+    pub inv_f: Vec<f32>,
+    /// Final-norm output [R, d].
+    pub hf: Tensor,
+    pub b: usize,
+    pub t: usize,
+}
+
+/// Token + positional embedding: [B, T] ids -> [R, d] rows.
+pub fn embed(tok_emb: &Tensor, pos_emb: &Tensor, tokens: &TensorI32) -> Result<Tensor> {
+    if tokens.shape().len() != 2 {
+        bail!("tokens must be [B, T], got {:?}", tokens.shape());
+    }
+    let (vocab, d) = (tok_emb.shape()[0], tok_emb.shape()[1]);
+    let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+    if t > pos_emb.shape()[0] {
+        bail!("sequence length {t} exceeds pos_emb rows {}", pos_emb.shape()[0]);
+    }
+    let mut x = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let id = tokens.data()[bi * t + ti];
+            if id < 0 || id as usize >= vocab {
+                bail!("token id {id} out of vocab range [0, {vocab})");
+            }
+            let dst = (bi * t + ti) * d;
+            let te = tok_emb.row(id as usize);
+            let pe = pos_emb.row(ti);
+            for j in 0..d {
+                x[dst + j] = te[j] + pe[j];
+            }
+        }
+    }
+    Tensor::from_vec(&[b * t, d], x)
+}
+
+/// RMSNorm: y = x * g * r with r = 1/sqrt(mean(x^2) + eps), per row.
+/// Returns (y, r per row) — r is cached for the backward pass.
+pub fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> Result<(Tensor, Vec<f32>)> {
+    let shape = x.shape();
+    if shape.len() != 2 || shape[1] != g.len() {
+        bail!("rmsnorm: x {:?} vs g len {}", shape, g.len());
+    }
+    let (r, d) = (shape[0], shape[1]);
+    let mut out = vec![0.0f32; r * d];
+    let mut inv = vec![0.0f32; r];
+    for i in 0..r {
+        let row = x.row(i);
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let ri = 1.0 / (ms + RMS_EPS).sqrt();
+        inv[i] = ri;
+        for j in 0..d {
+            out[i * d + j] = row[j] * g[j] * ri;
+        }
+    }
+    Ok((Tensor::from_vec(&[r, d], out)?, inv))
+}
+
+/// RMSNorm backward: given cached r per row, returns (dx, dg).
+pub fn rmsnorm_bwd(
+    x: &Tensor,
+    g: &[f32],
+    inv: &[f32],
+    dy: &Tensor,
+) -> Result<(Tensor, Vec<f32>)> {
+    let shape = x.shape();
+    let (r, d) = (shape[0], shape[1]);
+    if dy.shape() != shape || inv.len() != r || g.len() != d {
+        bail!("rmsnorm_bwd shape mismatch");
+    }
+    let mut dx = vec![0.0f32; r * d];
+    let mut dg = vec![0.0f32; d];
+    for i in 0..r {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let ri = inv[i];
+        // c = sum_j dy_j * g_j * x_j
+        let mut c = 0.0f32;
+        for j in 0..d {
+            c += dyr[j] * g[j] * xr[j];
+            dg[j] += dyr[j] * xr[j] * ri;
+        }
+        let k = ri * ri * ri * c / d as f32;
+        for j in 0..d {
+            dx[i * d + j] = g[j] * dyr[j] * ri - xr[j] * k;
+        }
+    }
+    Ok((Tensor::from_vec(&[r, d], dx)?, dg))
+}
+
+/// Tanh-approximate GELU (jax.nn.gelu default).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+/// d gelu(x) / dx.
+pub fn dgelu(x: f32) -> f32 {
+    let inner = GELU_C * (x + GELU_A * x * x * x);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// Causal multi-head attention over packed projections.
+///
+/// `qkv` [R, 3d] with R = b*t; q/k/v occupy column blocks [0,d), [d,2d),
+/// [2d,3d), heads are contiguous `hd`-column stripes within each block.
+/// Returns the merged output [R, d] and, when `keep_probs`, the softmax
+/// matrix per (batch, head) for the backward pass.
+pub fn attention_fwd(
+    qkv: &Tensor,
+    b: usize,
+    t: usize,
+    n_head: usize,
+    keep_probs: bool,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    let d3 = qkv.shape()[1];
+    let d = d3 / 3;
+    if qkv.shape()[0] != b * t || d3 != 3 * d || d % n_head != 0 {
+        bail!("attention_fwd: qkv {:?} b={b} t={t} heads={n_head}", qkv.shape());
+    }
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0.0f32; b * t * d];
+    let mut probs = Vec::new();
+    for bi in 0..b {
+        for h in 0..n_head {
+            // Gather this head's panels [t, hd] for sequential access.
+            let mut q = vec![0.0f32; t * hd];
+            let mut k = vec![0.0f32; t * hd];
+            let mut v = vec![0.0f32; t * hd];
+            for ti in 0..t {
+                let row = qkv.row(bi * t + ti);
+                let o = h * hd;
+                q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
+                k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
+                v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
+            }
+            let mut p = vec![0.0f32; t * t];
+            for i in 0..t {
+                let qi = &q[i * hd..(i + 1) * hd];
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let kj = &k[j * hd..(j + 1) * hd];
+                    let s: f32 = qi.iter().zip(kj).map(|(&a, &c)| a * c).sum::<f32>() * scale;
+                    p[i * t + j] = s;
+                    mx = mx.max(s);
+                }
+                let mut sum = 0.0f32;
+                for j in 0..=i {
+                    let e = (p[i * t + j] - mx).exp();
+                    p[i * t + j] = e;
+                    sum += e;
+                }
+                let out = &mut att[(bi * t + i) * d + h * hd..(bi * t + i) * d + (h + 1) * hd];
+                for j in 0..=i {
+                    let pj = p[i * t + j] / sum;
+                    p[i * t + j] = pj;
+                    let vj = &v[j * hd..(j + 1) * hd];
+                    for (o, &vv) in out.iter_mut().zip(vj) {
+                        *o += pj * vv;
+                    }
+                }
+            }
+            if keep_probs {
+                probs.push(Tensor::from_vec(&[t, t], p)?);
+            }
+        }
+    }
+    Ok((Tensor::from_vec(&[b * t, d], att)?, probs))
+}
+
+/// Attention backward: gradient of the merged output w.r.t. the packed
+/// qkv projections, using the cached softmax matrices.
+pub fn attention_bwd(
+    qkv: &Tensor,
+    probs: &[Tensor],
+    d_att: &Tensor,
+    b: usize,
+    t: usize,
+    n_head: usize,
+) -> Result<Tensor> {
+    let d3 = qkv.shape()[1];
+    let d = d3 / 3;
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    if probs.len() != b * n_head || d_att.shape() != [b * t, d] {
+        bail!("attention_bwd shape mismatch");
+    }
+    let mut d_qkv = vec![0.0f32; b * t * 3 * d];
+    for bi in 0..b {
+        for h in 0..n_head {
+            let p = probs[bi * n_head + h].data();
+            let o = h * hd;
+            // Re-gather panels.
+            let mut q = vec![0.0f32; t * hd];
+            let mut k = vec![0.0f32; t * hd];
+            let mut v = vec![0.0f32; t * hd];
+            let mut dout = vec![0.0f32; t * hd];
+            for ti in 0..t {
+                let row = qkv.row(bi * t + ti);
+                q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
+                k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
+                v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
+                let dr = d_att.row(bi * t + ti);
+                dout[ti * hd..(ti + 1) * hd].copy_from_slice(&dr[o..o + hd]);
+            }
+            let mut dq = vec![0.0f32; t * hd];
+            let mut dk = vec![0.0f32; t * hd];
+            let mut dv = vec![0.0f32; t * hd];
+            for i in 0..t {
+                let doi = &dout[i * hd..(i + 1) * hd];
+                // dp and the softmax-Jacobian contraction over row i.
+                let mut dp = vec![0.0f32; i + 1];
+                let mut dot = 0.0f32;
+                for (j, dpj) in dp.iter_mut().enumerate() {
+                    let vj = &v[j * hd..(j + 1) * hd];
+                    *dpj = doi.iter().zip(vj).map(|(&a, &c)| a * c).sum();
+                    dot += *dpj * p[i * t + j];
+                }
+                for (j, &dpj) in dp.iter().enumerate() {
+                    let pij = p[i * t + j];
+                    // dv_j += p_ij * dout_i
+                    let dvj = &mut dv[j * hd..(j + 1) * hd];
+                    for (dvv, &dov) in dvj.iter_mut().zip(doi) {
+                        *dvv += pij * dov;
+                    }
+                    let ds = pij * (dpj - dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let kj = &k[j * hd..(j + 1) * hd];
+                    let qi = &q[i * hd..(i + 1) * hd];
+                    let dqi = &mut dq[i * hd..(i + 1) * hd];
+                    for (a, &kv) in dqi.iter_mut().zip(kj) {
+                        *a += ds * kv;
+                    }
+                    let dkj = &mut dk[j * hd..(j + 1) * hd];
+                    for (a, &qv) in dkj.iter_mut().zip(qi) {
+                        *a += ds * qv;
+                    }
+                }
+            }
+            for ti in 0..t {
+                let dst = (bi * t + ti) * 3 * d;
+                d_qkv[dst + o..dst + o + hd].copy_from_slice(&dq[ti * hd..(ti + 1) * hd]);
+                d_qkv[dst + d + o..dst + d + o + hd]
+                    .copy_from_slice(&dk[ti * hd..(ti + 1) * hd]);
+                d_qkv[dst + 2 * d + o..dst + 2 * d + o + hd]
+                    .copy_from_slice(&dv[ti * hd..(ti + 1) * hd]);
+            }
+        }
+    }
+    Tensor::from_vec(&[b * t, 3 * d], d_qkv)
+}
+
+/// Full forward pass with caches (`python _forward`, use_pallas-agnostic).
+pub fn forward(
+    cfg: &ModelConfig,
+    p: &ParamView,
+    tokens: &TensorI32,
+    keep_probs: bool,
+) -> Result<Fwd> {
+    if tokens.shape().len() != 2 {
+        bail!("tokens must be [B, T], got {:?}", tokens.shape());
+    }
+    let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+    let mut x = embed(p.get("tok_emb")?, p.get("pos_emb")?, tokens)?;
+    let mut blocks = Vec::with_capacity(cfg.n_layer);
+    for blk in 0..cfg.n_layer {
+        let ln1 = p.get(&format!("blk{blk}.ln1_g"))?;
+        let (h, inv1) = rmsnorm_fwd(&x, ln1.data())?;
+        let qkv = h.matmul(p.get(&format!("blk{blk}.w_qkv"))?)?;
+        let (att, probs) = attention_fwd(&qkv, b, t, cfg.n_head, keep_probs)?;
+        let x_mid = x.add(&att.matmul(p.get(&format!("blk{blk}.w_o"))?)?)?;
+        let ln2 = p.get(&format!("blk{blk}.ln2_g"))?;
+        let (h2, inv2) = rmsnorm_fwd(&x_mid, ln2.data())?;
+        let u_pre = h2.matmul(p.get(&format!("blk{blk}.w_up"))?)?;
+        let u = u_pre.map(gelu);
+        let x_out = x_mid.add(&u.matmul(p.get(&format!("blk{blk}.w_down"))?)?)?;
+        blocks.push(BlockCache {
+            x_in: x,
+            inv1,
+            h,
+            qkv,
+            probs,
+            att,
+            x_mid,
+            inv2,
+            h2,
+            u_pre,
+            u,
+        });
+        x = x_out;
+    }
+    let (hf, inv_f) = rmsnorm_fwd(&x, p.get("lnf_g")?.data())?;
+    let logits2 = hf.matmul(p.get("w_head")?)?;
+    let logits = logits2.reshape(&[b, t, cfg.vocab])?;
+    Ok(Fwd {
+        logits,
+        blocks,
+        x_f: x,
+        inv_f,
+        hf,
+        b,
+        t,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-test".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            vocab: 16,
+            seq: 6,
+            batch: 2,
+        }
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // jax.nn.gelu(x, approximate=True) at a few points.
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.996_363).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dgelu_matches_finite_difference() {
+        for &x in &[-2.5f32, -1.0, -0.1, 0.0, 0.3, 1.7, 3.0] {
+            let eps = 1e-3;
+            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((dgelu(x) - num).abs() < 1e-3, "x={x}: {} vs {num}", dgelu(x));
+        }
+    }
+
+    #[test]
+    fn rmsnorm_normalizes_rows() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[4, 8], 2.0);
+        let g = vec![1.0f32; 8];
+        let (y, inv) = rmsnorm_fwd(&x, &g).unwrap();
+        for i in 0..4 {
+            let ms = y.row(i).iter().map(|&v| v * v).sum::<f32>() / 8.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} mean-square {ms}");
+            assert!(inv[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_backward_matches_finite_difference() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[3, 6], 1.0);
+        let g: Vec<f32> = (0..6).map(|i| 0.5 + 0.2 * i as f32).collect();
+        let dy = Tensor::randn(&mut rng, &[3, 6], 1.0);
+        let (_, inv) = rmsnorm_fwd(&x, &g).unwrap();
+        let (dx, dg) = rmsnorm_bwd(&x, &g, &inv, &dy).unwrap();
+        // J = sum(y * dy); check d J / d x and d J / d g numerically.
+        let j_of = |xx: &Tensor, gg: &[f32]| -> f32 {
+            let (y, _) = rmsnorm_fwd(xx, gg).unwrap();
+            y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for &idx in &[0usize, 5, 11, 17] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let num = (j_of(&xp, &g) - j_of(&xm, &g)) / (2.0 * eps);
+            let ana = dx.data()[idx];
+            assert!((num - ana).abs() < 2e-2 + 0.02 * ana.abs(), "dx[{idx}]: {ana} vs {num}");
+        }
+        for idx in [0usize, 3, 5] {
+            let mut gp = g.clone();
+            gp[idx] += eps;
+            let mut gm = g.clone();
+            gm[idx] -= eps;
+            let num = (j_of(&x, &gp) - j_of(&x, &gm)) / (2.0 * eps);
+            assert!((num - dg[idx]).abs() < 2e-2 + 0.02 * dg[idx].abs());
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a future token's projections must not change earlier rows.
+        let mut rng = Rng::new(3);
+        let (b, t, heads, d) = (1usize, 5usize, 2usize, 8usize);
+        let qkv = Tensor::randn(&mut rng, &[b * t, 3 * d], 1.0);
+        let (att1, _) = attention_fwd(&qkv, b, t, heads, false).unwrap();
+        let mut qkv2 = qkv.clone();
+        for v in qkv2.data_mut()[(t - 1) * 3 * d..].iter_mut() {
+            *v += 5.0;
+        }
+        let (att2, _) = attention_fwd(&qkv2, b, t, heads, false).unwrap();
+        for r in 0..t - 1 {
+            for (a, b2) in att1.row(r).iter().zip(att2.row(r)) {
+                assert_eq!(a, b2, "row {r} leaked future information");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_probs_rows_sum_to_one() {
+        let mut rng = Rng::new(4);
+        let (b, t, heads, d) = (2usize, 4usize, 2usize, 8usize);
+        let qkv = Tensor::randn(&mut rng, &[b * t, 3 * d], 1.0);
+        let (_, probs) = attention_fwd(&qkv, b, t, heads, true).unwrap();
+        assert_eq!(probs.len(), b * heads);
+        for p in &probs {
+            for i in 0..t {
+                let s: f32 = p.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+                // strictly causal: zero above the diagonal
+                for j in i + 1..t {
+                    assert_eq!(p.at2(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_difference() {
+        let mut rng = Rng::new(5);
+        let (b, t, heads, d) = (1usize, 4usize, 2usize, 6usize);
+        let qkv = Tensor::randn(&mut rng, &[b * t, 3 * d], 0.8);
+        let d_att = Tensor::randn(&mut rng, &[b * t, d], 1.0);
+        let (_, probs) = attention_fwd(&qkv, b, t, heads, true).unwrap();
+        let d_qkv = attention_bwd(&qkv, &probs, &d_att, b, t, heads).unwrap();
+        let j_of = |q: &Tensor| -> f32 {
+            let (att, _) = attention_fwd(q, b, t, heads, false).unwrap();
+            att.data().iter().zip(d_att.data()).map(|(&a, &c)| a * c).sum()
+        };
+        let eps = 1e-2;
+        for idx in (0..qkv.numel()).step_by(7) {
+            let mut qp = qkv.clone();
+            qp.data_mut()[idx] += eps;
+            let mut qm = qkv.clone();
+            qm.data_mut()[idx] -= eps;
+            let num = (j_of(&qp) - j_of(&qm)) / (2.0 * eps);
+            let ana = d_qkv.data()[idx];
+            assert!(
+                (num - ana).abs() < 3e-2 + 0.03 * ana.abs(),
+                "d_qkv[{idx}]: analytic {ana} vs numeric {num}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let params = crate::model::Params::init(&cfg, 7);
+        let values: Vec<Value> = params.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        let refs: Vec<&Value> = values.iter().collect();
+        let view = ParamView::from_values(&cfg, &refs).unwrap();
+        let mut rng = Rng::new(8);
+        let toks = TensorI32::from_vec(
+            &[cfg.batch, cfg.seq],
+            (0..cfg.batch * cfg.seq)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        )
+        .unwrap();
+        let fwd = forward(&cfg, &view, &toks, true).unwrap();
+        assert_eq!(fwd.logits.shape(), &[cfg.batch, cfg.seq, cfg.vocab]);
+        assert!(fwd.logits.data().iter().all(|v| v.is_finite()));
+        assert_eq!(fwd.blocks.len(), cfg.n_layer);
+        assert_eq!(fwd.blocks[0].u.shape(), &[cfg.batch * cfg.seq, cfg.d_ff]);
+    }
+
+    #[test]
+    fn param_view_rejects_bad_shapes() {
+        let cfg = tiny_cfg();
+        let params = crate::model::Params::init(&cfg, 9);
+        let mut values: Vec<Value> =
+            params.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        values[0] = Value::F32(Tensor::zeros(&[1, 1]));
+        let refs: Vec<&Value> = values.iter().collect();
+        assert!(ParamView::from_values(&cfg, &refs).is_err());
+    }
+}

@@ -1,0 +1,398 @@
+//! Native `train_step`: next-token cross-entropy forward/backward plus
+//! the AdamW update — the pure-Rust mirror of
+//! `python/compile/model.py::train_step` (same constants, same decay
+//! skip-list, same output order `params…, m…, v…, step, loss`).
+
+use super::nn::{attention_bwd, dgelu, forward, rmsnorm_bwd, ParamView};
+use crate::config::ModelConfig;
+use crate::model::param_specs;
+use crate::runtime::value::Value;
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{bail, Result};
+
+// AdamW hyperparameters — must match python/compile/model.py.
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.95;
+const ADAM_EPS: f32 = 1e-8;
+const WEIGHT_DECAY: f32 = 0.01;
+const LR: f32 = 3e-3;
+
+/// Cross-entropy loss and parameter gradients for one token batch.
+///
+/// `params` in canonical order; `tokens` [B, T+1] (input = first T
+/// columns, targets = shifted by one). Returns (loss, grads in canonical
+/// order).
+pub fn loss_and_grads(
+    cfg: &ModelConfig,
+    params: &[&Tensor],
+    tokens: &TensorI32,
+) -> Result<(f32, Vec<Tensor>)> {
+    let view = ParamView::from_tensors(cfg, params)?;
+    let shape = tokens.shape();
+    if shape.len() != 2 || shape[1] < 2 {
+        bail!("train tokens must be [B, T+1], got {shape:?}");
+    }
+    let (b, t) = (shape[0], shape[1] - 1);
+    let v = cfg.vocab;
+    let r_total = b * t;
+
+    // Split input/target column views of the [B, T+1] batch.
+    let mut inp = vec![0i32; r_total];
+    let mut tgt = vec![0i32; r_total];
+    for bi in 0..b {
+        for ti in 0..t {
+            inp[bi * t + ti] = tokens.data()[bi * (t + 1) + ti];
+            tgt[bi * t + ti] = tokens.data()[bi * (t + 1) + ti + 1];
+        }
+    }
+    let inp = TensorI32::from_vec(&[b, t], inp)?;
+
+    let fwd = forward(cfg, &view, &inp, true)?;
+    let logits2 = fwd.logits.reshape(&[r_total, v])?;
+
+    // Loss = mean(logsumexp - gold); dlogits = (softmax - onehot)/R.
+    let mut loss_sum = 0f64;
+    let mut dlogits = vec![0.0f32; r_total * v];
+    let inv_r = 1.0 / r_total as f32;
+    for r in 0..r_total {
+        let row = logits2.row(r);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+        let lse = mx + sum.ln();
+        let gold = tgt[r];
+        if gold < 0 || gold as usize >= v {
+            bail!("target token {gold} out of vocab range [0, {v})");
+        }
+        loss_sum += (lse - row[gold as usize]) as f64;
+        let dst = &mut dlogits[r * v..(r + 1) * v];
+        for (d, &x) in dst.iter_mut().zip(row) {
+            *d = (x - lse).exp() * inv_r;
+        }
+        dst[gold as usize] -= inv_r;
+    }
+    let loss = (loss_sum / r_total as f64) as f32;
+    let dlogits = Tensor::from_vec(&[r_total, v], dlogits)?;
+
+    // Gradients, canonical order.
+    let specs = param_specs(cfg);
+    let mut grads: Vec<Tensor> = specs
+        .iter()
+        .map(|(_, s)| Tensor::zeros(s))
+        .collect();
+    let idx = |name: &str| -> usize {
+        specs
+            .iter()
+            .position(|(n, _)| n == name)
+            .expect("canonical name")
+    };
+
+    // Head + final norm.
+    grads[idx("w_head")] = fwd.hf.matmul_tn(&dlogits)?;
+    let d_hf = dlogits.matmul_nt(view.get("w_head")?)?;
+    let lnf_g = view.get("lnf_g")?;
+    let (mut dx, d_lnf) = rmsnorm_bwd(&fwd.x_f, lnf_g.data(), &fwd.inv_f, &d_hf)?;
+    grads[idx("lnf_g")] = Tensor::from_vec(&[cfg.d_model], d_lnf)?;
+
+    // Blocks in reverse.
+    for blk in (0..cfg.n_layer).rev() {
+        let c = &fwd.blocks[blk];
+        let w_qkv = view.get(&format!("blk{blk}.w_qkv"))?;
+        let w_o = view.get(&format!("blk{blk}.w_o"))?;
+        let w_up = view.get(&format!("blk{blk}.w_up"))?;
+        let w_down = view.get(&format!("blk{blk}.w_down"))?;
+        let ln1_g = view.get(&format!("blk{blk}.ln1_g"))?;
+        let ln2_g = view.get(&format!("blk{blk}.ln2_g"))?;
+
+        // x_out = x_mid + u @ w_down
+        let d_u = dx.matmul_nt(w_down)?;
+        grads[idx(&format!("blk{blk}.w_down"))] = c.u.matmul_tn(&dx)?;
+        let d_upre = d_u.zip(&c.u_pre, |g, x| g * dgelu(x))?;
+        let d_h2 = d_upre.matmul_nt(w_up)?;
+        grads[idx(&format!("blk{blk}.w_up"))] = c.h2.matmul_tn(&d_upre)?;
+        let (dx_ln2, d_ln2) = rmsnorm_bwd(&c.x_mid, ln2_g.data(), &c.inv2, &d_h2)?;
+        grads[idx(&format!("blk{blk}.ln2_g"))] = Tensor::from_vec(&[cfg.d_model], d_ln2)?;
+        let dx_mid = dx.add(&dx_ln2)?;
+
+        // x_mid = x_in + att @ w_o
+        let d_att = dx_mid.matmul_nt(w_o)?;
+        grads[idx(&format!("blk{blk}.w_o"))] = c.att.matmul_tn(&dx_mid)?;
+        let d_qkv = attention_bwd(&c.qkv, &c.probs, &d_att, fwd.b, fwd.t, cfg.n_head)?;
+        let d_h = d_qkv.matmul_nt(w_qkv)?;
+        grads[idx(&format!("blk{blk}.w_qkv"))] = c.h.matmul_tn(&d_qkv)?;
+        let (dx_ln1, d_ln1) = rmsnorm_bwd(&c.x_in, ln1_g.data(), &c.inv1, &d_h)?;
+        grads[idx(&format!("blk{blk}.ln1_g"))] = Tensor::from_vec(&[cfg.d_model], d_ln1)?;
+        dx = dx_mid.add(&dx_ln1)?;
+    }
+
+    // Embeddings: scatter-add the input-stream gradient.
+    let d = cfg.d_model;
+    let mut d_tok = vec![0.0f32; cfg.vocab * d];
+    let mut d_pos = vec![0.0f32; cfg.seq * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let r = bi * t + ti;
+            let row = dx.row(r);
+            let id = inp.data()[r] as usize;
+            let tok_dst = &mut d_tok[id * d..(id + 1) * d];
+            for (a, &g) in tok_dst.iter_mut().zip(row) {
+                *a += g;
+            }
+            let pos_dst = &mut d_pos[ti * d..(ti + 1) * d];
+            for (a, &g) in pos_dst.iter_mut().zip(row) {
+                *a += g;
+            }
+        }
+    }
+    grads[idx("tok_emb")] = Tensor::from_vec(&[cfg.vocab, d], d_tok)?;
+    grads[idx("pos_emb")] = Tensor::from_vec(&[cfg.seq, d], d_pos)?;
+
+    Ok((loss, grads))
+}
+
+/// Full native train_step artifact: fwd/bwd + AdamW.
+///
+/// Args: params… (n), m… (n), v… (n), step scalar, tokens [B, T+1].
+/// Returns: params'… , m'… , v'… , step+1, loss.
+pub fn train_step(cfg: &ModelConfig, args: &[&Value]) -> Result<Vec<Value>> {
+    let specs = param_specs(cfg);
+    let n = specs.len();
+    if args.len() != 3 * n + 2 {
+        bail!("train_step: got {} args, want {}", args.len(), 3 * n + 2);
+    }
+    let params: Vec<&Tensor> = args[..n]
+        .iter()
+        .map(|v| v.as_f32())
+        .collect::<Result<Vec<_>>>()?;
+    let ms: Vec<&Tensor> = args[n..2 * n]
+        .iter()
+        .map(|v| v.as_f32())
+        .collect::<Result<Vec<_>>>()?;
+    let vs: Vec<&Tensor> = args[2 * n..3 * n]
+        .iter()
+        .map(|v| v.as_f32())
+        .collect::<Result<Vec<_>>>()?;
+    let step0 = crate::runtime::value::scalar_f32(args[3 * n])?;
+    let tokens = args[3 * n + 1].as_i32()?;
+
+    let (loss, grads) = loss_and_grads(cfg, &params, tokens)?;
+
+    let step = step0 + 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    let mut new_p = Vec::with_capacity(n);
+    let mut new_m = Vec::with_capacity(n);
+    let mut new_v = Vec::with_capacity(n);
+    for i in 0..n {
+        let (name, _) = &specs[i];
+        let decay = if name.ends_with("_g") || name.contains("emb") {
+            0.0
+        } else {
+            WEIGHT_DECAY
+        };
+        let numel = params[i].numel();
+        let mut pd = Vec::with_capacity(numel);
+        let mut md = Vec::with_capacity(numel);
+        let mut vd = Vec::with_capacity(numel);
+        for j in 0..numel {
+            let g = grads[i].data()[j];
+            let m = ADAM_B1 * ms[i].data()[j] + (1.0 - ADAM_B1) * g;
+            let vv = ADAM_B2 * vs[i].data()[j] + (1.0 - ADAM_B2) * g * g;
+            let upd = (m / bc1) / ((vv / bc2).sqrt() + ADAM_EPS);
+            let p = params[i].data()[j];
+            pd.push(p - LR * (upd + decay * p));
+            md.push(m);
+            vd.push(vv);
+        }
+        new_p.push(Value::F32(Tensor::from_vec(params[i].shape(), pd)?));
+        new_m.push(Value::F32(Tensor::from_vec(params[i].shape(), md)?));
+        new_v.push(Value::F32(Tensor::from_vec(params[i].shape(), vd)?));
+    }
+
+    let mut outs = new_p;
+    outs.extend(new_m);
+    outs.extend(new_v);
+    outs.push(Value::F32(Tensor::from_vec(&[], vec![step])?));
+    outs.push(Value::F32(Tensor::from_vec(&[], vec![loss])?));
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Params;
+    use crate::tensor::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-test".into(),
+            n_layer: 2,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            vocab: 16,
+            seq: 6,
+            batch: 2,
+        }
+    }
+
+    fn batch(cfg: &ModelConfig, seed: u64) -> TensorI32 {
+        let mut rng = Rng::new(seed);
+        TensorI32::from_vec(
+            &[cfg.batch, cfg.seq + 1],
+            (0..cfg.batch * (cfg.seq + 1))
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    /// The decisive correctness check for the whole backward pass: the
+    /// directional derivative along a random direction must match the
+    /// inner product of the analytic gradients with that direction.
+    #[test]
+    fn gradients_match_directional_derivative() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 11);
+        let toks = batch(&cfg, 12);
+        let refs: Vec<&Tensor> = params.tensors.iter().collect();
+        let (_, grads) = loss_and_grads(&cfg, &refs, &toks).unwrap();
+
+        let mut rng = Rng::new(13);
+        let dirs: Vec<Tensor> = params
+            .tensors
+            .iter()
+            .map(|t| Tensor::randn(&mut rng, t.shape(), 1.0))
+            .collect();
+        let analytic: f32 = grads
+            .iter()
+            .zip(&dirs)
+            .map(|(g, u)| g.data().iter().zip(u.data()).map(|(&a, &b)| a * b).sum::<f32>())
+            .sum();
+
+        let eps = 5e-3f32;
+        let loss_at = |sign: f32| -> f32 {
+            let shifted: Vec<Tensor> = params
+                .tensors
+                .iter()
+                .zip(&dirs)
+                .map(|(p, u)| p.zip(u, |a, b| a + sign * eps * b).unwrap())
+                .collect();
+            let refs: Vec<&Tensor> = shifted.iter().collect();
+            loss_and_grads(&cfg, &refs, &toks).unwrap().0
+        };
+        let numeric = (loss_at(1.0) - loss_at(-1.0)) / (2.0 * eps);
+        assert!(
+            (numeric - analytic).abs() < 5e-3 + 0.05 * analytic.abs(),
+            "directional derivative: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    #[test]
+    fn pointwise_gradients_match_finite_difference() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 21);
+        let toks = batch(&cfg, 22);
+        let refs: Vec<&Tensor> = params.tensors.iter().collect();
+        let (_, grads) = loss_and_grads(&cfg, &refs, &toks).unwrap();
+        let specs = param_specs(&cfg);
+        // One representative element per parameter kind.
+        for name in ["tok_emb", "pos_emb", "blk0.ln1_g", "blk0.w_qkv", "blk1.w_down", "lnf_g", "w_head"] {
+            let i = specs.iter().position(|(n, _)| n == name).unwrap();
+            let idx = grads[i].numel() / 2;
+            let eps = 5e-3f32;
+            let loss_with = |delta: f32| -> f32 {
+                let mut shifted: Vec<Tensor> = params.tensors.clone();
+                shifted[i].data_mut()[idx] += delta;
+                let refs: Vec<&Tensor> = shifted.iter().collect();
+                loss_and_grads(&cfg, &refs, &toks).unwrap().0
+            };
+            let numeric = (loss_with(eps) - loss_with(-eps)) / (2.0 * eps);
+            let analytic = grads[i].data()[idx];
+            assert!(
+                (numeric - analytic).abs() < 3e-3 + 0.05 * analytic.abs(),
+                "{name}[{idx}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn adamw_step_moves_params_and_counts() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 31);
+        let n = params.tensors.len();
+        let zeros: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32(Tensor::zeros(t.shape())))
+            .collect();
+        let pvals: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32(t.clone()))
+            .collect();
+        let step = Value::F32(Tensor::from_vec(&[], vec![0.0]).unwrap());
+        let toks = Value::I32(batch(&cfg, 32));
+        let mut args: Vec<&Value> = Vec::new();
+        args.extend(pvals.iter());
+        args.extend(zeros.iter());
+        args.extend(zeros.iter());
+        args.push(&step);
+        args.push(&toks);
+        let outs = train_step(&cfg, &args).unwrap();
+        assert_eq!(outs.len(), 3 * n + 2);
+        let step_out = crate::runtime::value::scalar_f32(&outs[3 * n]).unwrap();
+        let loss = crate::runtime::value::scalar_f32(&outs[3 * n + 1]).unwrap();
+        assert_eq!(step_out, 1.0);
+        assert!(loss.is_finite() && loss > 0.0);
+        // Random-init loss near ln(vocab).
+        assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.5, "loss {loss}");
+        // Weights moved.
+        let w_new = outs[2].as_f32().unwrap();
+        assert!(w_new.mse(&params.tensors[2]) > 0.0);
+    }
+
+    #[test]
+    fn repeated_steps_reduce_loss() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 41);
+        let toks = batch(&cfg, 42);
+        let n = params.tensors.len();
+        let mut p: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32(t.clone()))
+            .collect();
+        let mut m: Vec<Value> = params
+            .tensors
+            .iter()
+            .map(|t| Value::F32(Tensor::zeros(t.shape())))
+            .collect();
+        let mut v = m.clone();
+        let mut step = Value::F32(Tensor::from_vec(&[], vec![0.0]).unwrap());
+        let tokens = Value::I32(toks);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for it in 0..30 {
+            let mut args: Vec<&Value> = Vec::new();
+            args.extend(p.iter());
+            args.extend(m.iter());
+            args.extend(v.iter());
+            args.push(&step);
+            args.push(&tokens);
+            let outs = train_step(&cfg, &args).unwrap();
+            let loss = crate::runtime::value::scalar_f32(&outs[3 * n + 1]).unwrap();
+            if it == 0 {
+                first = loss;
+            }
+            last = loss;
+            p = outs[..n].to_vec();
+            m = outs[n..2 * n].to_vec();
+            v = outs[2 * n..3 * n].to_vec();
+            step = outs[3 * n].clone();
+        }
+        assert!(
+            last < first - 0.1,
+            "overfitting one batch must cut the loss: {first} -> {last}"
+        );
+    }
+}

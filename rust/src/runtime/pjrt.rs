@@ -1,0 +1,188 @@
+//! PJRT/XLA execution backend (`pjrt` feature): load AOT HLO-text
+//! artifacts, compile once per entry, execute from the hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Executables are compiled on first use
+//! and cached for the process lifetime; all entrypoints lower with
+//! `return_tuple=True`, so outputs are always un-tupled here.
+//!
+//! The `xla` binding is not in the offline registry: building with
+//! `--features pjrt` requires adding it as a path dependency (see
+//! rust/Cargo.toml). Default builds never compile this module.
+
+use super::backend::Backend;
+use super::registry::Manifest;
+use super::value::{Buffer, Value};
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Device-resident buffer handle (clonable via refcount).
+#[derive(Clone)]
+pub struct DeviceBuffer(Rc<xla::PjRtBuffer>);
+
+impl std::fmt::Debug for DeviceBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("DeviceBuffer")
+    }
+}
+
+/// The PJRT CPU backend: one client + executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for (cfg, entry).
+    /// Returns (executable, compile seconds — 0 on cache hit).
+    fn executable(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+    ) -> Result<(Rc<xla::PjRtLoadedExecutable>, f32)> {
+        let key = (cfg.to_string(), entry.to_string());
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok((exe.clone(), 0.0));
+        }
+        let info = manifest.artifact(cfg, entry)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.path)
+            .with_context(|| format!("parse HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile {cfg}/{entry}"))?,
+        );
+        let secs = t0.elapsed().as_secs_f32();
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok((exe, secs))
+    }
+
+    fn untuple(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Value>> {
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("download result literal")?;
+        let outs = lit.to_tuple().context("untuple result")?;
+        outs.iter().map(value_from_literal).collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn prepare(&self, manifest: &Manifest, cfg: &str, entry: &str) -> Result<f32> {
+        let (_, secs) = self.executable(manifest, cfg, entry)?;
+        Ok(secs)
+    }
+
+    fn exec(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let (exe, _) = self.executable(manifest, cfg, entry)?;
+        let lits = args
+            .iter()
+            .map(literal_from_value)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {cfg}/{entry}"))?;
+        Self::untuple(result)
+    }
+
+    fn exec_buffers(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        entry: &str,
+        args: &[&Buffer],
+    ) -> Result<Vec<Value>> {
+        let (exe, _) = self.executable(manifest, cfg, entry)?;
+        let bufs = args
+            .iter()
+            .map(|b| match b {
+                Buffer::Device(d) => Ok(d.0.as_ref()),
+                Buffer::Host(_) => bail!("host buffer passed to the PJRT backend"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute_b(&bufs)
+            .with_context(|| format!("execute_b {cfg}/{entry}"))?;
+        Self::untuple(result)
+    }
+
+    fn upload(&self, v: Value) -> Result<Buffer> {
+        let buf = match &v {
+            Value::F32(t) => self
+                .client
+                .buffer_from_host_buffer(t.data(), t.shape(), None)
+                .context("upload f32 buffer")?,
+            Value::I32(t) => self
+                .client
+                .buffer_from_host_buffer(t.data(), t.shape(), None)
+                .context("upload i32 buffer")?,
+        };
+        Ok(Buffer::Device(DeviceBuffer(Rc::new(buf))))
+    }
+}
+
+fn as_bytes_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 has no padding; alignment of u8 is 1; LE host.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn as_bytes_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Value -> xla literal with the same shape.
+pub fn literal_from_value(v: &Value) -> Result<xla::Literal> {
+    match v {
+        Value::F32(t) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            t.shape(),
+            as_bytes_f32(t.data()),
+        )
+        .context("create f32 literal"),
+        Value::I32(t) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            t.shape(),
+            as_bytes_i32(t.data()),
+        )
+        .context("create i32 literal"),
+    }
+}
+
+/// xla literal -> value (f32 or i32 by element type).
+pub fn value_from_literal(lit: &xla::Literal) -> Result<Value> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.element_type() {
+        xla::ElementType::S32 => {
+            let data: Vec<i32> = lit.to_vec().context("literal to i32 vec")?;
+            Ok(Value::I32(TensorI32::from_vec(&dims, data)?))
+        }
+        _ => {
+            let data: Vec<f32> = lit.to_vec().context("literal to f32 vec")?;
+            Ok(Value::F32(Tensor::from_vec(&dims, data)?))
+        }
+    }
+}

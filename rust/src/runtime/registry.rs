@@ -1,10 +1,16 @@
-//! Artifact manifest parser.
+//! Artifact manifest parser + native-backend manifest synthesis.
 //!
 //! `artifacts/manifest.txt` is written by python/compile/aot.py (line
 //! format documented there). The registry is the single source of truth
 //! for which HLO modules exist, their argument counts, and the canonical
 //! parameter order per model config — cross-checked against the rust-side
 //! presets so L2 and L3 can never drift silently.
+//!
+//! [`Manifest::native`] synthesizes the same contract straight from the
+//! rust presets (no python, no artifacts/ directory): the native backend
+//! implements every entrypoint in-process, so the manifest only needs the
+//! entry names and arities that `python/compile/model.py::entrypoints`
+//! would have lowered.
 
 use crate::config::ModelConfig;
 use anyhow::{bail, Context, Result};
@@ -29,6 +35,14 @@ pub struct Manifest {
     /// (cfg, entry) -> artifact.
     pub artifacts: HashMap<(String, String), ArtifactInfo>,
 }
+
+/// Quantization group size baked into the native manifest (matches
+/// `QuantConfig::default().group`).
+pub const NATIVE_GROUP: usize = 64;
+/// Activation-sample rows for the layer-loss objective (native manifest).
+pub const NATIVE_LOSS_ROWS: usize = 512;
+/// Bit widths the native backend registers layer-loss entries for.
+pub const NATIVE_BITS: [u32; 7] = [2, 3, 4, 5, 6, 7, 8];
 
 fn kv(tok: &str, line_no: usize) -> Result<(&str, &str)> {
     tok.split_once('=')
@@ -140,6 +154,61 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Synthesize the manifest for the in-process native backend: all
+    /// rust model presets, canonical parameter orders, and the full
+    /// entrypoint set with the arities `python/compile/model.py` defines.
+    pub fn native() -> Self {
+        Self::native_with(NATIVE_GROUP, NATIVE_LOSS_ROWS)
+    }
+
+    /// Native manifest with a custom quantization geometry. The native
+    /// backend reads `group`/`loss_rows` dynamically, so (unlike the AOT
+    /// path, where these are baked into the artifacts at lowering time)
+    /// any positive values work — this is how a run with e.g.
+    /// `quant.group = 32` gets a matching runtime.
+    pub fn native_with(group: usize, loss_rows: usize) -> Self {
+        assert!(group > 0 && loss_rows > 0, "group/loss_rows must be positive");
+        let mut m = Manifest {
+            group,
+            loss_rows,
+            ..Manifest::default()
+        };
+        for name in ModelConfig::all_presets() {
+            let cfg = ModelConfig::preset(name).expect("preset");
+            let specs = crate::model::param_specs(&cfg);
+            let n = specs.len();
+            // fwd_logits_q per block: ln1 + 4x(qkv,o) + ln2 + 4x(up,down).
+            let q_nargs = 2 + cfg.n_layer * 18 + 2 + 1;
+            let mut entries: Vec<(String, usize)> = vec![
+                ("fwd_logits".to_string(), n + 1),
+                ("fwd_capture".to_string(), n + 1),
+                ("fwd_logits_q".to_string(), q_nargs),
+                ("train_step".to_string(), 3 * n + 2),
+            ];
+            for role in crate::model::ROLES {
+                for bits in NATIVE_BITS {
+                    entries.push((format!("layer_loss_{role}_b{bits}"), 3));
+                    entries.push((format!("layer_loss_sweep_{role}_b{bits}"), 3));
+                }
+            }
+            for (entry, nargs) in entries {
+                m.artifacts.insert(
+                    (name.to_string(), entry.clone()),
+                    ArtifactInfo {
+                        cfg: name.to_string(),
+                        entry,
+                        path: PathBuf::from("native://builtin"),
+                        nargs,
+                    },
+                );
+            }
+            m.params.insert(name.to_string(), specs);
+            m.configs.insert(name.to_string(), cfg);
+        }
+        m.validate().expect("native manifest is preset-consistent");
+        m
+    }
+
     /// Cross-check manifest configs + param lists against rust presets.
     fn validate(&self) -> Result<()> {
         for (name, cfg) in &self.configs {
@@ -243,6 +312,34 @@ mod tests {
         );
         assert!(Manifest::load(&d).is_err());
         std::fs::remove_dir_all(d).ok();
+    }
+
+    #[test]
+    fn native_manifest_supports_custom_geometry() {
+        let m = Manifest::native_with(32, 128);
+        assert_eq!(m.group, 32);
+        assert_eq!(m.loss_rows, 128);
+        assert!(m.artifact("pico", "layer_loss_qkv_b3").is_ok());
+    }
+
+    #[test]
+    fn native_manifest_covers_all_presets_and_entries() {
+        let m = Manifest::native();
+        assert_eq!(m.group, NATIVE_GROUP);
+        assert_eq!(m.loss_rows, NATIVE_LOSS_ROWS);
+        for name in ModelConfig::all_presets() {
+            let cfg = m.config(name).unwrap();
+            let n = crate::model::param_specs(cfg).len();
+            assert_eq!(m.artifact(name, "fwd_logits").unwrap().nargs, n + 1);
+            assert_eq!(m.artifact(name, "train_step").unwrap().nargs, 3 * n + 2);
+            assert_eq!(
+                m.artifact(name, "fwd_logits_q").unwrap().nargs,
+                2 + cfg.n_layer * 18 + 3
+            );
+            assert_eq!(m.artifact(name, "layer_loss_qkv_b3").unwrap().nargs, 3);
+            assert!(m.artifact(name, "layer_loss_sweep_down_b4").is_ok());
+        }
+        assert!(m.artifact("pico", "no_such_entry").is_err());
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Backend-neutral argument/result values and device-buffer handles.
+//!
+//! `Value` replaces the raw XLA literal in every artifact signature:
+//! the coordinator builds host tensors, wraps them, and gets host tensors
+//! back regardless of which [`super::Backend`] executed the entrypoint.
+//! `Buffer` is the opaque "uploaded once, reused across executions"
+//! handle (§Perf): host memory for the native backend, a device-resident
+//! PJRT buffer under the `pjrt` feature.
+//!
+//! The `lit_*` constructor names are kept from the PJRT-only era so the
+//! training/eval/serving call sites read unchanged.
+
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{bail, Result};
+
+/// A host-side artifact argument or result: an f32 or i32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(t) => bail!("expected f32 value, got i32 {:?}", t.shape()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI32> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(t) => bail!("expected i32 value, got f32 {:?}", t.shape()),
+        }
+    }
+}
+
+/// An uploaded argument: reusable across executions without re-copying.
+#[derive(Clone, Debug)]
+pub enum Buffer {
+    /// Host-resident (native backend): the value itself.
+    Host(Value),
+    /// Device-resident (PJRT backend).
+    #[cfg(feature = "pjrt")]
+    Device(super::pjrt::DeviceBuffer),
+}
+
+impl Buffer {
+    /// The host view of this buffer; errors for device-resident buffers
+    /// (those never reach the native execution path).
+    pub fn host(&self) -> Result<&Value> {
+        match self {
+            Buffer::Host(v) => Ok(v),
+            #[cfg(feature = "pjrt")]
+            Buffer::Device(_) => bail!("device buffer has no host view"),
+        }
+    }
+}
+
+/// f32 tensor -> value with the same shape.
+pub fn lit_f32(t: &Tensor) -> Result<Value> {
+    Ok(Value::F32(t.clone()))
+}
+
+/// i32 tensor -> value with the same shape.
+pub fn lit_i32(t: &TensorI32) -> Result<Value> {
+    Ok(Value::I32(t.clone()))
+}
+
+/// f32 scalar value (shape []).
+pub fn lit_scalar(v: f32) -> Result<Value> {
+    Ok(Value::F32(Tensor::from_vec(&[], vec![v])?))
+}
+
+/// Value -> f32 tensor (shape taken from the value).
+pub fn tensor_f32(v: &Value) -> Result<Tensor> {
+    Ok(v.as_f32()?.clone())
+}
+
+/// Value -> f32 scalar.
+pub fn scalar_f32(v: &Value) -> Result<f32> {
+    let t = v.as_f32()?;
+    if t.numel() != 1 {
+        bail!("expected scalar, got shape {:?}", t.shape());
+    }
+    Ok(t.data()[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&mut rng, &[3, 4], 1.0);
+        let lit = lit_f32(&t).unwrap();
+        let back = tensor_f32(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_shape_preserved() {
+        let t = TensorI32::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let lit = lit_i32(&t).unwrap();
+        assert_eq!(lit.shape(), &[2, 3]);
+        assert_eq!(lit.as_i32().unwrap().data(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar(7.25).unwrap();
+        assert_eq!(scalar_f32(&lit).unwrap(), 7.25);
+    }
+
+    #[test]
+    fn type_mismatches_rejected() {
+        let f = lit_scalar(1.0).unwrap();
+        assert!(f.as_i32().is_err());
+        let i = lit_i32(&TensorI32::zeros(&[2])).unwrap();
+        assert!(i.as_f32().is_err());
+        assert!(scalar_f32(&lit_f32(&Tensor::zeros(&[2])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn host_buffer_roundtrip() {
+        let v = lit_scalar(3.5).unwrap();
+        let b = Buffer::Host(v.clone());
+        assert_eq!(b.host().unwrap(), &v);
+    }
+}

@@ -2,17 +2,21 @@
 //! deployment artifact (`fwd_logits_q`) with a request queue, a timeout
 //! batcher, and latency accounting.
 //!
-//! The PJRT runtime is not `Sync`, so the server owns it on a dedicated
+//! The runtime is not `Sync`, so the server owns it on a dedicated
 //! executor thread; clients talk over mpsc channels. The batcher collects
 //! up to `batch` requests or flushes after `max_wait`; partial batches are
-//! padded (fixed-shape artifacts) and pad rows discarded.
+//! padded (fixed-shape artifacts) and pad rows discarded. Malformed
+//! requests (wrong sequence length or out-of-range token ids) are
+//! rejected individually — their response channel is dropped so the
+//! client observes a disconnect — and never abort the serving loop for
+//! the well-formed traffic behind them.
 
 use crate::config::ModelConfig;
 use crate::model::{Params, ROLES};
 use crate::quant::QuantizedModel;
-use crate::runtime::{lit_f32, tensor_f32, Runtime};
+use crate::runtime::{lit_f32, tensor_f32, Buffer, Runtime, Value};
 use crate::tensor::{percentile, Tensor, TensorI32};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -33,6 +37,8 @@ pub struct Response {
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub requests: usize,
+    /// Malformed requests dropped without aborting the loop.
+    pub rejected: usize,
     pub batches: usize,
     pub mean_batch_fill: f32,
     pub p50_ms: f32,
@@ -46,7 +52,7 @@ pub struct ServeReport {
 /// Arg order (must mirror python model.fwd_logits_q): tok_emb, pos_emb,
 /// per block [ln1, qkv{q,d,z,inv}, o{...}, ln2, up{...}, down{...}],
 /// lnf_g, w_head.
-pub fn qmodel_literals(params: &Params, qm: &QuantizedModel) -> Result<Vec<xla::Literal>> {
+pub fn qmodel_literals(params: &Params, qm: &QuantizedModel) -> Result<Vec<Value>> {
     let cfg = &qm.cfg;
     let mut lits = Vec::new();
     lits.push(lit_f32(params.get("tok_emb")?)?);
@@ -66,13 +72,13 @@ pub fn qmodel_literals(params: &Params, qm: &QuantizedModel) -> Result<Vec<xla::
     Ok(lits)
 }
 
-/// Upload a literal bundle to device-resident buffers.
-fn upload_literals(rt: &Runtime, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+/// Upload a value bundle to reusable buffers.
+fn upload_literals(rt: &Runtime, lits: &[Value]) -> Result<Vec<Buffer>> {
     lits.iter().map(|l| rt.upload_literal(l)).collect()
 }
 
 fn push_linear(
-    lits: &mut Vec<xla::Literal>,
+    lits: &mut Vec<Value>,
     qm: &QuantizedModel,
     block: usize,
     role: &str,
@@ -110,16 +116,28 @@ pub fn serve_requests(
     let mut latencies_ms: Vec<f32> = Vec::new();
     let mut fills: Vec<f32> = Vec::new();
     let mut batches = 0usize;
+    let mut rejected = 0usize;
     let started = Instant::now();
     let mut pending: Vec<(Request, Instant)> = Vec::new();
     let mut done = false;
 
     while !done || !pending.is_empty() {
-        // Fill the batch window.
+        // Fill the batch window, rejecting malformed requests at intake:
+        // dropping the request closes its response channel (the client
+        // sees a disconnect) while the rest of the queue keeps serving.
         let deadline = Instant::now() + max_wait;
         while pending.len() < b && !done {
             let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
+                // Wrong length would corrupt the fixed-shape batch; an
+                // out-of-range token id would make the embedding gather
+                // fail mid-batch and take the whole loop down with it.
+                Ok(req)
+                    if req.tokens.len() != t
+                        || req.tokens.iter().any(|&id| id < 0 || id as usize >= v) =>
+                {
+                    rejected += 1
+                }
                 Ok(req) => pending.push((req, Instant::now())),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
@@ -136,14 +154,12 @@ pub fn serve_requests(
         let mut data = Vec::with_capacity(b * t);
         for i in 0..b {
             let (req, _) = &group[i.min(take - 1)];
-            if req.tokens.len() != t {
-                bail!("request seq len {} != {t}", req.tokens.len());
-            }
+            debug_assert_eq!(req.tokens.len(), t, "validated at intake");
             data.extend_from_slice(&req.tokens);
         }
         let batch = TensorI32::from_vec(&[b, t], data)?;
         let tok_buf = rt.upload_i32(&batch)?;
-        let mut args: Vec<&xla::PjRtBuffer> = weight_bufs.iter().collect();
+        let mut args: Vec<&Buffer> = weight_bufs.iter().collect();
         args.push(&tok_buf);
         let outs = rt.exec_b(&cfg.name, "fwd_logits_q", &args)?;
         let logits = tensor_f32(&outs[0])?; // [B, T, V]
@@ -167,6 +183,7 @@ pub fn serve_requests(
     let n = latencies_ms.len();
     Ok(ServeReport {
         requests: n,
+        rejected,
         batches,
         mean_batch_fill: if fills.is_empty() {
             0.0
@@ -187,6 +204,7 @@ mod tests {
     fn report_fields_sane() {
         let r = ServeReport {
             requests: 10,
+            rejected: 1,
             batches: 3,
             mean_batch_fill: 0.83,
             p50_ms: 5.0,

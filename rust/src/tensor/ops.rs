@@ -99,6 +99,52 @@ impl Tensor {
         Tensor::from_vec(&[r, c], out)
     }
 
+    /// self^T @ other without materializing the transpose:
+    /// [r, n]^T @ [r, m] -> [n, m]. The gradient-accumulation shape
+    /// (dW = x^T @ dy) in the native training backward.
+    pub fn matmul_tn(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[0] != other.shape[0] {
+            bail!("matmul_tn {:?}^T @ {:?}", self.shape, other.shape);
+        }
+        let (r, n) = (self.shape[0], self.shape[1]);
+        let m = other.shape[1];
+        let mut out = vec![0.0f32; n * m];
+        for row in 0..r {
+            let arow = &self.data[row * n..(row + 1) * n];
+            let brow = &other.data[row * m..(row + 1) * m];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * m..(i + 1) * m];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// self @ other^T without materializing the transpose:
+    /// [r, k] @ [m, k]^T -> [r, m]. The input-gradient shape
+    /// (dx = dy @ W^T) in the native training backward.
+    pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[1] {
+            bail!("matmul_nt {:?} @ {:?}^T", self.shape, other.shape);
+        }
+        let (r, k) = (self.shape[0], self.shape[1]);
+        let m = other.shape[0];
+        let mut out = vec![0.0f32; r * m];
+        for i in 0..r {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..m {
+                let brow = &other.data[j * k..(j + 1) * k];
+                out[i * m + j] = arow.iter().zip(brow).map(|(&a, &b)| a * b).sum();
+            }
+        }
+        Tensor::from_vec(&[r, m], out)
+    }
+
     /// Transpose a 2-D tensor.
     pub fn transpose2(&self) -> Result<Tensor> {
         if self.shape.len() != 2 {
@@ -136,6 +182,26 @@ mod tests {
         let a = t(&[2, 3], vec![0.0; 6]);
         let b = t(&[2, 3], vec![0.0; 6]);
         assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = t(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t(&[3, 4], (0..12).map(|i| i as f32).collect());
+        let want = a.transpose2().unwrap().matmul(&b).unwrap();
+        let got = a.matmul_tn(&b).unwrap();
+        assert_eq!(want, got);
+        assert!(a.matmul_tn(&t(&[2, 2], vec![0.0; 4])).is_err());
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t(&[4, 3], (0..12).map(|i| i as f32).collect());
+        let want = a.matmul(&b.transpose2().unwrap()).unwrap();
+        let got = a.matmul_nt(&b).unwrap();
+        assert_eq!(want, got);
+        assert!(a.matmul_nt(&t(&[4, 2], vec![0.0; 8])).is_err());
     }
 
     #[test]

@@ -1,8 +1,9 @@
-//! Integration tests over the PJRT runtime + AOT artifacts.
+//! Integration tests over the runtime + artifact entrypoints.
 //!
-//! These require `make artifacts` to have run; each test skips (with a
-//! loud message) when artifacts/ is missing so `cargo test` stays usable
-//! on a fresh checkout.
+//! These run unconditionally on the native CPU backend (the default when
+//! no PJRT artifacts are present), so `cargo test` exercises the full
+//! artifact contract on a fresh offline checkout. Under `--features
+//! pjrt` with `make artifacts`, the same tests cover the PJRT path.
 
 use faquant::config::ModelConfig;
 use faquant::model::Params;
@@ -11,13 +12,8 @@ use faquant::runtime::{lit_f32, lit_i32, scalar_f32, tensor_f32, Runtime};
 use faquant::tensor::{Rng, Tensor, TensorI32};
 use std::path::Path;
 
-fn runtime() -> Option<Runtime> {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-        return None;
-    }
-    Some(Runtime::new(dir).expect("runtime"))
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("runtime")
 }
 
 fn cfg() -> ModelConfig {
@@ -34,7 +30,7 @@ fn tokens(cfg: &ModelConfig, seed: u64) -> TensorI32 {
 
 #[test]
 fn fwd_logits_shape_and_finite() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let params = Params::init(&cfg, 1);
     let mut args: Vec<_> = params.tensors.iter().map(|t| lit_f32(t).unwrap()).collect();
@@ -48,7 +44,7 @@ fn fwd_logits_shape_and_finite() {
 
 #[test]
 fn arity_mismatch_rejected() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let err = match rt.exec(&cfg.name, "fwd_logits", &[]) {
         Ok(_) => panic!("empty-arg exec unexpectedly succeeded"),
@@ -59,7 +55,7 @@ fn arity_mismatch_rejected() {
 
 #[test]
 fn unknown_artifact_rejected() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     assert!(rt.exec("pico", "nonexistent", &[]).is_err());
     assert!(rt.exec("unknown_cfg", "fwd_logits", &[]).is_err());
 }
@@ -70,7 +66,7 @@ fn unknown_artifact_rejected() {
 /// device-side.
 #[test]
 fn layer_loss_matches_host_fakequant() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let group = rt.manifest.group;
     let rows = rt.manifest.loss_rows;
@@ -112,7 +108,7 @@ fn layer_loss_matches_host_fakequant() {
 /// (the Pallas absmean kernel vs the activations it summarizes).
 #[test]
 fn capture_stats_consistent_with_acts() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let params = Params::init(&cfg, 4);
     let mut args: Vec<_> = params.tensors.iter().map(|t| lit_f32(t).unwrap()).collect();
@@ -137,7 +133,7 @@ fn capture_stats_consistent_with_acts() {
 /// counter increments, parameters actually move.
 #[test]
 fn train_step_executes_and_updates() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let params = Params::init(&cfg, 6);
     let n = params.tensors.len();
@@ -177,7 +173,7 @@ fn train_step_executes_and_updates() {
 /// on host-fakequantized weights — the deployment-path equivalence.
 #[test]
 fn quantized_forward_matches_fakequant_forward() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     let group = rt.manifest.group;
     let params = Params::init(&cfg, 8);
@@ -235,7 +231,7 @@ fn quantized_forward_matches_fakequant_forward() {
 
 #[test]
 fn executable_cache_hits() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = cfg();
     rt.warmup(&cfg.name, &["fwd_logits"]).unwrap();
     let before = rt.stats()["pico/fwd_logits"].compile_secs;

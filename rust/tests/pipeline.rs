@@ -1,21 +1,16 @@
 //! End-to-end pipeline tests: train -> calibrate -> quantize (all
 //! methods) -> evaluate -> serve, on the pico model with tiny budgets.
 //!
-//! Uses a tempdir runs/ so tests never collide with user checkpoints.
-//! Skips when artifacts/ is missing.
+//! Runs unconditionally on the native CPU backend (no artifacts/ needed);
+//! uses a tempdir runs/ so tests never collide with user checkpoints.
 
 use faquant::config::{Method, RunConfig};
 use faquant::coordinator::Pipeline;
 use faquant::runtime::Runtime;
 use std::path::Path;
 
-fn runtime() -> Option<Runtime> {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-        return None;
-    }
-    Some(Runtime::new(dir).expect("runtime"))
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("runtime")
 }
 
 fn test_cfg(tag: &str) -> RunConfig {
@@ -33,7 +28,7 @@ fn test_cfg(tag: &str) -> RunConfig {
 
 #[test]
 fn full_pipeline_all_methods() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     std::env::set_var("FAQUANT_QUIET", "1");
     let cfg = test_cfg("all");
 
@@ -85,7 +80,7 @@ fn full_pipeline_all_methods() {
 
 #[test]
 fn fp_pipeline_skips_quantization() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     std::env::set_var("FAQUANT_QUIET", "1");
     let mut cfg = test_cfg("fp");
     cfg.quant.method = Method::Fp;
@@ -106,7 +101,7 @@ fn fp_pipeline_skips_quantization() {
 fn quantized_eval_not_catastrophic() {
     // 4-bit FAQ perplexity should stay within 2x of FP (sanity bound:
     // quantization must degrade, not destroy).
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     std::env::set_var("FAQUANT_QUIET", "1");
     let mut cfg = test_cfg("quality");
     cfg.quant.bits = 4;
@@ -128,7 +123,7 @@ fn quantized_eval_not_catastrophic() {
 
 #[test]
 fn checkpoint_cache_reused() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     std::env::set_var("FAQUANT_QUIET", "1");
     let cfg = test_cfg("cache");
     let pipe = Pipeline::new(&rt, cfg.clone());
@@ -150,7 +145,7 @@ fn checkpoint_cache_reused() {
 
 #[test]
 fn serve_roundtrip_quantized() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     std::env::set_var("FAQUANT_QUIET", "1");
     let cfg = test_cfg("serve");
     let pipe = Pipeline::new(&rt, cfg.clone());
@@ -172,6 +167,24 @@ fn serve_roundtrip_quantized() {
         .unwrap();
         responders.push(rrx);
     }
+    // Malformed requests in the middle of the queue must be rejected
+    // alone — not abort the whole serving loop: one with the wrong
+    // sequence length, one with the right length but an out-of-range
+    // token id (which would blow up the embedding gather mid-batch).
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    tx.send(faquant::serve::Request {
+        tokens: vec![1, 2, 3],
+        respond: bad_tx,
+    })
+    .unwrap();
+    let (oob_tx, oob_rx) = std::sync::mpsc::channel();
+    let mut oob_tokens = vec![1i32; cfg.model.seq];
+    oob_tokens[7] = -5;
+    tx.send(faquant::serve::Request {
+        tokens: oob_tokens,
+        respond: oob_tx,
+    })
+    .unwrap();
     drop(tx);
     let rep = faquant::serve::serve_requests(
         &rt,
@@ -183,11 +196,15 @@ fn serve_roundtrip_quantized() {
     )
     .unwrap();
     assert_eq!(rep.requests, 6);
+    assert_eq!(rep.rejected, 2);
     assert!(rep.batches >= 2); // batch=4 -> at least 2 batches for 6 reqs
     for r in responders {
         let resp = r.recv().unwrap();
         assert_eq!(resp.next_logits.len(), cfg.model.vocab);
         assert!(resp.next_logits.iter().all(|v| v.is_finite()));
     }
+    // The malformed clients observe a closed channel, not a hang.
+    assert!(bad_rx.recv().is_err());
+    assert!(oob_rx.recv().is_err());
     std::fs::remove_dir_all(&cfg.runs_dir).ok();
 }
