@@ -120,6 +120,98 @@ pub fn f4(x: f32) -> String {
     format!("{x:.4}")
 }
 
+// ---------------------------------------------------------------- JSON
+// serde is not in the offline registry, so the machine-readable bench
+// output (BENCH_perf.json, tracked across PRs) uses this minimal writer.
+
+/// JSON-escape a string (quotes, backslashes, control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A float as a JSON value (`null` for non-finite — JSON has no NaN/Inf).
+fn json_f32(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x:.6e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl Sample {
+    /// One stage as a JSON object (all times in seconds).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"std_s\": {}, \
+             \"p50_s\": {}, \"p95_s\": {}, \"min_s\": {}}}",
+            json_escape(&self.name),
+            self.iters,
+            json_f32(self.mean),
+            json_f32(self.std),
+            json_f32(self.p50),
+            json_f32(self.p95),
+            json_f32(self.min),
+        )
+    }
+}
+
+/// Machine-readable perf-bench report: per-stage timings plus the
+/// threading headline (end-to-end quantize at 1 vs N threads). Written
+/// by `benches/perf_hotpath.rs` as `BENCH_perf.json` and committed, so
+/// the perf trajectory is tracked across PRs.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    /// Model preset the bench ran (e.g. "nano"; "pico" in CI smoke).
+    pub preset: String,
+    /// Effective worker count for the N-thread runs (FAQUANT_THREADS).
+    pub threads: usize,
+    /// Hardware parallelism of the runner (context for the speedup).
+    pub cores: usize,
+    pub stages: Vec<Sample>,
+    /// End-to-end Phase-B quantize wall seconds, 1 thread.
+    pub quantize_secs_1t: f32,
+    /// End-to-end Phase-B quantize wall seconds, `threads` threads.
+    pub quantize_secs_nt: f32,
+    /// quantize_secs_1t / quantize_secs_nt.
+    pub speedup: f32,
+    /// Fraction of steady-state wall time spent outside backend
+    /// execution (DESIGN §9; measured single-threaded so the sum of
+    /// per-entry exec times is comparable to wall time).
+    pub coordinator_overhead: f32,
+}
+
+impl PerfReport {
+    pub fn to_json(&self) -> String {
+        let stages: Vec<String> = self.stages.iter().map(|s| s.to_json()).collect();
+        format!(
+            "{{\n  \"schema\": \"faquant-perf-v1\",\n  \"preset\": \"{}\",\n  \
+             \"threads\": {},\n  \"cores\": {},\n  \"stages\": [\n    {}\n  ],\n  \
+             \"quantize_secs_1t\": {},\n  \"quantize_secs_nt\": {},\n  \
+             \"speedup_vs_1t\": {},\n  \"coordinator_overhead\": {}\n}}\n",
+            json_escape(&self.preset),
+            self.threads,
+            self.cores,
+            stages.join(",\n    "),
+            json_f32(self.quantize_secs_1t),
+            json_f32(self.quantize_secs_nt),
+            json_f32(self.speedup),
+            json_f32(self.coordinator_overhead),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +241,46 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_escaping_and_nonfinite() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_f32(f32::NAN), "null");
+        assert_eq!(json_f32(f32::INFINITY), "null");
+        assert!(json_f32(0.5).starts_with("5.0"));
+    }
+
+    #[test]
+    fn perf_report_json_shape() {
+        let s = Sample {
+            name: "stage \"x\"".into(),
+            iters: 3,
+            mean: 0.25,
+            std: 0.0,
+            p50: 0.25,
+            p95: 0.3,
+            min: 0.2,
+        };
+        let r = PerfReport {
+            preset: "pico".into(),
+            threads: 2,
+            cores: 2,
+            stages: vec![s.clone(), s],
+            quantize_secs_1t: 1.0,
+            quantize_secs_nt: 0.5,
+            speedup: 2.0,
+            coordinator_overhead: 0.01,
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
+        assert!(j.contains("\"preset\": \"pico\""));
+        assert!(j.contains("\"speedup_vs_1t\""));
+        assert!(j.contains("stage \\\"x\\\""));
+        assert_eq!(j.matches("\"mean_s\"").count(), 2);
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Bounded worker pool over std::thread (no tokio offline).
 //!
-//! Used for CPU-side parallel work that does not touch the PJRT runtime
-//! (task-suite construction, packing, host fakequant sweeps). PJRT
-//! executables stay on the owning thread — see runtime/mod.rs.
+//! Used for coarse CPU-side job fan-out with per-call worker threads
+//! (task-suite construction, packing). The *compute* hot path — matmul
+//! kernels, attention, Phase B — uses the persistent deterministic pool
+//! in [`crate::tensor::par`] instead; see runtime/mod.rs.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

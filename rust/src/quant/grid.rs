@@ -7,7 +7,7 @@
 //! are uploaded once per search; only the scale vector changes per step.
 
 use crate::quant::scale::{alpha_grid, alpha_scale};
-use crate::runtime::{scalar_f32, Runtime};
+use crate::runtime::{scalar_f32, Buffer, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 
@@ -24,7 +24,114 @@ pub struct SearchResult {
     pub grid_losses: Vec<(f32, f32)>,
 }
 
+/// One linear's layer-loss evaluation session (§Perf upload-once
+/// convention): the activation sample and weight are uploaded exactly
+/// once at construction and reused by every subsequent loss evaluation —
+/// the whole alpha grid, every (alpha, j, gamma) triple of the FAQ full
+/// search, and the RTN loss probe.
+pub struct LossSession<'rt> {
+    rt: &'rt Runtime,
+    cfg_name: String,
+    entry: String,
+    sweep_entry: String,
+    n_in: usize,
+    a_buf: Buffer,
+    w_buf: Buffer,
+}
+
+impl<'rt> LossSession<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg_name: &str,
+        role: &str,
+        bits: u32,
+        acts: &Tensor,
+        w: &Tensor,
+    ) -> Result<Self> {
+        if w.shape().len() != 2 {
+            bail!("LossSession wants a 2-D weight, got {:?}", w.shape());
+        }
+        Ok(Self {
+            rt,
+            cfg_name: cfg_name.to_string(),
+            entry: format!("layer_loss_{role}_b{bits}"),
+            sweep_entry: format!("layer_loss_sweep_{role}_b{bits}"),
+            n_in: w.shape()[0],
+            a_buf: rt.upload_f32(acts)?,
+            w_buf: rt.upload_f32(w)?,
+        })
+    }
+
+    /// Recon loss for one explicit scale vector, reusing the uploaded
+    /// acts/weight buffers (the buffer-reusing variant of [`eval_scale`]).
+    pub fn eval(&self, scale: &[f32]) -> Result<f32> {
+        if scale.len() != self.n_in {
+            bail!("scale len {} != weight n_in {}", scale.len(), self.n_in);
+        }
+        let s_t = Tensor::from_vec(&[scale.len()], scale.to_vec())?;
+        let outs = self.rt.exec_b(
+            &self.cfg_name,
+            &self.entry,
+            &[&self.a_buf, &self.w_buf, &self.rt.upload_f32(&s_t)?],
+        )?;
+        scalar_f32(&outs[0])
+    }
+
+    /// Search alpha over the grid, minimizing the recon loss.
+    pub fn search(&self, stats: &[f32], n_grid: usize) -> Result<SearchResult> {
+        if stats.len() != self.n_in {
+            bail!("stats len {} != weight n_in {}", stats.len(), self.n_in);
+        }
+        let alphas = alpha_grid(n_grid);
+        let scales: Vec<Vec<f32>> = alphas.iter().map(|&a| alpha_scale(stats, a)).collect();
+
+        // §Perf: when the grid size matches the baked sweep artifact,
+        // evaluate ALL candidates in one execution (20x fewer
+        // dispatches); otherwise fall back to the per-alpha loop.
+        let losses: Vec<f32> = if self
+            .rt
+            .manifest
+            .artifact(&self.cfg_name, &self.sweep_entry)
+            .is_ok()
+            && n_grid == SWEEP_N_ALPHA
+        {
+            let n = stats.len();
+            let mut flat = Vec::with_capacity(n_grid * n);
+            for s in &scales {
+                flat.extend_from_slice(s);
+            }
+            let s_t = Tensor::from_vec(&[n_grid, n], flat)?;
+            let outs = self.rt.exec_b(
+                &self.cfg_name,
+                &self.sweep_entry,
+                &[&self.a_buf, &self.w_buf, &self.rt.upload_f32(&s_t)?],
+            )?;
+            crate::runtime::tensor_f32(&outs[0])?.into_vec()
+        } else {
+            let mut v = Vec::with_capacity(n_grid);
+            for s in &scales {
+                v.push(self.eval(s)?);
+            }
+            v
+        };
+
+        let best_i = best_finite_index(&losses)
+            .with_context(|| format!("search_alpha({}) found no finite loss", self.entry))?;
+        let grid_losses: Vec<(f32, f32)> =
+            alphas.iter().copied().zip(losses.iter().copied()).collect();
+        Ok(SearchResult {
+            alpha: alphas[best_i],
+            loss: losses[best_i],
+            scale: scales[best_i].clone(),
+            grid_losses,
+        })
+    }
+}
+
 /// Search alpha over the grid, minimizing the recon loss of (acts, w).
+/// One-shot wrapper over [`LossSession`] (uploads acts/w once per call;
+/// callers evaluating many configurations per linear should hold a
+/// session instead).
 #[allow(clippy::too_many_arguments)]
 pub fn search_alpha(
     rt: &Runtime,
@@ -36,55 +143,7 @@ pub fn search_alpha(
     stats: &[f32],
     n_grid: usize,
 ) -> Result<SearchResult> {
-    let entry = format!("layer_loss_{role}_b{bits}");
-    if stats.len() != w.shape()[0] {
-        bail!(
-            "stats len {} != weight n_in {}",
-            stats.len(),
-            w.shape()[0]
-        );
-    }
-    // §Perf: the activation sample and weight are uploaded to the device
-    // once per search; only the scale candidates change.
-    let a_buf = rt.upload_f32(acts)?;
-    let w_buf = rt.upload_f32(w)?;
-    let alphas = alpha_grid(n_grid);
-    let scales: Vec<Vec<f32>> = alphas.iter().map(|&a| alpha_scale(stats, a)).collect();
-
-    // §Perf iteration 2: when the grid size matches the baked sweep
-    // artifact, evaluate ALL candidates in one execution (20x fewer
-    // dispatches); otherwise fall back to the per-alpha loop.
-    let sweep_entry = format!("layer_loss_sweep_{role}_b{bits}");
-    let losses: Vec<f32> = if rt.manifest.artifact(cfg_name, &sweep_entry).is_ok()
-        && n_grid == SWEEP_N_ALPHA
-    {
-        let n = stats.len();
-        let mut flat = Vec::with_capacity(n_grid * n);
-        for s in &scales {
-            flat.extend_from_slice(s);
-        }
-        let s_t = Tensor::from_vec(&[n_grid, n], flat)?;
-        let outs = rt.exec_b(cfg_name, &sweep_entry, &[&a_buf, &w_buf, &rt.upload_f32(&s_t)?])?;
-        crate::runtime::tensor_f32(&outs[0])?.into_vec()
-    } else {
-        let mut v = Vec::with_capacity(n_grid);
-        for s in &scales {
-            let s_t = Tensor::from_vec(&[s.len()], s.clone())?;
-            let outs = rt.exec_b(cfg_name, &entry, &[&a_buf, &w_buf, &rt.upload_f32(&s_t)?])?;
-            v.push(scalar_f32(&outs[0])?);
-        }
-        v
-    };
-
-    let best_i = best_finite_index(&losses)
-        .with_context(|| format!("search_alpha({entry}) found no finite loss"))?;
-    let grid_losses: Vec<(f32, f32)> = alphas.iter().copied().zip(losses.iter().copied()).collect();
-    Ok(SearchResult {
-        alpha: alphas[best_i],
-        loss: losses[best_i],
-        scale: scales[best_i].clone(),
-        grid_losses,
-    })
+    LossSession::new(rt, cfg_name, role, bits, acts, w)?.search(stats, n_grid)
 }
 
 /// Index of the smallest *finite* loss. Non-finite losses (NaN from a
@@ -108,8 +167,10 @@ pub fn best_finite_index(losses: &[f32]) -> Result<usize> {
     best.with_context(|| format!("all {} grid losses are non-finite", losses.len()))
 }
 
-/// Evaluate the recon loss for one explicit scale vector (FAQ full search
-/// re-uses this for its (alpha, j, gamma) triples).
+/// Evaluate the recon loss for one explicit scale vector. One-shot
+/// wrapper over [`LossSession`]: uploads acts/w per call, so repeated
+/// evaluations on the same linear should use a session (§Perf).
+#[allow(clippy::too_many_arguments)]
 pub fn eval_scale(
     rt: &Runtime,
     cfg_name: &str,
@@ -119,14 +180,7 @@ pub fn eval_scale(
     w: &Tensor,
     scale: &[f32],
 ) -> Result<f32> {
-    let entry = format!("layer_loss_{role}_b{bits}");
-    let s_t = Tensor::from_vec(&[scale.len()], scale.to_vec())?;
-    let outs = rt.exec_b(
-        cfg_name,
-        &entry,
-        &[&rt.upload_f32(acts)?, &rt.upload_f32(w)?, &rt.upload_f32(&s_t)?],
-    )?;
-    scalar_f32(&outs[0])
+    LossSession::new(rt, cfg_name, role, bits, acts, w)?.eval(scale)
 }
 
 #[cfg(test)]
@@ -150,6 +204,34 @@ mod tests {
         let err = best_finite_index(&[f32::NAN, f32::INFINITY]).unwrap_err();
         assert!(err.to_string().contains("non-finite"), "{err}");
         assert!(best_finite_index(&[]).is_err());
+    }
+
+    #[test]
+    fn loss_session_reuses_buffers_and_matches_one_shots() {
+        let rt = Runtime::native();
+        let mut rng = crate::tensor::Rng::new(21);
+        let n = 64;
+        let acts = Tensor::randn(&mut rng, &[32, n], 1.0);
+        let w = Tensor::randn(&mut rng, &[n, 16], 0.5);
+        let stats: Vec<f32> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let scale = alpha_scale(&stats, 0.5);
+
+        let session = LossSession::new(&rt, "pico", "qkv", 3, &acts, &w).unwrap();
+        // Buffer-reusing eval == the upload-per-call wrapper, bitwise.
+        let a = session.eval(&scale).unwrap();
+        let b = eval_scale(&rt, "pico", "qkv", 3, &acts, &w, &scale).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Session search == the one-shot wrapper, and repeated searches
+        // on one session agree (the buffers are not consumed).
+        let s1 = session.search(&stats, 5).unwrap();
+        let s2 = search_alpha(&rt, "pico", "qkv", 3, &acts, &w, &stats, 5).unwrap();
+        assert_eq!(s1.loss.to_bits(), s2.loss.to_bits());
+        assert_eq!(s1.alpha, s2.alpha);
+        let s3 = session.search(&stats, 5).unwrap();
+        assert_eq!(s1.loss.to_bits(), s3.loss.to_bits());
+        // Mis-sized inputs are rejected.
+        assert!(session.eval(&scale[..n - 1]).is_err());
+        assert!(session.search(&stats[..n - 1], 5).is_err());
     }
 
     #[test]

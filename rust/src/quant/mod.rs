@@ -19,13 +19,14 @@ pub mod packing;
 mod scale;
 
 pub use fakequant::{fakequant, quantize_ints, scaled_fakequant, scaled_quantize_ints, QuantInts};
-pub use grid::{eval_scale, search_alpha, SearchResult};
+pub use grid::{eval_scale, search_alpha, LossSession, SearchResult};
 pub use scale::{alpha_grid, alpha_scale, STAT_FLOOR};
 
 use crate::calib::{faq_stats, CalibStats};
 use crate::config::{Method, ModelConfig, QuantConfig};
 use crate::model::{role_param, Params, ROLES};
 use crate::runtime::Runtime;
+use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 
 /// One quantized block linear: search outcome + deployment tensors.
@@ -125,57 +126,65 @@ pub fn quantize_model(
         );
     }
 
-    let mut fq_params = params.clone();
-    let mut linears = Vec::with_capacity(cfg.n_layer * ROLES.len());
-
-    for block in 0..cfg.n_layer {
-        for (ri, role) in ROLES.iter().enumerate() {
-            let w = params.role_weight(block, role)?;
-            let lq = match qcfg.method {
-                Method::Fp => unreachable!(),
-                Method::Rtn => {
-                    let n = w.shape()[0];
-                    let ones = vec![1.0f32; n];
-                    let loss = match calib {
-                        Some(c) => eval_scale(
-                            rt,
-                            &cfg.name,
-                            role,
-                            qcfg.bits,
-                            c.acts_for(block, ri),
-                            w,
-                            &ones,
-                        )?,
-                        None => f32::NAN,
-                    };
-                    build_linear(block, role, 0.0, loss, 0, 1.0, ones, w, qcfg, group)?
-                }
-                Method::Awq => {
-                    let c = calib.unwrap();
-                    let stats = c.stats_for(block, ri);
-                    let sr = search_alpha(
+    // Phase B (DESIGN §2): with capture statistics in hand, every
+    // linear's search is independent — fan the (block, role) grid out on
+    // the thread pool. Results land in a fixed (block-major, ROLES-order)
+    // vector, so the output is deterministic for any thread count.
+    let n_linears = cfg.n_layer * ROLES.len();
+    let jobs = crate::tensor::par::par_map(n_linears, |li| -> Result<(LinearQuant, Tensor)> {
+        let block = li / ROLES.len();
+        let ri = li % ROLES.len();
+        let role = ROLES[ri];
+        let w = params.role_weight(block, role)?;
+        let lq = match qcfg.method {
+            Method::Fp => unreachable!(),
+            Method::Rtn => {
+                let n = w.shape()[0];
+                let ones = vec![1.0f32; n];
+                let loss = match calib {
+                    Some(c) => LossSession::new(
                         rt,
                         &cfg.name,
                         role,
                         qcfg.bits,
                         c.acts_for(block, ri),
                         w,
-                        stats,
-                        qcfg.alpha_grid,
-                    )?;
-                    build_linear(block, role, sr.alpha, sr.loss, 0, 1.0, sr.scale, w, qcfg, group)?
-                }
-                Method::Faq => {
-                    let c = calib.unwrap();
-                    quantize_faq_linear(rt, &cfg, qcfg, c, block, ri, role, w, group)?
-                }
-            };
-            fq_params.set(
-                &role_param(block, role),
-                scaled_fakequant(w, &lq.scale, qcfg.bits, group)?,
-            )?;
-            linears.push(lq);
-        }
+                    )?
+                    .eval(&ones)?,
+                    None => f32::NAN,
+                };
+                build_linear(block, role, 0.0, loss, 0, 1.0, ones, w, qcfg, group)?
+            }
+            Method::Awq => {
+                let c = calib.unwrap();
+                let stats = c.stats_for(block, ri);
+                let sr = search_alpha(
+                    rt,
+                    &cfg.name,
+                    role,
+                    qcfg.bits,
+                    c.acts_for(block, ri),
+                    w,
+                    stats,
+                    qcfg.alpha_grid,
+                )?;
+                build_linear(block, role, sr.alpha, sr.loss, 0, 1.0, sr.scale, w, qcfg, group)?
+            }
+            Method::Faq => {
+                let c = calib.unwrap();
+                quantize_faq_linear(rt, &cfg, qcfg, c, block, ri, role, w, group)?
+            }
+        };
+        let fq = scaled_fakequant(w, &lq.scale, qcfg.bits, group)?;
+        Ok((lq, fq))
+    });
+
+    let mut fq_params = params.clone();
+    let mut linears = Vec::with_capacity(n_linears);
+    for job in jobs {
+        let (lq, fq) = job?;
+        fq_params.set(&role_param(lq.block, lq.role), fq)?;
+        linears.push(lq);
     }
 
     Ok(QuantizedModel {
@@ -202,6 +211,8 @@ fn quantize_faq_linear(
 ) -> Result<LinearQuant> {
     let per_layer = c.role_stats_per_layer(ri);
     let acts = c.acts_for(block, ri);
+    // §Perf: one upload of (acts, w) shared by every candidate triple.
+    let session = LossSession::new(rt, &cfg.name, role, qcfg.bits, acts, w)?;
     let has_future = block + 1 < cfg.n_layer;
 
     let candidates: Vec<(usize, f32)> = if !has_future {
@@ -226,16 +237,7 @@ fn quantize_faq_linear(
         } else {
             faq_stats(&per_layer, block, j, gamma, qcfg.layerwise_preview)
         };
-        let sr = search_alpha(
-            rt,
-            &cfg.name,
-            role,
-            qcfg.bits,
-            acts,
-            w,
-            &stats,
-            qcfg.alpha_grid,
-        )?;
+        let sr = session.search(&stats, qcfg.alpha_grid)?;
         let better = match &best {
             None => true,
             Some((b, _, _)) => sr.loss < b.loss,

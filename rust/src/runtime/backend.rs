@@ -20,7 +20,13 @@ use super::value::{Buffer, Value};
 use anyhow::Result;
 
 /// One execution backend: everything the runtime needs to run artifacts.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: Phase B of the quantization
+/// schedule executes `layer_loss*` entries from the thread pool
+/// concurrently, so a backend must either be safely concurrent (native:
+/// stateless) or serialize internally (PJRT: executable cache behind a
+/// mutex).
+pub trait Backend: Send + Sync {
     /// Human-readable platform tag (e.g. `native-cpu`, `cpu` for PJRT).
     fn platform(&self) -> String;
 

@@ -13,9 +13,10 @@
 //!   by `python/compile/aot.py`, compiles each entry once via the PJRT
 //!   CPU client, and executes on device buffers (the original S7 path).
 //!
-//! The runtime is not `Sync` (the PJRT pointers are not thread-safe);
-//! multi-threaded users own a `Runtime` per dedicated executor thread
-//! (see [`crate::serve`]).
+//! The runtime is `Sync`: [`Backend`] requires `Send + Sync`, and the
+//! stats/prepared bookkeeping sits behind mutexes, so Phase B of the
+//! quantization schedule can issue `exec` calls from the thread pool
+//! concurrently while [`ExecStats`] accounting stays exact.
 
 mod backend;
 pub mod native;
@@ -29,9 +30,9 @@ pub use registry::{ArtifactInfo, Manifest, NATIVE_GROUP, NATIVE_LOSS_ROWS};
 pub use value::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32, Buffer, Value};
 
 use anyhow::Result;
-use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Cumulative execution statistics (per entry name).
@@ -42,14 +43,16 @@ pub struct ExecStats {
     pub exec_secs: f32,
 }
 
-/// The process-wide runtime: manifest + backend + stats.
+/// The process-wide runtime: manifest + backend + stats. `Sync` — safe
+/// to share across the thread pool (concurrent `exec` is the Phase-B
+/// hot path).
 pub struct Runtime {
     pub manifest: Manifest,
     backend: Box<dyn Backend>,
-    stats: RefCell<HashMap<String, ExecStats>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
     /// Entries already prepared (compiled/validated) — prepare runs once
     /// per entry, keeping the per-exec hot path free of redundant lookups.
-    prepared: RefCell<HashSet<String>>,
+    prepared: Mutex<HashSet<String>>,
 }
 
 impl Runtime {
@@ -76,8 +79,8 @@ impl Runtime {
         Ok(Self {
             manifest,
             backend,
-            stats: RefCell::new(HashMap::new()),
-            prepared: RefCell::new(HashSet::new()),
+            stats: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashSet::new()),
         })
     }
 
@@ -92,8 +95,8 @@ impl Runtime {
         Self {
             manifest: Manifest::native(),
             backend: Box::new(native::NativeBackend),
-            stats: RefCell::new(HashMap::new()),
-            prepared: RefCell::new(HashSet::new()),
+            stats: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashSet::new()),
         }
     }
 
@@ -103,8 +106,8 @@ impl Runtime {
         Self {
             manifest: Manifest::native_with(group, loss_rows),
             backend: Box::new(native::NativeBackend),
-            stats: RefCell::new(HashMap::new()),
-            prepared: RefCell::new(HashSet::new()),
+            stats: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashSet::new()),
         }
     }
 
@@ -200,36 +203,43 @@ impl Runtime {
     }
 
     /// Prepare (compile/validate) an entry exactly once per runtime,
-    /// recording the compile time under the entry's stats.
+    /// recording the compile time under the entry's stats. The prepared
+    /// set's lock is NOT held across the backend call — a slow compile
+    /// of one entry must not stall concurrent execs of already-prepared
+    /// entries. Racing preparers of the same entry are harmless: the
+    /// backend deduplicates (the PJRT executable cache hands the loser a
+    /// cache hit with 0 compile seconds; native prepare is a pure
+    /// lookup), so per-entry compile accounting stays correct.
     fn ensure_prepared(&self, cfg: &str, entry: &str) -> Result<()> {
         let key = format!("{cfg}/{entry}");
-        if self.prepared.borrow().contains(&key) {
+        if self.prepared.lock().unwrap().contains(&key) {
             return Ok(());
         }
         let secs = self.backend.prepare(&self.manifest, cfg, entry)?;
         self.stats
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(key.clone())
             .or_default()
             .compile_secs += secs;
-        self.prepared.borrow_mut().insert(key);
+        self.prepared.lock().unwrap().insert(key);
         Ok(())
     }
 
     fn note_exec(&self, cfg: &str, entry: &str, secs: f32) {
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let s = stats.entry(format!("{cfg}/{entry}")).or_default();
         s.calls += 1;
         s.exec_secs += secs;
     }
 
     pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     /// Total seconds spent inside backend execution calls.
     pub fn total_exec_secs(&self) -> f32 {
-        self.stats.borrow().values().map(|s| s.exec_secs).sum()
+        self.stats.lock().unwrap().values().map(|s| s.exec_secs).sum()
     }
 }
 

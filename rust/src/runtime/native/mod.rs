@@ -169,7 +169,12 @@ fn layer_loss(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
 }
 
 /// (a [S, n], w [n, m], scales [n_alpha, n]) -> (losses [n_alpha],).
-/// The shared `a @ w` is computed once across candidates (§Perf).
+///
+/// §Perf fast path: the reference product `a @ w` is computed ONCE and
+/// shared by every alpha candidate (the dominant cost of a naive
+/// per-candidate loop), and the candidates themselves — fakequant +
+/// reconstruction matmul + mse, all independent — run in parallel with
+/// their losses written back in grid order.
 fn layer_loss_sweep(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
     if args.len() != 3 {
         bail!("layer_loss_sweep wants 3 args, got {}", args.len());
@@ -185,11 +190,19 @@ fn layer_loss_sweep(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Valu
         bail!("sweep scales {:?} vs weight {:?}", sshape, w.shape());
     }
     let y_fp = a.matmul(w)?;
-    let mut losses = Vec::with_capacity(sshape[0]);
-    for i in 0..sshape[0] {
-        let wq = scaled_fakequant(w, scales.row(i), bits, group)?;
-        losses.push(a.matmul(&wq)?.mse(&y_fp));
-    }
+    // One reconstruction matmul per candidate dominates; gate the
+    // dispatch on that work like the kernels do.
+    let work = sshape[0] * a.shape()[0] * w.shape()[0] * w.shape()[1];
+    let losses = crate::tensor::par::par_map_bounded(
+        sshape[0],
+        crate::tensor::par::threads_for(work),
+        |i| -> Result<f32> {
+            let wq = scaled_fakequant(w, scales.row(i), bits, group)?;
+            Ok(a.matmul(&wq)?.mse(&y_fp))
+        },
+    )
+    .into_iter()
+    .collect::<Result<Vec<f32>>>()?;
     let n_alpha = losses.len();
     Ok(vec![Value::F32(Tensor::from_vec(&[n_alpha], losses)?)])
 }

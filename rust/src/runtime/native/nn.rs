@@ -215,12 +215,75 @@ pub fn dgelu(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
 }
 
+/// One (batch, head) pair of the causal attention forward: returns the
+/// head's output panel [t, hd] and, when `keep_probs`, its softmax
+/// matrix [t, t] (dropped inside the task otherwise, so the eval/serve
+/// paths never hold b*n_head score matrices at once).
+fn attention_head_fwd(
+    qkv: &Tensor,
+    bi: usize,
+    h: usize,
+    t: usize,
+    d: usize,
+    hd: usize,
+    keep_probs: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    // Gather this head's panels [t, hd] for sequential access.
+    let mut q = vec![0.0f32; t * hd];
+    let mut k = vec![0.0f32; t * hd];
+    let mut v = vec![0.0f32; t * hd];
+    for ti in 0..t {
+        let row = qkv.row(bi * t + ti);
+        let o = h * hd;
+        q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
+        k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
+        v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
+    }
+    let mut p = vec![0.0f32; t * t];
+    let mut out = vec![0.0f32; t * hd];
+    for i in 0..t {
+        let qi = &q[i * hd..(i + 1) * hd];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let kj = &k[j * hd..(j + 1) * hd];
+            let s: f32 = qi.iter().zip(kj).map(|(&a, &c)| a * c).sum::<f32>() * scale;
+            p[i * t + j] = s;
+            mx = mx.max(s);
+        }
+        let mut sum = 0.0f32;
+        for j in 0..=i {
+            let e = (p[i * t + j] - mx).exp();
+            p[i * t + j] = e;
+            sum += e;
+        }
+        let orow = &mut out[i * hd..(i + 1) * hd];
+        for j in 0..=i {
+            let pj = p[i * t + j] / sum;
+            p[i * t + j] = pj;
+            let vj = &v[j * hd..(j + 1) * hd];
+            for (o, &vv) in orow.iter_mut().zip(vj) {
+                *o += pj * vv;
+            }
+        }
+    }
+    if !keep_probs {
+        p = Vec::new();
+    }
+    (out, p)
+}
+
 /// Causal multi-head attention over packed projections.
 ///
 /// `qkv` [R, 3d] with R = b*t; q/k/v occupy column blocks [0,d), [d,2d),
 /// [2d,3d), heads are contiguous `hd`-column stripes within each block.
 /// Returns the merged output [R, d] and, when `keep_probs`, the softmax
 /// matrix per (batch, head) for the backward pass.
+///
+/// Parallel over (batch, head) pairs: each pair computes an independent
+/// [t, hd] panel that is scattered into the merged output afterwards in
+/// fixed order, so outputs (and the probs ordering) are identical for
+/// every thread count.
 pub fn attention_fwd(
     qkv: &Tensor,
     b: usize,
@@ -234,51 +297,24 @@ pub fn attention_fwd(
         bail!("attention_fwd: qkv {:?} b={b} t={t} heads={n_head}", qkv.shape());
     }
     let hd = d / n_head;
-    let scale = 1.0 / (hd as f32).sqrt();
+    // ~t*t*hd mul-adds per head (scores + AV); tiny serve-path batches
+    // stay serial rather than paying a pool dispatch.
+    let work = b * n_head * t * t * hd;
+    let panels = crate::tensor::par::par_map_bounded(
+        b * n_head,
+        crate::tensor::par::threads_for(work),
+        |bh| attention_head_fwd(qkv, bh / n_head, bh % n_head, t, d, hd, keep_probs),
+    );
     let mut att = vec![0.0f32; b * t * d];
     let mut probs = Vec::new();
-    for bi in 0..b {
-        for h in 0..n_head {
-            // Gather this head's panels [t, hd] for sequential access.
-            let mut q = vec![0.0f32; t * hd];
-            let mut k = vec![0.0f32; t * hd];
-            let mut v = vec![0.0f32; t * hd];
-            for ti in 0..t {
-                let row = qkv.row(bi * t + ti);
-                let o = h * hd;
-                q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
-                k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
-                v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
-            }
-            let mut p = vec![0.0f32; t * t];
-            for i in 0..t {
-                let qi = &q[i * hd..(i + 1) * hd];
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=i {
-                    let kj = &k[j * hd..(j + 1) * hd];
-                    let s: f32 = qi.iter().zip(kj).map(|(&a, &c)| a * c).sum::<f32>() * scale;
-                    p[i * t + j] = s;
-                    mx = mx.max(s);
-                }
-                let mut sum = 0.0f32;
-                for j in 0..=i {
-                    let e = (p[i * t + j] - mx).exp();
-                    p[i * t + j] = e;
-                    sum += e;
-                }
-                let out = &mut att[(bi * t + i) * d + h * hd..(bi * t + i) * d + (h + 1) * hd];
-                for j in 0..=i {
-                    let pj = p[i * t + j] / sum;
-                    p[i * t + j] = pj;
-                    let vj = &v[j * hd..(j + 1) * hd];
-                    for (o, &vv) in out.iter_mut().zip(vj) {
-                        *o += pj * vv;
-                    }
-                }
-            }
-            if keep_probs {
-                probs.push(Tensor::from_vec(&[t, t], p)?);
-            }
+    for (bh, (panel, p)) in panels.into_iter().enumerate() {
+        let (bi, h) = (bh / n_head, bh % n_head);
+        for ti in 0..t {
+            let dst = (bi * t + ti) * d + h * hd;
+            att[dst..dst + hd].copy_from_slice(&panel[ti * hd..(ti + 1) * hd]);
+        }
+        if keep_probs {
+            probs.push(Tensor::from_vec(&[t, t], p)?);
         }
     }
     Ok((Tensor::from_vec(&[b * t, d], att)?, probs))
@@ -301,68 +337,79 @@ pub fn attention_bwd(
     if probs.len() != b * n_head || d_att.shape() != [b * t, d] {
         bail!("attention_bwd shape mismatch");
     }
+    // Parallel over (batch, head): each pair owns disjoint dq/dk/dv
+    // panels, scattered into the packed layout afterwards (fixed order,
+    // thread-count invariant). Work-gated like the forward.
+    let work = 2 * b * n_head * t * t * hd;
+    let panels = crate::tensor::par::par_map_bounded(
+        b * n_head,
+        crate::tensor::par::threads_for(work),
+        |bh| {
+        let (bi, h) = (bh / n_head, bh % n_head);
+        let p = probs[bi * n_head + h].data();
+        let o = h * hd;
+        // Re-gather panels.
+        let mut q = vec![0.0f32; t * hd];
+        let mut k = vec![0.0f32; t * hd];
+        let mut v = vec![0.0f32; t * hd];
+        let mut dout = vec![0.0f32; t * hd];
+        for ti in 0..t {
+            let row = qkv.row(bi * t + ti);
+            q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
+            k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
+            v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
+            let dr = d_att.row(bi * t + ti);
+            dout[ti * hd..(ti + 1) * hd].copy_from_slice(&dr[o..o + hd]);
+        }
+        let mut dq = vec![0.0f32; t * hd];
+        let mut dk = vec![0.0f32; t * hd];
+        let mut dv = vec![0.0f32; t * hd];
+        for i in 0..t {
+            let doi = &dout[i * hd..(i + 1) * hd];
+            // dp and the softmax-Jacobian contraction over row i.
+            let mut dp = vec![0.0f32; i + 1];
+            let mut dot = 0.0f32;
+            for (j, dpj) in dp.iter_mut().enumerate() {
+                let vj = &v[j * hd..(j + 1) * hd];
+                *dpj = doi.iter().zip(vj).map(|(&a, &c)| a * c).sum();
+                dot += *dpj * p[i * t + j];
+            }
+            for (j, &dpj) in dp.iter().enumerate() {
+                let pij = p[i * t + j];
+                // dv_j += p_ij * dout_i
+                let dvj = &mut dv[j * hd..(j + 1) * hd];
+                for (dvv, &dov) in dvj.iter_mut().zip(doi) {
+                    *dvv += pij * dov;
+                }
+                // No ds == 0.0 skip: same policy as the matmul kernels
+                // (a branch on the hot path, and 0 * NaN/Inf must reach
+                // the accumulator) — DESIGN §9.
+                let ds = pij * (dpj - dot) * scale;
+                let kj = &k[j * hd..(j + 1) * hd];
+                let qi = &q[i * hd..(i + 1) * hd];
+                let dqi = &mut dq[i * hd..(i + 1) * hd];
+                for (a, &kv) in dqi.iter_mut().zip(kj) {
+                    *a += ds * kv;
+                }
+                let dkj = &mut dk[j * hd..(j + 1) * hd];
+                for (a, &qv) in dkj.iter_mut().zip(qi) {
+                    *a += ds * qv;
+                }
+            }
+        }
+        (dq, dk, dv)
+    });
     let mut d_qkv = vec![0.0f32; b * t * 3 * d];
-    for bi in 0..b {
-        for h in 0..n_head {
-            let p = probs[bi * n_head + h].data();
-            let o = h * hd;
-            // Re-gather panels.
-            let mut q = vec![0.0f32; t * hd];
-            let mut k = vec![0.0f32; t * hd];
-            let mut v = vec![0.0f32; t * hd];
-            let mut dout = vec![0.0f32; t * hd];
-            for ti in 0..t {
-                let row = qkv.row(bi * t + ti);
-                q[ti * hd..(ti + 1) * hd].copy_from_slice(&row[o..o + hd]);
-                k[ti * hd..(ti + 1) * hd].copy_from_slice(&row[d + o..d + o + hd]);
-                v[ti * hd..(ti + 1) * hd].copy_from_slice(&row[2 * d + o..2 * d + o + hd]);
-                let dr = d_att.row(bi * t + ti);
-                dout[ti * hd..(ti + 1) * hd].copy_from_slice(&dr[o..o + hd]);
-            }
-            let mut dq = vec![0.0f32; t * hd];
-            let mut dk = vec![0.0f32; t * hd];
-            let mut dv = vec![0.0f32; t * hd];
-            for i in 0..t {
-                let doi = &dout[i * hd..(i + 1) * hd];
-                // dp and the softmax-Jacobian contraction over row i.
-                let mut dp = vec![0.0f32; i + 1];
-                let mut dot = 0.0f32;
-                for (j, dpj) in dp.iter_mut().enumerate() {
-                    let vj = &v[j * hd..(j + 1) * hd];
-                    *dpj = doi.iter().zip(vj).map(|(&a, &c)| a * c).sum();
-                    dot += *dpj * p[i * t + j];
-                }
-                for (j, &dpj) in dp.iter().enumerate() {
-                    let pij = p[i * t + j];
-                    // dv_j += p_ij * dout_i
-                    let dvj = &mut dv[j * hd..(j + 1) * hd];
-                    for (dvv, &dov) in dvj.iter_mut().zip(doi) {
-                        *dvv += pij * dov;
-                    }
-                    let ds = pij * (dpj - dot) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
-                    let kj = &k[j * hd..(j + 1) * hd];
-                    let qi = &q[i * hd..(i + 1) * hd];
-                    let dqi = &mut dq[i * hd..(i + 1) * hd];
-                    for (a, &kv) in dqi.iter_mut().zip(kj) {
-                        *a += ds * kv;
-                    }
-                    let dkj = &mut dk[j * hd..(j + 1) * hd];
-                    for (a, &qv) in dkj.iter_mut().zip(qi) {
-                        *a += ds * qv;
-                    }
-                }
-            }
-            for ti in 0..t {
-                let dst = (bi * t + ti) * 3 * d;
-                d_qkv[dst + o..dst + o + hd].copy_from_slice(&dq[ti * hd..(ti + 1) * hd]);
-                d_qkv[dst + d + o..dst + d + o + hd]
-                    .copy_from_slice(&dk[ti * hd..(ti + 1) * hd]);
-                d_qkv[dst + 2 * d + o..dst + 2 * d + o + hd]
-                    .copy_from_slice(&dv[ti * hd..(ti + 1) * hd]);
-            }
+    for (bh, (dq, dk, dv)) in panels.into_iter().enumerate() {
+        let (bi, h) = (bh / n_head, bh % n_head);
+        let o = h * hd;
+        for ti in 0..t {
+            let dst = (bi * t + ti) * 3 * d;
+            d_qkv[dst + o..dst + o + hd].copy_from_slice(&dq[ti * hd..(ti + 1) * hd]);
+            d_qkv[dst + d + o..dst + d + o + hd]
+                .copy_from_slice(&dk[ti * hd..(ti + 1) * hd]);
+            d_qkv[dst + 2 * d + o..dst + 2 * d + o + hd]
+                .copy_from_slice(&dv[ti * hd..(ti + 1) * hd]);
         }
     }
     Tensor::from_vec(&[b * t, 3 * d], d_qkv)

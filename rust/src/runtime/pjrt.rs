@@ -16,13 +16,19 @@ use super::registry::Manifest;
 use super::value::{Buffer, Value};
 use crate::tensor::{Tensor, TensorI32};
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Device-resident buffer handle (clonable via refcount).
 #[derive(Clone)]
-pub struct DeviceBuffer(Rc<xla::PjRtBuffer>);
+pub struct DeviceBuffer(Arc<xla::PjRtBuffer>);
+
+// Safety: PJRT buffers are immutable once created and the PJRT CPU
+// client's buffer operations are thread-safe; the binding's types only
+// miss the auto traits because they hold raw pointers. Required by the
+// `Backend: Send + Sync` contract (Phase B executes concurrently).
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
 
 impl std::fmt::Debug for DeviceBuffer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -30,30 +36,41 @@ impl std::fmt::Debug for DeviceBuffer {
     }
 }
 
-/// The PJRT CPU backend: one client + executable cache.
+/// The PJRT CPU backend: one client + executable cache. Compilation and
+/// the cache sit behind a mutex; `execute` calls are issued without the
+/// lock (the PJRT CPU client supports concurrent execution).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    exes: RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<(String, String), Arc<xla::PjRtLoadedExecutable>>>,
 }
+
+// Safety: see DeviceBuffer — the PJRT C API is thread-safe for
+// compile/execute/upload; all interior mutability here is the mutexed
+// executable cache.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
         Ok(Self {
             client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
-            exes: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
         })
     }
 
     /// Compile (or fetch from cache) the executable for (cfg, entry).
-    /// Returns (executable, compile seconds — 0 on cache hit).
+    /// Returns (executable, compile seconds — 0 on cache hit). The cache
+    /// lock is held across compilation so racing callers cannot compile
+    /// the same entry twice.
     fn executable(
         &self,
         manifest: &Manifest,
         cfg: &str,
         entry: &str,
-    ) -> Result<(Rc<xla::PjRtLoadedExecutable>, f32)> {
+    ) -> Result<(Arc<xla::PjRtLoadedExecutable>, f32)> {
         let key = (cfg.to_string(), entry.to_string());
-        if let Some(exe) = self.exes.borrow().get(&key) {
+        let mut exes = self.exes.lock().unwrap();
+        if let Some(exe) = exes.get(&key) {
             return Ok((exe.clone(), 0.0));
         }
         let info = manifest.artifact(cfg, entry)?;
@@ -61,13 +78,13 @@ impl PjrtBackend {
         let proto = xla::HloModuleProto::from_text_file(&info.path)
             .with_context(|| format!("parse HLO text {}", info.path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compile {cfg}/{entry}"))?,
         );
         let secs = t0.elapsed().as_secs_f32();
-        self.exes.borrow_mut().insert(key, exe.clone());
+        exes.insert(key, exe.clone());
         Ok((exe, secs))
     }
 

@@ -2,8 +2,10 @@
 //! deployment artifact (`fwd_logits_q`) with a request queue, a timeout
 //! batcher, and latency accounting.
 //!
-//! The runtime is not `Sync`, so the server owns it on a dedicated
-//! executor thread; clients talk over mpsc channels. The batcher collects
+//! The server owns the runtime on a dedicated executor thread (one
+//! upload of the weight set, simple lifecycle — the runtime itself is
+//! `Sync` since the parallel compute core landed); clients talk over
+//! mpsc channels. The batcher collects
 //! up to `batch` requests or flushes after `max_wait`; partial batches are
 //! padded (fixed-shape artifacts) and pad rows discarded. Malformed
 //! requests (wrong sequence length or out-of-range token ids) are

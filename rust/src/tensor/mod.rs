@@ -2,13 +2,17 @@
 //!
 //! Minimal dense f32 tensors for weight manipulation, statistics, and the
 //! host halves of quantization. No external ndarray/rand crates exist in
-//! the offline registry, so shapes, ops, and the PRNG live here.
+//! the offline registry, so shapes, ops, the PRNG, and the thread pool
+//! ([`par`]) live here.
 //!
-//! Deliberately *not* a compute engine: anything heavier than a stats
-//! reduction or a one-off matmul belongs in an HLO artifact executed by
-//! [`crate::runtime`].
+//! Since the native backend became the default execution path, the
+//! matmuls in [`ops`] *are* the hot path: they run cache-blocked and
+//! parallelized over row blocks (deterministically — see [`par`]), while
+//! anything model-scale on an accelerator still belongs in an HLO
+//! artifact executed by [`crate::runtime`].
 
 mod ops;
+pub mod par;
 mod rng;
 mod stats;
 

@@ -1,10 +1,59 @@
 //! Elementwise and linear-algebra ops on [`Tensor`].
 //!
-//! Host-side only: used for scale math, small verification matmuls, and
-//! test oracles. The model-scale matmuls all run inside HLO artifacts.
+//! The matmuls here are the native backend's compute core: cache-blocked,
+//! packed-panel microkernels parallelized over row blocks via
+//! [`super::par`]. Determinism contract (DESIGN.md §9): each output
+//! element is accumulated by exactly one task, in ascending-k order, so
+//! results are bit-identical for every thread count and to the plain
+//! naive triple loop (including NaN/Inf propagation — there is no
+//! zero-skip branch).
 
-use super::Tensor;
+use super::{par, Tensor};
 use anyhow::{bail, Result};
+
+/// Rows per microtile: small enough that MR output rows + one B row stay
+/// in L1, large enough to amortize each B-row load across MR updates.
+const MR: usize = 4;
+/// k-dimension block: KC B-rows are reused by every microtile of a row
+/// block before the next panel is touched (KC * row_len floats resident).
+const KC: usize = 128;
+
+/// Microkernel for `out[rows, c] += a_rows @ b` where `a_rows` starts at
+/// absolute row `row0` of an [r, k] matrix. Accumulation over k runs in
+/// ascending order per element (k-blocks ascend, rows inside a block
+/// ascend), which makes the result bitwise equal to the naive (i, l, j)
+/// triple loop regardless of blocking or thread count.
+fn matmul_block(a: &[f32], b: &[f32], row0: usize, out: &mut [f32], k: usize, c: usize) {
+    let rows = out.len() / c;
+    let mut apack = [0.0f32; MR * KC];
+    for l0 in (0..k).step_by(KC) {
+        let lhi = (l0 + KC).min(k);
+        let mut i = 0;
+        while i < rows {
+            let ihi = (i + MR).min(rows);
+            let mr = ihi - i;
+            // Pack the A microtile [mr, lhi-l0] l-major so the inner
+            // loop reads its mr values from one contiguous stripe.
+            for (ii, row) in (i..ihi).enumerate() {
+                let arow = &a[(row0 + row) * k..];
+                for l in l0..lhi {
+                    apack[(l - l0) * MR + ii] = arow[l];
+                }
+            }
+            for l in l0..lhi {
+                let brow = &b[l * c..(l + 1) * c];
+                let avs = &apack[(l - l0) * MR..(l - l0) * MR + mr];
+                for (ii, &av) in avs.iter().enumerate() {
+                    let orow = &mut out[(i + ii) * c..(i + ii + 1) * c];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            i = ihi;
+        }
+    }
+}
 
 impl Tensor {
     /// Elementwise map into a new tensor.
@@ -72,10 +121,11 @@ impl Tensor {
         self.mul_rows(&inv)
     }
 
-    /// Naive blocked matmul: self [r, k] @ other [k, c] -> [r, c].
+    /// Matmul: self [r, k] @ other [k, c] -> [r, c].
     ///
-    /// Loop order (i, l, j) keeps both inner accesses sequential; good
-    /// enough for verification-scale products (the hot path is in HLO).
+    /// Cache-blocked packed-panel kernel ([`matmul_block`]) parallelized
+    /// over row blocks; bit-identical to the naive triple loop for every
+    /// thread count (see module docs).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[0] {
             bail!("matmul {:?} @ {:?}", self.shape, other.shape);
@@ -83,25 +133,20 @@ impl Tensor {
         let (r, k) = (self.shape[0], self.shape[1]);
         let c = other.shape[1];
         let mut out = vec![0.0f32; r * c];
-        for i in 0..r {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * c..(i + 1) * c];
-            for (l, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[l * c..(l + 1) * c];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        let t = par::threads_for(r * k * c);
+        par::par_row_blocks(&mut out, c, t, |row0, block| {
+            matmul_block(&self.data, &other.data, row0, block, k, c);
+        });
         Tensor::from_vec(&[r, c], out)
     }
 
     /// self^T @ other without materializing the transpose:
     /// [r, n]^T @ [r, m] -> [n, m]. The gradient-accumulation shape
     /// (dW = x^T @ dy) in the native training backward.
+    ///
+    /// Parallel over blocks of *output* rows (columns of self); each
+    /// block accumulates over the shared r dimension in ascending order,
+    /// so results are thread-count invariant.
     pub fn matmul_tn(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[0] != other.shape[0] {
             bail!("matmul_tn {:?}^T @ {:?}", self.shape, other.shape);
@@ -109,25 +154,32 @@ impl Tensor {
         let (r, n) = (self.shape[0], self.shape[1]);
         let m = other.shape[1];
         let mut out = vec![0.0f32; n * m];
-        for row in 0..r {
-            let arow = &self.data[row * n..(row + 1) * n];
-            let brow = &other.data[row * m..(row + 1) * m];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[i * m..(i + 1) * m];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += a * bv;
+        let t = par::threads_for(r * n * m);
+        let a = &self.data;
+        let b = &other.data;
+        par::par_row_blocks(&mut out, m, t, |i0, block| {
+            let ni = block.len() / m;
+            for row in 0..r {
+                let arow = &a[row * n..(row + 1) * n];
+                let brow = &b[row * m..(row + 1) * m];
+                for ii in 0..ni {
+                    let av = arow[i0 + ii];
+                    let orow = &mut block[ii * m..(ii + 1) * m];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
                 }
             }
-        }
+        });
         Tensor::from_vec(&[n, m], out)
     }
 
     /// self @ other^T without materializing the transpose:
     /// [r, k] @ [m, k]^T -> [r, m]. The input-gradient shape
     /// (dx = dy @ W^T) in the native training backward.
+    ///
+    /// Row-parallel; each element is one single-accumulator dot product
+    /// over ascending k (identical to the naive formulation).
     pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[1] {
             bail!("matmul_nt {:?} @ {:?}^T", self.shape, other.shape);
@@ -135,13 +187,18 @@ impl Tensor {
         let (r, k) = (self.shape[0], self.shape[1]);
         let m = other.shape[0];
         let mut out = vec![0.0f32; r * m];
-        for i in 0..r {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..m {
-                let brow = &other.data[j * k..(j + 1) * k];
-                out[i * m + j] = arow.iter().zip(brow).map(|(&a, &b)| a * b).sum();
+        let t = par::threads_for(r * k * m);
+        let a = &self.data;
+        let b = &other.data;
+        par::par_row_blocks(&mut out, m, t, |row0, block| {
+            for (ii, orow) in block.chunks_mut(m).enumerate() {
+                let arow = &a[(row0 + ii) * k..(row0 + ii + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &b[j * k..(j + 1) * k];
+                    *o = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+                }
             }
-        }
+        });
         Tensor::from_vec(&[r, m], out)
     }
 
@@ -175,6 +232,42 @@ mod tests {
         let b = t(&[2, 2], vec![1., 1., 1., 1.]);
         let c = a.matmul(&b).unwrap();
         assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_rows() {
+        // Regression: the old kernel skipped a == 0.0 terms, silently
+        // swallowing NaN/Inf from the other operand.
+        let a = t(&[1, 2], vec![0.0, 0.0]);
+        let b = t(&[2, 1], vec![f32::NAN, 1.0]);
+        assert!(a.matmul(&b).unwrap().data()[0].is_nan());
+        let binf = t(&[2, 1], vec![f32::INFINITY, 1.0]);
+        assert!(a.matmul(&binf).unwrap().data()[0].is_nan()); // 0 * inf
+        assert!(a.matmul_tn(&t(&[1, 3], vec![f32::NAN; 3])).unwrap().data()[0].is_nan());
+    }
+
+    #[test]
+    fn matmul_large_matches_blocked_boundaries() {
+        // Shapes straddling the MR/KC tile edges against a local naive
+        // triple loop, bitwise.
+        let mut rng = crate::tensor::Rng::new(77);
+        for (r, k, c) in [(5usize, 130usize, 9usize), (8, 256, 16), (3, 127, 33)] {
+            let a = Tensor::randn(&mut rng, &[r, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[k, c], 1.0);
+            let got = a.matmul(&b).unwrap();
+            let mut want = vec![0.0f32; r * c];
+            for i in 0..r {
+                for l in 0..k {
+                    let av = a.at2(i, l);
+                    for j in 0..c {
+                        want[i * c + j] += av * b.at2(l, j);
+                    }
+                }
+            }
+            for (g, w) in got.data().iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
     }
 
     #[test]

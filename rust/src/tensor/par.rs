@@ -1,0 +1,410 @@
+//! Dependency-free scoped thread pool for the native compute core.
+//!
+//! rayon is not in the offline registry, so the parallel matmul kernels
+//! ([`super::Tensor::matmul`] and friends), the native attention, and the
+//! Phase-B scale search all share this pool. Design constraints, in
+//! order:
+//!
+//! 1. **Determinism.** Results must be bit-identical for every thread
+//!    count (DESIGN.md §9). The pool therefore never reduces across
+//!    tasks: every task writes a disjoint output region (or a distinct
+//!    `par_map` slot), and each output element is accumulated by exactly
+//!    one task in a fixed order. Thread count only moves task
+//!    *boundaries*, never the arithmetic inside an element.
+//! 2. **An honest concurrency cap, nesting included.** Phase B
+//!    parallelizes over linears while each linear's matmuls would like
+//!    to parallelize over row blocks; a `par_*` call made from inside a
+//!    pool task therefore runs serially (the top-level fan-out already
+//!    owns the configured thread count), and a submitter waiting for
+//!    its batch *helps* drain the queue instead of blocking, so
+//!    progress never depends on a worker being free.
+//! 3. **No per-call spawn.** Workers are spawned once (process
+//!    lifetime) and parked on a condvar when idle.
+//!
+//! Thread count: `set_threads` (test/bench override) > `FAQUANT_THREADS`
+//! (env) > `available_parallelism`. The env var is read per query so it
+//! can be varied without process restarts.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Process-wide override for the worker count; 0 = unset (use the env
+/// var / hardware default). Benches and the determinism property tests
+/// use this instead of mutating the environment (env mutation races
+/// across concurrently running tests; this is a single atomic).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the effective thread count (0 restores auto-detection).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Effective thread count: the [`set_threads`] override (so the perf
+/// bench can pin its 1-thread baseline even under `FAQUANT_THREADS`),
+/// else the `FAQUANT_THREADS` env var, else `available_parallelism`.
+/// Always >= 1.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("FAQUANT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Minimum f32 mul-adds a second thread must bring to be worth a
+/// dispatch (queue push + wake is on the order of microseconds).
+pub const MIN_FLOPS_PER_THREAD: usize = 1 << 16;
+
+/// Threads worth using for `work` total mul-adds: capped so every
+/// participant gets at least [`MIN_FLOPS_PER_THREAD`].
+pub fn threads_for(work: usize) -> usize {
+    threads().min((work / MIN_FLOPS_PER_THREAD).max(1))
+}
+
+/// A queued unit of work. Lifetime-erased to `'static`: sound because
+/// [`Pool::run_batch`] never returns before every task of its batch has
+/// finished (the completion guard decrements even on panic).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True while the current thread is executing a pool task. Nested
+    /// `par_*` calls inside a task run serially: the top-level fan-out
+    /// already owns the configured concurrency, and letting inner calls
+    /// enqueue sub-batches would engage more than `threads()` workers
+    /// (the cap must hold even under Phase-B-over-matmul nesting).
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Whether the caller is already running inside a pool task.
+fn in_pool_task() -> bool {
+    IN_POOL_TASK.with(|c| c.get())
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+}
+
+/// Per-batch completion state shared between the submitter and workers.
+struct Batch {
+    remaining: AtomicUsize,
+    /// First panic payload from any task, re-raised by the submitter so
+    /// the original message/location survives the pool boundary.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    mu: Mutex<()>,
+    done: Condvar,
+}
+
+impl Batch {
+    fn new(n: usize) -> Self {
+        Self {
+            remaining: AtomicUsize::new(n),
+            panic: Mutex::new(None),
+            mu: Mutex::new(()),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Lock before notify so a submitter checking `remaining`
+            // under the lock can never miss the wakeup.
+            let _g = self.mu.lock().unwrap();
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+}
+
+/// Decrements the batch counter when dropped — runs even if the task
+/// panicked, so a submitter can never wait forever.
+struct CompletionGuard<'a>(&'a Batch);
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        self.0.complete_one();
+    }
+}
+
+pub struct Pool {
+    shared: Arc<PoolShared>,
+}
+
+impl Pool {
+    fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for i in 0..workers {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("faquant-par-{i}"))
+                .spawn(move || loop {
+                    let task = {
+                        let mut q = shared.queue.lock().unwrap();
+                        loop {
+                            if let Some(t) = q.pop_front() {
+                                break t;
+                            }
+                            q = shared.available.wait(q).unwrap();
+                        }
+                    };
+                    task();
+                })
+                .expect("spawn pool worker");
+        }
+        Self { shared }
+    }
+
+    /// Run `jobs` to completion, blocking the caller (who helps drain
+    /// the queue). Panics in jobs are surfaced as one panic here, after
+    /// every job of the batch has finished.
+    fn run_batch<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n_jobs = jobs.len();
+        let batch = Arc::new(Batch::new(n_jobs));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                let batch = Arc::clone(&batch);
+                let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let _guard = CompletionGuard(&batch);
+                    let prev = IN_POOL_TASK.with(|c| c.replace(true));
+                    if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                        let mut slot = batch.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                    IN_POOL_TASK.with(|c| c.set(prev));
+                });
+                // Safety: erased to 'static, but `run_batch` blocks until
+                // `batch.remaining == 0`, i.e. until every closure (and
+                // everything it borrows from 'env) is done being used.
+                let task: Task = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'env>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(task)
+                };
+                q.push_back(task);
+            }
+        }
+        // Wake one parked worker per task (not notify_all: batches are
+        // often much narrower than the worker set). Lost wakeups are
+        // harmless — the submitter drains its own queue entries below.
+        for _ in 0..n_jobs {
+            self.shared.available.notify_one();
+        }
+        // Help-first wait: run queued tasks until our batch completes,
+        // so completion never depends on a worker being free.
+        loop {
+            if batch.is_done() {
+                break;
+            }
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => {
+                    // Queue empty => all our tasks have at least started;
+                    // wait for the in-flight ones. The notifier locks
+                    // `mu` before notifying, so checking under the lock
+                    // cannot miss the wakeup.
+                    let guard = batch.mu.lock().unwrap();
+                    if !batch.is_done() {
+                        let _ = batch.done.wait(guard).unwrap();
+                    }
+                }
+            }
+        }
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// The process-wide pool. Worker count is fixed at first use: enough for
+/// the hardware and for any `FAQUANT_THREADS` oversubscription the
+/// determinism tests request (idle workers park on a condvar).
+pub fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Pool::new(hw.max(threads()).max(8))
+    })
+}
+
+/// Split `out` into up to `max_chunks` contiguous row blocks
+/// (`row_len` elements per row) and run `f(first_row, block)` on each in
+/// parallel. Blocks are disjoint `&mut` slices, so any per-element
+/// arithmetic inside `f` is untouched by the chunking — the foundation
+/// of the bit-identical-across-thread-counts guarantee.
+pub fn par_row_blocks<F>(out: &mut [f32], row_len: usize, max_chunks: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if out.is_empty() {
+        return;
+    }
+    debug_assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let chunks = max_chunks.min(rows).max(1);
+    if chunks <= 1 || in_pool_task() {
+        f(0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(chunks);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(rows_per * row_len)
+        .enumerate()
+        .map(|(ci, block)| {
+            let fr = &f;
+            Box::new(move || fr(ci * rows_per, block)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool().run_batch(jobs);
+}
+
+/// Deterministic indexed parallel map: `out[i] = f(i)`, order preserved.
+/// Items are split into at most [`threads`] contiguous chunks, so the
+/// configured thread count genuinely caps concurrency (FAQUANT_THREADS=2
+/// on a 16-core box runs at most 2 jobs at once); falls back to a serial
+/// loop when one thread is in effect.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    par_map_bounded(n, usize::MAX, f)
+}
+
+/// [`par_map`] with an extra concurrency bound — pass
+/// [`threads_for`]`(total_work)` so dispatches that aren't worth a queue
+/// round-trip stay on the calling thread (the same gate the matmul
+/// kernels apply). Chunking never changes results, only boundaries.
+pub fn par_map_bounded<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = threads().min(max_threads).min(n);
+    if t <= 1 || in_pool_task() {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(t);
+    {
+        let fr = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(per)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(fr(ci * per + j));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool().run_batch(jobs);
+    }
+    out.into_iter()
+        .map(|s| s.expect("pool task completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_is_positive_and_overridable() {
+        assert!(threads() >= 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn threads_for_caps_small_work() {
+        assert_eq!(threads_for(1), 1);
+        assert_eq!(threads_for(MIN_FLOPS_PER_THREAD - 1), 1);
+        assert!(threads_for(usize::MAX / 2) >= 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        let empty: Vec<usize> = par_map(0, |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn par_row_blocks_covers_every_row_once() {
+        let rows = 37;
+        let cols = 5;
+        let mut out = vec![0.0f32; rows * cols];
+        par_row_blocks(&mut out, cols, 8, |row0, block| {
+            for (r, row) in block.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + r) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(out[r * cols + c], r as f32, "row {r} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_par_runs_serially_and_correctly() {
+        // par_* inside a pool task degrades to the serial path (the
+        // concurrency cap must hold under nesting) with identical
+        // results; the outer batch still completes via submitter help.
+        let outer = par_map(24, |i| {
+            let inner = par_map(8, move |j| i * 100 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, &s) in outer.iter().enumerate() {
+            assert_eq!(s, (0..8).map(|j| i * 100 + j).sum::<usize>());
+        }
+        assert!(!in_pool_task());
+    }
+
+    #[test]
+    fn task_panic_is_propagated_with_payload() {
+        let r = std::panic::catch_unwind(|| {
+            par_map(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        // The original payload crosses the pool boundary intact.
+        let payload = r.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // Pool still functional afterwards.
+        assert_eq!(par_map(4, |i| i + 1), vec![1, 2, 3, 4]);
+    }
+}

@@ -4,11 +4,14 @@
 //! These run host-side only (no PJRT) so they execute in milliseconds and
 //! sweep many random cases.
 
-use faquant::calib::{faq_stats, fused_stats, preview_stats};
+use faquant::calib::{capture, faq_stats, fused_stats, preview_stats};
+use faquant::config::{Method, ModelConfig, QuantConfig};
+use faquant::model::Params;
 use faquant::quant::{
-    alpha_grid, alpha_scale, fakequant, packing, quantize_ints, scaled_fakequant,
+    alpha_grid, alpha_scale, fakequant, packing, quantize_ints, quantize_model, scaled_fakequant,
 };
-use faquant::tensor::{Rng, Tensor};
+use faquant::runtime::{lit_f32, lit_i32, Runtime, Value};
+use faquant::tensor::{par, Rng, Tensor, TensorI32};
 use faquant::testutil::{forall, TensorGen, UsizeIn};
 
 // ---------------------------------------------------------------- packing
@@ -159,6 +162,192 @@ fn prop_gamma_one_faq_is_awq() {
         }
         Ok(())
     });
+}
+
+// ------------------------------------------------- parallel compute core
+
+/// Naive (i, l, j) triple-loop oracles, written here independently of
+/// the library kernels. No zero-skip branch: 0 * NaN / 0 * Inf must
+/// reach the accumulator exactly as in the blocked kernels.
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (r, k) = (a.shape()[0], a.shape()[1]);
+    let c = b.shape()[1];
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for l in 0..k {
+            let av = a.at2(i, l);
+            for j in 0..c {
+                out[i * c + j] += av * b.at2(l, j);
+            }
+        }
+    }
+    out
+}
+
+fn naive_matmul_tn(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (r, n) = (a.shape()[0], a.shape()[1]);
+    let m = b.shape()[1];
+    let mut out = vec![0.0f32; n * m];
+    for row in 0..r {
+        for i in 0..n {
+            let av = a.at2(row, i);
+            for j in 0..m {
+                out[i * m + j] += av * b.at2(row, j);
+            }
+        }
+    }
+    out
+}
+
+fn naive_matmul_nt(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (r, k) = (a.shape()[0], a.shape()[1]);
+    let m = b.shape()[0];
+    let mut out = vec![0.0f32; r * m];
+    for i in 0..r {
+        for j in 0..m {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a.at2(i, l) * b.at2(j, l);
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    out
+}
+
+/// Sprinkle NaN/Inf/-Inf/0 into a tensor so the oracle comparison also
+/// pins down special-value propagation (the old kernel's `a == 0.0`
+/// skip branch swallowed NaN — a silent semantics change).
+fn inject_specials(t: &mut Tensor, rng: &mut Rng) {
+    let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0];
+    let n = t.numel();
+    for _ in 0..4 {
+        let i = rng.below(n);
+        let s = specials[rng.below(specials.len())];
+        t.data_mut()[i] = s;
+    }
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{ctx}: element {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_kernels_match_naive_reference() {
+    // Random shapes straddling the MR/KC tile boundaries, with NaN/Inf
+    // injected: the blocked, parallel kernels must be bitwise equal to
+    // the naive triple loops (fixed ascending-k accumulation order).
+    forall(22, 25, &UsizeIn(1, 1_000_000), |&seed| {
+        let mut rng = Rng::new(seed as u64 * 331 + 17);
+        let r = 1 + rng.below(18);
+        let k = 1 + rng.below(300);
+        let c = 1 + rng.below(40);
+        let m = 1 + rng.below(24);
+        let mut a = Tensor::randn(&mut rng, &[r, k], 1.0);
+        let mut b = Tensor::randn(&mut rng, &[k, c], 1.0);
+        inject_specials(&mut a, &mut rng);
+        inject_specials(&mut b, &mut rng);
+        let got = a.matmul(&b).map_err(|e| e.to_string())?;
+        assert_bits_eq(got.data(), &naive_matmul(&a, &b), "matmul");
+
+        // tn: [r, k]^T @ [r, m]; nt: [r, k] @ [m, k]^T.
+        let mut b_tn = Tensor::randn(&mut rng, &[r, m], 1.0);
+        inject_specials(&mut b_tn, &mut rng);
+        let got = a.matmul_tn(&b_tn).map_err(|e| e.to_string())?;
+        assert_bits_eq(got.data(), &naive_matmul_tn(&a, &b_tn), "matmul_tn");
+
+        let mut b_nt = Tensor::randn(&mut rng, &[m, k], 1.0);
+        inject_specials(&mut b_nt, &mut rng);
+        let got = a.matmul_nt(&b_nt).map_err(|e| e.to_string())?;
+        assert_bits_eq(got.data(), &naive_matmul_nt(&a, &b_nt), "matmul_nt");
+        Ok(())
+    });
+}
+
+/// Everything the quantizer emits, flattened to bit patterns.
+fn quantize_fingerprint(rt: &Runtime, cfg: &ModelConfig, params: &Params) -> Vec<u32> {
+    let mut rng = Rng::new(4242);
+    let toks = TensorI32::from_vec(
+        &[cfg.batch, cfg.seq],
+        (0..cfg.batch * cfg.seq)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect(),
+    )
+    .unwrap();
+    let calib = capture(rt, cfg, params, std::slice::from_ref(&toks), 1).unwrap();
+    let qcfg = QuantConfig::with_method(Method::Faq);
+    let qm = quantize_model(rt, &qcfg, params, Some(&calib)).unwrap();
+
+    let mut fp: Vec<u32> = Vec::new();
+    for l in &qm.linears {
+        fp.push(l.alpha.to_bits());
+        fp.push(l.loss.to_bits());
+        fp.push(l.window_used as u32);
+        fp.push(l.gamma_used.to_bits());
+        fp.extend(l.scale.iter().map(|s| s.to_bits()));
+        fp.extend(l.inv_s.iter().map(|s| s.to_bits()));
+        fp.extend(l.packed.iter().copied());
+    }
+    for t in &qm.fq_params.tensors {
+        fp.extend(t.data().iter().map(|v| v.to_bits()));
+    }
+    // Quantized forward logits on the same tokens.
+    let mut args: Vec<Value> = qm
+        .fq_params
+        .tensors
+        .iter()
+        .map(|t| lit_f32(t).unwrap())
+        .collect();
+    args.push(lit_i32(&toks).unwrap());
+    let outs = rt.exec(&cfg.name, "fwd_logits", &args).unwrap();
+    fp.extend(
+        outs[0]
+            .as_f32()
+            .unwrap()
+            .data()
+            .iter()
+            .map(|v| v.to_bits()),
+    );
+    fp
+}
+
+#[test]
+fn quantize_and_forward_bit_identical_across_thread_counts() {
+    // The ISSUE-2 determinism contract: FAQUANT_THREADS ∈ {1, 2, 8}
+    // must produce bit-identical chosen alphas, losses, scales, packed
+    // ints, fake-quant weights, and forward logits, so Tables 1-3 never
+    // depend on the runner's core count.
+    let rt = Runtime::native();
+    let cfg = ModelConfig::preset("pico").unwrap();
+    let params = Params::init(&cfg, 31);
+    let baseline = {
+        par::set_threads(1);
+        quantize_fingerprint(&rt, &cfg, &params)
+    };
+    for &t in &[2usize, 8] {
+        par::set_threads(t);
+        let fp = quantize_fingerprint(&rt, &cfg, &params);
+        par::set_threads(0);
+        assert_eq!(
+            fp.len(),
+            baseline.len(),
+            "fingerprint length differs at {t} threads"
+        );
+        let diffs = fp
+            .iter()
+            .zip(&baseline)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(diffs, 0, "{diffs} words differ between 1 and {t} threads");
+    }
+    par::set_threads(0);
 }
 
 // -------------------------------------------------------------- Theorem 1
