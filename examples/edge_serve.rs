@@ -64,9 +64,9 @@ fn main() -> Result<()> {
     // Every client sees its own next-token distribution.
     let mut answered = 0;
     for r in responders {
-        if let Ok(resp) = r.recv() {
-            assert_eq!(resp.next_logits.len(), cfg.model.vocab);
-            assert!(resp.done_at >= resp.queued_at);
+        if let Ok(faquant::serve::Response::Done(c)) = r.recv() {
+            assert_eq!(c.next_logits.len(), cfg.model.vocab);
+            assert!(c.done_at >= c.queued_at);
             answered += 1;
         }
     }

@@ -123,7 +123,10 @@ fn main() -> Result<()> {
         rx,
         Duration::from_millis(5),
     )?;
-    let ok = resp.into_iter().filter(|r| r.recv().is_ok()).count();
+    let ok = resp
+        .into_iter()
+        .filter(|r| matches!(r.recv(), Ok(faquant::serve::Response::Done(_))))
+        .count();
     println!(
         "served {ok}/{} requests, {} batches (fill {:.0}%), p50 {:.1} ms p95 {:.1} ms, {:.1} req/s",
         rep.requests,

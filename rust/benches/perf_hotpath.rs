@@ -7,6 +7,8 @@
 //!   3. eval batch        — one fwd_logits execution (attention kernel)
 //!   4. qserve batch      — one fwd_logits_q execution (qmatmul path)
 //!   5. host quantize     — rust-side scaled_quantize_ints + bit-pack
+//!   6. generation        — KV-cached continuous-batching decode engine
+//!                          (prefill/decode tokens-per-second split)
 //!
 //! Then the threading headline: the end-to-end Phase-B quantize at
 //! 1 thread vs the effective `FAQUANT_THREADS`, and the coordinator
@@ -29,6 +31,7 @@ use faquant::calib::capture;
 use faquant::config::RunConfig;
 use faquant::coordinator::Pipeline;
 use faquant::corpus::Batcher;
+use faquant::engine::{Engine, GenConfig, GenRequest};
 use faquant::eval::{calib_ids, canonical_tokenizer};
 use faquant::quant::{packing, scaled_quantize_ints, search_alpha};
 use faquant::runtime::{lit_f32, lit_i32, Runtime};
@@ -116,6 +119,56 @@ fn main() {
     println!("{}", report(&s));
     stages.push(s);
 
+    // 6. KV-cached generation: continuous-batching decode engine over
+    // decode_step_q. The prefill/decode tokens-per-second split is the
+    // serving headline (mean_s of the *_tokens_per_sec stages is seconds
+    // per token; the top-level report carries the tok/s values).
+    let prompt_len = cfg.model.seq / 4;
+    let max_new = cfg.model.seq / 4;
+    let n_seqs = cfg.model.batch * 2;
+    let gen_ids = calib_ids(&cfg.model, &tok, n_seqs + 4, 99);
+    let reqs: Vec<GenRequest> = (0..n_seqs)
+        .map(|i| {
+            let start = (i * prompt_len) % (gen_ids.len() - prompt_len);
+            GenRequest {
+                id: i,
+                prompt: gen_ids[start..start + prompt_len].to_vec(),
+                max_new,
+                stop_id: None,
+            }
+        })
+        .collect();
+    let mut engine = Engine::new(&rt, &cfg.model, &params, &qm, GenConfig::default())
+        .expect("engine");
+    let s = bench(
+        &format!("generate({n_seqs}seq,prefill{prompt_len},decode{max_new})"),
+        0,
+        1,
+        || {
+            engine.generate(reqs.clone()).expect("generate");
+        },
+    );
+    println!("{}", report(&s));
+    stages.push(s);
+    let grep = engine.report();
+    let (prefill_tps, decode_tps) = (grep.prefill_tps(), grep.decode_tps());
+    println!(
+        "  -> prefill {prefill_tps:.0} tok/s, decode {decode_tps:.0} tok/s \
+         (occupancy {:.0}%, {} steps)",
+        grep.mean_slot_occupancy * 100.0,
+        grep.steps
+    );
+    stages.push(PerfReport::per_token_stage(
+        "prefill_tokens_per_sec",
+        grep.prefill_tokens,
+        grep.prefill_secs,
+    ));
+    stages.push(PerfReport::per_token_stage(
+        "decode_tokens_per_sec",
+        grep.decode_tokens,
+        grep.decode_secs,
+    ));
+
     // Threading headline: end-to-end Phase-B quantize, 1 thread vs the
     // effective thread count (same runtime/calibration — results are
     // bit-identical by the determinism contract; only the wall moves).
@@ -163,6 +216,8 @@ fn main() {
         quantize_secs_nt,
         speedup,
         coordinator_overhead: overhead,
+        prefill_tps,
+        decode_tps,
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

@@ -190,6 +190,11 @@ pub struct PerfReport {
     /// execution (DESIGN §9; measured single-threaded so the sum of
     /// per-entry exec times is comparable to wall time).
     pub coordinator_overhead: f32,
+    /// KV-cached generation engine: prompt tokens per second (prefill).
+    pub prefill_tps: f32,
+    /// KV-cached generation engine: generated tokens per second (decode,
+    /// the serving-throughput headline).
+    pub decode_tps: f32,
 }
 
 impl PerfReport {
@@ -199,7 +204,8 @@ impl PerfReport {
             "{{\n  \"schema\": \"faquant-perf-v1\",\n  \"preset\": \"{}\",\n  \
              \"threads\": {},\n  \"cores\": {},\n  \"stages\": [\n    {}\n  ],\n  \
              \"quantize_secs_1t\": {},\n  \"quantize_secs_nt\": {},\n  \
-             \"speedup_vs_1t\": {},\n  \"coordinator_overhead\": {}\n}}\n",
+             \"speedup_vs_1t\": {},\n  \"coordinator_overhead\": {},\n  \
+             \"prefill_tokens_per_sec\": {},\n  \"decode_tokens_per_sec\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -208,7 +214,29 @@ impl PerfReport {
             json_f32(self.quantize_secs_nt),
             json_f32(self.speedup),
             json_f32(self.coordinator_overhead),
+            json_f32(self.prefill_tps),
+            json_f32(self.decode_tps),
         )
+    }
+
+    /// Synthesize a per-token stage Sample from a (tokens, seconds)
+    /// aggregate, so tokens/sec work appears in the `stages` list next to
+    /// the timed stages (`mean_s` = seconds per token).
+    pub fn per_token_stage(name: &str, tokens: usize, secs: f32) -> Sample {
+        let per = if tokens > 0 {
+            secs / tokens as f32
+        } else {
+            0.0
+        };
+        Sample {
+            name: name.to_string(),
+            iters: tokens.max(1),
+            mean: per,
+            std: 0.0,
+            p50: per,
+            p95: per,
+            min: per,
+        }
     }
 }
 
@@ -271,16 +299,30 @@ mod tests {
             quantize_secs_nt: 0.5,
             speedup: 2.0,
             coordinator_overhead: 0.01,
+            prefill_tps: 1000.0,
+            decode_tps: 250.0,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
         assert!(j.contains("\"preset\": \"pico\""));
         assert!(j.contains("\"speedup_vs_1t\""));
+        assert!(j.contains("\"prefill_tokens_per_sec\""));
+        assert!(j.contains("\"decode_tokens_per_sec\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn per_token_stage_inverts_tps() {
+        let s = PerfReport::per_token_stage("decode_tokens_per_sec", 40, 2.0);
+        assert_eq!(s.iters, 40);
+        assert!((s.mean - 0.05).abs() < 1e-7);
+        assert_eq!(s.throughput(1.0), 20.0);
+        let z = PerfReport::per_token_stage("empty", 0, 1.0);
+        assert_eq!(z.mean, 0.0);
     }
 
     #[test]

@@ -7,6 +7,17 @@
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+/// Is the next raw token a flag name rather than a flag *value*?
+///
+/// Only `--`-prefixed tokens are flag names; single-dash tokens — in
+/// particular negative numerics like `-0.5` or `-1` — bind to the
+/// preceding flag as values (`--temperature -0.5`, `--stop-id -1`;
+/// pinned by tests below). The numeric check additionally keeps any
+/// token that parses as a number on the value side of the boundary.
+fn looks_like_flag(tok: &str) -> bool {
+    tok.starts_with("--") && tok.parse::<f64>().is_err()
+}
+
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: String,
@@ -33,7 +44,7 @@ impl Args {
                 bail!("bare '--' not supported");
             }
             match it.peek() {
-                Some(next) if !next.starts_with("--") => {
+                Some(next) if !looks_like_flag(next) => {
                     flags.insert(name.to_string(), it.next().unwrap());
                 }
                 _ => switches.push(name.to_string()),
@@ -72,6 +83,14 @@ impl Args {
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} '{v}' is not an integer")),
+        }
+    }
+
+    /// Signed integer flag (negative values parse: `--stop-id -1`).
+    pub fn get_i64(&self, name: &str, default: i64) -> Result<i64> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{name} '{v}' is not an integer")),
@@ -126,6 +145,25 @@ mod tests {
         assert_eq!(a.get_or("model", "pico"), "pico");
         assert_eq!(a.get_f32("gamma", 0.85).unwrap(), 0.85);
         assert!(!a.has("full-search"));
+    }
+
+    #[test]
+    fn negative_numeric_values_parse() {
+        let a = parse("generate --temperature -0.5 --stop-id -1 --bias -3");
+        assert_eq!(a.get_f32("temperature", 1.0).unwrap(), -0.5);
+        assert_eq!(a.get_i64("stop-id", 0).unwrap(), -1);
+        assert_eq!(a.get_i64("bias", 0).unwrap(), -3);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_after_flag_still_a_switch() {
+        // A non-numeric `--` token after a flag stays a flag: the first
+        // becomes a switch, the second takes the value.
+        let a = parse("eval --full-search --gamma 0.7");
+        assert!(a.has("full-search"));
+        assert_eq!(a.get_f32("gamma", 0.0).unwrap(), 0.7);
+        a.finish().unwrap();
     }
 
     #[test]

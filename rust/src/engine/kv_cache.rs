@@ -1,0 +1,194 @@
+//! Per-slot, per-layer key/value slabs for KV-cached decode.
+//!
+//! The cache owns two `[L, slots, T_max, d]` tensors whose rows
+//! `0..len[slot]` are the attention keys/values of every token a slot's
+//! sequence has fed so far. The backend entry `decode_step_q` *reads*
+//! the slabs (they travel as ordinary arguments — backends stay
+//! stateless) and returns the new token's `[L, B, d]` key/value rows,
+//! which [`KvCache::append`] writes at the slot's fill position.
+//!
+//! To cross the backend boundary without copying multi-megabyte slabs
+//! each step, [`KvCache::take`] moves the tensors out (for wrapping in
+//! host `Buffer`s) and [`KvCache::put_back`] returns them — the scheduler
+//! does this around every `decode_step_q` call.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug)]
+pub struct KvCache {
+    n_layer: usize,
+    slots: usize,
+    t_max: usize,
+    d: usize,
+    /// `None` while the slabs are out on loan via [`KvCache::take`].
+    k: Option<Tensor>,
+    v: Option<Tensor>,
+    /// Valid rows per slot.
+    len: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(n_layer: usize, slots: usize, t_max: usize, d: usize) -> Self {
+        assert!(n_layer > 0 && slots > 0 && t_max > 0 && d > 0);
+        let shape = [n_layer, slots, t_max, d];
+        Self {
+            n_layer,
+            slots,
+            t_max,
+            d,
+            k: Some(Tensor::zeros(&shape)),
+            v: Some(Tensor::zeros(&shape)),
+            len: vec![0; slots],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    /// Tokens cached for `slot` (== the next append position).
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    /// Recycle a slot for a new sequence. Stale rows need no zeroing:
+    /// causal reads only ever touch rows `0..len[slot]`.
+    pub fn reset(&mut self, slot: usize) {
+        self.len[slot] = 0;
+    }
+
+    /// Move the slabs out (to wrap as backend arguments).
+    pub fn take(&mut self) -> Result<(Tensor, Tensor)> {
+        match (self.k.take(), self.v.take()) {
+            (Some(k), Some(v)) => Ok((k, v)),
+            _ => bail!("KvCache slabs already taken"),
+        }
+    }
+
+    /// Return the slabs after a backend call.
+    pub fn put_back(&mut self, k: Tensor, v: Tensor) -> Result<()> {
+        let want = [self.n_layer, self.slots, self.t_max, self.d];
+        if k.shape() != want || v.shape() != want {
+            bail!(
+                "put_back shapes k {:?} / v {:?} != {want:?}",
+                k.shape(),
+                v.shape()
+            );
+        }
+        if self.k.is_some() || self.v.is_some() {
+            bail!("KvCache slabs were never taken");
+        }
+        self.k = Some(k);
+        self.v = Some(v);
+        Ok(())
+    }
+
+    /// Append one token's key/value rows for `slot` from a decode step's
+    /// `[L, B, d]` outputs, at the slot's current fill position.
+    pub fn append(&mut self, slot: usize, k_new: &Tensor, v_new: &Tensor) -> Result<()> {
+        let want = [self.n_layer, self.slots, self.d];
+        if k_new.shape() != want || v_new.shape() != want {
+            bail!(
+                "append shapes k {:?} / v {:?} != {want:?}",
+                k_new.shape(),
+                v_new.shape()
+            );
+        }
+        if slot >= self.slots {
+            bail!("slot {slot} out of range [0, {})", self.slots);
+        }
+        let p = self.len[slot];
+        if p >= self.t_max {
+            bail!("slot {slot}: cache full ({p} of {} rows)", self.t_max);
+        }
+        let k = self.k.as_mut().context("KvCache slabs are taken")?;
+        let v = self.v.as_mut().context("KvCache slabs are taken")?;
+        for l in 0..self.n_layer {
+            let src = (l * self.slots + slot) * self.d;
+            let dst = ((l * self.slots + slot) * self.t_max + p) * self.d;
+            k.data_mut()[dst..dst + self.d].copy_from_slice(&k_new.data()[src..src + self.d]);
+            v.data_mut()[dst..dst + self.d].copy_from_slice(&v_new.data()[src..src + self.d]);
+        }
+        self.len[slot] = p + 1;
+        Ok(())
+    }
+
+    /// Cached key row (layer, slot, t) — test/debug accessor.
+    pub fn k_row(&self, layer: usize, slot: usize, t: usize) -> Result<&[f32]> {
+        let k = self.k.as_ref().context("KvCache slabs are taken")?;
+        if layer >= self.n_layer || slot >= self.slots || t >= self.len[slot] {
+            bail!("k_row({layer}, {slot}, {t}) out of range");
+        }
+        let off = ((layer * self.slots + slot) * self.t_max + t) * self.d;
+        Ok(&k.data()[off..off + self.d])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_rows(l: usize, slots: usize, d: usize, tag: f32) -> (Tensor, Tensor) {
+        let n = l * slots * d;
+        let kd: Vec<f32> = (0..n).map(|i| tag + i as f32).collect();
+        let vd: Vec<f32> = kd.iter().map(|x| -x).collect();
+        let k = Tensor::from_vec(&[l, slots, d], kd).unwrap();
+        let v = Tensor::from_vec(&[l, slots, d], vd).unwrap();
+        (k, v)
+    }
+
+    #[test]
+    fn append_then_read_back() {
+        let (l, slots, t_max, d) = (2usize, 3usize, 4usize, 5usize);
+        let mut c = KvCache::new(l, slots, t_max, d);
+        let (k0, v0) = step_rows(l, slots, d, 100.0);
+        c.append(1, &k0, &v0).unwrap();
+        let (k1, v1) = step_rows(l, slots, d, 900.0);
+        c.append(1, &k1, &v1).unwrap();
+        assert_eq!(c.len(1), 2);
+        assert_eq!(c.len(0), 0);
+        // Row t=0 of layer 1 slot 1 equals the first step's (1, 1) row.
+        let src = (slots + 1) * d;
+        assert_eq!(c.k_row(1, 1, 0).unwrap(), &k0.data()[src..src + d]);
+        assert_eq!(c.k_row(1, 1, 1).unwrap(), &k1.data()[src..src + d]);
+        assert!(c.k_row(1, 1, 2).is_err());
+    }
+
+    #[test]
+    fn reset_recycles_slot() {
+        let mut c = KvCache::new(1, 2, 2, 3);
+        let (k, v) = step_rows(1, 2, 3, 1.0);
+        c.append(0, &k, &v).unwrap();
+        c.append(0, &k, &v).unwrap();
+        assert!(c.append(0, &k, &v).is_err()); // full
+        c.reset(0);
+        assert_eq!(c.len(0), 0);
+        c.append(0, &k, &v).unwrap();
+    }
+
+    #[test]
+    fn take_put_back_roundtrip() {
+        let mut c = KvCache::new(1, 1, 2, 2);
+        let (k, v) = c.take().unwrap();
+        assert!(c.take().is_err());
+        let (kn, vn) = step_rows(1, 1, 2, 5.0);
+        assert!(c.append(0, &kn, &vn).is_err()); // slabs on loan
+        assert!(c.put_back(Tensor::zeros(&[1, 1]), v.clone()).is_err());
+        c.put_back(k, v).unwrap();
+        c.append(0, &kn, &vn).unwrap();
+        assert_eq!(c.len(0), 1);
+    }
+
+    #[test]
+    fn shape_checks() {
+        let mut c = KvCache::new(2, 2, 3, 4);
+        let bad = Tensor::zeros(&[2, 2, 5]);
+        assert!(c.append(0, &bad, &bad).is_err());
+        assert!(c.append(9, &Tensor::zeros(&[2, 2, 4]), &Tensor::zeros(&[2, 2, 4])).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Autoregressive decode engine (S16): KV-cached generation over the
+//! quantized deployment artifact with continuous batching.
+//!
+//! The serving path used to be score-only (`fwd_logits_q` over a fixed
+//! [B, T] batch); this subsystem adds real token generation, the
+//! workload that dominates quantized-LLM deployment:
+//!
+//! - [`KvCache`] — per-slot, per-layer key/value slabs with append +
+//!   causal read, fed to the backend's `decode_step_q` entry.
+//! - [`Sampler`] — greedy / temperature / top-k sampling on the repo's
+//!   seeded PRNG; one independent stream per sequence.
+//! - [`Engine`] — slot-based continuous batching: sequences of different
+//!   lengths (prefilling or decoding) share one batched `decode_step_q`
+//!   per step, finished sequences free their slot for queued work, and a
+//!   [`GenReport`] splits prefill vs decode throughput.
+//!
+//! **Bit-identity:** the logits a sequence sees at position `t` are
+//! bitwise equal to `fwd_logits_q`'s logits at position `t` of the full
+//! sequence — for every thread count and any batch composition (DESIGN.md
+//! §10; pinned by `tests/props.rs`). Greedy generation is therefore
+//! exactly "repeatedly score the growing sequence", just without the
+//! O(T²) recompute.
+
+mod kv_cache;
+mod sampler;
+mod scheduler;
+
+pub use kv_cache::KvCache;
+pub use sampler::Sampler;
+pub use scheduler::{Engine, GenConfig};
+
+/// Why a request was refused admission (shared with `serve`'s intake).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// One-shot scoring path: sequence length != the artifact's T.
+    WrongLength { got: usize, want: usize },
+    /// A token id outside [0, vocab).
+    TokenOutOfRange { index: usize, id: i32 },
+    /// Generation: empty prompt (there is nothing to continue).
+    EmptyPrompt,
+    /// Generation: `max_new == 0` asks for no work.
+    ZeroMaxNew,
+    /// Generation: prompt + max_new exceeds the cache/position capacity.
+    TooLong {
+        prompt: usize,
+        max_new: usize,
+        cap: usize,
+    },
+}
+
+impl RejectReason {
+    /// Stable cause tag for per-cause accounting.
+    pub fn cause(&self) -> &'static str {
+        match self {
+            RejectReason::WrongLength { .. } => "wrong_length",
+            RejectReason::TokenOutOfRange { .. } => "bad_token",
+            RejectReason::EmptyPrompt => "empty_prompt",
+            RejectReason::ZeroMaxNew => "zero_max_new",
+            RejectReason::TooLong { .. } => "too_long",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::WrongLength { got, want } => {
+                write!(f, "sequence length {got} != required {want}")
+            }
+            RejectReason::TokenOutOfRange { index, id } => {
+                write!(f, "token id {id} at index {index} outside vocab")
+            }
+            RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+            RejectReason::ZeroMaxNew => write!(f, "max_new must be >= 1"),
+            RejectReason::TooLong { prompt, max_new, cap } => {
+                write!(f, "prompt {prompt} + max_new {max_new} exceeds capacity {cap}")
+            }
+        }
+    }
+}
+
+/// Per-cause rejection counters (reported by serve + engine).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RejectCounts {
+    pub wrong_length: usize,
+    pub bad_token: usize,
+    pub empty_prompt: usize,
+    pub zero_max_new: usize,
+    pub too_long: usize,
+}
+
+impl RejectCounts {
+    pub fn note(&mut self, r: &RejectReason) {
+        match r {
+            RejectReason::WrongLength { .. } => self.wrong_length += 1,
+            RejectReason::TokenOutOfRange { .. } => self.bad_token += 1,
+            RejectReason::EmptyPrompt => self.empty_prompt += 1,
+            RejectReason::ZeroMaxNew => self.zero_max_new += 1,
+            RejectReason::TooLong { .. } => self.too_long += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.wrong_length + self.bad_token + self.empty_prompt + self.zero_max_new + self.too_long
+    }
+}
+
+/// How a generation ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced `max_new` tokens.
+    MaxTokens,
+    /// Sampled the request's stop id (not included in the output).
+    Stop,
+    /// Refused at admission; no tokens were generated.
+    Rejected(RejectReason),
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Caller-chosen id, echoed in the output and used to key the
+    /// sequence's sampler stream.
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    /// Maximum tokens to generate (>= 1).
+    pub max_new: usize,
+    /// Stop generation when this id is sampled.
+    pub stop_id: Option<i32>,
+}
+
+/// One finished (or rejected) generation.
+#[derive(Clone, Debug)]
+pub struct GenOutput {
+    pub id: usize,
+    pub prompt_len: usize,
+    /// Generated tokens (prompt excluded; empty when rejected).
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+}
+
+/// Throughput/occupancy summary of an engine run.
+#[derive(Clone, Debug, Default)]
+pub struct GenReport {
+    /// Sequences that ran to completion (rejections excluded).
+    pub sequences: usize,
+    pub rejected: usize,
+    pub reject_counts: RejectCounts,
+    /// Batched `decode_step_q` executions.
+    pub steps: usize,
+    /// Prompt tokens fed through the cache.
+    pub prefill_tokens: usize,
+    /// Generated tokens fed back through the cache + final samples.
+    pub decode_tokens: usize,
+    pub prefill_secs: f32,
+    pub decode_secs: f32,
+    /// Mean fraction of slots busy per step.
+    pub mean_slot_occupancy: f32,
+}
+
+impl GenReport {
+    pub fn prefill_tps(&self) -> f32 {
+        if self.prefill_secs > 0.0 {
+            self.prefill_tokens as f32 / self.prefill_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn decode_tps(&self) -> f32 {
+        if self.decode_secs > 0.0 {
+            self.decode_tokens as f32 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_counts_accumulate_per_cause() {
+        let mut c = RejectCounts::default();
+        c.note(&RejectReason::EmptyPrompt);
+        c.note(&RejectReason::WrongLength { got: 3, want: 8 });
+        c.note(&RejectReason::WrongLength { got: 9, want: 8 });
+        assert_eq!(c.wrong_length, 2);
+        assert_eq!(c.empty_prompt, 1);
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn reject_reason_display_and_cause() {
+        let r = RejectReason::TooLong {
+            prompt: 100,
+            max_new: 50,
+            cap: 128,
+        };
+        assert_eq!(r.cause(), "too_long");
+        assert!(r.to_string().contains("128"));
+        assert_eq!(
+            RejectReason::TokenOutOfRange { index: 2, id: -7 }.cause(),
+            "bad_token"
+        );
+    }
+
+    #[test]
+    fn report_tps_handles_zero_time() {
+        let r = GenReport::default();
+        assert_eq!(r.decode_tps(), 0.0);
+        let r = GenReport {
+            decode_tokens: 30,
+            decode_secs: 2.0,
+            prefill_tokens: 100,
+            prefill_secs: 0.5,
+            ..GenReport::default()
+        };
+        assert_eq!(r.decode_tps(), 15.0);
+        assert_eq!(r.prefill_tps(), 200.0);
+    }
+}

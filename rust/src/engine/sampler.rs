@@ -1,0 +1,155 @@
+//! Token sampling over next-token logits: greedy, temperature, top-k.
+//!
+//! Driven by the repo's deterministic PRNG ([`crate::tensor::Rng`]), so a
+//! generation is reproducible from integer seeds. Each sequence owns its
+//! own sampler stream keyed by (seed, sequence id) — sampled tokens never
+//! depend on slot assignment, batch composition, or thread count.
+
+use crate::tensor::Rng;
+
+#[derive(Debug)]
+pub struct Sampler {
+    /// 0 (or below) = greedy argmax; otherwise logits are divided by
+    /// this before the softmax draw.
+    pub temperature: f32,
+    /// Restrict sampling to the k highest logits; 0 = no restriction.
+    pub top_k: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, top_k: usize, seed: u64) -> Self {
+        Self {
+            temperature,
+            top_k,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Per-sequence stream: one independent sampler per (seed, id) pair.
+    pub fn for_sequence(temperature: f32, top_k: usize, seed: u64, id: usize) -> Self {
+        // SplitMix-style mix so nearby ids land far apart in seed space.
+        let mixed = seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self::new(temperature, top_k, mixed)
+    }
+
+    /// Greedy argmax: first index of the maximum (NaN entries never win).
+    pub fn argmax(logits: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Draw the next token id from unnormalized next-token logits.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        debug_assert!(!logits.is_empty());
+        if self.temperature <= 0.0 {
+            return Self::argmax(logits);
+        }
+        // Candidate set: all indices, or the top-k by logit (ties broken
+        // toward lower index so the set is deterministic).
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.top_k > 0 && self.top_k < logits.len() {
+            idx.sort_by(|&a, &b| {
+                logits[b]
+                    .partial_cmp(&logits[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(self.top_k);
+        }
+        // Max-subtracted softmax weights at the given temperature.
+        let mx = idx.iter().fold(f32::NEG_INFINITY, |m, &i| m.max(logits[i]));
+        if !mx.is_finite() {
+            return Self::argmax(logits);
+        }
+        let weights: Vec<f32> = idx
+            .iter()
+            .map(|&i| ((logits[i] - mx) / self.temperature).exp())
+            .collect();
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return Self::argmax(logits);
+        }
+        let mut x = self.rng.uniform() * total;
+        for (w, &i) in weights.iter().zip(&idx) {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max_and_first_tie() {
+        let mut s = Sampler::new(0.0, 0, 1);
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(s.sample(&[2.0, 2.0, 1.0]), 0);
+        assert_eq!(s.sample(&[f32::NAN, 1.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let logits = [0.3f32, 1.2, -0.5, 2.0, 0.0];
+        let mut a = Sampler::new(0.8, 0, 42);
+        let mut b = Sampler::new(0.8, 0, 42);
+        for _ in 0..64 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+        let mut c = Sampler::new(0.8, 0, 43);
+        let draws_a: Vec<usize> = (0..64).map(|_| a.sample(&logits)).collect();
+        let draws_c: Vec<usize> = (0..64).map(|_| c.sample(&logits)).collect();
+        assert_ne!(draws_a, draws_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0f32, 5.0, 4.0, -3.0, 1.0];
+        let mut s = Sampler::new(1.0, 2, 7);
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 1 || t == 2, "token {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_max() {
+        let logits = [0.0f32, 10.0, 0.0];
+        let mut s = Sampler::new(0.05, 0, 9);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn degenerate_logits_fall_back_to_argmax() {
+        let mut s = Sampler::new(1.0, 0, 3);
+        let ninf = f32::NEG_INFINITY;
+        assert_eq!(s.sample(&[ninf, ninf, ninf]), 0);
+    }
+
+    #[test]
+    fn sequence_streams_are_independent() {
+        let logits = [1.0f32, 1.1, 0.9, 1.05];
+        let mut a = Sampler::for_sequence(1.0, 0, 5, 0);
+        let mut b = Sampler::for_sequence(1.0, 0, 5, 1);
+        let da: Vec<usize> = (0..64).map(|_| a.sample(&logits)).collect();
+        let db: Vec<usize> = (0..64).map(|_| b.sample(&logits)).collect();
+        assert_ne!(da, db);
+        let mut a2 = Sampler::for_sequence(1.0, 0, 5, 0);
+        let da2: Vec<usize> = (0..64).map(|_| a2.sample(&logits)).collect();
+        assert_eq!(da, da2);
+    }
+}

@@ -1,0 +1,440 @@
+//! Continuous-batching generation scheduler.
+//!
+//! [`Engine`] owns a fixed number of *slots* (default: the preset's batch
+//! size), a [`KvCache`] sized `[L, slots, seq, d]`, and the uploaded
+//! quantized weight bundle. Every [`Engine::step`] runs ONE batched
+//! `decode_step_q` over all occupied slots — sequences at completely
+//! different phases (prompt prefill, mid-decode) share the same
+//! execution, each at its own cache position. Finished sequences free
+//! their slot immediately and the queue backfills it on the next step,
+//! so short requests never wait for long ones to drain (continuous
+//! batching, the vLLM scheduling model at slot granularity).
+//!
+//! Prefill feeds prompt tokens one position per step through the same
+//! entry as decode: there is exactly one compute path, which is what
+//! makes the bit-identity contract (module docs in [`super`]) hold by
+//! construction. The [`GenReport`] splits wall time between prefill and
+//! decode by each step's feed mix.
+
+use super::{
+    FinishReason, GenOutput, GenReport, GenRequest, KvCache, RejectCounts, RejectReason, Sampler,
+};
+use crate::config::ModelConfig;
+use crate::model::Params;
+use crate::quant::QuantizedModel;
+use crate::runtime::{Buffer, Runtime, Value};
+use crate::serve::qmodel_literals;
+use crate::tensor::TensorI32;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Generation settings shared by every sequence of an engine.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// <= 0 is greedy; otherwise softmax temperature.
+    pub temperature: f32,
+    /// 0 = unrestricted; otherwise sample among the k highest logits.
+    pub top_k: usize,
+    /// Base seed; each sequence forks its own stream keyed by request id.
+    pub seed: u64,
+    /// Batch slots (0 = the model preset's batch size).
+    pub slots: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 7,
+            slots: 0,
+        }
+    }
+}
+
+/// One in-flight sequence.
+struct SeqState {
+    id: usize,
+    prompt_len: usize,
+    /// Prompt followed by generated tokens.
+    tokens: Vec<i32>,
+    /// Tokens fed through the cache so far (== cache len for the slot).
+    cursor: usize,
+    max_new: usize,
+    stop_id: Option<i32>,
+    sampler: Sampler,
+}
+
+/// The KV-cached continuous-batching generation engine.
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    cfg: ModelConfig,
+    gen: GenConfig,
+    weight_bufs: Vec<Buffer>,
+    cache: KvCache,
+    slots: Vec<Option<SeqState>>,
+    queue: VecDeque<SeqState>,
+    // Accumulated report state (across generate calls).
+    steps: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    prefill_secs: f32,
+    decode_secs: f32,
+    occupancy_sum: f32,
+    completed: usize,
+    rejected: usize,
+    reject_counts: RejectCounts,
+}
+
+impl<'rt> Engine<'rt> {
+    /// Build an engine over a quantized model: uploads the weight bundle
+    /// once (reused by every step) and sizes the cache to `[L, slots,
+    /// seq, d]`.
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: &ModelConfig,
+        params: &Params,
+        qm: &QuantizedModel,
+        gen: GenConfig,
+    ) -> Result<Self> {
+        let slots = match gen.slots {
+            0 => cfg.batch,
+            n => n,
+        };
+        let weight_bufs = qmodel_literals(params, qm)?
+            .iter()
+            .map(|l| rt.upload_literal(l))
+            .collect::<Result<Vec<_>>>()?;
+        let cache = KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model);
+        Ok(Self {
+            rt,
+            cfg: cfg.clone(),
+            gen,
+            weight_bufs,
+            cache,
+            slots: (0..slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            steps: 0,
+            prefill_tokens: 0,
+            decode_tokens: 0,
+            prefill_secs: 0.0,
+            decode_secs: 0.0,
+            occupancy_sum: 0.0,
+            completed: 0,
+            rejected: 0,
+            reject_counts: RejectCounts::default(),
+        })
+    }
+
+    /// Why a request cannot be admitted, if anything.
+    pub fn validate(&self, req: &GenRequest) -> Option<RejectReason> {
+        if req.prompt.is_empty() {
+            return Some(RejectReason::EmptyPrompt);
+        }
+        if req.max_new == 0 {
+            return Some(RejectReason::ZeroMaxNew);
+        }
+        for (index, &id) in req.prompt.iter().enumerate() {
+            if id < 0 || id as usize >= self.cfg.vocab {
+                return Some(RejectReason::TokenOutOfRange { index, id });
+            }
+        }
+        let cap = self.cache.t_max();
+        if req.prompt.len() + req.max_new > cap {
+            return Some(RejectReason::TooLong {
+                prompt: req.prompt.len(),
+                max_new: req.max_new,
+                cap,
+            });
+        }
+        None
+    }
+
+    /// Enqueue a request. Returns `Some(rejected output)` immediately
+    /// when the request cannot be admitted; `None` means it is queued and
+    /// will surface from a later [`Engine::step`].
+    pub fn submit(&mut self, req: GenRequest) -> Option<GenOutput> {
+        if let Some(reason) = self.validate(&req) {
+            self.rejected += 1;
+            self.reject_counts.note(&reason);
+            return Some(GenOutput {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Rejected(reason),
+            });
+        }
+        let sampler =
+            Sampler::for_sequence(self.gen.temperature, self.gen.top_k, self.gen.seed, req.id);
+        self.queue.push_back(SeqState {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            cursor: 0,
+            max_new: req.max_new,
+            stop_id: req.stop_id,
+            sampler,
+        });
+        None
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(Option::is_some)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Admit queued sequences into free slots, run one batched decode
+    /// step, and return the sequences that finished on it.
+    pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        for (slot, state) in self.slots.iter_mut().enumerate() {
+            if state.is_some() {
+                continue;
+            }
+            if let Some(st) = self.queue.pop_front() {
+                self.cache.reset(slot);
+                *state = Some(st);
+            }
+        }
+        let b = self.slots.len();
+        let vocab = self.cfg.vocab;
+        let mut pos = vec![-1i32; b];
+        let mut tok = vec![0i32; b];
+        let mut prefill_feeds = 0usize;
+        let mut decode_feeds = 0usize;
+        for (slot, st) in self.slots.iter().enumerate() {
+            let Some(st) = st else { continue };
+            pos[slot] = st.cursor as i32;
+            tok[slot] = st.tokens[st.cursor];
+            if st.cursor < st.prompt_len {
+                prefill_feeds += 1;
+            } else {
+                decode_feeds += 1;
+            }
+        }
+        let feeds = prefill_feeds + decode_feeds;
+        if feeds == 0 {
+            return Ok(Vec::new());
+        }
+
+        let t0 = Instant::now();
+        let (kt, vt) = self.cache.take()?;
+        let k_buf = Buffer::Host(Value::F32(kt));
+        let v_buf = Buffer::Host(Value::F32(vt));
+        let pos_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], pos)?));
+        let tok_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], tok)?));
+        let outs = {
+            let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
+            args.extend([&k_buf, &v_buf, &pos_buf, &tok_buf]);
+            self.rt.exec_b(&self.cfg.name, "decode_step_q", &args)
+        };
+        // The slabs go back whether or not the step succeeded.
+        match (k_buf, v_buf) {
+            (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(v))) => {
+                self.cache.put_back(k, v)?
+            }
+            _ => bail!("KV slabs must stay host-resident"),
+        }
+        let outs = outs?;
+        let dt = t0.elapsed().as_secs_f32();
+        self.steps += 1;
+        self.occupancy_sum += feeds as f32 / b as f32;
+        self.prefill_secs += dt * prefill_feeds as f32 / feeds as f32;
+        self.decode_secs += dt * decode_feeds as f32 / feeds as f32;
+        self.prefill_tokens += prefill_feeds;
+
+        let logits = outs[0].as_f32()?;
+        let k_new = outs[1].as_f32()?;
+        let v_new = outs[2].as_f32()?;
+        let mut finished = Vec::new();
+        for slot in 0..b {
+            let done = {
+                let Some(st) = self.slots[slot].as_mut() else { continue };
+                self.cache.append(slot, k_new, v_new)?;
+                st.cursor += 1;
+                let mut fin = None;
+                if st.cursor >= st.prompt_len {
+                    // This feed's logits predict the next position.
+                    let row = &logits.data()[slot * vocab..(slot + 1) * vocab];
+                    let next = st.sampler.sample(row) as i32;
+                    if st.stop_id == Some(next) {
+                        fin = Some(FinishReason::Stop);
+                    } else {
+                        st.tokens.push(next);
+                        self.decode_tokens += 1;
+                        if st.tokens.len() - st.prompt_len >= st.max_new {
+                            fin = Some(FinishReason::MaxTokens);
+                        }
+                    }
+                }
+                fin.map(|finish| GenOutput {
+                    id: st.id,
+                    prompt_len: st.prompt_len,
+                    tokens: st.tokens[st.prompt_len..].to_vec(),
+                    finish,
+                })
+            };
+            if let Some(out) = done {
+                self.slots[slot] = None;
+                self.completed += 1;
+                finished.push(out);
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Snapshot of the accumulated throughput/occupancy counters.
+    pub fn report(&self) -> GenReport {
+        GenReport {
+            sequences: self.completed,
+            rejected: self.rejected,
+            reject_counts: self.reject_counts.clone(),
+            steps: self.steps,
+            prefill_tokens: self.prefill_tokens,
+            decode_tokens: self.decode_tokens,
+            prefill_secs: self.prefill_secs,
+            decode_secs: self.decode_secs,
+            mean_slot_occupancy: if self.steps > 0 {
+                self.occupancy_sum / self.steps as f32
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Convenience driver: submit everything, step until drained, return
+    /// outputs sorted by request id plus the report snapshot.
+    pub fn generate(&mut self, reqs: Vec<GenRequest>) -> Result<(Vec<GenOutput>, GenReport)> {
+        let mut outs = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            if let Some(rejected) = self.submit(r) {
+                outs.push(rejected);
+            }
+        }
+        while self.has_work() {
+            outs.extend(self.step()?);
+        }
+        outs.sort_by_key(|o| o.id);
+        Ok((outs, self.report()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, QuantConfig};
+    use crate::quant::quantize_model;
+
+    fn pico_model(rt: &Runtime) -> (ModelConfig, Params, QuantizedModel) {
+        let cfg = ModelConfig::preset("pico").unwrap();
+        let params = Params::init(&cfg, 11);
+        let qcfg = QuantConfig::with_method(Method::Rtn);
+        let qm = quantize_model(rt, &qcfg, &params, None).unwrap();
+        (cfg, params, qm)
+    }
+
+    #[test]
+    fn generate_greedy_runs_and_reports() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let reqs: Vec<GenRequest> = (0..6)
+            .map(|i| GenRequest {
+                id: i,
+                prompt: vec![(i as i32 * 3) % cfg.vocab as i32, 1, 2, 5],
+                max_new: 4,
+                stop_id: None,
+            })
+            .collect();
+        let (outs, rep) = eng.generate(reqs).unwrap();
+        assert_eq!(outs.len(), 6);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.id, i);
+            assert_eq!(o.finish, FinishReason::MaxTokens);
+            assert_eq!(o.tokens.len(), 4);
+            assert!(o.tokens.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+        }
+        assert_eq!(rep.sequences, 6);
+        assert_eq!(rep.rejected, 0);
+        // 6 sequences x 4 prompt tokens; decode tokens delivered = 6 x 4.
+        assert_eq!(rep.prefill_tokens, 24);
+        assert_eq!(rep.decode_tokens, 24);
+        assert!(rep.steps >= 7, "6 seqs over 4 slots need two waves");
+        assert!(rep.mean_slot_occupancy > 0.0 && rep.mean_slot_occupancy <= 1.0);
+    }
+
+    #[test]
+    fn rejections_are_immediate_and_counted() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let req = |id: usize, prompt: Vec<i32>, max_new: usize| GenRequest {
+            id,
+            prompt,
+            max_new,
+            stop_id: None,
+        };
+        let bad = vec![
+            req(0, vec![], 2),
+            req(1, vec![1, -4], 2),
+            req(2, vec![1; cfg.seq], 2),
+            req(3, vec![1, 2], 0),
+            req(4, vec![1, 2], 2),
+        ];
+        let (outs, rep) = eng.generate(bad).unwrap();
+        assert_eq!(outs.len(), 5);
+        assert!(matches!(
+            outs[0].finish,
+            FinishReason::Rejected(RejectReason::EmptyPrompt)
+        ));
+        assert!(matches!(
+            outs[1].finish,
+            FinishReason::Rejected(RejectReason::TokenOutOfRange { index: 1, id: -4 })
+        ));
+        assert!(matches!(
+            outs[2].finish,
+            FinishReason::Rejected(RejectReason::TooLong { .. })
+        ));
+        assert!(matches!(
+            outs[3].finish,
+            FinishReason::Rejected(RejectReason::ZeroMaxNew)
+        ));
+        assert_eq!(outs[4].finish, FinishReason::MaxTokens);
+        assert_eq!(rep.rejected, 4);
+        assert_eq!(rep.reject_counts.total(), 4);
+        assert_eq!(rep.reject_counts.bad_token, 1);
+        assert_eq!(rep.reject_counts.too_long, 1);
+        assert_eq!(rep.sequences, 1);
+    }
+
+    #[test]
+    fn stop_id_ends_generation_without_emitting_it() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        // Learn what greedy emits first, then rerun with that as stop id.
+        let req = |id| GenRequest {
+            id,
+            prompt: vec![3, 1, 4, 1, 5],
+            max_new: 3,
+            stop_id: None,
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let (outs, _) = eng.generate(vec![req(0)]).unwrap();
+        let first = outs[0].tokens[0];
+
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let mut r = req(1);
+        r.stop_id = Some(first);
+        let (outs, rep) = eng.generate(vec![r]).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::Stop);
+        assert!(outs[0].tokens.is_empty());
+        assert_eq!(rep.sequences, 1);
+    }
+}

@@ -23,6 +23,7 @@
 //! - [`calib`] — calibration capture and the FAQ preview window
 //! - [`quant`] — RTN / AWQ / FAQ quantizers, grid search, bit-packing
 //! - [`coordinator`] — the end-to-end PTQ pipeline
+//! - [`engine`] — KV-cached decode: continuous batching + sampling
 //! - [`eval`] — perplexity and synthetic zero-shot suites
 //! - [`serve`] — batched quantized-model serving demo
 //! - [`benchkit`] / [`testutil`] — in-repo bench + property-test kits
@@ -33,6 +34,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod corpus;
+pub mod engine;
 pub mod eval;
 pub mod model;
 pub mod quant;

@@ -7,6 +7,7 @@
 //!   table1/2/3 — regenerate the paper's tables
 //!   ablation   — gamma/window hyperparameter sweeps
 //!   serve      — batched serving demo on the quantized artifact
+//!   generate   — KV-cached continuous-batching generation demo
 //!   inspect    — artifact/manifest inventory
 //!
 //! Every subcommand accepts `--artifacts DIR` (default: artifacts) and
@@ -35,6 +36,9 @@ SUBCOMMANDS
   table3    [--model M] [--ns 16,32,64,128]  paper Table 3 (calib bias)
   ablation  --sweep gamma|window [--model M] hyperparameter sweeps
   serve     --model M [--requests N]         quantized serving demo
+  generate  --model M [--prompts N] [--prompt-len P] [--max-new K]
+            [--temperature T] [--top-k K] [--gen-seed S] [--stop-id ID]
+            KV-cached generation (greedy when T <= 0; ID < 0 disables)
   inspect                                    list artifacts + configs
 
 COMMON FLAGS
@@ -209,11 +213,106 @@ fn main() -> Result<()> {
             let n_requests = args.get_usize("requests", 64)?;
             serve_demo(&rt, &cfg, n_requests)?;
         }
+        "generate" => {
+            generate_demo(&rt, &cfg, &args)?;
+        }
         other => {
             anyhow::bail!("unknown subcommand '{other}' — run `faquant help`");
         }
     }
     args.finish()?;
+    Ok(())
+}
+
+/// Generation demo: quantize, then run KV-cached continuous-batching
+/// decode over a handful of corpus prompts and print the text + the
+/// prefill/decode throughput split.
+fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Result<()> {
+    use faquant::engine::{Engine, FinishReason, GenConfig, GenRequest};
+
+    let n_prompts = args.get_usize("prompts", 4)?;
+    let prompt_len = args.get_usize("prompt-len", cfg.model.seq / 4)?;
+    let max_new = args.get_usize("max-new", cfg.model.seq / 4)?;
+    let temperature = args.get_f32("temperature", 0.8)?;
+    let top_k = args.get_usize("top-k", 0)?;
+    let gen_seed = args.get_u64("gen-seed", 7)?;
+    let stop_id = args.get_i64("stop-id", -1)?;
+    let stop_id = (stop_id >= 0).then_some(stop_id as i32);
+
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    let (qm, _) = pipe.quantize(&params, Some(&calib))?;
+
+    let tok = faquant::eval::canonical_tokenizer(&cfg.model);
+    let ids = faquant::eval::calib_ids(&cfg.model, &tok, n_prompts + 4, 99);
+    if ids.len() <= prompt_len {
+        anyhow::bail!("corpus too small for --prompt-len {prompt_len}");
+    }
+    let prompts: Vec<Vec<i32>> = (0..n_prompts)
+        .map(|i| {
+            let start = (i * prompt_len) % (ids.len() - prompt_len);
+            ids[start..start + prompt_len].to_vec()
+        })
+        .collect();
+
+    let mut engine = Engine::new(
+        rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            temperature,
+            top_k,
+            seed: gen_seed,
+            slots: 0,
+        },
+    )?;
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, p)| GenRequest {
+            id,
+            prompt: p.clone(),
+            max_new,
+            stop_id,
+        })
+        .collect();
+    let (outs, rep) = engine.generate(reqs)?;
+
+    for out in &outs {
+        match &out.finish {
+            FinishReason::Rejected(reason) => {
+                println!("[{}] rejected: {reason}", out.id);
+            }
+            finish => {
+                let tag = match finish {
+                    FinishReason::MaxTokens => "max-tokens",
+                    FinishReason::Stop => "stop-id",
+                    FinishReason::Rejected(_) => unreachable!(),
+                };
+                println!(
+                    "[{}] {} ++ {}   ({} tokens, {tag})",
+                    out.id,
+                    tok.decode(&prompts[out.id]),
+                    tok.decode(&out.tokens),
+                    out.tokens.len(),
+                );
+            }
+        }
+    }
+    println!(
+        "generated {} seqs ({} rejected) in {} steps: prefill {} tok @ {:.0} tok/s, \
+         decode {} tok @ {:.0} tok/s, slot occupancy {:.0}%",
+        rep.sequences,
+        rep.rejected,
+        rep.steps,
+        rep.prefill_tokens,
+        rep.prefill_tps(),
+        rep.decode_tokens,
+        rep.decode_tps(),
+        rep.mean_slot_occupancy * 100.0
+    );
     Ok(())
 }
 
@@ -257,7 +356,7 @@ fn serve_demo(rt: &Runtime, cfg: &RunConfig, n_requests: usize) -> Result<()> {
     )?;
     let mut got = 0;
     for r in responders {
-        if r.recv().is_ok() {
+        if matches!(r.recv(), Ok(resp) if resp.completion().is_some()) {
             got += 1;
         }
     }

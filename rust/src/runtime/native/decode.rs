@@ -1,0 +1,244 @@
+//! `decode_step_q`: one KV-cached autoregressive step over the quantized
+//! deployment artifact.
+//!
+//! Argument layout (after the [`super::qmodel`] weight prefix shared with
+//! `fwd_logits_q`):
+//!
+//! | arg       | shape                | meaning |
+//! |---|---|---|
+//! | `k_cache` | `[L, B, T_max, d]` f32 | per-(layer, slot) key slab, rows `0..pos[b]` valid |
+//! | `v_cache` | `[L, B, T_max, d]` f32 | value slab, same layout |
+//! | `pos`     | `[B]` i32            | position of the new token per slot; `-1` = inactive |
+//! | `tokens`  | `[B]` i32            | new token id per slot (ignored when inactive) |
+//!
+//! Returns `(logits [B, V], k_new [L, B, d], v_new [L, B, d])`: the
+//! next-token logits per slot plus this token's key/value rows, which the
+//! caller appends to its cache at `pos[b]` (the entry never mutates its
+//! inputs — backends are stateless). Inactive slots get zero rows.
+//!
+//! Two deliberate per-step costs keep the entry stateless and the
+//! contract minimal (both are candidates for a prepared-weights fast
+//! path later): weights are dequantized from codes on every call —
+//! exactly what the qmatmul kernel does per execution (DESIGN.md §7) —
+//! and the head projection runs for every active row, including prefill
+//! rows whose logits the scheduler discards.
+//!
+//! **Bit-identity contract** (DESIGN.md §10): for any schedule of steps
+//! that feeds a sequence's tokens in order, the logits emitted at
+//! position `t` are bitwise equal to `fwd_logits_q`'s logits at position
+//! `t` of the full sequence, for every thread count and any mix of other
+//! sequences sharing the batch. Every per-row computation (embedding,
+//! RMSNorm, the quantized linears, residual adds, GELU) is shared with or
+//! identical to the full-sequence path, and the attention below replays
+//! `nn::attention_head_fwd`'s row-`t` arithmetic exactly: scores, the
+//! running max, exponentials, and the output accumulation all run over
+//! keys `j = 0..=t` in ascending order with the same expressions.
+
+use super::nn;
+use super::qmodel::{self, QWeights};
+use crate::config::ModelConfig;
+use crate::runtime::value::Value;
+use crate::tensor::{par, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// One active slot this step: (slot index, position, token id).
+struct Active {
+    slot: usize,
+    pos: usize,
+    tok: usize,
+}
+
+pub(super) fn decode_step_q(
+    cfg: &ModelConfig,
+    args: &[&Value],
+    group: usize,
+) -> Result<Vec<Value>> {
+    let nw = qmodel::qweight_nargs(cfg);
+    let want = nw + 4;
+    if args.len() != want {
+        bail!("decode_step_q: got {} args, want {want}", args.len());
+    }
+    let wts = QWeights::parse(cfg, args)?;
+    let k_cache = args[nw].as_f32().context("k_cache must be f32")?;
+    let v_cache = args[nw + 1].as_f32().context("v_cache must be f32")?;
+    let pos = args[nw + 2].as_i32().context("pos must be i32")?;
+    let toks = args[nw + 3].as_i32().context("tokens must be i32")?;
+
+    let (l, d, vocab) = (cfg.n_layer, cfg.d_model, cfg.vocab);
+    if pos.shape().len() != 1 || toks.shape() != pos.shape() {
+        bail!(
+            "decode_step_q: pos {:?} / tokens {:?} must both be [B]",
+            pos.shape(),
+            toks.shape()
+        );
+    }
+    let b = pos.shape()[0];
+    let ks = k_cache.shape();
+    if ks.len() != 4 || ks[0] != l || ks[1] != b || ks[3] != d {
+        bail!("k_cache {ks:?} must be [{l}, {b}, T_max, {d}]");
+    }
+    if v_cache.shape() != ks {
+        bail!("v_cache {:?} != k_cache {ks:?}", v_cache.shape());
+    }
+    let t_max = ks[2];
+    if t_max > wts.pos_emb.shape()[0] {
+        bail!(
+            "cache T_max={t_max} exceeds pos_emb rows {}",
+            wts.pos_emb.shape()[0]
+        );
+    }
+
+    let mut active = Vec::with_capacity(b);
+    for slot in 0..b {
+        let p = pos.data()[slot];
+        if p < 0 {
+            continue;
+        }
+        let p = p as usize;
+        if p >= t_max {
+            bail!("slot {slot}: pos {p} out of cache range [0, {t_max})");
+        }
+        let id = toks.data()[slot];
+        if id < 0 || id as usize >= vocab {
+            bail!("slot {slot}: token id {id} out of vocab range [0, {vocab})");
+        }
+        active.push(Active {
+            slot,
+            pos: p,
+            tok: id as usize,
+        });
+    }
+    if active.is_empty() {
+        bail!("decode_step_q: no active slots (every pos is -1)");
+    }
+    let a = active.len();
+
+    // Embed the new tokens: same per-row expression as `nn::embed`.
+    let mut x = vec![0.0f32; a * d];
+    for (i, act) in active.iter().enumerate() {
+        let te = wts.tok_emb.row(act.tok);
+        let pe = wts.pos_emb.row(act.pos);
+        let dst = &mut x[i * d..(i + 1) * d];
+        for ((o, &t), &p) in dst.iter_mut().zip(te).zip(pe) {
+            *o = t + p;
+        }
+    }
+    let mut x = Tensor::from_vec(&[a, d], x)?;
+
+    let mut k_new = vec![0.0f32; l * b * d];
+    let mut v_new = vec![0.0f32; l * b * d];
+    for (li, blk) in wts.blocks.iter().enumerate() {
+        let (h, _) = nn::rmsnorm_fwd(&x, blk.ln1.data())?;
+        let qkv = qmodel::qlin(&h, &blk.lins[0], group)?;
+        // This token's key/value rows (qkv columns [d, 2d) and [2d, 3d)),
+        // reported to the caller for the cache append.
+        for (i, act) in active.iter().enumerate() {
+            let row = qkv.row(i);
+            let dst = (li * b + act.slot) * d;
+            k_new[dst..dst + d].copy_from_slice(&row[d..2 * d]);
+            v_new[dst..dst + d].copy_from_slice(&row[2 * d..3 * d]);
+        }
+        let att = attention_decode(&qkv, k_cache, v_cache, li, &active, cfg.n_head, t_max, b)?;
+        let x_mid = x.add(&qmodel::qlin(&att, &blk.lins[1], group)?)?;
+        let (h2, _) = nn::rmsnorm_fwd(&x_mid, blk.ln2.data())?;
+        let u = qmodel::qlin(&h2, &blk.lins[2], group)?.map(nn::gelu);
+        x = x_mid.add(&qmodel::qlin(&u, &blk.lins[3], group)?)?;
+    }
+    let (hf, _) = nn::rmsnorm_fwd(&x, wts.lnf_g.data())?;
+    let lg = hf.matmul(wts.w_head)?;
+
+    let mut logits = vec![0.0f32; b * vocab];
+    for (i, act) in active.iter().enumerate() {
+        logits[act.slot * vocab..(act.slot + 1) * vocab].copy_from_slice(lg.row(i));
+    }
+    Ok(vec![
+        Value::F32(Tensor::from_vec(&[b, vocab], logits)?),
+        Value::F32(Tensor::from_vec(&[l, b, d], k_new)?),
+        Value::F32(Tensor::from_vec(&[l, b, d], v_new)?),
+    ])
+}
+
+/// Causal attention for one new token per active slot against the cache.
+///
+/// Replays row `pos` of `nn::attention_head_fwd` exactly: for each
+/// (active slot, head) pair the scores over keys `j = 0..=pos` (cache
+/// rows for `j < pos`, this step's projection for `j == pos`) are
+/// computed in ascending order with a single-accumulator dot product,
+/// then max-subtracted exponentials and the value accumulation run over
+/// the same ascending range — so each output row is bitwise what the
+/// full-sequence kernel produces at that position. Parallel over
+/// (slot, head) pairs with a fixed-order merge, like the full kernel.
+#[allow(clippy::too_many_arguments)]
+fn attention_decode(
+    qkv: &Tensor,
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    layer: usize,
+    active: &[Active],
+    n_head: usize,
+    t_max: usize,
+    b: usize,
+) -> Result<Tensor> {
+    let d3 = qkv.shape()[1];
+    let d = d3 / 3;
+    if d3 != 3 * d || d % n_head != 0 {
+        bail!("attention_decode: qkv {:?} heads={n_head}", qkv.shape());
+    }
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let a = active.len();
+    let kd = k_cache.data();
+    let vd = v_cache.data();
+    let max_pos = active.iter().map(|act| act.pos).max().unwrap_or(0);
+    let work = 2 * a * n_head * (max_pos + 1) * hd;
+    let panels = par::par_map_bounded(a * n_head, par::threads_for(work), |ih| {
+        let (i, h) = (ih / n_head, ih % n_head);
+        let act = &active[i];
+        let o = h * hd;
+        let row = qkv.row(i);
+        let qi = &row[o..o + hd];
+        let k_step = &row[d + o..d + o + hd];
+        let v_step = &row[2 * d + o..2 * d + o + hd];
+        let base = (layer * b + act.slot) * t_max;
+        let p = act.pos;
+        let mut s = vec![0.0f32; p + 1];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let kj: &[f32] = if j < p {
+                let off = (base + j) * d + o;
+                &kd[off..off + hd]
+            } else {
+                k_step
+            };
+            let sc: f32 = qi.iter().zip(kj).map(|(&x, &y)| x * y).sum::<f32>() * scale;
+            *sj = sc;
+            mx = mx.max(sc);
+        }
+        let mut sum = 0.0f32;
+        for sj in s.iter_mut() {
+            let e = (*sj - mx).exp();
+            *sj = e;
+            sum += e;
+        }
+        let mut out = vec![0.0f32; hd];
+        for (j, &ej) in s.iter().enumerate() {
+            let pj = ej / sum;
+            let vj: &[f32] = if j < p {
+                let off = (base + j) * d + o;
+                &vd[off..off + hd]
+            } else {
+                v_step
+            };
+            for (ov, &vv) in out.iter_mut().zip(vj) {
+                *ov += pj * vv;
+            }
+        }
+        out
+    });
+    let mut att = vec![0.0f32; a * d];
+    for (ih, panel) in panels.into_iter().enumerate() {
+        let (i, h) = (ih / n_head, ih % n_head);
+        att[i * d + h * hd..i * d + (h + 1) * hd].copy_from_slice(&panel);
+    }
+    Tensor::from_vec(&[a, d], att)
+}

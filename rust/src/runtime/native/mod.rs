@@ -8,7 +8,9 @@
 //! fresh offline checkout. The PJRT/HLO backend (`pjrt` feature) is the
 //! accelerated drop-in with the same entry contract.
 
+mod decode;
 mod nn;
+mod qmodel;
 mod train;
 
 pub use nn::{ParamView, RMS_EPS};
@@ -46,6 +48,7 @@ impl NativeBackend {
             "fwd_logits" => fwd_logits(cfg, args),
             "fwd_capture" => fwd_capture(cfg, args),
             "fwd_logits_q" => fwd_logits_q(cfg, args, manifest.group),
+            "decode_step_q" => decode::decode_step_q(cfg, args, manifest.group),
             "train_step" => train::train_step(cfg, args),
             other => bail!("native backend has no entry '{other}'"),
         }
@@ -225,64 +228,20 @@ fn loss_args<'a>(args: &'a [&'a Value]) -> Result<(&'a Tensor, &'a Tensor, &'a [
 
 /// Quantized-deployment forward: `fwd_logits_q` from integer codes +
 /// dequant params (the `ref_qmatmul` contract: `(a * inv_s) @ dequant(q)`).
+/// Weight parsing and the quantized linear live in [`qmodel`], shared
+/// with the KV-cached [`decode::decode_step_q`] so the two entries stay
+/// bit-identical per position.
 fn fwd_logits_q(
     cfg: &crate::config::ModelConfig,
     args: &[&Value],
     group: usize,
 ) -> Result<Vec<Value>> {
-    let want = 2 + cfg.n_layer * 18 + 3;
+    let want = qmodel::qweight_nargs(cfg) + 1;
     if args.len() != want {
         bail!("fwd_logits_q: got {} args, want {want}", args.len());
     }
-    fn f32_at<'x>(args: &[&'x Value], i: usize, what: &str) -> Result<&'x Tensor> {
-        args.get(i)
-            .with_context(|| format!("missing arg {i} ({what})"))?
-            .as_f32()
-            .with_context(|| format!("arg {what} must be f32"))
-    }
-    struct QLin<'a> {
-        q: &'a Tensor,
-        delta: &'a Tensor,
-        zero: &'a Tensor,
-        inv_s: &'a Tensor,
-    }
-    let mut i = 0usize;
-    let tok_emb = f32_at(args, i, "tok_emb")?;
-    i += 1;
-    let pos_emb = f32_at(args, i, "pos_emb")?;
-    i += 1;
-    let mut blocks = Vec::with_capacity(cfg.n_layer);
-    for b in 0..cfg.n_layer {
-        let ln1 = f32_at(args, i, &format!("blk{b}.ln1_g"))?;
-        i += 1;
-        let mut lins = Vec::with_capacity(4);
-        for role in ["qkv", "o"] {
-            lins.push(QLin {
-                q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
-                delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
-                zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
-                inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
-            });
-            i += 4;
-        }
-        let ln2 = f32_at(args, i, &format!("blk{b}.ln2_g"))?;
-        i += 1;
-        for role in ["up", "down"] {
-            lins.push(QLin {
-                q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
-                delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
-                zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
-                inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
-            });
-            i += 4;
-        }
-        blocks.push((ln1, ln2, lins));
-    }
-    let lnf_g = f32_at(args, i, "lnf_g")?;
-    i += 1;
-    let w_head = f32_at(args, i, "w_head")?;
-    i += 1;
-    let tokens = args[i]
+    let wts = qmodel::QWeights::parse(cfg, args)?;
+    let tokens = args[qmodel::qweight_nargs(cfg)]
         .as_i32()
         .context("trailing fwd_logits_q arg must be i32 tokens")?;
     if tokens.shape().len() != 2 {
@@ -290,64 +249,18 @@ fn fwd_logits_q(
     }
     let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
 
-    // Dequantize codes: (q - z) * delta with per-(group, col) params.
-    let dequant = |l: &QLin| -> Result<Tensor> {
-        let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
-        if n % group != 0 {
-            bail!("codes n={n} not divisible by group={group}");
-        }
-        let ng = n / group;
-        if l.delta.shape() != [ng, m] || l.zero.shape() != [ng, m] || l.inv_s.numel() != n {
-            bail!(
-                "dequant params: delta {:?} zero {:?} inv_s {:?} for codes [{n}, {m}]",
-                l.delta.shape(),
-                l.zero.shape(),
-                l.inv_s.shape()
-            );
-        }
-        let mut out = vec![0.0f32; n * m];
-        for r in 0..n {
-            let g = r / group;
-            let qr = l.q.row(r);
-            let dr = l.delta.row(g);
-            let zr = l.zero.row(g);
-            let dst = &mut out[r * m..(r + 1) * m];
-            for c in 0..m {
-                dst[c] = (qr[c] - zr[c]) * dr[c];
-            }
-        }
-        Tensor::from_vec(&[n, m], out)
-    };
-    // Quantized linear: (x * inv_s per input channel) @ deq.
-    let qlin = |x: &Tensor, l: &QLin| -> Result<Tensor> {
-        let n = x.shape()[1];
-        if l.inv_s.numel() != n {
-            bail!("inv_s len {} != activation cols {n}", l.inv_s.numel());
-        }
-        let inv = l.inv_s.data();
-        let mut scaled = x.clone();
-        let rows = x.shape()[0];
-        for r in 0..rows {
-            let row = &mut scaled.data_mut()[r * n..(r + 1) * n];
-            for (v, &s) in row.iter_mut().zip(inv) {
-                *v *= s;
-            }
-        }
-        scaled.matmul(&dequant(l)?)
-    };
-
-    let mut x = nn::embed(tok_emb, pos_emb, tokens)?;
-    for (ln1, ln2, lins) in &blocks {
-        let (h, _) = nn::rmsnorm_fwd(&x, ln1.data())?;
-        let qkv = qlin(&h, &lins[0])?;
+    let mut x = nn::embed(wts.tok_emb, wts.pos_emb, tokens)?;
+    for blk in &wts.blocks {
+        let (h, _) = nn::rmsnorm_fwd(&x, blk.ln1.data())?;
+        let qkv = qmodel::qlin(&h, &blk.lins[0], group)?;
         let (att, _) = nn::attention_fwd(&qkv, b, t, cfg.n_head, false)?;
-        let x_mid = x.add(&qlin(&att, &lins[1])?)?;
-        let (h2, _) = nn::rmsnorm_fwd(&x_mid, ln2.data())?;
-        let u = qlin(&h2, &lins[2])?.map(nn::gelu);
-        x = x_mid.add(&qlin(&u, &lins[3])?)?;
+        let x_mid = x.add(&qmodel::qlin(&att, &blk.lins[1], group)?)?;
+        let (h2, _) = nn::rmsnorm_fwd(&x_mid, blk.ln2.data())?;
+        let u = qmodel::qlin(&h2, &blk.lins[2], group)?.map(nn::gelu);
+        x = x_mid.add(&qmodel::qlin(&u, &blk.lins[3], group)?)?;
     }
-    let (hf, _) = nn::rmsnorm_fwd(&x, lnf_g.data())?;
-    let logits = hf.matmul(w_head)?.reshape(&[b, t, cfg.vocab])?;
+    let (hf, _) = nn::rmsnorm_fwd(&x, wts.lnf_g.data())?;
+    let logits = hf.matmul(wts.w_head)?.reshape(&[b, t, cfg.vocab])?;
     Ok(vec![Value::F32(logits)])
 }
 

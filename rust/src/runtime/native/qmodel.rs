@@ -1,0 +1,156 @@
+//! Shared quantized-deployment weight handling for the native backend.
+//!
+//! Both `fwd_logits_q` (full-sequence scoring) and `decode_step_q`
+//! (KV-cached incremental decode) consume the same flat argument prefix —
+//! tok_emb, pos_emb, per block {ln1, (q, Δ, z, inv_s) × (qkv, o), ln2,
+//! (…) × (up, down)}, lnf_g, w_head — and run the same quantized linear:
+//! `(x · inv_s per input channel) @ dequant(q)`. This module owns the
+//! parse and both kernels so the two entries cannot drift: logit
+//! bit-identity between them (DESIGN.md §10) rests on sharing this code.
+
+use crate::config::ModelConfig;
+use crate::runtime::value::Value;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// One quantized linear's deployment tensors, borrowed from the args.
+pub(super) struct QLin<'a> {
+    pub q: &'a Tensor,
+    pub delta: &'a Tensor,
+    pub zero: &'a Tensor,
+    pub inv_s: &'a Tensor,
+}
+
+/// One block's norm gains + its four quantized linears in ROLES order
+/// (qkv, o, up, down).
+pub(super) struct QBlock<'a> {
+    pub ln1: &'a Tensor,
+    pub ln2: &'a Tensor,
+    pub lins: Vec<QLin<'a>>,
+}
+
+/// The full quantized-deployment weight bundle, borrowed from the args.
+pub(super) struct QWeights<'a> {
+    pub tok_emb: &'a Tensor,
+    pub pos_emb: &'a Tensor,
+    pub blocks: Vec<QBlock<'a>>,
+    pub lnf_g: &'a Tensor,
+    pub w_head: &'a Tensor,
+}
+
+fn f32_at<'x>(args: &[&'x Value], i: usize, what: &str) -> Result<&'x Tensor> {
+    args.get(i)
+        .with_context(|| format!("missing arg {i} ({what})"))?
+        .as_f32()
+        .with_context(|| format!("arg {what} must be f32"))
+}
+
+/// Number of weight arguments [`QWeights::parse`] consumes (everything in
+/// the `fwd_logits_q` signature except the trailing tokens tensor).
+pub(super) fn qweight_nargs(cfg: &ModelConfig) -> usize {
+    2 + cfg.n_layer * 18 + 2
+}
+
+impl<'a> QWeights<'a> {
+    /// Parse the canonical weight prefix; callers read their entry's
+    /// trailing arguments starting at [`qweight_nargs`].
+    pub fn parse(cfg: &ModelConfig, args: &[&'a Value]) -> Result<Self> {
+        let mut i = 0usize;
+        let tok_emb = f32_at(args, i, "tok_emb")?;
+        i += 1;
+        let pos_emb = f32_at(args, i, "pos_emb")?;
+        i += 1;
+        let mut blocks = Vec::with_capacity(cfg.n_layer);
+        for b in 0..cfg.n_layer {
+            let ln1 = f32_at(args, i, &format!("blk{b}.ln1_g"))?;
+            i += 1;
+            let mut lins = Vec::with_capacity(4);
+            for role in ["qkv", "o"] {
+                lins.push(QLin {
+                    q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
+                    delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
+                    zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
+                    inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
+                });
+                i += 4;
+            }
+            let ln2 = f32_at(args, i, &format!("blk{b}.ln2_g"))?;
+            i += 1;
+            for role in ["up", "down"] {
+                lins.push(QLin {
+                    q: f32_at(args, i, &format!("blk{b}.{role}.q"))?,
+                    delta: f32_at(args, i + 1, &format!("blk{b}.{role}.delta"))?,
+                    zero: f32_at(args, i + 2, &format!("blk{b}.{role}.zero"))?,
+                    inv_s: f32_at(args, i + 3, &format!("blk{b}.{role}.inv_s"))?,
+                });
+                i += 4;
+            }
+            blocks.push(QBlock { ln1, ln2, lins });
+        }
+        let lnf_g = f32_at(args, i, "lnf_g")?;
+        i += 1;
+        let w_head = f32_at(args, i, "w_head")?;
+        i += 1;
+        debug_assert_eq!(i, qweight_nargs(cfg));
+        Ok(Self {
+            tok_emb,
+            pos_emb,
+            blocks,
+            lnf_g,
+            w_head,
+        })
+    }
+}
+
+/// Dequantize integer codes: `(q - z) * delta` with per-(group, col)
+/// params (the `ref_qmatmul` contract).
+pub(super) fn dequant(l: &QLin, group: usize) -> Result<Tensor> {
+    let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
+    if n % group != 0 {
+        bail!("codes n={n} not divisible by group={group}");
+    }
+    let ng = n / group;
+    if l.delta.shape() != [ng, m] || l.zero.shape() != [ng, m] || l.inv_s.numel() != n {
+        bail!(
+            "dequant params: delta {:?} zero {:?} inv_s {:?} for codes [{n}, {m}]",
+            l.delta.shape(),
+            l.zero.shape(),
+            l.inv_s.shape()
+        );
+    }
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..n {
+        let g = r / group;
+        let qr = l.q.row(r);
+        let dr = l.delta.row(g);
+        let zr = l.zero.row(g);
+        let dst = &mut out[r * m..(r + 1) * m];
+        for c in 0..m {
+            dst[c] = (qr[c] - zr[c]) * dr[c];
+        }
+    }
+    Tensor::from_vec(&[n, m], out)
+}
+
+/// Quantized linear: `(x * inv_s per input channel) @ dequant(q)`.
+///
+/// Row-wise: the result for each row of `x` is independent of every
+/// other row (the matmul accumulates each output element ascending-k),
+/// which is what makes single-row decode bit-identical to full-sequence
+/// scoring.
+pub(super) fn qlin(x: &Tensor, l: &QLin, group: usize) -> Result<Tensor> {
+    let n = x.shape()[1];
+    if l.inv_s.numel() != n {
+        bail!("inv_s len {} != activation cols {n}", l.inv_s.numel());
+    }
+    let inv = l.inv_s.data();
+    let mut scaled = x.clone();
+    let rows = x.shape()[0];
+    for r in 0..rows {
+        let row = &mut scaled.data_mut()[r * n..(r + 1) * n];
+        for (v, &s) in row.iter_mut().zip(inv) {
+            *v *= s;
+        }
+    }
+    scaled.matmul(&dequant(l, group)?)
+}

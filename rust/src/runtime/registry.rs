@@ -183,6 +183,9 @@ impl Manifest {
                 ("fwd_logits".to_string(), n + 1),
                 ("fwd_capture".to_string(), n + 1),
                 ("fwd_logits_q".to_string(), q_nargs),
+                // Same weight prefix as fwd_logits_q, then k_cache,
+                // v_cache, pos, tokens instead of the [B, T] batch.
+                ("decode_step_q".to_string(), q_nargs + 3),
                 ("train_step".to_string(), 3 * n + 2),
             ];
             for role in crate::model::ROLES {
@@ -335,6 +338,10 @@ mod tests {
             assert_eq!(
                 m.artifact(name, "fwd_logits_q").unwrap().nargs,
                 2 + cfg.n_layer * 18 + 3
+            );
+            assert_eq!(
+                m.artifact(name, "decode_step_q").unwrap().nargs,
+                2 + cfg.n_layer * 18 + 6
             );
             assert_eq!(m.artifact(name, "layer_loss_qkv_b3").unwrap().nargs, 3);
             assert!(m.artifact(name, "layer_loss_sweep_down_b4").is_ok());

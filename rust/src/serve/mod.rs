@@ -1,46 +1,79 @@
 //! Edge-serving demo (S12): batched inference over the quantized
-//! deployment artifact (`fwd_logits_q`) with a request queue, a timeout
-//! batcher, and latency accounting.
+//! deployment artifact, with a request queue, a timeout batcher, and
+//! latency accounting.
 //!
-//! The server owns the runtime on a dedicated executor thread (one
-//! upload of the weight set, simple lifecycle — the runtime itself is
-//! `Sync` since the parallel compute core landed); clients talk over
-//! mpsc channels. The batcher collects
-//! up to `batch` requests or flushes after `max_wait`; partial batches are
-//! padded (fixed-shape artifacts) and pad rows discarded. Malformed
-//! requests (wrong sequence length or out-of-range token ids) are
-//! rejected individually — their response channel is dropped so the
-//! client observes a disconnect — and never abort the serving loop for
-//! the well-formed traffic behind them.
+//! Two request flavors share the uploaded INT-code weight bundle:
+//!
+//! - **one-shot scoring** ([`serve_requests`]): a full fixed-length token
+//!   sequence in, the final position's next-token logits out
+//!   (`fwd_logits_q`, the original path);
+//! - **generation** ([`serve_generate`]): a prompt + sampling budget in,
+//!   generated tokens out, served by the continuous-batching
+//!   [`crate::engine::Engine`] over `decode_step_q` — in-flight sequences
+//!   of different lengths share each batched decode step.
+//!
+//! Malformed requests are rejected individually with a structured
+//! [`RejectReason`] sent back on the response channel (never a silent
+//! disconnect), counted per cause in the reports, and never abort the
+//! serving loop for the well-formed traffic behind them.
 
 use crate::config::ModelConfig;
+use crate::engine::{Engine, FinishReason, GenConfig, GenReport, GenRequest};
 use crate::model::{Params, ROLES};
 use crate::quant::QuantizedModel;
 use crate::runtime::{lit_f32, tensor_f32, Buffer, Runtime, Value};
 use crate::tensor::{percentile, Tensor, TensorI32};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One inference request: a full token sequence; the response carries the
+pub use crate::engine::{RejectCounts, RejectReason};
+
+/// One scoring request: a full token sequence; the response carries the
 /// logits of the final position (next-token distribution).
 pub struct Request {
     pub tokens: Vec<i32>,
     pub respond: mpsc::Sender<Response>,
 }
 
-pub struct Response {
+/// A successful scoring response.
+pub struct Completion {
     pub next_logits: Vec<f32>,
     pub queued_at: Instant,
     pub done_at: Instant,
 }
 
-/// Latency/throughput summary of a serving run.
+/// What a scoring client hears back: logits, or a structured reason.
+pub enum Response {
+    Done(Completion),
+    Rejected(RejectReason),
+}
+
+impl Response {
+    pub fn completion(&self) -> Option<&Completion> {
+        match self {
+            Response::Done(c) => Some(c),
+            Response::Rejected(_) => None,
+        }
+    }
+
+    pub fn rejection(&self) -> Option<&RejectReason> {
+        match self {
+            Response::Done(_) => None,
+            Response::Rejected(r) => Some(r),
+        }
+    }
+}
+
+/// Latency/throughput summary of a one-shot serving run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub requests: usize,
-    /// Malformed requests dropped without aborting the loop.
+    /// Malformed requests rejected without aborting the loop.
     pub rejected: usize,
+    /// The same rejections, broken down by cause.
+    pub reject_counts: RejectCounts,
     pub batches: usize,
     pub mean_batch_fill: f32,
     pub p50_ms: f32,
@@ -48,8 +81,39 @@ pub struct ServeReport {
     pub throughput_rps: f32,
 }
 
-/// Build the flat argument prefix for `fwd_logits_q` from a quantized
-/// model (everything except the trailing tokens tensor).
+/// One generation request over the serving queue.
+pub struct GenServeRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub stop_id: Option<i32>,
+    pub respond: mpsc::Sender<GenServeResponse>,
+}
+
+/// What a generation client hears back.
+pub enum GenServeResponse {
+    Done {
+        /// Generated tokens (prompt excluded).
+        tokens: Vec<i32>,
+        finish: FinishReason,
+        queued_at: Instant,
+        done_at: Instant,
+    },
+    Rejected(RejectReason),
+}
+
+/// Summary of a generation serving run: engine throughput + queue-side
+/// latency percentiles.
+#[derive(Clone, Debug)]
+pub struct GenServeReport {
+    pub engine: GenReport,
+    /// Completed + rejected requests seen on the queue.
+    pub requests: usize,
+    pub p50_ms: f32,
+    pub p95_ms: f32,
+}
+
+/// Build the flat argument prefix for `fwd_logits_q`/`decode_step_q`
+/// from a quantized model (everything except the trailing tensors).
 ///
 /// Arg order (must mirror python model.fwd_logits_q): tok_emb, pos_emb,
 /// per block [ln1, qkv{q,d,z,inv}, o{...}, ln2, up{...}, down{...}],
@@ -100,8 +164,25 @@ fn push_linear(
     Ok(())
 }
 
-/// Run the serving loop over a closed set of requests (demo/benchmark
-/// mode): consumes the receiver until disconnect, returns the report.
+/// Why a one-shot scoring request cannot join a batch, if anything.
+fn validate_oneshot(tokens: &[i32], want_len: usize, vocab: usize) -> Option<RejectReason> {
+    if tokens.len() != want_len {
+        return Some(RejectReason::WrongLength {
+            got: tokens.len(),
+            want: want_len,
+        });
+    }
+    for (index, &id) in tokens.iter().enumerate() {
+        if id < 0 || id as usize >= vocab {
+            return Some(RejectReason::TokenOutOfRange { index, id });
+        }
+    }
+    None
+}
+
+/// Run the one-shot serving loop over a closed set of requests
+/// (demo/benchmark mode): consumes the receiver until disconnect,
+/// returns the report.
 pub fn serve_requests(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -118,29 +199,28 @@ pub fn serve_requests(
     let mut latencies_ms: Vec<f32> = Vec::new();
     let mut fills: Vec<f32> = Vec::new();
     let mut batches = 0usize;
-    let mut rejected = 0usize;
+    let mut reject_counts = RejectCounts::default();
     let started = Instant::now();
     let mut pending: Vec<(Request, Instant)> = Vec::new();
     let mut done = false;
 
     while !done || !pending.is_empty() {
-        // Fill the batch window, rejecting malformed requests at intake:
-        // dropping the request closes its response channel (the client
-        // sees a disconnect) while the rest of the queue keeps serving.
+        // Fill the batch window, rejecting malformed requests at intake
+        // with a structured reason (a wrong length would corrupt the
+        // fixed-shape batch; an out-of-range token id would make the
+        // embedding gather fail mid-batch and take the whole loop down).
         let deadline = Instant::now() + max_wait;
         while pending.len() < b && !done {
             let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
-                // Wrong length would corrupt the fixed-shape batch; an
-                // out-of-range token id would make the embedding gather
-                // fail mid-batch and take the whole loop down with it.
-                Ok(req)
-                    if req.tokens.len() != t
-                        || req.tokens.iter().any(|&id| id < 0 || id as usize >= v) =>
-                {
-                    rejected += 1
-                }
-                Ok(req) => pending.push((req, Instant::now())),
+                Ok(req) => match validate_oneshot(&req.tokens, t, v) {
+                    Some(reason) => {
+                        reject_counts.note(&reason);
+                        // Receiver may have hung up; that's their business.
+                        let _ = req.respond.send(Response::Rejected(reason));
+                    }
+                    None => pending.push((req, Instant::now())),
+                },
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
             }
@@ -172,12 +252,11 @@ pub fn serve_requests(
             let base = (i * t + (t - 1)) * v;
             let next = logits.data()[base..base + v].to_vec();
             latencies_ms.push(now.duration_since(queued).as_secs_f32() * 1e3);
-            // Receiver may have hung up; that's the client's business.
-            let _ = req.respond.send(Response {
+            let _ = req.respond.send(Response::Done(Completion {
                 next_logits: next,
                 queued_at: queued,
                 done_at: now,
-            });
+            }));
         }
     }
 
@@ -185,7 +264,8 @@ pub fn serve_requests(
     let n = latencies_ms.len();
     Ok(ServeReport {
         requests: n,
-        rejected,
+        rejected: reject_counts.total(),
+        reject_counts,
         batches,
         mean_batch_fill: if fills.is_empty() {
             0.0
@@ -198,15 +278,119 @@ pub fn serve_requests(
     })
 }
 
+/// Run the generation serving loop over a request queue until the sender
+/// disconnects and all in-flight sequences drain.
+///
+/// Requests are admitted into the engine's slot queue as they arrive —
+/// between decode steps, so a request that shows up while long sequences
+/// are mid-generation starts as soon as any slot frees (continuous
+/// batching). Invalid requests are answered immediately with their
+/// [`RejectReason`] and counted per cause in `report.engine`.
+pub fn serve_generate(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    rx: mpsc::Receiver<GenServeRequest>,
+    max_wait: Duration,
+) -> Result<GenServeReport> {
+    type Inflight = HashMap<usize, (mpsc::Sender<GenServeResponse>, Instant)>;
+
+    /// Submit one queue request to the engine; rejections answer
+    /// immediately, admissions wait in `inflight` for their slot.
+    fn admit(
+        engine: &mut Engine<'_>,
+        inflight: &mut Inflight,
+        next_id: &mut usize,
+        req: GenServeRequest,
+    ) {
+        let id = *next_id;
+        *next_id += 1;
+        let out = engine.submit(GenRequest {
+            id,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            stop_id: req.stop_id,
+        });
+        match out {
+            Some(rejected) => {
+                let FinishReason::Rejected(reason) = rejected.finish else {
+                    unreachable!("submit only returns rejections");
+                };
+                let _ = req.respond.send(GenServeResponse::Rejected(reason));
+            }
+            None => {
+                inflight.insert(id, (req.respond, Instant::now()));
+            }
+        }
+    }
+
+    let mut engine = Engine::new(rt, cfg, params, qm, gen)?;
+    let mut inflight: Inflight = HashMap::new();
+    let mut latencies_ms: Vec<f32> = Vec::new();
+    let mut next_id = 0usize;
+    let mut done = false;
+
+    loop {
+        // Drain whatever is immediately available (never blocks).
+        loop {
+            match rx.try_recv() {
+                Ok(r) => admit(&mut engine, &mut inflight, &mut next_id, r),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        if !engine.has_work() {
+            if done {
+                break;
+            }
+            // Idle: wait for the next request (or the disconnect).
+            match rx.recv_timeout(max_wait) {
+                Ok(r) => admit(&mut engine, &mut inflight, &mut next_id, r),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
+            }
+            continue;
+        }
+        for out in engine.step()? {
+            let now = Instant::now();
+            if let Some((tx, queued_at)) = inflight.remove(&out.id) {
+                latencies_ms.push(now.duration_since(queued_at).as_secs_f32() * 1e3);
+                let _ = tx.send(GenServeResponse::Done {
+                    tokens: out.tokens,
+                    finish: out.finish,
+                    queued_at,
+                    done_at: now,
+                });
+            }
+        }
+    }
+
+    let engine_report = engine.report();
+    Ok(GenServeReport {
+        requests: engine_report.sequences + engine_report.rejected,
+        engine: engine_report,
+        p50_ms: percentile(&latencies_ms, 50.0),
+        p95_ms: percentile(&latencies_ms, 95.0),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn report_fields_sane() {
+        let mut rc = RejectCounts::default();
+        rc.note(&RejectReason::WrongLength { got: 2, want: 4 });
         let r = ServeReport {
             requests: 10,
-            rejected: 1,
+            rejected: rc.total(),
+            reject_counts: rc,
             batches: 3,
             mean_batch_fill: 0.83,
             p50_ms: 5.0,
@@ -215,5 +399,31 @@ mod tests {
         };
         assert!(r.p95_ms >= r.p50_ms);
         assert!(r.mean_batch_fill <= 1.0);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.reject_counts.wrong_length, 1);
+    }
+
+    #[test]
+    fn oneshot_validation_reasons() {
+        assert!(validate_oneshot(&[1, 2, 3], 3, 8).is_none());
+        assert_eq!(
+            validate_oneshot(&[1, 2], 3, 8),
+            Some(RejectReason::WrongLength { got: 2, want: 3 })
+        );
+        assert_eq!(
+            validate_oneshot(&[1, 9, 3], 3, 8),
+            Some(RejectReason::TokenOutOfRange { index: 1, id: 9 })
+        );
+        assert_eq!(
+            validate_oneshot(&[1, -1, 3], 3, 8),
+            Some(RejectReason::TokenOutOfRange { index: 1, id: -1 })
+        );
+    }
+
+    #[test]
+    fn response_accessors() {
+        let r = Response::Rejected(RejectReason::EmptyPrompt);
+        assert!(r.completion().is_none());
+        assert_eq!(r.rejection().unwrap().cause(), "empty_prompt");
     }
 }

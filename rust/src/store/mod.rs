@@ -14,7 +14,7 @@
 use crate::tensor::{Tensor, TensorI32};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FQT1";
@@ -93,52 +93,110 @@ impl TensorStore {
         Ok(())
     }
 
+    /// Load a store, defensively: header-declared sizes are bounded
+    /// against the remaining file length BEFORE any allocation (a
+    /// truncated or corrupt file fails with a clear error, never an OOM
+    /// or a bare `read_exact` EOF), `numel` uses checked multiplication,
+    /// and duplicate tensor names are rejected.
     pub fn load(path: &Path) -> Result<Self> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-        );
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+        let mut c = Cursor {
+            buf: &buf,
+            off: 0,
+            path,
+        };
+        let magic = c.bytes(4, "magic")?;
+        if magic != MAGIC {
             bail!("{}: bad magic {:?}", path.display(), magic);
         }
-        let n = read_u32(&mut r)? as usize;
+        let n = c.u32("entry count")? as usize;
         let mut store = Self::new();
-        for _ in 0..n {
-            let name_len = read_u16(&mut r)? as usize;
-            let mut name = vec![0u8; name_len];
-            r.read_exact(&mut name)?;
-            let name = String::from_utf8(name).context("tensor name not utf8")?;
-            let dtype = read_u8(&mut r)?;
-            let ndim = read_u8(&mut r)? as usize;
+        for e in 0..n {
+            let entry = format!("entry {e}/{n}");
+            let name_len = c.u16(&entry)? as usize;
+            let name = String::from_utf8(c.bytes(name_len, &entry)?.to_vec())
+                .with_context(|| format!("{entry}: tensor name not utf8"))?;
+            if store.contains(&name) {
+                bail!("{}: duplicate tensor name '{name}'", path.display());
+            }
+            let dtype = c.u8(&name)?;
+            let ndim = c.u8(&name)? as usize;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(read_u64(&mut r)? as usize);
+                let dim = usize::try_from(c.u64(&name)?)
+                    .map_err(|_| anyhow::anyhow!("tensor '{name}': dimension exceeds usize"))?;
+                shape.push(dim);
             }
-            let numel: usize = shape.iter().product();
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| {
+                    format!("tensor '{name}': shape {shape:?} element count overflows")
+                })?;
+            let payload_bytes = numel
+                .checked_mul(4)
+                .with_context(|| format!("tensor '{name}': payload size overflows"))?;
+            let payload = c.bytes(payload_bytes, &name)?;
             match dtype {
                 0 => {
-                    let mut data = vec![0f32; numel];
-                    let mut buf = vec![0u8; numel * 4];
-                    r.read_exact(&mut buf)?;
-                    for (i, c) in buf.chunks_exact(4).enumerate() {
-                        data[i] = f32::from_le_bytes(c.try_into().unwrap());
-                    }
+                    let data: Vec<f32> = payload
+                        .chunks_exact(4)
+                        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                        .collect();
                     store.insert(&name, Tensor::from_vec(&shape, data)?);
                 }
                 1 => {
-                    let mut data = vec![0i32; numel];
-                    let mut buf = vec![0u8; numel * 4];
-                    r.read_exact(&mut buf)?;
-                    for (i, c) in buf.chunks_exact(4).enumerate() {
-                        data[i] = i32::from_le_bytes(c.try_into().unwrap());
-                    }
+                    let data: Vec<i32> = payload
+                        .chunks_exact(4)
+                        .map(|ch| i32::from_le_bytes(ch.try_into().unwrap()))
+                        .collect();
                     store.insert_i32(&name, TensorI32::from_vec(&shape, data)?);
                 }
-                d => bail!("unknown dtype {d}"),
+                d => bail!("{}: tensor '{name}': unknown dtype {d}", path.display()),
             }
         }
         Ok(store)
+    }
+}
+
+/// Bounds-checked reader over the slurped file: every read is validated
+/// against the remaining length first, so corrupt headers surface as
+/// "declares N bytes but only M remain", not allocation blowups.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+    path: &'a Path,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remain = self.buf.len() - self.off;
+        if n > remain {
+            bail!(
+                "{}: {what} declares {n} bytes but only {remain} remain — \
+                 truncated or corrupt file",
+                self.path.display()
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
     }
 }
 
@@ -150,30 +208,6 @@ fn write_header(w: &mut impl Write, name: &str, dtype: u8, shape: &[usize]) -> R
         w.write_all(&(d as u64).to_le_bytes())?;
     }
     Ok(())
-}
-
-fn read_u8(r: &mut impl Read) -> Result<u8> {
-    let mut b = [0u8; 1];
-    r.read_exact(&mut b)?;
-    Ok(b[0])
-}
-
-fn read_u16(r: &mut impl Read) -> Result<u16> {
-    let mut b = [0u8; 2];
-    r.read_exact(&mut b)?;
-    Ok(u16::from_le_bytes(b))
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -216,6 +250,82 @@ mod tests {
         let p = tmp("bad");
         std::fs::write(&p, b"NOPE....").unwrap();
         assert!(TensorStore::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_file_fails_clearly() {
+        let mut s = TensorStore::new();
+        let mut rng = Rng::new(9);
+        s.insert("w", Tensor::randn(&mut rng, &[8, 8], 1.0));
+        let p = tmp("trunc");
+        s.save(&p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // Cut inside the payload, inside the header, and after the magic.
+        for cut in [full.len() - 5, 4 + 4 + 1, 6] {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let err = TensorStore::load(&p).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("remain"),
+                "cut at {cut}: unexpected error '{err}'"
+            );
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn oversized_header_rejected_without_allocation() {
+        // Header claims a [2^40, 2^40] tensor: numel must fail via
+        // checked multiplication, not attempt an absurd allocation.
+        let p = tmp("huge");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(0); // dtype f32
+        buf.push(2); // ndim
+        buf.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        buf.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&p, &buf).unwrap();
+        let err = TensorStore::load(&p).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "unexpected error '{err}'");
+        // A merely-huge (non-overflowing) claim is bounded by file length.
+        let mut buf2 = Vec::new();
+        buf2.extend_from_slice(MAGIC);
+        buf2.extend_from_slice(&1u32.to_le_bytes());
+        buf2.extend_from_slice(&1u16.to_le_bytes());
+        buf2.push(b'x');
+        buf2.push(0);
+        buf2.push(1);
+        buf2.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&p, &buf2).unwrap();
+        let err = TensorStore::load(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated") || err.contains("remain"),
+            "unexpected error '{err}'"
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn duplicate_tensor_names_rejected() {
+        // Handcraft a file with two entries under the same name.
+        let p = tmp("dup");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        for _ in 0..2 {
+            buf.extend_from_slice(&1u16.to_le_bytes());
+            buf.push(b'a');
+            buf.push(0); // dtype f32
+            buf.push(1); // ndim
+            buf.extend_from_slice(&1u64.to_le_bytes());
+            buf.extend_from_slice(&1.5f32.to_le_bytes());
+        }
+        std::fs::write(&p, &buf).unwrap();
+        let err = TensorStore::load(&p).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "unexpected error '{err}'");
         std::fs::remove_file(p).ok();
     }
 

@@ -197,14 +197,97 @@ fn serve_roundtrip_quantized() {
     .unwrap();
     assert_eq!(rep.requests, 6);
     assert_eq!(rep.rejected, 2);
+    assert_eq!(rep.reject_counts.wrong_length, 1);
+    assert_eq!(rep.reject_counts.bad_token, 1);
     assert!(rep.batches >= 2); // batch=4 -> at least 2 batches for 6 reqs
     for r in responders {
         let resp = r.recv().unwrap();
-        assert_eq!(resp.next_logits.len(), cfg.model.vocab);
-        assert!(resp.next_logits.iter().all(|v| v.is_finite()));
+        let c = resp.completion().expect("valid request served");
+        assert_eq!(c.next_logits.len(), cfg.model.vocab);
+        assert!(c.next_logits.iter().all(|v| v.is_finite()));
     }
-    // The malformed clients observe a closed channel, not a hang.
-    assert!(bad_rx.recv().is_err());
-    assert!(oob_rx.recv().is_err());
+    // The malformed clients hear a structured reason, not a disconnect.
+    let bad = bad_rx.recv().unwrap();
+    assert_eq!(bad.rejection().unwrap().cause(), "wrong_length");
+    let oob = oob_rx.recv().unwrap();
+    assert_eq!(oob.rejection().unwrap().cause(), "bad_token");
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_generate_roundtrip() {
+    use faquant::engine::{FinishReason, GenConfig};
+    use faquant::serve::{GenServeRequest, GenServeResponse};
+
+    let rt = runtime();
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("gen");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..5usize {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(GenServeRequest {
+            prompt: (0..4 + i).map(|k| ((k * 5 + i) % cfg.model.vocab) as i32).collect(),
+            max_new: 3 + i % 3,
+            stop_id: None,
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    // One malformed request mid-queue: rejected with a reason, loop lives.
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    tx.send(GenServeRequest {
+        prompt: vec![],
+        max_new: 4,
+        stop_id: None,
+        respond: bad_tx,
+    })
+    .unwrap();
+    drop(tx);
+
+    let rep = faquant::serve::serve_generate(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            temperature: 0.7,
+            top_k: 12,
+            seed: 5,
+            slots: 2, // fewer slots than requests: continuous batching
+        },
+        rx,
+        std::time::Duration::from_millis(1),
+    )
+    .unwrap();
+
+    for (i, r) in responders.into_iter().enumerate() {
+        match r.recv().unwrap() {
+            GenServeResponse::Done { tokens, finish, queued_at, done_at } => {
+                assert_eq!(finish, FinishReason::MaxTokens);
+                assert_eq!(tokens.len(), 3 + i % 3);
+                assert!(tokens.iter().all(|&t| t >= 0 && (t as usize) < cfg.model.vocab));
+                assert!(done_at >= queued_at);
+            }
+            GenServeResponse::Rejected(r) => panic!("request {i} rejected: {r}"),
+        }
+    }
+    match bad_rx.recv().unwrap() {
+        GenServeResponse::Rejected(reason) => assert_eq!(reason.cause(), "empty_prompt"),
+        GenServeResponse::Done { .. } => panic!("empty prompt must be rejected"),
+    }
+    assert_eq!(rep.requests, 6);
+    assert_eq!(rep.engine.sequences, 5);
+    assert_eq!(rep.engine.rejected, 1);
+    assert_eq!(rep.engine.reject_counts.empty_prompt, 1);
+    assert!(rep.engine.prefill_tokens > 0 && rep.engine.decode_tokens > 0);
+    assert!(rep.engine.mean_slot_occupancy > 0.0);
+    assert!(rep.p95_ms >= rep.p50_ms);
     std::fs::remove_dir_all(&cfg.runs_dir).ok();
 }

@@ -6,11 +6,14 @@
 
 use faquant::calib::{capture, faq_stats, fused_stats, preview_stats};
 use faquant::config::{Method, ModelConfig, QuantConfig};
+use faquant::engine::{Engine, GenConfig, GenRequest, KvCache};
 use faquant::model::Params;
 use faquant::quant::{
     alpha_grid, alpha_scale, fakequant, packing, quantize_ints, quantize_model, scaled_fakequant,
 };
-use faquant::runtime::{lit_f32, lit_i32, Runtime, Value};
+use faquant::runtime::{lit_f32, lit_i32, Buffer, Runtime, Value};
+use faquant::serve::qmodel_literals;
+use faquant::store::TensorStore;
 use faquant::tensor::{par, Rng, Tensor, TensorI32};
 use faquant::testutil::{forall, TensorGen, UsizeIn};
 
@@ -348,6 +351,198 @@ fn quantize_and_forward_bit_identical_across_thread_counts() {
         assert_eq!(diffs, 0, "{diffs} words differ between 1 and {t} threads");
     }
     par::set_threads(0);
+}
+
+// ------------------------------------------------- KV-cached decode engine
+
+/// Feed `toks` through `decode_step_q` one token per step, slot `s`
+/// starting at global step `offsets[s]` (staggered admission exercises
+/// the continuous-batching path: every step mixes slots at different
+/// positions, some inactive). Returns the per-position logits [B, T, V].
+fn decode_all_positions(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &faquant::quant::QuantizedModel,
+    toks: &TensorI32,
+    offsets: &[usize],
+) -> Tensor {
+    let (b, t) = (toks.shape()[0], toks.shape()[1]);
+    let v = cfg.vocab;
+    let lits = qmodel_literals(params, qm).unwrap();
+    let bufs: Vec<Buffer> = lits.iter().map(|l| rt.upload_literal(l).unwrap()).collect();
+    let mut cache = KvCache::new(cfg.n_layer, b, t, cfg.d_model);
+    let mut out = vec![0.0f32; b * t * v];
+    let max_step = offsets.iter().max().unwrap() + t;
+    for step in 0..max_step {
+        let mut pos = vec![-1i32; b];
+        let mut tk = vec![0i32; b];
+        let mut active = Vec::new();
+        for s in 0..b {
+            if step < offsets[s] {
+                continue;
+            }
+            let c = step - offsets[s];
+            if c < t {
+                pos[s] = c as i32;
+                tk[s] = toks.data()[s * t + c];
+                active.push((s, c));
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        let (kt, vt) = cache.take().unwrap();
+        let k_buf = Buffer::Host(Value::F32(kt));
+        let v_buf = Buffer::Host(Value::F32(vt));
+        let pos_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], pos).unwrap()));
+        let tok_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], tk).unwrap()));
+        let outs = {
+            let mut args: Vec<&Buffer> = bufs.iter().collect();
+            args.extend([&k_buf, &v_buf, &pos_buf, &tok_buf]);
+            rt.exec_b(&cfg.name, "decode_step_q", &args).unwrap()
+        };
+        match (k_buf, v_buf) {
+            (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(vv))) => {
+                cache.put_back(k, vv).unwrap()
+            }
+            _ => unreachable!("slabs stay host-resident"),
+        }
+        let logits = outs[0].as_f32().unwrap();
+        let k_new = outs[1].as_f32().unwrap();
+        let v_new = outs[2].as_f32().unwrap();
+        for &(s, c) in &active {
+            cache.append(s, k_new, v_new).unwrap();
+            out[(s * t + c) * v..(s * t + c + 1) * v]
+                .copy_from_slice(&logits.data()[s * v..(s + 1) * v]);
+        }
+    }
+    Tensor::from_vec(&[b, t, v], out).unwrap()
+}
+
+#[test]
+fn decode_with_kv_cache_matches_full_forward_bitwise() {
+    // THE engine contract: KV-cached decode logits are bitwise equal to
+    // the full-sequence quantized forward at every position — at 1/2/8
+    // threads and under staggered continuous-batching admission.
+    let rt = Runtime::native();
+    let cfg = ModelConfig::preset("pico").unwrap();
+    let params = Params::init(&cfg, 77);
+    let qcfg = QuantConfig::with_method(Method::Rtn);
+    let qm = quantize_model(&rt, &qcfg, &params, None).unwrap();
+    let (b, t) = (4usize, 16usize);
+    let mut rng = Rng::new(123);
+    let toks = TensorI32::from_vec(
+        &[b, t],
+        (0..b * t).map(|_| rng.below(cfg.vocab) as i32).collect(),
+    )
+    .unwrap();
+
+    par::set_threads(1);
+    let mut args: Vec<Value> = qmodel_literals(&params, &qm).unwrap();
+    args.push(lit_i32(&toks).unwrap());
+    let outs = rt.exec(&cfg.name, "fwd_logits_q", &args).unwrap();
+    let full = outs[0].as_f32().unwrap().clone();
+    assert_eq!(full.shape(), &[b, t, cfg.vocab]);
+
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let dec = decode_all_positions(&rt, &cfg, &params, &qm, &toks, &[0, 3, 5, 11]);
+        let ctx = format!("decode vs full at {threads} threads");
+        assert_bits_eq(dec.data(), full.data(), &ctx);
+    }
+    par::set_threads(0);
+}
+
+#[test]
+fn generation_deterministic_across_threads_and_slot_counts() {
+    // Seeded-sampler determinism: the same (seed, request id) pair must
+    // produce the same tokens regardless of thread count or how many
+    // slots the engine batches over (different slot counts change every
+    // step's batch composition).
+    let rt = Runtime::native();
+    let cfg = ModelConfig::preset("pico").unwrap();
+    let params = Params::init(&cfg, 31);
+    let qcfg = QuantConfig::with_method(Method::Rtn);
+    let qm = quantize_model(&rt, &qcfg, &params, None).unwrap();
+    let reqs = || -> Vec<GenRequest> {
+        (0..5)
+            .map(|i| GenRequest {
+                id: i,
+                prompt: (0..3 + i).map(|k| ((k * 7 + i) % cfg.vocab) as i32).collect(),
+                max_new: 6,
+                stop_id: None,
+            })
+            .collect()
+    };
+    let run = |slots: usize, threads: usize| -> Vec<Vec<i32>> {
+        par::set_threads(threads);
+        let mut eng = Engine::new(
+            &rt,
+            &cfg,
+            &params,
+            &qm,
+            GenConfig {
+                temperature: 0.9,
+                top_k: 8,
+                seed: 2024,
+                slots,
+            },
+        )
+        .unwrap();
+        let (outs, _) = eng.generate(reqs()).unwrap();
+        par::set_threads(0);
+        outs.into_iter().map(|o| o.tokens).collect()
+    };
+    let base = run(4, 1);
+    assert_eq!(base.len(), 5);
+    assert!(base.iter().all(|tks| tks.len() == 6));
+    assert_eq!(base, run(2, 8), "slot/thread count changed sampled tokens");
+    assert_eq!(base, run(3, 2), "slot/thread count changed sampled tokens");
+    assert_eq!(base, run(4, 1), "same run not reproducible");
+}
+
+// ------------------------------------------------------------ tensor store
+
+#[test]
+fn prop_store_roundtrips_and_rejects_any_truncation() {
+    forall(33, 15, &UsizeIn(1, 1_000_000), |&seed| {
+        let mut rng = Rng::new(seed as u64 * 77 + 3);
+        let mut s = TensorStore::new();
+        for i in 0..(1 + rng.below(3)) {
+            let r = 1 + rng.below(6);
+            let c = 1 + rng.below(6);
+            s.insert(&format!("t{i}"), Tensor::randn(&mut rng, &[r, c], 1.0));
+        }
+        let fname = format!("faquant_prop_store_{}_{seed}.fqt", std::process::id());
+        let p = std::env::temp_dir().join(fname);
+        s.save(&p).map_err(|e| e.to_string())?;
+        let full = std::fs::read(&p).map_err(|e| e.to_string())?;
+        // The intact file roundtrips bit-exactly.
+        let back = TensorStore::load(&p).map_err(|e| e.to_string())?;
+        if back.len() != s.len() {
+            return Err("entry count differs after roundtrip".into());
+        }
+        for name in s.names() {
+            let a = s.get(name).map_err(|e| e.to_string())?;
+            let b = back.get(name).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("tensor '{name}' differs after roundtrip"));
+            }
+        }
+        // EVERY strict prefix must fail with an error (clear truncation
+        // diagnostics, no panic, no OOM), since the format has no
+        // trailing padding.
+        for _ in 0..4 {
+            let cut = 4 + rng.below(full.len() - 4);
+            std::fs::write(&p, &full[..cut]).map_err(|e| e.to_string())?;
+            if TensorStore::load(&p).is_ok() {
+                return Err(format!("truncated file (cut at {cut}) loaded"));
+            }
+        }
+        std::fs::remove_file(&p).ok();
+        Ok(())
+    });
 }
 
 // -------------------------------------------------------------- Theorem 1
