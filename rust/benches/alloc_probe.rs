@@ -1,0 +1,105 @@
+//! Allocation probe for the prepared decode hot path (DESIGN.md §11).
+//!
+//! Asserts the two halves of the prepared-model contract:
+//!
+//! 1. a steady-state prepared quantized linear (the decode hot path's
+//!    per-token weight work) performs **zero** heap allocations — the
+//!    scaled activation and the matmul output cycle through the
+//!    per-thread scratch arena;
+//! 2. a whole steady-state `decode_step_q` allocates fewer bytes than
+//!    the *smallest* dequantized weight matrix of the model — i.e. no
+//!    weight dequantization and no weight-panel packing can be hiding
+//!    anywhere in step time.
+//!
+//! Requires the bench-only counting global allocator:
+//!
+//! ```bash
+//! cargo bench --bench alloc_probe --features alloc-count
+//! ```
+
+#[cfg(not(feature = "alloc-count"))]
+fn main() {
+    println!(
+        "alloc_probe: counting allocator disabled; run with \
+         `cargo bench --bench alloc_probe --features alloc-count`"
+    );
+}
+
+#[cfg(feature = "alloc-count")]
+fn main() {
+    use faquant::benchkit::alloc;
+    use faquant::config::{Method, ModelConfig, QuantConfig};
+    use faquant::model::Params;
+    use faquant::quant::quantize_model;
+    use faquant::runtime::{native, Buffer, Runtime, Value};
+    use faquant::serve::qmodel_literals;
+    use faquant::tensor::{par, Rng, Tensor, TensorI32};
+
+    // The zero-allocation contract is about the serial hot path; pool
+    // dispatch bookkeeping is out of scope (and tiny decode shapes never
+    // cross the dispatch threshold anyway).
+    par::set_threads(1);
+
+    let rt = Runtime::native();
+    let cfg = ModelConfig::preset("pico").expect("preset");
+    let params = Params::init(&cfg, 7);
+    let qcfg = QuantConfig::with_method(Method::Rtn);
+    let qm = quantize_model(&rt, &qcfg, &params, None).expect("quantize");
+    let lits = qmodel_literals(&params, &qm).expect("lits");
+    let bufs = rt.prepare_qweights(&cfg.name, &lits).expect("prepare");
+    let Buffer::PreparedQ(pm) = &bufs[0] else {
+        panic!("native prepare_qweights must return a prepared bundle");
+    };
+
+    // --- 1. The quantized-linear path itself: exactly 0 allocations. ---
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&mut rng, &[1, cfg.d_model], 1.0);
+    for _ in 0..4 {
+        native::prepared_qlin_probe(pm, 0, 0, &x).expect("probe warmup");
+    }
+    let (a0, b0) = alloc::snapshot();
+    let numel = native::prepared_qlin_probe(pm, 0, 0, &x).expect("probe");
+    let (a1, b1) = alloc::snapshot();
+    println!(
+        "prepared qlin (out numel {numel}): {} allocations, {} bytes",
+        a1 - a0,
+        b1 - b0
+    );
+    assert_eq!(
+        a1 - a0,
+        0,
+        "steady-state prepared quantized linear must not allocate"
+    );
+
+    // --- 2. A whole steady-state decode step: no weight work. ---
+    let (l, d, t_max) = (cfg.n_layer, cfg.d_model, cfg.seq);
+    let k_buf = Buffer::Host(Value::F32(Tensor::zeros(&[l, 1, t_max, d])));
+    let v_buf = Buffer::Host(Value::F32(Tensor::zeros(&[l, 1, t_max, d])));
+    let pos_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[1], vec![0]).expect("pos")));
+    let tok_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[1], vec![3]).expect("tok")));
+    let args: Vec<&Buffer> = vec![&bufs[0], &k_buf, &v_buf, &pos_buf, &tok_buf];
+    for _ in 0..5 {
+        rt.exec_b(&cfg.name, "decode_step_q", &args).expect("step");
+    }
+    let (a0, b0) = alloc::snapshot();
+    rt.exec_b(&cfg.name, "decode_step_q", &args).expect("step");
+    let (a1, b1) = alloc::snapshot();
+    // The smallest quantized linear is the o-projection, [d, d].
+    let smallest_weight_bytes = d * d * std::mem::size_of::<f32>();
+    println!(
+        "steady-state decode_step_q: {} allocations, {} bytes \
+         (smallest dequantized weight = {} bytes)",
+        a1 - a0,
+        b1 - b0,
+        smallest_weight_bytes
+    );
+    assert!(
+        b1 - b0 < smallest_weight_bytes,
+        "a steady-state decode step allocated {} bytes, >= the smallest dequantized \
+         weight matrix ({} bytes): weight dequant/packing leaked into step time",
+        b1 - b0,
+        smallest_weight_bytes
+    );
+    par::set_threads(0);
+    println!("alloc_probe: OK");
+}

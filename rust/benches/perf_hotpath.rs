@@ -34,7 +34,7 @@ use faquant::corpus::Batcher;
 use faquant::engine::{Engine, GenConfig, GenRequest};
 use faquant::eval::{calib_ids, canonical_tokenizer};
 use faquant::quant::{packing, scaled_quantize_ints, search_alpha};
-use faquant::runtime::{lit_f32, lit_i32, Runtime};
+use faquant::runtime::{lit_f32, lit_i32, Buffer, Runtime};
 use faquant::serve::qmodel_literals;
 use faquant::tensor::{par, Rng};
 
@@ -95,8 +95,9 @@ fn main() {
     let eval_its = s.throughput(1.0);
     stages.push(s);
 
-    // 4. quantized serve batch (int-code path).
-    let mut qargs = qmodel_literals(&params, &qm).expect("qlits");
+    // 4. quantized serve batch (int-code path, per-call dequant).
+    let qlits = qmodel_literals(&params, &qm).expect("qlits");
+    let mut qargs = qlits.clone();
     qargs.push(lit_i32(&batch).expect("lit"));
     let s = bench("fwd_logits_q(batch=4xT128)", 1, 8, || {
         rt.exec(&cfg.model.name, "fwd_logits_q", &qargs).expect("exec");
@@ -105,6 +106,42 @@ fn main() {
     println!(
         "  -> quantized/fp batch throughput ratio: {:.2}x",
         s.throughput(1.0) / eval_its
+    );
+    let fwdq_its = s.throughput(1.0);
+    stages.push(s);
+
+    // 4b. one-time weight prepare (dequantize-once panel pack, DESIGN
+    // §11). One pre-built runtime per iteration, kept alive past the
+    // timer, so neither runtime bring-up/teardown nor the prepared-state
+    // cache skews the measurement.
+    let mut fresh_rts: Vec<Runtime> = (0..3).map(|_| common::runtime()).collect();
+    let mut used_rts: Vec<Runtime> = Vec::new();
+    let s = bench("prepare_secs", 0, 3, || {
+        let fresh = fresh_rts.pop().expect("one runtime per iteration");
+        fresh
+            .prepare_qweights(&cfg.model.name, &qlits)
+            .expect("prepare");
+        used_rts.push(fresh);
+    });
+    drop(used_rts);
+    println!("{}", report(&s));
+    let prepare_secs = s.mean;
+    stages.push(s);
+
+    // 4c. quantized serve batch over the prepared bundle.
+    let qbufs = rt
+        .prepare_qweights(&cfg.model.name, &qlits)
+        .expect("prepare");
+    let tok_buf = rt.upload_i32(&batch).expect("upload");
+    let s = bench("fwd_logits_q_prepared(batch=4xT128)", 1, 8, || {
+        let mut args: Vec<&Buffer> = qbufs.iter().collect();
+        args.push(&tok_buf);
+        rt.exec_b(&cfg.model.name, "fwd_logits_q", &args).expect("exec");
+    });
+    println!("{}", report(&s));
+    println!(
+        "  -> prepared/unprepared batch throughput ratio: {:.2}x",
+        s.throughput(1.0) / fwdq_its
     );
     stages.push(s);
 
@@ -120,9 +157,12 @@ fn main() {
     stages.push(s);
 
     // 6. KV-cached generation: continuous-batching decode engine over
-    // decode_step_q. The prefill/decode tokens-per-second split is the
-    // serving headline (mean_s of the *_tokens_per_sec stages is seconds
-    // per token; the top-level report carries the tok/s values).
+    // decode_step_q, unprepared (per-step dequant) vs prepared
+    // (dequantize-once packed panels, DESIGN §11) — logits are
+    // bit-identical, only the wall moves. The prefill/decode
+    // tokens-per-second split is the serving headline (mean_s of the
+    // *_tokens_per_sec stages is seconds per token; the top-level report
+    // carries the tok/s values).
     let prompt_len = cfg.model.seq / 4;
     let max_new = cfg.model.seq / 4;
     let n_seqs = cfg.model.batch * 2;
@@ -138,8 +178,17 @@ fn main() {
             }
         })
         .collect();
-    let mut engine = Engine::new(&rt, &cfg.model, &params, &qm, GenConfig::default())
-        .expect("engine");
+    let mut engine = Engine::new(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            prepared: false,
+            ..GenConfig::default()
+        },
+    )
+    .expect("engine");
     let s = bench(
         &format!("generate({n_seqs}seq,prefill{prompt_len},decode{max_new})"),
         0,
@@ -167,6 +216,38 @@ fn main() {
         "decode_tokens_per_sec",
         grep.decode_tokens,
         grep.decode_secs,
+    ));
+
+    // 6b. Same workload over the prepared weight bundle.
+    let mut engine_p = Engine::new(&rt, &cfg.model, &params, &qm, GenConfig::default())
+        .expect("engine(prepared)");
+    let s = bench(
+        &format!("generate_prepared({n_seqs}seq,prefill{prompt_len},decode{max_new})"),
+        0,
+        1,
+        || {
+            engine_p.generate(reqs.clone()).expect("generate");
+        },
+    );
+    println!("{}", report(&s));
+    stages.push(s);
+    let grep_p = engine_p.report();
+    let decode_prepared_tps = grep_p.decode_tps();
+    println!(
+        "  -> prepared: prefill {:.0} tok/s, decode {decode_prepared_tps:.0} tok/s \
+         ({:.2}x unprepared decode; prepare cost {prepare_secs:.4}s)",
+        grep_p.prefill_tps(),
+        decode_prepared_tps / decode_tps.max(1e-9)
+    );
+    stages.push(PerfReport::per_token_stage(
+        "prefill_prepared_tokens_per_sec",
+        grep_p.prefill_tokens,
+        grep_p.prefill_secs,
+    ));
+    stages.push(PerfReport::per_token_stage(
+        "decode_prepared_tokens_per_sec",
+        grep_p.decode_tokens,
+        grep_p.decode_secs,
     ));
 
     // Threading headline: end-to-end Phase-B quantize, 1 thread vs the
@@ -218,6 +299,8 @@ fn main() {
         coordinator_overhead: overhead,
         prefill_tps,
         decode_tps,
+        prepare_secs,
+        decode_prepared_tps,
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

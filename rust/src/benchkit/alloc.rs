@@ -1,0 +1,58 @@
+//! Global-allocation counter (bench-only, behind the `alloc-count`
+//! feature).
+//!
+//! `benches/alloc_probe.rs` asserts the DESIGN.md §11 contract — a
+//! steady-state decode step performs **zero** heap allocations in the
+//! quantized-linear path — by installing [`CountingAllocator`] as the
+//! global allocator (see `lib.rs`) and reading the counters around the
+//! probed region. Counting is a pair of relaxed atomic increments per
+//! allocation; never enabled in default builds.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// System allocator wrapper that counts allocation events and bytes
+/// (allocs, reallocs, and zeroed allocs; deallocations are free).
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Cumulative allocation events since process start (all threads).
+pub fn allocations() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Cumulative requested bytes since process start (all threads).
+pub fn allocated_bytes() -> usize {
+    BYTES.load(Ordering::Relaxed)
+}
+
+/// Snapshot of both counters: `(allocations, bytes)`.
+pub fn snapshot() -> (usize, usize) {
+    (allocations(), allocated_bytes())
+}

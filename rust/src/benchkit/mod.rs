@@ -5,6 +5,9 @@
 //! table printer used by every paper-table bench to emit rows in the same
 //! format the paper reports.
 
+#[cfg(feature = "alloc-count")]
+pub mod alloc;
+
 use crate::tensor::{mean_std, percentile};
 use std::time::Instant;
 
@@ -190,11 +193,18 @@ pub struct PerfReport {
     /// execution (DESIGN §9; measured single-threaded so the sum of
     /// per-entry exec times is comparable to wall time).
     pub coordinator_overhead: f32,
-    /// KV-cached generation engine: prompt tokens per second (prefill).
+    /// KV-cached generation engine: prompt tokens per second (prefill,
+    /// unprepared seed path — the baseline).
     pub prefill_tps: f32,
     /// KV-cached generation engine: generated tokens per second (decode,
-    /// the serving-throughput headline).
+    /// unprepared seed path — the baseline).
     pub decode_tps: f32,
+    /// One-time cost of preparing the quantized weight bundle
+    /// (dequantize-once panel pack, DESIGN.md §11), seconds.
+    pub prepare_secs: f32,
+    /// Decode tokens per second over the prepared weight bundle (the
+    /// serving-throughput headline from this PR on).
+    pub decode_prepared_tps: f32,
 }
 
 impl PerfReport {
@@ -205,7 +215,8 @@ impl PerfReport {
              \"threads\": {},\n  \"cores\": {},\n  \"stages\": [\n    {}\n  ],\n  \
              \"quantize_secs_1t\": {},\n  \"quantize_secs_nt\": {},\n  \
              \"speedup_vs_1t\": {},\n  \"coordinator_overhead\": {},\n  \
-             \"prefill_tokens_per_sec\": {},\n  \"decode_tokens_per_sec\": {}\n}}\n",
+             \"prefill_tokens_per_sec\": {},\n  \"decode_tokens_per_sec\": {},\n  \
+             \"prepare_secs\": {},\n  \"decode_prepared_tokens_per_sec\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -216,6 +227,8 @@ impl PerfReport {
             json_f32(self.coordinator_overhead),
             json_f32(self.prefill_tps),
             json_f32(self.decode_tps),
+            json_f32(self.prepare_secs),
+            json_f32(self.decode_prepared_tps),
         )
     }
 
@@ -301,6 +314,8 @@ mod tests {
             coordinator_overhead: 0.01,
             prefill_tps: 1000.0,
             decode_tps: 250.0,
+            prepare_secs: 0.02,
+            decode_prepared_tps: 900.0,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
@@ -308,6 +323,8 @@ mod tests {
         assert!(j.contains("\"speedup_vs_1t\""));
         assert!(j.contains("\"prefill_tokens_per_sec\""));
         assert!(j.contains("\"decode_tokens_per_sec\""));
+        assert!(j.contains("\"prepare_secs\""));
+        assert!(j.contains("\"decode_prepared_tokens_per_sec\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).

@@ -40,6 +40,10 @@ pub struct GenConfig {
     pub seed: u64,
     /// Batch slots (0 = the model preset's batch size).
     pub slots: usize,
+    /// Use the runtime's prepared weight bundle (dequantize-once packed
+    /// panels, DESIGN.md §11; bit-identical logits). `false` keeps the
+    /// per-step dequantizing seed path — the perf bench's baseline.
+    pub prepared: bool,
 }
 
 impl Default for GenConfig {
@@ -49,6 +53,7 @@ impl Default for GenConfig {
             top_k: 0,
             seed: 7,
             slots: 0,
+            prepared: true,
         }
     }
 }
@@ -71,7 +76,7 @@ pub struct Engine<'rt> {
     rt: &'rt Runtime,
     cfg: ModelConfig,
     gen: GenConfig,
-    weight_bufs: Vec<Buffer>,
+    weight_bufs: std::sync::Arc<Vec<Buffer>>,
     cache: KvCache,
     slots: Vec<Option<SeqState>>,
     queue: VecDeque<SeqState>,
@@ -88,9 +93,11 @@ pub struct Engine<'rt> {
 }
 
 impl<'rt> Engine<'rt> {
-    /// Build an engine over a quantized model: uploads the weight bundle
-    /// once (reused by every step) and sizes the cache to `[L, slots,
-    /// seq, d]`.
+    /// Build an engine over a quantized model: prepares the weight
+    /// bundle once — by default through the runtime's prepared-state map
+    /// (dequantize-once packed panels on the native backend, DESIGN.md
+    /// §11; shared across engines over the same artifact) — and sizes
+    /// the cache to `[L, slots, seq, d]`.
     pub fn new(
         rt: &'rt Runtime,
         cfg: &ModelConfig,
@@ -102,10 +109,16 @@ impl<'rt> Engine<'rt> {
             0 => cfg.batch,
             n => n,
         };
-        let weight_bufs = qmodel_literals(params, qm)?
-            .iter()
-            .map(|l| rt.upload_literal(l))
-            .collect::<Result<Vec<_>>>()?;
+        let lits = qmodel_literals(params, qm)?;
+        let weight_bufs = if gen.prepared {
+            rt.prepare_qweights(&cfg.name, &lits)?
+        } else {
+            std::sync::Arc::new(
+                lits.iter()
+                    .map(|l| rt.upload_literal(l))
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        };
         let cache = KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model);
         Ok(Self {
             rt,
@@ -368,6 +381,37 @@ mod tests {
         assert_eq!(rep.decode_tokens, 24);
         assert!(rep.steps >= 7, "6 seqs over 4 slots need two waves");
         assert!(rep.mean_slot_occupancy > 0.0 && rep.mean_slot_occupancy <= 1.0);
+    }
+
+    #[test]
+    fn prepared_and_unprepared_paths_generate_identical_tokens() {
+        // The prepared (dequantize-once packed panels) path is
+        // bit-identical to the seed path, so greedy generations match
+        // token for token (DESIGN.md §11).
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let reqs = || -> Vec<GenRequest> {
+            (0..3)
+                .map(|i| GenRequest {
+                    id: i,
+                    prompt: vec![(i as i32 * 5) % cfg.vocab as i32, 2, 7],
+                    max_new: 5,
+                    stop_id: None,
+                })
+                .collect()
+        };
+        let run = |prepared: bool| -> Vec<Vec<i32>> {
+            let gen = GenConfig {
+                prepared,
+                ..GenConfig::default()
+            };
+            let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+            let (outs, _) = eng.generate(reqs()).unwrap();
+            outs.into_iter().map(|o| o.tokens).collect()
+        };
+        assert_eq!(run(true), run(false));
+        // Both engines over the same artifact shared one prepared state.
+        assert_eq!(rt.prepared_qweights(), 1);
     }
 
     #[test]

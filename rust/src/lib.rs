@@ -47,3 +47,12 @@ pub mod train;
 
 /// Crate-wide result alias (anyhow is the only error dependency offline).
 pub type Result<T> = anyhow::Result<T>;
+
+/// With the bench-only `alloc-count` feature, every heap allocation in
+/// the process goes through the counting allocator so
+/// `benches/alloc_probe.rs` can assert the decode hot path's
+/// zero-allocation contract (DESIGN.md §11). Default builds use the
+/// system allocator untouched.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static COUNTING_ALLOCATOR: benchkit::alloc::CountingAllocator = benchkit::alloc::CountingAllocator;

@@ -266,6 +266,7 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             top_k,
             seed: gen_seed,
             slots: 0,
+            ..GenConfig::default()
         },
     )?;
     let reqs: Vec<GenRequest> = prompts

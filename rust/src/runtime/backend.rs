@@ -34,6 +34,23 @@ pub trait Backend: Send + Sync {
     /// seconds spent compiling — 0.0 for backends with nothing to do.
     fn prepare(&self, manifest: &Manifest, cfg: &str, entry: &str) -> Result<f32>;
 
+    /// Prepare a quantized-deployment weight bundle (`lits` = the
+    /// `fwd_logits_q`/`decode_step_q` weight prefix in canonical order)
+    /// for repeated execution. A backend with a one-time packed
+    /// representation returns `Some(buffers)` — typically one opaque
+    /// bundle buffer that replaces the whole prefix (the native backend's
+    /// dequantize-once [`super::native::PreparedQModel`], DESIGN.md §11).
+    /// The default `None` tells the runtime to fall back to uploading
+    /// each literal individually.
+    fn prepare_weights(
+        &self,
+        _manifest: &Manifest,
+        _cfg: &str,
+        _lits: &[Value],
+    ) -> Result<Option<Vec<Buffer>>> {
+        Ok(None)
+    }
+
     /// Execute an entry on host values. Arity is pre-checked by the
     /// runtime against the manifest.
     fn exec(

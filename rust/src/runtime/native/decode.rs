@@ -2,7 +2,7 @@
 //! deployment artifact.
 //!
 //! Argument layout (after the [`super::qmodel`] weight prefix shared with
-//! `fwd_logits_q`):
+//! `fwd_logits_q` — or a prepared weight bundle in its place):
 //!
 //! | arg       | shape                | meaning |
 //! |---|---|---|
@@ -16,26 +16,28 @@
 //! caller appends to its cache at `pos[b]` (the entry never mutates its
 //! inputs — backends are stateless). Inactive slots get zero rows.
 //!
-//! Two deliberate per-step costs keep the entry stateless and the
-//! contract minimal (both are candidates for a prepared-weights fast
-//! path later): weights are dequantized from codes on every call —
-//! exactly what the qmatmul kernel does per execution (DESIGN.md §7) —
-//! and the head projection runs for every active row, including prefill
-//! rows whose logits the scheduler discards.
+//! The quantized linears run through a [`QExec`]: the seed path
+//! dequantizes weights per call, the prepared path (DESIGN.md §11)
+//! consumes dequantize-once packed panels so a steady-state step does no
+//! weight dequantization, no panel packing, and no heap allocation in
+//! the linear path. One deliberate per-step cost remains either way: the
+//! head projection runs for every active row, including prefill rows
+//! whose logits the scheduler discards.
 //!
 //! **Bit-identity contract** (DESIGN.md §10): for any schedule of steps
 //! that feeds a sequence's tokens in order, the logits emitted at
 //! position `t` are bitwise equal to `fwd_logits_q`'s logits at position
-//! `t` of the full sequence, for every thread count and any mix of other
-//! sequences sharing the batch. Every per-row computation (embedding,
-//! RMSNorm, the quantized linears, residual adds, GELU) is shared with or
-//! identical to the full-sequence path, and the attention below replays
-//! `nn::attention_head_fwd`'s row-`t` arithmetic exactly: scores, the
-//! running max, exponentials, and the output accumulation all run over
-//! keys `j = 0..=t` in ascending order with the same expressions.
+//! `t` of the full sequence, for every thread count, any mix of other
+//! sequences sharing the batch, and both `QExec` paths. Every per-row
+//! computation (embedding, RMSNorm, the quantized linears, residual
+//! adds, GELU) is shared with or identical to the full-sequence path,
+//! and the attention below replays `nn::attention_head_fwd`'s row-`t`
+//! arithmetic exactly: scores, the running max, exponentials, and the
+//! output accumulation all run over keys `j = 0..=t` in ascending order
+//! with the same expressions.
 
 use super::nn;
-use super::qmodel::{self, QWeights};
+use super::qmodel::QExec;
 use crate::config::ModelConfig;
 use crate::runtime::value::Value;
 use crate::tensor::{par, Tensor};
@@ -48,21 +50,23 @@ struct Active {
     tok: usize,
 }
 
+/// Run one decode step. `targs` is the trailing argument list after the
+/// weight prefix: `[k_cache, v_cache, pos, tokens]`.
 pub(super) fn decode_step_q(
     cfg: &ModelConfig,
-    args: &[&Value],
-    group: usize,
+    ex: &QExec,
+    targs: &[&Value],
 ) -> Result<Vec<Value>> {
-    let nw = qmodel::qweight_nargs(cfg);
-    let want = nw + 4;
-    if args.len() != want {
-        bail!("decode_step_q: got {} args, want {want}", args.len());
+    if targs.len() != 4 {
+        bail!(
+            "decode_step_q: got {} trailing args, want 4 (k_cache, v_cache, pos, tokens)",
+            targs.len()
+        );
     }
-    let wts = QWeights::parse(cfg, args)?;
-    let k_cache = args[nw].as_f32().context("k_cache must be f32")?;
-    let v_cache = args[nw + 1].as_f32().context("v_cache must be f32")?;
-    let pos = args[nw + 2].as_i32().context("pos must be i32")?;
-    let toks = args[nw + 3].as_i32().context("tokens must be i32")?;
+    let k_cache = targs[0].as_f32().context("k_cache must be f32")?;
+    let v_cache = targs[1].as_f32().context("v_cache must be f32")?;
+    let pos = targs[2].as_i32().context("pos must be i32")?;
+    let toks = targs[3].as_i32().context("tokens must be i32")?;
 
     let (l, d, vocab) = (cfg.n_layer, cfg.d_model, cfg.vocab);
     if pos.shape().len() != 1 || toks.shape() != pos.shape() {
@@ -81,10 +85,10 @@ pub(super) fn decode_step_q(
         bail!("v_cache {:?} != k_cache {ks:?}", v_cache.shape());
     }
     let t_max = ks[2];
-    if t_max > wts.pos_emb.shape()[0] {
+    if t_max > ex.pos_emb().shape()[0] {
         bail!(
             "cache T_max={t_max} exceeds pos_emb rows {}",
-            wts.pos_emb.shape()[0]
+            ex.pos_emb().shape()[0]
         );
     }
 
@@ -116,8 +120,8 @@ pub(super) fn decode_step_q(
     // Embed the new tokens: same per-row expression as `nn::embed`.
     let mut x = vec![0.0f32; a * d];
     for (i, act) in active.iter().enumerate() {
-        let te = wts.tok_emb.row(act.tok);
-        let pe = wts.pos_emb.row(act.pos);
+        let te = ex.tok_emb().row(act.tok);
+        let pe = ex.pos_emb().row(act.pos);
         let dst = &mut x[i * d..(i + 1) * d];
         for ((o, &t), &p) in dst.iter_mut().zip(te).zip(pe) {
             *o = t + p;
@@ -127,9 +131,9 @@ pub(super) fn decode_step_q(
 
     let mut k_new = vec![0.0f32; l * b * d];
     let mut v_new = vec![0.0f32; l * b * d];
-    for (li, blk) in wts.blocks.iter().enumerate() {
-        let (h, _) = nn::rmsnorm_fwd(&x, blk.ln1.data())?;
-        let qkv = qmodel::qlin(&h, &blk.lins[0], group)?;
+    for li in 0..l {
+        let (h, _) = nn::rmsnorm_fwd(&x, ex.ln1(li))?;
+        let qkv = ex.lin(li, 0, &h)?;
         // This token's key/value rows (qkv columns [d, 2d) and [2d, 3d)),
         // reported to the caller for the cache append.
         for (i, act) in active.iter().enumerate() {
@@ -139,18 +143,26 @@ pub(super) fn decode_step_q(
             v_new[dst..dst + d].copy_from_slice(&row[2 * d..3 * d]);
         }
         let att = attention_decode(&qkv, k_cache, v_cache, li, &active, cfg.n_head, t_max, b)?;
-        let x_mid = x.add(&qmodel::qlin(&att, &blk.lins[1], group)?)?;
-        let (h2, _) = nn::rmsnorm_fwd(&x_mid, blk.ln2.data())?;
-        let u = qmodel::qlin(&h2, &blk.lins[2], group)?.map(nn::gelu);
-        x = x_mid.add(&qmodel::qlin(&u, &blk.lins[3], group)?)?;
+        ex.give(qkv);
+        let o = ex.lin(li, 1, &att)?;
+        let x_mid = x.add(&o)?;
+        ex.give(o);
+        let (h2, _) = nn::rmsnorm_fwd(&x_mid, ex.ln2(li))?;
+        let mut u = ex.lin(li, 2, &h2)?;
+        u.map_inplace(nn::gelu);
+        let dn = ex.lin(li, 3, &u)?;
+        ex.give(u);
+        x = x_mid.add(&dn)?;
+        ex.give(dn);
     }
-    let (hf, _) = nn::rmsnorm_fwd(&x, wts.lnf_g.data())?;
-    let lg = hf.matmul(wts.w_head)?;
+    let (hf, _) = nn::rmsnorm_fwd(&x, ex.lnf())?;
+    let lg = ex.head(&hf)?;
 
     let mut logits = vec![0.0f32; b * vocab];
     for (i, act) in active.iter().enumerate() {
         logits[act.slot * vocab..(act.slot + 1) * vocab].copy_from_slice(lg.row(i));
     }
+    ex.give(lg);
     Ok(vec![
         Value::F32(Tensor::from_vec(&[b, vocab], logits)?),
         Value::F32(Tensor::from_vec(&[l, b, d], k_new)?),

@@ -10,17 +10,19 @@
 
 mod decode;
 mod nn;
+pub mod prepared;
 mod qmodel;
 mod train;
 
 pub use nn::{ParamView, RMS_EPS};
+pub use prepared::PreparedQModel;
 pub use train::loss_and_grads;
 
 use super::backend::Backend;
 use super::registry::Manifest;
 use super::value::{Buffer, Value};
 use crate::quant::scaled_fakequant;
-use crate::tensor::Tensor;
+use crate::tensor::{arena, Tensor};
 use anyhow::{bail, Context, Result};
 
 /// Pure-Rust reference backend (stateless; all state is in the args).
@@ -47,10 +49,60 @@ impl NativeBackend {
         match entry {
             "fwd_logits" => fwd_logits(cfg, args),
             "fwd_capture" => fwd_capture(cfg, args),
-            "fwd_logits_q" => fwd_logits_q(cfg, args, manifest.group),
-            "decode_step_q" => decode::decode_step_q(cfg, args, manifest.group),
+            "fwd_logits_q" => {
+                let nw = qmodel::qweight_nargs(cfg);
+                if args.len() != nw + 1 {
+                    bail!("fwd_logits_q: got {} args, want {}", args.len(), nw + 1);
+                }
+                let wts = qmodel::QWeights::parse(cfg, args)?;
+                let ex = qmodel::QExec::Seed {
+                    wts,
+                    group: manifest.group,
+                };
+                fwd_logits_q(cfg, &ex, args[nw])
+            }
+            "decode_step_q" => {
+                let nw = qmodel::qweight_nargs(cfg);
+                if args.len() != nw + 4 {
+                    bail!("decode_step_q: got {} args, want {}", args.len(), nw + 4);
+                }
+                let wts = qmodel::QWeights::parse(cfg, args)?;
+                let ex = qmodel::QExec::Seed {
+                    wts,
+                    group: manifest.group,
+                };
+                decode::decode_step_q(cfg, &ex, &args[nw..])
+            }
             "train_step" => train::train_step(cfg, args),
             other => bail!("native backend has no entry '{other}'"),
+        }
+    }
+
+    /// Run an entry whose weight prefix was replaced by a prepared
+    /// bundle: args are `[prepared, trailing…]`.
+    fn run_prepared(
+        &self,
+        manifest: &Manifest,
+        cfg_name: &str,
+        entry: &str,
+        pm: &PreparedQModel,
+        trailing: &[&Value],
+    ) -> Result<Vec<Value>> {
+        let cfg = manifest.config(cfg_name)?;
+        pm.check_matches(cfg, manifest.group)?;
+        let ex = qmodel::QExec::Prepared(pm);
+        match entry {
+            "fwd_logits_q" => {
+                if trailing.len() != 1 {
+                    bail!(
+                        "fwd_logits_q(prepared): got {} trailing args, want 1 (tokens)",
+                        trailing.len()
+                    );
+                }
+                fwd_logits_q(cfg, &ex, trailing[0])
+            }
+            "decode_step_q" => decode::decode_step_q(cfg, &ex, trailing),
+            other => bail!("prepared weights are not supported for entry '{other}'"),
         }
     }
 }
@@ -65,6 +117,18 @@ impl Backend for NativeBackend {
         // "unknown entry fails loudly" contract.
         manifest.artifact(cfg, entry)?;
         Ok(0.0)
+    }
+
+    fn prepare_weights(
+        &self,
+        manifest: &Manifest,
+        cfg: &str,
+        lits: &[Value],
+    ) -> Result<Option<Vec<Buffer>>> {
+        let cfgm = manifest.config(cfg)?;
+        let refs: Vec<&Value> = lits.iter().collect();
+        let pm = PreparedQModel::build(cfgm, manifest.group, &refs)?;
+        Ok(Some(vec![Buffer::PreparedQ(std::sync::Arc::new(pm))]))
     }
 
     fn exec(
@@ -85,6 +149,15 @@ impl Backend for NativeBackend {
         entry: &str,
         args: &[&Buffer],
     ) -> Result<Vec<Value>> {
+        if let Some(first) = args.first() {
+            if let Buffer::PreparedQ(pm) = &**first {
+                let trailing: Vec<&Value> = args[1..]
+                    .iter()
+                    .map(|b| b.host())
+                    .collect::<Result<Vec<_>>>()?;
+                return self.run_prepared(manifest, cfg, entry, pm.as_ref(), &trailing);
+            }
+        }
         let refs: Vec<&Value> = args
             .iter()
             .map(|b| b.host())
@@ -95,6 +168,25 @@ impl Backend for NativeBackend {
     fn upload(&self, v: Value) -> Result<Buffer> {
         Ok(Buffer::Host(v))
     }
+}
+
+/// Bench-only probe (`benches/alloc_probe.rs`): run one prepared
+/// quantized linear exactly as a decode step does — `inv_s` scaling into
+/// an arena buffer, prepacked matmul into another — and return the
+/// output to the arena. The steady-state allocation count of this call
+/// is asserted to be zero.
+#[doc(hidden)]
+pub fn prepared_qlin_probe(
+    pm: &PreparedQModel,
+    block: usize,
+    role: usize,
+    x: &Tensor,
+) -> Result<usize> {
+    let ex = qmodel::QExec::Prepared(pm);
+    let out = ex.lin(block, role, x)?;
+    let numel = out.numel();
+    ex.give(out);
+    Ok(numel)
 }
 
 /// `"qkv_b3"` -> `("qkv", 3)`.
@@ -177,7 +269,10 @@ fn layer_loss(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
 /// shared by every alpha candidate (the dominant cost of a naive
 /// per-candidate loop), and the candidates themselves — fakequant +
 /// reconstruction matmul + mse, all independent — run in parallel with
-/// their losses written back in grid order.
+/// their losses written back in grid order. Each candidate's
+/// reconstruction product lands in a per-thread scratch-arena buffer via
+/// `matmul_into` (same kernel, same bits as `matmul`) instead of a fresh
+/// allocation per candidate.
 fn layer_loss_sweep(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Value>> {
     if args.len() != 3 {
         bail!("layer_loss_sweep wants 3 args, got {}", args.len());
@@ -201,7 +296,11 @@ fn layer_loss_sweep(args: &[&Value], bits: u32, group: usize) -> Result<Vec<Valu
         crate::tensor::par::threads_for(work),
         |i| -> Result<f32> {
             let wq = scaled_fakequant(w, scales.row(i), bits, group)?;
-            Ok(a.matmul(&wq)?.mse(&y_fp))
+            let mut y = arena::take(&[a.shape()[0], wq.shape()[1]]);
+            let res = a.matmul_into(&wq, y.data_mut());
+            let loss = res.map(|()| y.mse(&y_fp));
+            arena::give(y);
+            loss
         },
     )
     .into_iter()
@@ -228,20 +327,16 @@ fn loss_args<'a>(args: &'a [&'a Value]) -> Result<(&'a Tensor, &'a Tensor, &'a [
 
 /// Quantized-deployment forward: `fwd_logits_q` from integer codes +
 /// dequant params (the `ref_qmatmul` contract: `(a * inv_s) @ dequant(q)`).
-/// Weight parsing and the quantized linear live in [`qmodel`], shared
-/// with the KV-cached [`decode::decode_step_q`] so the two entries stay
-/// bit-identical per position.
+/// Runs over a [`qmodel::QExec`] — the seed (per-call dequant) or the
+/// prepared (dequantize-once packed panels, DESIGN.md §11) path — and
+/// shares that surface with the KV-cached [`decode::decode_step_q`], so
+/// all four path/entry combinations stay bit-identical per position.
 fn fwd_logits_q(
     cfg: &crate::config::ModelConfig,
-    args: &[&Value],
-    group: usize,
+    ex: &qmodel::QExec,
+    tokens: &Value,
 ) -> Result<Vec<Value>> {
-    let want = qmodel::qweight_nargs(cfg) + 1;
-    if args.len() != want {
-        bail!("fwd_logits_q: got {} args, want {want}", args.len());
-    }
-    let wts = qmodel::QWeights::parse(cfg, args)?;
-    let tokens = args[qmodel::qweight_nargs(cfg)]
+    let tokens = tokens
         .as_i32()
         .context("trailing fwd_logits_q arg must be i32 tokens")?;
     if tokens.shape().len() != 2 {
@@ -249,18 +344,27 @@ fn fwd_logits_q(
     }
     let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
 
-    let mut x = nn::embed(wts.tok_emb, wts.pos_emb, tokens)?;
-    for blk in &wts.blocks {
-        let (h, _) = nn::rmsnorm_fwd(&x, blk.ln1.data())?;
-        let qkv = qmodel::qlin(&h, &blk.lins[0], group)?;
+    let mut x = nn::embed(ex.tok_emb(), ex.pos_emb(), tokens)?;
+    for li in 0..cfg.n_layer {
+        let (h, _) = nn::rmsnorm_fwd(&x, ex.ln1(li))?;
+        let qkv = ex.lin(li, 0, &h)?;
         let (att, _) = nn::attention_fwd(&qkv, b, t, cfg.n_head, false)?;
-        let x_mid = x.add(&qmodel::qlin(&att, &blk.lins[1], group)?)?;
-        let (h2, _) = nn::rmsnorm_fwd(&x_mid, blk.ln2.data())?;
-        let u = qmodel::qlin(&h2, &blk.lins[2], group)?.map(nn::gelu);
-        x = x_mid.add(&qmodel::qlin(&u, &blk.lins[3], group)?)?;
+        ex.give(qkv);
+        let o = ex.lin(li, 1, &att)?;
+        let x_mid = x.add(&o)?;
+        ex.give(o);
+        let (h2, _) = nn::rmsnorm_fwd(&x_mid, ex.ln2(li))?;
+        let mut u = ex.lin(li, 2, &h2)?;
+        u.map_inplace(nn::gelu);
+        let dn = ex.lin(li, 3, &u)?;
+        ex.give(u);
+        x = x_mid.add(&dn)?;
+        ex.give(dn);
     }
-    let (hf, _) = nn::rmsnorm_fwd(&x, wts.lnf_g.data())?;
-    let logits = hf.matmul(wts.w_head)?.reshape(&[b, t, cfg.vocab])?;
+    let (hf, _) = nn::rmsnorm_fwd(&x, ex.lnf())?;
+    let lg = ex.head(&hf)?;
+    let logits = lg.reshape(&[b, t, cfg.vocab])?;
+    ex.give(lg);
     Ok(vec![Value::F32(logits)])
 }
 
@@ -361,5 +465,53 @@ mod tests {
         let m = Manifest::native();
         let be = NativeBackend;
         assert!(be.exec(&m, "pico", "no_such_entry", &[]).is_err());
+    }
+
+    #[test]
+    fn prepare_weights_validates_count_and_entry() {
+        let m = Manifest::native();
+        let be = NativeBackend;
+        // Wrong arg count is rejected at prepare time.
+        let err = be.prepare_weights(&m, "pico", &[]).unwrap_err();
+        assert!(err.to_string().contains("weight args"), "{err}");
+        // A prepared bundle reaching a non-quantized entry is rejected.
+        let cfg = pico();
+        let params = Params::init(&cfg, 5);
+        let qcfg = crate::config::QuantConfig::with_method(crate::config::Method::Rtn);
+        let rt = crate::runtime::Runtime::native();
+        let qm = crate::quant::quantize_model(&rt, &qcfg, &params, None).unwrap();
+        let lits = crate::serve::qmodel_literals(&params, &qm).unwrap();
+        let bufs = be.prepare_weights(&m, "pico", &lits).unwrap().unwrap();
+        assert_eq!(bufs.len(), 1);
+        let args: Vec<&super::Buffer> = bufs.iter().collect();
+        let err = be.exec_buffers(&m, "pico", "fwd_logits", &args).unwrap_err();
+        assert!(err.to_string().contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn prepared_bundle_rejects_mismatched_geometry() {
+        // A bundle packed under one quantization group must not execute
+        // under a manifest with another (the panels would be wrong).
+        let m = Manifest::native();
+        let cfg = pico();
+        let params = Params::init(&cfg, 5);
+        let qcfg = crate::config::QuantConfig::with_method(crate::config::Method::Rtn);
+        let rt = crate::runtime::Runtime::native();
+        let qm = crate::quant::quantize_model(&rt, &qcfg, &params, None).unwrap();
+        let lits = crate::serve::qmodel_literals(&params, &qm).unwrap();
+        let be = NativeBackend;
+        let bufs = be.prepare_weights(&m, "pico", &lits).unwrap().unwrap();
+        let toks = tokens(&cfg, 4);
+        let tok_buf = super::Buffer::Host(Value::I32(toks));
+        let mut args: Vec<&super::Buffer> = bufs.iter().collect();
+        args.push(&tok_buf);
+        // Same manifest: runs.
+        assert!(be.exec_buffers(&m, "pico", "fwd_logits_q", &args).is_ok());
+        // Mismatched group: refused loudly.
+        let m32 = Manifest::native_with(32, 128);
+        let err = be
+            .exec_buffers(&m32, "pico", "fwd_logits_q", &args)
+            .unwrap_err();
+        assert!(err.to_string().contains("group"), "{err}");
     }
 }

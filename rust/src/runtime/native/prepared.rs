@@ -1,0 +1,167 @@
+//! Dequantize-once prepared quantized model (DESIGN.md §11).
+//!
+//! The seed serving path re-materializes the full dequantized f32 weight
+//! matrix of every linear on **every call** — each decode step pays
+//! O(Σ n·m) dequantization plus the allocation traffic for it, per
+//! token. [`PreparedQModel`] moves all of that to artifact-prepare time:
+//! the weight bundle is parsed once, each linear's codes are dequantized
+//! with the exact per-call expression ([`qmodel::dequant_into`]) and the
+//! values are written *directly* into the packed panel layout the
+//! blocked matmul microkernel consumes ([`PackedB`]) — the unpacked
+//! weight matrix never exists as a separate intermediate, and step time
+//! performs **no weight dequantization and no weight-panel packing**.
+//!
+//! The per-input-channel `inv_s` smoothing scale deliberately stays on
+//! the activation side (applied into a per-thread scratch-arena buffer
+//! per call, O(rows·n) — noise next to the O(rows·n·m) matmul). Folding
+//! it into the weights (`W' = diag(inv_s)·dequant(q)`) is algebraically
+//! identical but NOT bitwise stable in f32: `(x·s)·w != x·(s·w)` in
+//! general (multiplication rounds once per operation and is not
+//! associative), and bit-identity with the seed path is a hard contract
+//! (DESIGN.md §10, pinned by `tests/props.rs`). See DESIGN.md §11.
+//!
+//! A steady-state decode step's quantized-linear path is allocation-free:
+//! scaled activations and matmul outputs cycle through
+//! [`crate::tensor::arena`] (pinned by `benches/alloc_probe.rs`).
+
+use super::qmodel::{self, QLin, QWeights};
+use crate::config::ModelConfig;
+use crate::runtime::value::Value;
+use crate::tensor::{arena, PackedB, Tensor};
+use anyhow::{bail, Result};
+
+/// One linear, prepared: dequantized weight panels + its smoothing scale.
+#[derive(Debug)]
+pub(super) struct PreparedLin {
+    /// Per-input-channel smoothing scale, applied to the activation.
+    pub inv_s: Vec<f32>,
+    /// `dequant(q)` `[n, m]`, packed once into the matmul panel layout.
+    pub w: PackedB,
+}
+
+impl PreparedLin {
+    fn build(l: &QLin, group: usize) -> Result<Self> {
+        let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
+        if l.inv_s.numel() != n {
+            bail!("inv_s len {} != codes rows {n}", l.inv_s.numel());
+        }
+        // Fused dequant-and-pack: the dequant loop writes straight into
+        // the panel buffer the kernel will consume.
+        let mut panels = vec![0.0f32; n * m];
+        qmodel::dequant_into(l, group, &mut panels)?;
+        Ok(Self {
+            inv_s: l.inv_s.data().to_vec(),
+            w: PackedB::from_parts(n, m, panels)?,
+        })
+    }
+}
+
+/// One block, prepared: norm gains + four prepared linears (ROLES order).
+#[derive(Debug)]
+pub(super) struct PreparedBlock {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub lins: Vec<PreparedLin>,
+}
+
+/// A quantized deployment artifact, prepared once for an allocation-free
+/// per-token hot path: dequantized packed weight panels per linear, a
+/// prepacked head projection, and owned copies of the small dense
+/// tensors (embeddings, norm gains).
+#[derive(Debug)]
+pub struct PreparedQModel {
+    /// Model config the bundle was prepared for (revalidated at exec).
+    pub(super) cfg: ModelConfig,
+    /// Quantization group size baked into the panels.
+    pub(super) group: usize,
+    pub(super) tok_emb: Tensor,
+    pub(super) pos_emb: Tensor,
+    pub(super) blocks: Vec<PreparedBlock>,
+    pub(super) lnf_g: Vec<f32>,
+    pub(super) w_head: PackedB,
+}
+
+impl PreparedQModel {
+    /// Parse + pack a `fwd_logits_q`/`decode_step_q` weight prefix.
+    /// `args` must be exactly the [`qmodel::qweight_nargs`] weight
+    /// values in canonical order.
+    pub(super) fn build(cfg: &ModelConfig, group: usize, args: &[&Value]) -> Result<Self> {
+        let want = qmodel::qweight_nargs(cfg);
+        if args.len() != want {
+            bail!(
+                "prepare_weights({}): got {} weight args, want {want}",
+                cfg.name,
+                args.len()
+            );
+        }
+        let wts = QWeights::parse(cfg, args)?;
+        let mut blocks = Vec::with_capacity(wts.blocks.len());
+        for blk in &wts.blocks {
+            let lins = blk
+                .lins
+                .iter()
+                .map(|l| PreparedLin::build(l, group))
+                .collect::<Result<Vec<_>>>()?;
+            blocks.push(PreparedBlock {
+                ln1: blk.ln1.data().to_vec(),
+                ln2: blk.ln2.data().to_vec(),
+                lins,
+            });
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            group,
+            tok_emb: wts.tok_emb.clone(),
+            pos_emb: wts.pos_emb.clone(),
+            blocks,
+            lnf_g: wts.lnf_g.data().to_vec(),
+            w_head: PackedB::from_tensor(wts.w_head)?,
+        })
+    }
+
+    /// Guard against executing a bundle under a different config or
+    /// quantization geometry than it was prepared for.
+    pub(super) fn check_matches(&self, cfg: &ModelConfig, group: usize) -> Result<()> {
+        if self.cfg != *cfg {
+            bail!(
+                "prepared weights were built for config '{}', executed as '{}'",
+                self.cfg.name,
+                cfg.name
+            );
+        }
+        if self.group != group {
+            bail!(
+                "prepared weights baked group {}, runtime wants {group}",
+                self.group
+            );
+        }
+        Ok(())
+    }
+
+    /// Quantized linear on prepared panels: scale the activation rows by
+    /// `inv_s` into a scratch buffer, then one prepacked matmul. Zero
+    /// weight work, zero allocations once the arena is warm.
+    pub(super) fn lin(&self, b: usize, role: usize, x: &Tensor) -> Result<Tensor> {
+        let lin = &self.blocks[b].lins[role];
+        let n = x.shape()[1];
+        if lin.inv_s.len() != n {
+            bail!("inv_s len {} != activation cols {n}", lin.inv_s.len());
+        }
+        let rows = x.shape()[0];
+        let mut scaled = arena::take(&[rows, n]);
+        qmodel::scale_rows(x.data(), &lin.inv_s, rows, n, scaled.data_mut());
+        let mut out = arena::take(&[rows, lin.w.c()]);
+        let res = scaled.matmul_prepacked(&lin.w, out.data_mut());
+        arena::give(scaled);
+        res?;
+        Ok(out)
+    }
+
+    /// Head projection on the prepacked `w_head` panels (arena-backed).
+    pub(super) fn head(&self, hf: &Tensor) -> Result<Tensor> {
+        let rows = hf.shape()[0];
+        let mut out = arena::take(&[rows, self.w_head.c()]);
+        hf.matmul_prepacked(&self.w_head, out.data_mut())?;
+        Ok(out)
+    }
+}

@@ -7,10 +7,26 @@
 //! `(x · inv_s per input channel) @ dequant(q)`. This module owns the
 //! parse and both kernels so the two entries cannot drift: logit
 //! bit-identity between them (DESIGN.md §10) rests on sharing this code.
+//!
+//! Two interchangeable executions of that linear exist, unified by
+//! [`QExec`] so the forward/decode loops are written exactly once:
+//!
+//! - **Seed** — weights borrowed from the call's arguments, dequantized
+//!   per call ([`qlin`]); always available, the reference semantics.
+//! - **Prepared** — a [`super::prepared::PreparedQModel`] whose weights
+//!   were dequantized ONCE into packed matmul panels at prepare time;
+//!   the per-step linear touches only activations (DESIGN.md §11).
+//!
+//! Both paths produce bit-identical logits: dequantization is the same
+//! deterministic expression whether it runs at prepare or at call time,
+//! the packed matmul is the same kernel, and the `inv_s` activation
+//! scaling stays on the activation side in both (see DESIGN.md §11 for
+//! why it is NOT folded into the weights).
 
+use super::prepared::PreparedQModel;
 use crate::config::ModelConfig;
 use crate::runtime::value::Value;
-use crate::tensor::Tensor;
+use crate::tensor::{arena, Tensor};
 use anyhow::{bail, Context, Result};
 
 /// One quantized linear's deployment tensors, borrowed from the args.
@@ -48,7 +64,7 @@ fn f32_at<'x>(args: &[&'x Value], i: usize, what: &str) -> Result<&'x Tensor> {
 /// Number of weight arguments [`QWeights::parse`] consumes (everything in
 /// the `fwd_logits_q` signature except the trailing tokens tensor).
 pub(super) fn qweight_nargs(cfg: &ModelConfig) -> usize {
-    2 + cfg.n_layer * 18 + 2
+    crate::runtime::registry::qweight_nargs(cfg)
 }
 
 impl<'a> QWeights<'a> {
@@ -102,9 +118,8 @@ impl<'a> QWeights<'a> {
     }
 }
 
-/// Dequantize integer codes: `(q - z) * delta` with per-(group, col)
-/// params (the `ref_qmatmul` contract).
-pub(super) fn dequant(l: &QLin, group: usize) -> Result<Tensor> {
+/// Validate one linear's dequant-parameter shapes against its codes.
+fn check_dequant_shapes(l: &QLin, group: usize) -> Result<(usize, usize)> {
     let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
     if n % group != 0 {
         bail!("codes n={n} not divisible by group={group}");
@@ -112,13 +127,28 @@ pub(super) fn dequant(l: &QLin, group: usize) -> Result<Tensor> {
     let ng = n / group;
     if l.delta.shape() != [ng, m] || l.zero.shape() != [ng, m] || l.inv_s.numel() != n {
         bail!(
-            "dequant params: delta {:?} zero {:?} inv_s {:?} for codes [{n}, {m}]",
+            "dequant params for codes [{n}, {m}] (group {group}): \
+             delta {:?} (want [{ng}, {m}]), zero {:?} (want [{ng}, {m}]), \
+             inv_s {:?} with {} elements (want {n})",
             l.delta.shape(),
             l.zero.shape(),
-            l.inv_s.shape()
+            l.inv_s.shape(),
+            l.inv_s.numel()
         );
     }
-    let mut out = vec![0.0f32; n * m];
+    Ok((n, m))
+}
+
+/// Dequantize integer codes into `out` (`n * m` elements): `(q - z) *
+/// delta` with per-(group, col) params (the `ref_qmatmul` contract).
+/// The single source of the dequant expression — the per-call path and
+/// the prepare-time panel pack both run exactly this loop, which is what
+/// makes prepared weights bit-identical to per-call dequantization.
+pub(super) fn dequant_into(l: &QLin, group: usize, out: &mut [f32]) -> Result<()> {
+    let (n, m) = check_dequant_shapes(l, group)?;
+    if out.len() != n * m {
+        bail!("dequant out len {} != {n} * {m}", out.len());
+    }
     for r in 0..n {
         let g = r / group;
         let qr = l.q.row(r);
@@ -129,28 +159,132 @@ pub(super) fn dequant(l: &QLin, group: usize) -> Result<Tensor> {
             dst[c] = (qr[c] - zr[c]) * dr[c];
         }
     }
+    Ok(())
+}
+
+/// Dequantize integer codes into a fresh tensor (fallback path).
+pub(super) fn dequant(l: &QLin, group: usize) -> Result<Tensor> {
+    let (n, m) = check_dequant_shapes(l, group)?;
+    let mut out = vec![0.0f32; n * m];
+    dequant_into(l, group, &mut out)?;
     Tensor::from_vec(&[n, m], out)
 }
 
-/// Quantized linear: `(x * inv_s per input channel) @ dequant(q)`.
+/// Quantized linear, fallback (per-call dequant) path:
+/// `(x * inv_s per input channel) @ dequant(q)`.
 ///
 /// Row-wise: the result for each row of `x` is independent of every
 /// other row (the matmul accumulates each output element ascending-k),
 /// which is what makes single-row decode bit-identical to full-sequence
-/// scoring.
+/// scoring. The scaled activation and the output live in the per-thread
+/// scratch arena (no per-call clone of the activation tensor); only the
+/// dequantized weight is still materialized per call — the cost the
+/// prepared path removes.
 pub(super) fn qlin(x: &Tensor, l: &QLin, group: usize) -> Result<Tensor> {
     let n = x.shape()[1];
     if l.inv_s.numel() != n {
         bail!("inv_s len {} != activation cols {n}", l.inv_s.numel());
     }
+    let w = dequant(l, group)?;
     let inv = l.inv_s.data();
-    let mut scaled = x.clone();
     let rows = x.shape()[0];
+    let mut scaled = arena::take(&[rows, n]);
+    scale_rows(x.data(), inv, rows, n, scaled.data_mut());
+    let mut out = arena::take(&[rows, w.shape()[1]]);
+    let res = scaled.matmul_into(&w, out.data_mut());
+    arena::give(scaled);
+    res?;
+    Ok(out)
+}
+
+/// `scaled[r, c] = x[r, c] * inv_s[c]` for every row (the activation
+/// half of the quantized linear, shared by both paths — identical
+/// products, so identical bits).
+pub(super) fn scale_rows(x: &[f32], inv_s: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * n);
+    debug_assert_eq!(out.len(), rows * n);
     for r in 0..rows {
-        let row = &mut scaled.data_mut()[r * n..(r + 1) * n];
-        for (v, &s) in row.iter_mut().zip(inv) {
-            *v *= s;
+        let src = &x[r * n..(r + 1) * n];
+        let dst = &mut out[r * n..(r + 1) * n];
+        for ((o, &v), &s) in dst.iter_mut().zip(src).zip(inv_s) {
+            *o = v * s;
         }
     }
-    scaled.matmul(&dequant(l, group)?)
+}
+
+/// One execution of the quantized model: the seed (per-call dequant)
+/// path or the prepared (dequantize-once, packed-panel) path, behind a
+/// single accessor surface so `fwd_logits_q` and `decode_step_q` are
+/// each written exactly once and cannot drift between paths.
+pub(super) enum QExec<'a> {
+    Seed { wts: QWeights<'a>, group: usize },
+    Prepared(&'a PreparedQModel),
+}
+
+impl QExec<'_> {
+    pub fn tok_emb(&self) -> &Tensor {
+        match self {
+            QExec::Seed { wts, .. } => wts.tok_emb,
+            QExec::Prepared(pm) => &pm.tok_emb,
+        }
+    }
+
+    pub fn pos_emb(&self) -> &Tensor {
+        match self {
+            QExec::Seed { wts, .. } => wts.pos_emb,
+            QExec::Prepared(pm) => &pm.pos_emb,
+        }
+    }
+
+    pub fn ln1(&self, b: usize) -> &[f32] {
+        match self {
+            QExec::Seed { wts, .. } => wts.blocks[b].ln1.data(),
+            QExec::Prepared(pm) => &pm.blocks[b].ln1,
+        }
+    }
+
+    pub fn ln2(&self, b: usize) -> &[f32] {
+        match self {
+            QExec::Seed { wts, .. } => wts.blocks[b].ln2.data(),
+            QExec::Prepared(pm) => &pm.blocks[b].ln2,
+        }
+    }
+
+    pub fn lnf(&self) -> &[f32] {
+        match self {
+            QExec::Seed { wts, .. } => wts.lnf_g.data(),
+            QExec::Prepared(pm) => &pm.lnf_g,
+        }
+    }
+
+    /// Run quantized linear `role` (ROLES order) of block `b` on `x`.
+    /// The returned tensor comes from the per-thread scratch arena on
+    /// both paths — pass it back via [`QExec::give`] when done.
+    pub fn lin(&self, b: usize, role: usize, x: &Tensor) -> Result<Tensor> {
+        match self {
+            QExec::Seed { wts, group } => qlin(x, &wts.blocks[b].lins[role], *group),
+            QExec::Prepared(pm) => pm.lin(b, role, x),
+        }
+    }
+
+    /// Head projection `hf @ w_head` (not quantized; prepacked on the
+    /// prepared path). Arena-backed like [`QExec::lin`].
+    pub fn head(&self, hf: &Tensor) -> Result<Tensor> {
+        match self {
+            QExec::Seed { wts, .. } => {
+                let rows = hf.shape()[0];
+                let cols = wts.w_head.shape()[1];
+                let mut out = arena::take(&[rows, cols]);
+                hf.matmul_into(wts.w_head, out.data_mut())?;
+                Ok(out)
+            }
+            QExec::Prepared(pm) => pm.head(hf),
+        }
+    }
+
+    /// Return a tensor obtained from [`QExec::lin`]/[`QExec::head`] to
+    /// the per-thread scratch arena.
+    pub fn give(&self, t: Tensor) {
+        arena::give(t);
+    }
 }

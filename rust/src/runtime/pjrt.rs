@@ -138,6 +138,9 @@ impl Backend for PjrtBackend {
             .map(|b| match b {
                 Buffer::Device(d) => Ok(d.0.as_ref()),
                 Buffer::Host(_) => bail!("host buffer passed to the PJRT backend"),
+                Buffer::PreparedQ(_) => {
+                    bail!("prepared weight bundle passed to the PJRT backend")
+                }
             })
             .collect::<Result<Vec<_>>>()?;
         let result = exe

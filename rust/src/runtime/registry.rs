@@ -36,6 +36,15 @@ pub struct Manifest {
     pub artifacts: HashMap<(String, String), ArtifactInfo>,
 }
 
+/// Number of arguments in the quantized-deployment weight prefix shared
+/// by `fwd_logits_q` and `decode_step_q` (everything before each entry's
+/// trailing tensors): tok_emb, pos_emb, per block {ln1, 4 dequant params
+/// × 4 roles, ln2}, lnf_g, w_head. A prepared weight bundle
+/// (`Buffer::PreparedQ`) replaces exactly this many positional args.
+pub fn qweight_nargs(cfg: &ModelConfig) -> usize {
+    2 + cfg.n_layer * 18 + 2
+}
+
 /// Quantization group size baked into the native manifest (matches
 /// `QuantConfig::default().group`).
 pub const NATIVE_GROUP: usize = 64;
@@ -178,7 +187,7 @@ impl Manifest {
             let specs = crate::model::param_specs(&cfg);
             let n = specs.len();
             // fwd_logits_q per block: ln1 + 4x(qkv,o) + ln2 + 4x(up,down).
-            let q_nargs = 2 + cfg.n_layer * 18 + 2 + 1;
+            let q_nargs = qweight_nargs(&cfg) + 1;
             let mut entries: Vec<(String, usize)> = vec![
                 ("fwd_logits".to_string(), n + 1),
                 ("fwd_capture".to_string(), n + 1),

@@ -48,6 +48,11 @@ impl Value {
 pub enum Buffer {
     /// Host-resident (native backend): the value itself.
     Host(Value),
+    /// A whole quantized weight bundle, prepared once (dequantized into
+    /// packed matmul panels — DESIGN.md §11). Stands in for the entire
+    /// `fwd_logits_q`/`decode_step_q` weight-prefix argument list; cheap
+    /// to clone (shared via `Arc`).
+    PreparedQ(std::sync::Arc<super::native::PreparedQModel>),
     /// Device-resident (PJRT backend).
     #[cfg(feature = "pjrt")]
     Device(super::pjrt::DeviceBuffer),
@@ -55,10 +60,11 @@ pub enum Buffer {
 
 impl Buffer {
     /// The host view of this buffer; errors for device-resident buffers
-    /// (those never reach the native execution path).
+    /// and prepared bundles (neither is a single host tensor).
     pub fn host(&self) -> Result<&Value> {
         match self {
             Buffer::Host(v) => Ok(v),
+            Buffer::PreparedQ(_) => bail!("prepared weight bundle has no single host view"),
             #[cfg(feature = "pjrt")]
             Buffer::Device(_) => bail!("device buffer has no host view"),
         }

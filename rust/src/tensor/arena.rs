@@ -1,0 +1,85 @@
+//! Per-thread scratch-tensor arenas (DESIGN.md §11).
+//!
+//! The decode hot path must not allocate per step: every quantized
+//! linear needs a scaled-activation buffer and an output buffer, and a
+//! heap allocation for each would dominate small-step overhead under
+//! serving load. The arena is a thread-local LIFO pool of [`Tensor`]s:
+//! [`take`] hands out a zero-filled tensor (reusing both the element
+//! buffer and the shape vector of a pooled one), [`give`] returns it.
+//! A fixed take/give sequence — e.g. a steady-state decode step —
+//! cycles the same buffers every call and performs zero heap
+//! allocations once warm (pinned by `benches/alloc_probe.rs`).
+//!
+//! The thread-local borrow is never held across a call into other code
+//! — in particular not across a parallel kernel dispatch, whose
+//! help-first waiting can run unrelated pool tasks on this thread that
+//! themselves use the arena.
+
+use super::Tensor;
+use std::cell::RefCell;
+
+/// Cap on pooled tensors per thread; anything given back beyond this is
+/// simply dropped (bounds memory if takes and gives ever unbalance).
+const MAX_POOLED: usize = 32;
+
+thread_local! {
+    static ARENA: RefCell<Vec<Tensor>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a zero-filled tensor of `shape` from this thread's pool.
+/// Allocation-free once the pool is warm for the caller's take/give
+/// sequence (LIFO: the most recently given buffer is reused first).
+pub fn take(shape: &[usize]) -> Tensor {
+    let pooled = ARENA.with(|a| a.borrow_mut().pop());
+    match pooled {
+        Some(mut t) => {
+            let numel: usize = shape.iter().product();
+            t.shape.clear();
+            t.shape.extend_from_slice(shape);
+            t.data.clear();
+            t.data.resize(numel, 0.0);
+            t
+        }
+        None => Tensor::zeros(shape),
+    }
+}
+
+/// Return a tensor to this thread's pool for reuse by a later [`take`].
+pub fn give(t: Tensor) {
+    ARENA.with(|a| {
+        let mut pool = a.borrow_mut();
+        if pool.len() < MAX_POOLED {
+            pool.push(t);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_shaped() {
+        let mut t = take(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        t.data_mut()[5] = 7.0; // dirty it, give it back
+        give(t);
+        let t2 = take(&[2, 6]);
+        assert_eq!(t2.shape(), &[2, 6]);
+        assert!(t2.data().iter().all(|&v| v == 0.0), "pooled buffer not reset");
+        give(t2);
+    }
+
+    #[test]
+    fn take_reuses_the_given_buffer() {
+        let t = take(&[4, 8]);
+        let p = t.data().as_ptr();
+        give(t);
+        // Same size: the pooled Vec's capacity suffices, so the element
+        // buffer must not move (the zero-allocation steady state).
+        let t2 = take(&[4, 8]);
+        assert_eq!(t2.data().as_ptr(), p, "steady-state take reallocated");
+        give(t2);
+    }
+}

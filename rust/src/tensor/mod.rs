@@ -11,11 +11,13 @@
 //! anything model-scale on an accelerator still belongs in an HLO
 //! artifact executed by [`crate::runtime`].
 
+pub mod arena;
 mod ops;
 pub mod par;
 mod rng;
 mod stats;
 
+pub use ops::PackedB;
 pub use rng::Rng;
 pub use stats::*;
 

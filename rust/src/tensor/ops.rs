@@ -55,12 +55,81 @@ fn matmul_block(a: &[f32], b: &[f32], row0: usize, out: &mut [f32], k: usize, c:
     }
 }
 
+/// The B operand of [`Tensor::matmul`] in its packed panel layout,
+/// prepared once and consumed zero-copy by [`Tensor::matmul_prepacked`].
+///
+/// The blocked microkernel ([`matmul_block`]) streams B as KC-row panels
+/// in ascending-k order, each panel row contiguous; row-major `[k, c]`
+/// with panels as consecutive row ranges *is* that consumption order, so
+/// the packed buffer is byte-for-byte what the kernel reads. Producers
+/// (e.g. the prepared quantized model) write dequantized values straight
+/// into this buffer, skipping any intermediate unpacked matrix.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    k: usize,
+    c: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Wrap an already panel-ordered buffer (`data.len() == k * c`).
+    pub fn from_parts(k: usize, c: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != k * c {
+            bail!("PackedB [{k}, {c}] wants {} elements, got {}", k * c, data.len());
+        }
+        Ok(Self { k, c, data })
+    }
+
+    /// Pack a 2-D `[k, c]` tensor (copies into the panel buffer).
+    pub fn from_tensor(t: &Tensor) -> Result<Self> {
+        if t.shape.len() != 2 {
+            bail!("PackedB::from_tensor on shape {:?}", t.shape);
+        }
+        Self::from_parts(t.shape[0], t.shape[1], t.data.clone())
+    }
+
+    /// Rows (the contraction dimension k).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Columns (the output dimension c).
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// The panel buffer (k-major, as the microkernel consumes it).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Shared blocked-parallel matmul core: `out = a [r, k] @ b [k, c]`,
+/// `out` zero-initialized by the caller. Identical partitioning and
+/// per-element accumulation order for every entry point built on it
+/// ([`Tensor::matmul`], [`Tensor::matmul_into`],
+/// [`Tensor::matmul_prepacked`]), so all three are bit-identical.
+fn matmul_core(a: &[f32], b: &[f32], r: usize, k: usize, c: usize, out: &mut [f32]) {
+    let t = par::threads_for(r * k * c);
+    par::par_row_blocks(out, c, t, |row0, block| {
+        matmul_block(a, b, row0, block, k, c);
+    });
+}
+
 impl Tensor {
     /// Elementwise map into a new tensor.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor {
             shape: self.shape.clone(),
             data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise map in place (same values as [`Tensor::map`], without
+    /// the allocation — the scratch-arena hot paths use this).
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
         }
     }
 
@@ -133,11 +202,47 @@ impl Tensor {
         let (r, k) = (self.shape[0], self.shape[1]);
         let c = other.shape[1];
         let mut out = vec![0.0f32; r * c];
-        let t = par::threads_for(r * k * c);
-        par::par_row_blocks(&mut out, c, t, |row0, block| {
-            matmul_block(&self.data, &other.data, row0, block, k, c);
-        });
+        matmul_core(&self.data, &other.data, r, k, c, &mut out);
         Tensor::from_vec(&[r, c], out)
+    }
+
+    /// [`Tensor::matmul`] into a caller-provided (zero-initialized)
+    /// buffer — the allocation-free entry the scratch-arena hot paths
+    /// and the Phase-B candidate sweep use. Bit-identical to `matmul`.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut [f32]) -> Result<()> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[0] {
+            bail!("matmul_into {:?} @ {:?}", self.shape, other.shape);
+        }
+        let (r, k) = (self.shape[0], self.shape[1]);
+        let c = other.shape[1];
+        if out.len() != r * c {
+            bail!("matmul_into out len {} != {r} * {c}", out.len());
+        }
+        matmul_core(&self.data, &other.data, r, k, c, out);
+        Ok(())
+    }
+
+    /// `self [r, k] @ packed [k, c]` into a caller-provided
+    /// (zero-initialized) buffer, with B pre-packed once via [`PackedB`]
+    /// instead of re-streamed from a tensor per call. Same kernel, same
+    /// partitioning: bit-identical to [`Tensor::matmul`] on the
+    /// equivalent `[k, c]` tensor, for every thread count.
+    pub fn matmul_prepacked(&self, packed: &PackedB, out: &mut [f32]) -> Result<()> {
+        if self.shape.len() != 2 || self.shape[1] != packed.k {
+            bail!(
+                "matmul_prepacked {:?} @ packed [{}, {}]",
+                self.shape,
+                packed.k,
+                packed.c
+            );
+        }
+        let (r, k) = (self.shape[0], self.shape[1]);
+        let c = packed.c;
+        if out.len() != r * c {
+            bail!("matmul_prepacked out len {} != {r} * {c}", out.len());
+        }
+        matmul_core(&self.data, &packed.data, r, k, c, out);
+        Ok(())
     }
 
     /// self^T @ other without materializing the transpose:
@@ -268,6 +373,52 @@ mod tests {
                 assert_eq!(g.to_bits(), w.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn matmul_into_and_prepacked_match_matmul_bitwise() {
+        let mut rng = crate::tensor::Rng::new(91);
+        for (r, k, c) in [(5usize, 130usize, 9usize), (1, 64, 33), (7, 12, 3)] {
+            let a = Tensor::randn(&mut rng, &[r, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[k, c], 1.0);
+            let want = a.matmul(&b).unwrap();
+            let mut out = vec![0.0f32; r * c];
+            a.matmul_into(&b, &mut out).unwrap();
+            for (g, w) in out.iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+            let packed = PackedB::from_tensor(&b).unwrap();
+            assert_eq!((packed.k(), packed.c()), (k, c));
+            let mut out2 = vec![0.0f32; r * c];
+            a.matmul_prepacked(&packed, &mut out2).unwrap();
+            for (g, w) in out2.iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_shape_checks() {
+        let a = t(&[2, 3], vec![0.0; 6]);
+        let b = t(&[3, 2], vec![1.0; 6]);
+        let packed = PackedB::from_tensor(&b).unwrap();
+        assert_eq!(packed.data().len(), 6);
+        let mut short = vec![0.0f32; 3];
+        assert!(a.matmul_prepacked(&packed, &mut short).is_err());
+        let mut out = vec![0.0f32; 4];
+        assert!(b.matmul_prepacked(&packed, &mut out).is_err()); // k mismatch
+        assert!(a.matmul_into(&b, &mut short).is_err());
+        assert!(PackedB::from_parts(2, 2, vec![0.0; 3]).is_err());
+        assert!(PackedB::from_tensor(&t(&[4], vec![0.0; 4])).is_err());
+    }
+
+    #[test]
+    fn map_inplace_matches_map() {
+        let a = t(&[2, 2], vec![-1.0, 0.5, 2.0, -3.0]);
+        let want = a.map(|x| x * x + 1.0);
+        let mut b = a.clone();
+        b.map_inplace(|x| x * x + 1.0);
+        assert_eq!(b, want);
     }
 
     #[test]

@@ -261,6 +261,7 @@ fn serve_generate_roundtrip() {
             top_k: 12,
             seed: 5,
             slots: 2, // fewer slots than requests: continuous batching
+            ..GenConfig::default()
         },
         rx,
         std::time::Duration::from_millis(1),

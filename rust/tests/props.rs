@@ -358,7 +358,9 @@ fn quantize_and_forward_bit_identical_across_thread_counts() {
 /// Feed `toks` through `decode_step_q` one token per step, slot `s`
 /// starting at global step `offsets[s]` (staggered admission exercises
 /// the continuous-batching path: every step mixes slots at different
-/// positions, some inactive). Returns the per-position logits [B, T, V].
+/// positions, some inactive). `prepared` selects the dequantize-once
+/// packed-panel weight bundle (DESIGN.md §11) instead of the per-step
+/// dequantizing seed path. Returns the per-position logits [B, T, V].
 fn decode_all_positions(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -366,11 +368,16 @@ fn decode_all_positions(
     qm: &faquant::quant::QuantizedModel,
     toks: &TensorI32,
     offsets: &[usize],
+    prepared: bool,
 ) -> Tensor {
     let (b, t) = (toks.shape()[0], toks.shape()[1]);
     let v = cfg.vocab;
     let lits = qmodel_literals(params, qm).unwrap();
-    let bufs: Vec<Buffer> = lits.iter().map(|l| rt.upload_literal(l).unwrap()).collect();
+    let bufs: Vec<Buffer> = if prepared {
+        (*rt.prepare_qweights(&cfg.name, &lits).unwrap()).clone()
+    } else {
+        lits.iter().map(|l| rt.upload_literal(l).unwrap()).collect()
+    };
     let mut cache = KvCache::new(cfg.n_layer, b, t, cfg.d_model);
     let mut out = vec![0.0f32; b * t * v];
     let max_step = offsets.iter().max().unwrap() + t;
@@ -447,11 +454,60 @@ fn decode_with_kv_cache_matches_full_forward_bitwise() {
 
     for &threads in &[1usize, 2, 8] {
         par::set_threads(threads);
-        let dec = decode_all_positions(&rt, &cfg, &params, &qm, &toks, &[0, 3, 5, 11]);
+        let dec = decode_all_positions(&rt, &cfg, &params, &qm, &toks, &[0, 3, 5, 11], false);
         let ctx = format!("decode vs full at {threads} threads");
         assert_bits_eq(dec.data(), full.data(), &ctx);
     }
     par::set_threads(0);
+}
+
+#[test]
+fn prepared_paths_bit_identical_to_seed_qlin() {
+    // The DESIGN §11 contract: the prepared (dequantize-once packed
+    // panels + scratch arenas) path produces logits bitwise equal to the
+    // seed per-call-dequant path — for fwd_logits_q and for
+    // decode_step_q under staggered continuous-batching admission, at
+    // 1/2/8 threads.
+    let rt = Runtime::native();
+    let cfg = ModelConfig::preset("pico").unwrap();
+    let params = Params::init(&cfg, 77);
+    let qcfg = QuantConfig::with_method(Method::Rtn);
+    let qm = quantize_model(&rt, &qcfg, &params, None).unwrap();
+    let (b, t) = (4usize, 16usize);
+    let mut rng = Rng::new(321);
+    let toks = TensorI32::from_vec(
+        &[b, t],
+        (0..b * t).map(|_| rng.below(cfg.vocab) as i32).collect(),
+    )
+    .unwrap();
+
+    // Seed reference: host-value fwd_logits_q (per-call dequant).
+    par::set_threads(1);
+    let lits = qmodel_literals(&params, &qm).unwrap();
+    let mut args: Vec<Value> = lits.clone();
+    args.push(lit_i32(&toks).unwrap());
+    let outs = rt.exec(&cfg.name, "fwd_logits_q", &args).unwrap();
+    let full = outs[0].as_f32().unwrap().clone();
+
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        // Prepared full-sequence scoring.
+        let bufs = rt.prepare_qweights(&cfg.name, &lits).unwrap();
+        let tok_buf = rt.upload_i32(&toks).unwrap();
+        let mut bargs: Vec<&Buffer> = bufs.iter().collect();
+        bargs.push(&tok_buf);
+        let outs = rt.exec_b(&cfg.name, "fwd_logits_q", &bargs).unwrap();
+        let ctx = format!("prepared fwd_logits_q vs seed at {threads} threads");
+        assert_bits_eq(outs[0].as_f32().unwrap().data(), full.data(), &ctx);
+
+        // Prepared KV-cached decode, staggered admission.
+        let dec = decode_all_positions(&rt, &cfg, &params, &qm, &toks, &[0, 3, 5, 11], true);
+        let ctx = format!("prepared decode vs seed full at {threads} threads");
+        assert_bits_eq(dec.data(), full.data(), &ctx);
+    }
+    par::set_threads(0);
+    // All prepared calls above shared ONE cached bundle.
+    assert_eq!(rt.prepared_qweights(), 1);
 }
 
 #[test]
@@ -487,6 +543,7 @@ fn generation_deterministic_across_threads_and_slot_counts() {
                 top_k: 8,
                 seed: 2024,
                 slots,
+                prepared: true,
             },
         )
         .unwrap();
