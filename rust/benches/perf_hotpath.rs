@@ -185,6 +185,7 @@ fn main() {
         &qm,
         GenConfig {
             prepared: false,
+            paged: false, // the dense seed store is the baseline
             ..GenConfig::default()
         },
     )
@@ -218,9 +219,18 @@ fn main() {
         grep.decode_secs,
     ));
 
-    // 6b. Same workload over the prepared weight bundle.
-    let mut engine_p = Engine::new(&rt, &cfg.model, &params, &qm, GenConfig::default())
-        .expect("engine(prepared)");
+    // 6b. Same workload over the prepared weight bundle (still dense).
+    let mut engine_p = Engine::new(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            paged: false,
+            ..GenConfig::default()
+        },
+    )
+    .expect("engine(prepared)");
     let s = bench(
         &format!("generate_prepared({n_seqs}seq,prefill{prompt_len},decode{max_new})"),
         0,
@@ -249,6 +259,93 @@ fn main() {
         grep_p.decode_tokens,
         grep_p.decode_secs,
     ));
+
+    // 6c. Shared-prefix generation over the paged engine (block pool +
+    // radix prefix cache, DESIGN §12): every request carries the same
+    // long prompt prefix plus a short distinct tail — the shared-system-
+    // prompt pattern. After the first sequences seed the cache, later
+    // admissions skip the shared portion of prefill entirely; the
+    // headline is the fraction of prompt tokens never fed.
+    let shared_len = cfg.model.seq / 2;
+    let tail = 4usize;
+    let shared_reqs: Vec<GenRequest> = (0..n_seqs)
+        .map(|i| {
+            let mut p = gen_ids[..shared_len].to_vec();
+            for k in 0..tail {
+                p.push(gen_ids[(shared_len + i * tail + k) % gen_ids.len()]);
+            }
+            GenRequest {
+                id: i,
+                prompt: p,
+                max_new,
+                stop_id: None,
+            }
+        })
+        .collect();
+    let total_prompt: usize = shared_reqs.iter().map(|r| r.prompt.len()).sum();
+    let mut engine_px = Engine::new(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            slots: 2,
+            block_tokens: 8,
+            ..GenConfig::default()
+        },
+    )
+    .expect("engine(paged)");
+    let s = bench(
+        &format!("generate_shared_prefix({n_seqs}seq,shared{shared_len},tail{tail})"),
+        0,
+        1,
+        || {
+            engine_px.generate(shared_reqs.clone()).expect("generate");
+        },
+    );
+    println!("{}", report(&s));
+    stages.push(s);
+    let grep_px = engine_px.report();
+    let prefix_hit_prefill_savings = grep_px.prefix_hit_tokens as f32 / total_prompt as f32;
+    println!(
+        "  -> prefix cache skipped {} of {total_prompt} prompt tokens \
+         ({:.0}% of prefill), {} block refs evicted, peak {} / {} blocks",
+        grep_px.prefix_hit_tokens,
+        prefix_hit_prefill_savings * 100.0,
+        grep_px.evicted_blocks,
+        grep_px.peak_blocks_in_use,
+        grep_px.pool_blocks
+    );
+
+    // 6d. Many short sequences through the paged pool (prefix cache off
+    // isolates pure paging): peak in-use KV bytes vs the dense engine's
+    // always-resident `slots x T_max` slab.
+    let mut engine_mem = Engine::new(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            prefix_cache: false,
+            ..GenConfig::default()
+        },
+    )
+    .expect("engine(mem)");
+    engine_mem.generate(reqs.clone()).expect("generate");
+    let grep_m = engine_mem.report();
+    // Bytes per cached token row: K + V, f32, all layers.
+    let row_bytes = (cfg.model.n_layer * cfg.model.d_model * 2 * 4) as f32;
+    let paged_peak_kv_bytes =
+        (grep_m.peak_blocks_in_use * grep_m.block_tokens) as f32 * row_bytes;
+    let dense_kv_slab_bytes = (cfg.model.batch * cfg.model.seq) as f32 * row_bytes;
+    println!(
+        "  -> paged peak KV {:.0} KiB vs dense slab {:.0} KiB ({:.2}x smaller, \
+         {} short seqs)",
+        paged_peak_kv_bytes / 1024.0,
+        dense_kv_slab_bytes / 1024.0,
+        dense_kv_slab_bytes / paged_peak_kv_bytes.max(1.0),
+        n_seqs
+    );
 
     // Threading headline: end-to-end Phase-B quantize, 1 thread vs the
     // effective thread count (same runtime/calibration — results are
@@ -301,6 +398,9 @@ fn main() {
         decode_tps,
         prepare_secs,
         decode_prepared_tps,
+        prefix_hit_prefill_savings,
+        paged_peak_kv_bytes,
+        dense_kv_slab_bytes,
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

@@ -205,6 +205,15 @@ pub struct PerfReport {
     /// Decode tokens per second over the prepared weight bundle (the
     /// serving-throughput headline from this PR on).
     pub decode_prepared_tps: f32,
+    /// Shared-prefix generate stage: fraction of prompt tokens the paged
+    /// engine's radix prefix cache skipped (prefill work saved, 0..1).
+    pub prefix_hit_prefill_savings: f32,
+    /// Peak KV bytes actually in use by the paged engine on the
+    /// many-short-sequences stage (peak blocks x block bytes).
+    pub paged_peak_kv_bytes: f32,
+    /// The dense engine's slab for the same stage: `slots x T_max` rows,
+    /// resident for the whole run regardless of sequence lengths.
+    pub dense_kv_slab_bytes: f32,
 }
 
 impl PerfReport {
@@ -216,7 +225,9 @@ impl PerfReport {
              \"quantize_secs_1t\": {},\n  \"quantize_secs_nt\": {},\n  \
              \"speedup_vs_1t\": {},\n  \"coordinator_overhead\": {},\n  \
              \"prefill_tokens_per_sec\": {},\n  \"decode_tokens_per_sec\": {},\n  \
-             \"prepare_secs\": {},\n  \"decode_prepared_tokens_per_sec\": {}\n}}\n",
+             \"prepare_secs\": {},\n  \"decode_prepared_tokens_per_sec\": {},\n  \
+             \"prefix_hit_prefill_savings\": {},\n  \"paged_peak_kv_bytes\": {},\n  \
+             \"dense_kv_slab_bytes\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -229,6 +240,9 @@ impl PerfReport {
             json_f32(self.decode_tps),
             json_f32(self.prepare_secs),
             json_f32(self.decode_prepared_tps),
+            json_f32(self.prefix_hit_prefill_savings),
+            json_f32(self.paged_peak_kv_bytes),
+            json_f32(self.dense_kv_slab_bytes),
         )
     }
 
@@ -316,6 +330,9 @@ mod tests {
             decode_tps: 250.0,
             prepare_secs: 0.02,
             decode_prepared_tps: 900.0,
+            prefix_hit_prefill_savings: 0.4,
+            paged_peak_kv_bytes: 65536.0,
+            dense_kv_slab_bytes: 262144.0,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
@@ -325,6 +342,9 @@ mod tests {
         assert!(j.contains("\"decode_tokens_per_sec\""));
         assert!(j.contains("\"prepare_secs\""));
         assert!(j.contains("\"decode_prepared_tokens_per_sec\""));
+        assert!(j.contains("\"prefix_hit_prefill_savings\""));
+        assert!(j.contains("\"paged_peak_kv_bytes\""));
+        assert!(j.contains("\"dense_kv_slab_bytes\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).

@@ -1,16 +1,27 @@
-//! Per-slot, per-layer key/value slabs for KV-cached decode.
+//! Key/value storage for KV-cached decode: the dense per-slot slabs
+//! (the seed layout) and the block-paged pool that replaces them on the
+//! serving path.
 //!
-//! The cache owns two `[L, slots, T_max, d]` tensors whose rows
+//! **Dense** ([`KvCache`]): two `[L, slots, T_max, d]` tensors whose rows
 //! `0..len[slot]` are the attention keys/values of every token a slot's
-//! sequence has fed so far. The backend entry `decode_step_q` *reads*
-//! the slabs (they travel as ordinary arguments — backends stay
-//! stateless) and returns the new token's `[L, B, d]` key/value rows,
-//! which [`KvCache::append`] writes at the slot's fill position.
+//! sequence has fed so far. Memory scales with `slots × T_max` even when
+//! sequences are short. Kept as the reference engine — the differential
+//! fuzz harness (`testutil::fuzz`) pins the paged engine bitwise against
+//! it.
 //!
-//! To cross the backend boundary without copying multi-megabyte slabs
-//! each step, [`KvCache::take`] moves the tensors out (for wrapping in
-//! host `Buffer`s) and [`KvCache::put_back`] returns them — the scheduler
-//! does this around every `decode_step_q` call.
+//! **Paged** ([`BlockPool`]): two `[n_blocks, L, block_tokens, d]` pool
+//! tensors plus per-block reference counts and a free list. A sequence
+//! owns a *block table* (an ordered list of block ids) instead of a
+//! `T_max` row range; blocks are refcounted so sequences with a common
+//! prompt prefix share the prefix's blocks (see [`super::prefix`]), with
+//! copy-on-write when a sequence must append into a partially shared
+//! block. Rows inside a block are bit-for-bit the same f32 values the
+//! dense slabs would hold, so the paged attention gather in
+//! `runtime/native/decode.rs` reproduces dense logits exactly
+//! (DESIGN.md §12).
+//!
+//! Both stores use the same take/put_back loan to cross the backend
+//! boundary without copying multi-megabyte tensors each step.
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
@@ -129,6 +140,249 @@ impl KvCache {
     }
 }
 
+/// Refcounted pool of fixed-size KV pages (`[n_blocks, L, block_tokens,
+/// d]` for keys and values). Blocks are handed out by [`BlockPool::alloc`],
+/// shared via [`BlockPool::retain`], and recycled onto the free list the
+/// moment their refcount returns to zero — refcount arithmetic is
+/// checked, never saturating, so underflow is a loud error instead of a
+/// silent double-free.
+#[derive(Debug)]
+pub struct BlockPool {
+    n_layer: usize,
+    n_blocks: usize,
+    block_tokens: usize,
+    d: usize,
+    /// `None` while on loan via [`BlockPool::take`].
+    k: Option<Tensor>,
+    v: Option<Tensor>,
+    refcount: Vec<u32>,
+    /// LIFO free list (deterministic allocation order).
+    free: Vec<u32>,
+}
+
+impl BlockPool {
+    pub fn new(n_layer: usize, n_blocks: usize, block_tokens: usize, d: usize) -> Self {
+        assert!(n_layer > 0 && n_blocks > 0 && block_tokens > 0 && d > 0);
+        let shape = [n_blocks, n_layer, block_tokens, d];
+        Self {
+            n_layer,
+            n_blocks,
+            block_tokens,
+            d,
+            k: Some(Tensor::zeros(&shape)),
+            v: Some(Tensor::zeros(&shape)),
+            refcount: vec![0; n_blocks],
+            // Pop from the back => block 0 first (pure convention).
+            free: (0..n_blocks as u32).rev().collect(),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount[block as usize]
+    }
+
+    /// Take one block off the free list (refcount 0 -> 1).
+    pub fn alloc(&mut self) -> Result<u32> {
+        let b = self.free.pop().context("block pool exhausted")?;
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
+        Ok(b)
+    }
+
+    /// Add a reference to an already-live block.
+    pub fn retain(&mut self, block: u32) -> Result<()> {
+        let i = block as usize;
+        if i >= self.n_blocks {
+            bail!("retain: block {block} out of range [0, {})", self.n_blocks);
+        }
+        if self.refcount[i] == 0 {
+            bail!("retain: block {block} is free (refcount 0)");
+        }
+        self.refcount[i] += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; the block returns to the free list at zero.
+    pub fn release(&mut self, block: u32) -> Result<()> {
+        let i = block as usize;
+        if i >= self.n_blocks {
+            bail!("release: block {block} out of range [0, {})", self.n_blocks);
+        }
+        if self.refcount[i] == 0 {
+            bail!("release: block {block} refcount underflow");
+        }
+        self.refcount[i] -= 1;
+        if self.refcount[i] == 0 {
+            self.free.push(block);
+        }
+        Ok(())
+    }
+
+    /// Move the pool tensors out (to wrap as backend arguments).
+    pub fn take(&mut self) -> Result<(Tensor, Tensor)> {
+        match (self.k.take(), self.v.take()) {
+            (Some(k), Some(v)) => Ok((k, v)),
+            _ => bail!("BlockPool tensors already taken"),
+        }
+    }
+
+    /// Return the pool tensors after a backend call.
+    pub fn put_back(&mut self, k: Tensor, v: Tensor) -> Result<()> {
+        let want = [self.n_blocks, self.n_layer, self.block_tokens, self.d];
+        if k.shape() != want || v.shape() != want {
+            bail!(
+                "put_back shapes k {:?} / v {:?} != {want:?}",
+                k.shape(),
+                v.shape()
+            );
+        }
+        if self.k.is_some() || self.v.is_some() {
+            bail!("BlockPool tensors were never taken");
+        }
+        self.k = Some(k);
+        self.v = Some(v);
+        Ok(())
+    }
+
+    /// Write one token's key/value rows for `slot` (from a decode step's
+    /// `[L, B, d]` outputs) into `block` at row `row`. Exactly the rows
+    /// [`KvCache::append`] would write — a plain f32 copy, so the paged
+    /// store is bitwise the dense store rearranged.
+    pub fn write_row(
+        &mut self,
+        block: u32,
+        row: usize,
+        slot: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+    ) -> Result<()> {
+        let bi = block as usize;
+        if bi >= self.n_blocks || row >= self.block_tokens {
+            bail!(
+                "write_row: block {block} row {row} out of range ({} blocks x {} rows)",
+                self.n_blocks,
+                self.block_tokens
+            );
+        }
+        let shape = k_new.shape();
+        if shape.len() != 3 || shape[0] != self.n_layer || shape[2] != self.d {
+            bail!(
+                "write_row: k_new {shape:?} must be [{}, B, {}]",
+                self.n_layer,
+                self.d
+            );
+        }
+        if v_new.shape() != shape {
+            bail!("write_row: v_new {:?} != k_new {shape:?}", v_new.shape());
+        }
+        let b = shape[1];
+        if slot >= b {
+            bail!("write_row: slot {slot} out of range [0, {b})");
+        }
+        let k = self.k.as_mut().context("BlockPool tensors are taken")?;
+        let v = self.v.as_mut().context("BlockPool tensors are taken")?;
+        for l in 0..self.n_layer {
+            let src = (l * b + slot) * self.d;
+            let dst = ((bi * self.n_layer + l) * self.block_tokens + row) * self.d;
+            k.data_mut()[dst..dst + self.d].copy_from_slice(&k_new.data()[src..src + self.d]);
+            v.data_mut()[dst..dst + self.d].copy_from_slice(&v_new.data()[src..src + self.d]);
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write: duplicate rows `0..rows` of `src` into `dst`
+    /// across every layer, for both keys and values. A bitwise f32 copy —
+    /// the diverging sequence sees exactly the shared prefix's rows.
+    pub fn cow_copy(&mut self, src: u32, dst: u32, rows: usize) -> Result<()> {
+        let (si, di) = (src as usize, dst as usize);
+        if si >= self.n_blocks || di >= self.n_blocks {
+            bail!("cow_copy: block {src} or {dst} out of range");
+        }
+        if si == di {
+            bail!("cow_copy: src == dst ({src})");
+        }
+        if rows > self.block_tokens {
+            bail!("cow_copy: {rows} rows > block_tokens {}", self.block_tokens);
+        }
+        let k = self.k.as_mut().context("BlockPool tensors are taken")?;
+        let v = self.v.as_mut().context("BlockPool tensors are taken")?;
+        let span = rows * self.d;
+        for l in 0..self.n_layer {
+            let s = ((si * self.n_layer + l) * self.block_tokens) * self.d;
+            let t = ((di * self.n_layer + l) * self.block_tokens) * self.d;
+            for data in [k.data_mut(), v.data_mut()] {
+                let (src_row, dst_row) = if s < t {
+                    let (a, b) = data.split_at_mut(t);
+                    (&a[s..s + span], &mut b[..span])
+                } else {
+                    let (a, b) = data.split_at_mut(s);
+                    (&b[..span], &mut a[t..t + span])
+                };
+                dst_row.copy_from_slice(src_row);
+            }
+        }
+        Ok(())
+    }
+
+    /// Cached key row (layer, block, row) — test/debug accessor.
+    pub fn k_row(&self, layer: usize, block: u32, row: usize) -> Result<&[f32]> {
+        let k = self.k.as_ref().context("BlockPool tensors are taken")?;
+        let bi = block as usize;
+        if layer >= self.n_layer || bi >= self.n_blocks || row >= self.block_tokens {
+            bail!("k_row({layer}, {block}, {row}) out of range");
+        }
+        let off = ((bi * self.n_layer + layer) * self.block_tokens + row) * self.d;
+        Ok(&k.data()[off..off + self.d])
+    }
+
+    /// Structural invariants (property-tested by the fuzz harness after
+    /// every scheduler step): the free list is a duplicate-free subset
+    /// of the pool, and refcounts agree with free-list membership —
+    /// together these make the free and live sets a partition.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.free.len() > self.n_blocks {
+            bail!(
+                "free list has {} entries for a {}-block pool",
+                self.free.len(),
+                self.n_blocks
+            );
+        }
+        let mut on_free = vec![false; self.n_blocks];
+        for &b in &self.free {
+            let i = b as usize;
+            if i >= self.n_blocks {
+                bail!("free list holds out-of-range block {b}");
+            }
+            if on_free[i] {
+                bail!("block {b} appears twice on the free list");
+            }
+            on_free[i] = true;
+        }
+        for (i, &rc) in self.refcount.iter().enumerate() {
+            if (rc == 0) != on_free[i] {
+                bail!("block {i}: refcount {rc} but on_free={}", on_free[i]);
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +444,78 @@ mod tests {
         let bad = Tensor::zeros(&[2, 2, 5]);
         assert!(c.append(0, &bad, &bad).is_err());
         assert!(c.append(9, &Tensor::zeros(&[2, 2, 4]), &Tensor::zeros(&[2, 2, 4])).is_err());
+    }
+
+    // ------------------------------------------------------- BlockPool
+
+    #[test]
+    fn pool_alloc_retain_release_lifecycle() {
+        let mut p = BlockPool::new(2, 3, 4, 5);
+        assert_eq!(p.free_blocks(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_blocks(), 1);
+        assert_eq!(p.in_use_blocks(), 2);
+        p.retain(a).unwrap();
+        assert_eq!(p.refcount(a), 2);
+        p.release(a).unwrap();
+        assert_eq!(p.free_blocks(), 1, "still one reference out");
+        p.release(a).unwrap();
+        assert_eq!(p.free_blocks(), 2);
+        // Underflow and free-block retains are loud errors.
+        assert!(p.release(a).is_err());
+        assert!(p.retain(a).is_err());
+        p.check_invariants().unwrap();
+        p.release(b).unwrap();
+        p.check_invariants().unwrap();
+        assert_eq!(p.free_blocks(), 3);
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error() {
+        let mut p = BlockPool::new(1, 2, 2, 2);
+        p.alloc().unwrap();
+        p.alloc().unwrap();
+        assert!(p.alloc().is_err());
+    }
+
+    #[test]
+    fn pool_write_and_cow_copy_rows() {
+        let (l, bt, d) = (2usize, 3usize, 4usize);
+        let mut p = BlockPool::new(l, 4, bt, d);
+        let src = p.alloc().unwrap();
+        let (k, v) = step_rows(l, 2, d, 10.0);
+        p.write_row(src, 0, 1, &k, &v).unwrap();
+        p.write_row(src, 1, 0, &k, &v).unwrap();
+        // Layer 0 slot 1 of the step rows lands at block row 0.
+        let want0 = &k.data()[d..2 * d];
+        assert_eq!(p.k_row(0, src, 0).unwrap(), want0);
+        // COW: rows 0..2 copied bit-exactly into a fresh block.
+        let dst = p.alloc().unwrap();
+        p.cow_copy(src, dst, 2).unwrap();
+        for layer in 0..l {
+            for row in 0..2 {
+                assert_eq!(
+                    p.k_row(layer, src, row).unwrap(),
+                    p.k_row(layer, dst, row).unwrap()
+                );
+            }
+        }
+        assert!(p.cow_copy(src, src, 1).is_err());
+        assert!(p.cow_copy(src, dst, bt + 1).is_err());
+    }
+
+    #[test]
+    fn pool_take_put_back_loan() {
+        let mut p = BlockPool::new(1, 2, 2, 2);
+        let b = p.alloc().unwrap();
+        let (kt, vt) = p.take().unwrap();
+        assert!(p.take().is_err());
+        let (k, v) = step_rows(1, 1, 2, 3.0);
+        assert!(p.write_row(b, 0, 0, &k, &v).is_err()); // on loan
+        assert!(p.put_back(Tensor::zeros(&[1]), vt.clone()).is_err());
+        p.put_back(kt, vt).unwrap();
+        p.write_row(b, 0, 0, &k, &v).unwrap();
     }
 }

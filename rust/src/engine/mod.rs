@@ -5,14 +5,21 @@
 //! [B, T] batch); this subsystem adds real token generation, the
 //! workload that dominates quantized-LLM deployment:
 //!
-//! - [`KvCache`] — per-slot, per-layer key/value slabs with append +
-//!   causal read, fed to the backend's `decode_step_q` entry.
+//! - [`KvCache`] — dense per-slot, per-layer key/value slabs (the seed
+//!   layout, kept as the differential-fuzz oracle).
+//! - [`BlockPool`] + [`RadixTree`] — the paged replacement (default):
+//!   fixed-size refcounted KV pages with per-sequence block tables,
+//!   radix-tree prompt-prefix sharing (a request whose prompt matches a
+//!   cached prefix skips that prefill entirely), copy-on-write on
+//!   divergence, and LRU eviction of idle prefixes (DESIGN.md §12).
 //! - [`Sampler`] — greedy / temperature / top-k sampling on the repo's
 //!   seeded PRNG; one independent stream per sequence.
 //! - [`Engine`] — slot-based continuous batching: sequences of different
-//!   lengths (prefilling or decoding) share one batched `decode_step_q`
-//!   per step, finished sequences free their slot for queued work, and a
-//!   [`GenReport`] splits prefill vs decode throughput.
+//!   lengths (prefilling or decoding) share one batched decode step,
+//!   finished sequences free their slot for queued work, and a
+//!   [`GenReport`] splits prefill vs decode throughput. The paged engine
+//!   admits by free *blocks*, so many short sequences no longer reserve
+//!   `T_max` rows each.
 //!
 //! **Bit-identity:** the logits a sequence sees at position `t` are
 //! bitwise equal to `fwd_logits_q`'s logits at position `t` of the full
@@ -22,10 +29,12 @@
 //! O(T²) recompute.
 
 mod kv_cache;
+mod prefix;
 mod sampler;
 mod scheduler;
 
-pub use kv_cache::KvCache;
+pub use kv_cache::{BlockPool, KvCache};
+pub use prefix::RadixTree;
 pub use sampler::Sampler;
 pub use scheduler::{Engine, GenConfig};
 
@@ -156,6 +165,18 @@ pub struct GenReport {
     pub decode_secs: f32,
     /// Mean fraction of slots busy per step.
     pub mean_slot_occupancy: f32,
+    /// Prompt tokens skipped at admission via radix prefix-cache hits —
+    /// never fed through prefill at all (paged engine only).
+    pub prefix_hit_tokens: usize,
+    /// High-water mark of pool blocks in use (paged engine only).
+    pub peak_blocks_in_use: usize,
+    /// Total KV pool blocks (0 = dense engine).
+    pub pool_blocks: usize,
+    /// Tokens per KV pool block (0 = dense engine).
+    pub block_tokens: usize,
+    /// Block references dropped from the prefix cache by LRU eviction
+    /// under admission pressure (paged engine only).
+    pub evicted_blocks: usize,
 }
 
 impl GenReport {

@@ -1,0 +1,480 @@
+//! Radix (compressed-trie) prefix cache: token prefixes -> KV block
+//! chains.
+//!
+//! Finished sequences insert their token prefix together with the pool
+//! blocks holding that prefix's keys/values; a later request whose
+//! prompt shares a cached prefix looks it up, takes references on the
+//! matched blocks, and skips that portion of prefill entirely (the
+//! dominant win when many requests share a system prompt). The tree is
+//! the only holder of a cached-but-idle prefix's blocks, so evicting its
+//! least-recently-used leaves is exactly "drop unreferenced prefixes
+//! under memory pressure" — the pool frees a block the moment its last
+//! reference (tree or sequence) is released.
+//!
+//! Each node stores one block id *per edge token* (the block holding
+//! that absolute position's KV rows). Per-token storage makes edge
+//! splits trivial at any offset, while inserts aligned to `block_tokens`
+//! guarantee the invariant the block-table gather relies on: the entry
+//! that contributed the id at a span's last matched position followed
+//! this exact token path through that position and wrote the block's
+//! entire span, so every chain entry is a fully-written block whose rows
+//! match the query. Lookups may still match an arbitrary (unaligned)
+//! number of tokens — the caller shares whole blocks and copy-on-writes
+//! the partial tail (DESIGN.md §12).
+//!
+//! The tree never touches the pool itself: [`RadixTree::insert`] returns
+//! the blocks it newly references and [`RadixTree::evict_lru`] the blocks
+//! it dropped; the engine mirrors those into `BlockPool` refcounts (and
+//! the paged invariant check cross-verifies via [`RadixTree::block_refs`]).
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Node {
+    /// Token run labeling the edge from the parent (empty only at root).
+    edge: Vec<i32>,
+    /// Block id holding each edge token's KV rows (parallel to `edge`).
+    blocks: Vec<u32>,
+    /// (first edge token, node id) — first tokens are distinct.
+    children: Vec<(i32, usize)>,
+    parent: usize,
+    /// Monotonic use stamp (engine clock) for LRU eviction.
+    last_use: u64,
+}
+
+#[derive(Debug)]
+pub struct RadixTree {
+    block_tokens: usize,
+    /// Slab of nodes; `None` = evicted slot awaiting reuse. Node 0 is
+    /// the root (empty edge, never evicted).
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<usize>,
+}
+
+impl RadixTree {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        Self {
+            block_tokens,
+            nodes: vec![Some(Node {
+                edge: Vec::new(),
+                blocks: Vec::new(),
+                children: Vec::new(),
+                parent: 0,
+                last_use: 0,
+            })],
+            free_ids: Vec::new(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Live nodes, root excluded.
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().flatten().count() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_count() == 0
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dangling node id")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling node id")
+    }
+
+    fn new_node(&mut self, node: Node) -> usize {
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn child_by_token(&self, id: usize, tok: i32) -> Option<usize> {
+        self.node(id)
+            .children
+            .iter()
+            .find(|(t, _)| *t == tok)
+            .map(|&(_, c)| c)
+    }
+
+    /// Longest cached prefix of `tokens`: `(match_len, chain)` where
+    /// `chain[i]` is the block holding positions `[i*bt, (i+1)*bt)` and
+    /// `chain.len() == ceil(match_len / bt)` — the last entry may cover
+    /// the match only partially (`match_len % bt != 0`, the
+    /// partial-block boundary case; the caller copy-on-writes it).
+    /// Bumps LRU stamps along the matched path with `clock`.
+    pub fn lookup(&mut self, tokens: &[i32], clock: u64) -> (usize, Vec<u32>) {
+        let mut per_token: Vec<u32> = Vec::new();
+        let mut id = 0usize;
+        self.node_mut(0).last_use = clock;
+        while per_token.len() < tokens.len() {
+            let Some(child) = self.child_by_token(id, tokens[per_token.len()]) else {
+                break;
+            };
+            self.node_mut(child).last_use = clock;
+            let n = self.node(child);
+            let remaining = &tokens[per_token.len()..];
+            let mut common = 0usize;
+            while common < n.edge.len()
+                && common < remaining.len()
+                && n.edge[common] == remaining[common]
+            {
+                common += 1;
+            }
+            per_token.extend_from_slice(&n.blocks[..common]);
+            if common < n.edge.len() {
+                break; // diverged (or query exhausted) mid-edge
+            }
+            id = child;
+        }
+        let p = per_token.len();
+        // Chain entry for span i = the block at the span's LAST matched
+        // position: the entry that contributed it followed this exact
+        // token path through that position and (inserts being aligned)
+        // wrote the block's whole span, so its rows match the query on
+        // every span position — which is not true of the span's first
+        // position when an edge split from a later-diverging entry lies
+        // inside the span.
+        let chain: Vec<u32> = (0..p.div_ceil(self.block_tokens))
+            .map(|i| per_token[((i + 1) * self.block_tokens).min(p) - 1])
+            .collect();
+        (p, chain)
+    }
+
+    /// Insert `tokens` (length MUST be a multiple of `block_tokens`)
+    /// with `block_at(pos)` naming the block that holds position `pos`.
+    /// Already-cached prefixes are deduplicated (the existing blocks
+    /// win); only genuinely new suffix nodes reference the caller's
+    /// blocks. Returns every block reference the tree newly took — the
+    /// caller must `retain` each on the pool exactly once.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        block_at: impl Fn(usize) -> u32,
+        clock: u64,
+    ) -> Vec<u32> {
+        assert_eq!(
+            tokens.len() % self.block_tokens,
+            0,
+            "radix inserts must be block-aligned"
+        );
+        let mut new_refs: Vec<u32> = Vec::new();
+        let mut id = 0usize;
+        let mut pos = 0usize;
+        self.node_mut(0).last_use = clock;
+        while pos < tokens.len() {
+            let Some(child) = self.child_by_token(id, tokens[pos]) else {
+                // No child starts with this token: hang the whole
+                // remaining suffix off `id` as one new node.
+                let edge: Vec<i32> = tokens[pos..].to_vec();
+                let blocks: Vec<u32> = (pos..tokens.len()).map(&block_at).collect();
+                push_distinct_runs(&blocks, &mut new_refs);
+                let node = self.new_node(Node {
+                    edge,
+                    blocks,
+                    children: Vec::new(),
+                    parent: id,
+                    last_use: clock,
+                });
+                self.node_mut(id).children.push((tokens[pos], node));
+                return new_refs;
+            };
+            self.node_mut(child).last_use = clock;
+            let n = self.node(child);
+            let remaining = &tokens[pos..];
+            let mut common = 0usize;
+            while common < n.edge.len()
+                && common < remaining.len()
+                && n.edge[common] == remaining[common]
+            {
+                common += 1;
+            }
+            if common == n.edge.len() {
+                // Fully matched this edge; descend.
+                pos += common;
+                id = child;
+                continue;
+            }
+            pos += common;
+            if pos == tokens.len() {
+                // The insert is a strict prefix of an existing edge:
+                // nothing new to record (the existing entry covers it).
+                return new_refs;
+            }
+            // Divergence mid-edge: split the child at `common`.
+            let (mid_edge, rest_edge, mid_blocks, rest_blocks) = {
+                let n = self.node(child);
+                (
+                    n.edge[..common].to_vec(),
+                    n.edge[common..].to_vec(),
+                    n.blocks[..common].to_vec(),
+                    n.blocks[common..].to_vec(),
+                )
+            };
+            // A block whose span straddles the split point is now
+            // referenced by both halves: one extra tree reference.
+            if let (Some(&a), Some(&b)) = (mid_blocks.last(), rest_blocks.first()) {
+                if a == b {
+                    new_refs.push(a);
+                }
+            }
+            let mid = self.new_node(Node {
+                edge: mid_edge,
+                blocks: mid_blocks,
+                children: Vec::new(),
+                parent: id,
+                last_use: clock,
+            });
+            // Rewire: parent -> mid -> child(rest).
+            let first = tokens[pos - common];
+            for slot in self.node_mut(id).children.iter_mut() {
+                if slot.0 == first {
+                    slot.1 = mid;
+                }
+            }
+            {
+                let c = self.node_mut(child);
+                c.edge = rest_edge;
+                c.blocks = rest_blocks;
+                c.parent = mid;
+            }
+            let rest_first = self.node(child).edge[0];
+            self.node_mut(mid).children.push((rest_first, child));
+            // New suffix node under mid.
+            let edge: Vec<i32> = tokens[pos..].to_vec();
+            let blocks: Vec<u32> = (pos..tokens.len()).map(&block_at).collect();
+            push_distinct_runs(&blocks, &mut new_refs);
+            let node = self.new_node(Node {
+                edge,
+                blocks,
+                children: Vec::new(),
+                parent: mid,
+                last_use: clock,
+            });
+            let new_first = tokens[pos];
+            self.node_mut(mid).children.push((new_first, node));
+            return new_refs;
+        }
+        new_refs
+    }
+
+    /// Remove the least-recently-used leaf (deterministic tie-break on
+    /// node id) and return the block references it held — the caller
+    /// must `release` each on the pool. `None` when nothing is cached.
+    pub fn evict_lru(&mut self) -> Option<Vec<u32>> {
+        let mut victim: Option<(u64, usize)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if id == 0 || !n.children.is_empty() {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some((stamp, _)) => n.last_use < stamp,
+            };
+            if better {
+                victim = Some((n.last_use, id));
+            }
+        }
+        let (_, id) = victim?;
+        let node = self.nodes[id].take().expect("victim is alive");
+        self.free_ids.push(id);
+        let parent = self.node_mut(node.parent);
+        parent.children.retain(|&(_, c)| c != id);
+        let mut dropped = Vec::new();
+        push_distinct_runs(&node.blocks, &mut dropped);
+        Some(dropped)
+    }
+
+    /// The tree's block-reference multiset: for each live node, each
+    /// distinct block run counts one reference. Cross-checked against
+    /// `BlockPool` refcounts by the paged invariant check.
+    pub fn block_refs(&self) -> HashMap<u32, u32> {
+        let mut refs: HashMap<u32, u32> = HashMap::new();
+        for slot in self.nodes.iter().flatten() {
+            let mut runs = Vec::new();
+            push_distinct_runs(&slot.blocks, &mut runs);
+            for b in runs {
+                *refs.entry(b).or_insert(0) += 1;
+            }
+        }
+        refs
+    }
+
+    /// Structural sanity (test helper): parallel edge/block arrays,
+    /// distinct child first-tokens, consistent parent links, non-empty
+    /// edges off the root.
+    pub fn check_structure(&self) -> anyhow::Result<()> {
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.edge.len() != n.blocks.len() {
+                anyhow::bail!("node {id}: edge/blocks length mismatch");
+            }
+            if id != 0 && n.edge.is_empty() {
+                anyhow::bail!("node {id}: empty edge off the root");
+            }
+            let mut firsts: Vec<i32> = n.children.iter().map(|&(t, _)| t).collect();
+            firsts.sort_unstable();
+            firsts.dedup();
+            if firsts.len() != n.children.len() {
+                anyhow::bail!("node {id}: duplicate child first-tokens");
+            }
+            for &(tok, c) in &n.children {
+                let child = self
+                    .nodes
+                    .get(c)
+                    .and_then(|s| s.as_ref())
+                    .ok_or_else(|| anyhow::anyhow!("node {id}: dangling child {c}"))?;
+                if child.parent != id {
+                    anyhow::bail!("node {c}: parent link != {id}");
+                }
+                if child.edge.first() != Some(&tok) {
+                    anyhow::bail!("node {c}: edge does not start with child key {tok}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Append each distinct consecutive run's block id (per-token block
+/// arrays hold runs of up to `block_tokens` equal ids; distinct runs are
+/// exactly the distinct blocks a node references).
+fn push_distinct_runs(blocks: &[u32], out: &mut Vec<u32>) {
+    let mut prev: Option<u32> = None;
+    for &b in blocks {
+        if prev != Some(b) {
+            out.push(b);
+            prev = Some(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Insert helper: positions map to synthetic block ids `base + i/bt`.
+    fn ins(t: &mut RadixTree, tokens: &[i32], base: u32) -> Vec<u32> {
+        let bt = t.block_tokens();
+        t.insert(tokens, |pos| base + (pos / bt) as u32, 1)
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip_and_partial_boundary() {
+        let mut t = RadixTree::new(4);
+        let refs = ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 100);
+        assert_eq!(refs, vec![100, 101]);
+        t.check_structure().unwrap();
+
+        // Exact full match.
+        let (p, chain) = t.lookup(&[1, 2, 3, 4, 5, 6, 7, 8], 2);
+        assert_eq!(p, 8);
+        assert_eq!(chain, vec![100, 101]);
+
+        // Partial-block boundary: diverges at position 6 (6 % 4 != 0) —
+        // two chain entries, the second covering the match only partially.
+        let (p, chain) = t.lookup(&[1, 2, 3, 4, 5, 6, 9, 9], 3);
+        assert_eq!(p, 6);
+        assert_eq!(chain, vec![100, 101]);
+
+        // Query longer than the cached entry.
+        let (p, chain) = t.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 9, 9, 9], 4);
+        assert_eq!(p, 8);
+        assert_eq!(chain.len(), 2);
+
+        // No match at all.
+        let (p, chain) = t.lookup(&[9, 9], 5);
+        assert_eq!(p, 0);
+        assert!(chain.is_empty());
+    }
+
+    #[test]
+    fn divergent_insert_splits_and_dedupes() {
+        let mut t = RadixTree::new(4);
+        assert_eq!(ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 100), vec![100, 101]);
+        // Shares 6 tokens, diverges mid-block: the split makes block 101
+        // referenced by both halves (one extra ref) and only the new
+        // suffix's block 201 is taken from the second entry.
+        let refs = ins(&mut t, &[1, 2, 3, 4, 5, 6, 9, 9], 200);
+        assert_eq!(refs, vec![101, 201]);
+        t.check_structure().unwrap();
+        assert_eq!(t.node_count(), 3);
+
+        // Both entries still resolve.
+        assert_eq!(t.lookup(&[1, 2, 3, 4, 5, 6, 7, 8], 9).0, 8);
+        let (p, chain) = t.lookup(&[1, 2, 3, 4, 5, 6, 9, 9], 9);
+        assert_eq!(p, 8);
+        assert_eq!(chain, vec![100, 201]);
+
+        // Re-inserting an already-cached prefix takes no new references.
+        assert!(ins(&mut t, &[1, 2, 3, 4], 300).is_empty());
+        assert!(ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 300).is_empty());
+    }
+
+    #[test]
+    fn aligned_chain_entries_cover_full_blocks() {
+        // The gather invariant: chain[i] comes from whichever entry
+        // contributed the aligned position, and that entry wrote the
+        // whole block. After the split above, a query matching 8 tokens
+        // of the second entry gets [first entry's block 0, second
+        // entry's block 1] — both fully written by their sequences.
+        let mut t = RadixTree::new(4);
+        ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 100);
+        ins(&mut t, &[1, 2, 3, 4, 5, 9, 9, 9], 200);
+        let (p, chain) = t.lookup(&[1, 2, 3, 4, 5, 9, 9, 9], 3);
+        assert_eq!(p, 8);
+        assert_eq!(chain, vec![100, 201]);
+    }
+
+    #[test]
+    fn lru_eviction_removes_leaves_bottom_up() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2, 3, 4], |p| 10 + (p / 2) as u32, 1);
+        t.insert(&[1, 2, 9, 9], |p| 20 + (p / 2) as u32, 2);
+        t.check_structure().unwrap();
+        assert_eq!(t.node_count(), 3);
+        // Oldest leaf first: the [3,4] suffix (stamped at clock 1).
+        let dropped = t.evict_lru().unwrap();
+        assert_eq!(dropped, vec![11]);
+        // Then the [9,9] suffix, then the shared [1,2] node (a leaf now).
+        assert_eq!(t.evict_lru().unwrap(), vec![21]);
+        assert_eq!(t.evict_lru().unwrap(), vec![10]);
+        assert!(t.evict_lru().is_none());
+        assert!(t.is_empty());
+        // The slab reuses freed ids.
+        t.insert(&[5, 6], |_| 30, 3);
+        t.check_structure().unwrap();
+        assert_eq!(t.lookup(&[5, 6], 4).0, 2);
+    }
+
+    #[test]
+    fn block_refs_counts_split_shared_blocks_twice() {
+        let mut t = RadixTree::new(4);
+        ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 100);
+        ins(&mut t, &[1, 2, 3, 4, 5, 6, 9, 9], 200);
+        let refs = t.block_refs();
+        assert_eq!(refs[&100], 1);
+        assert_eq!(refs[&101], 2, "straddling block referenced by both halves");
+        assert_eq!(refs[&201], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "block-aligned")]
+    fn unaligned_insert_panics() {
+        let mut t = RadixTree::new(4);
+        t.insert(&[1, 2, 3], |_| 0, 1);
+    }
+}

@@ -1,33 +1,56 @@
 //! Continuous-batching generation scheduler.
 //!
 //! [`Engine`] owns a fixed number of *slots* (default: the preset's batch
-//! size), a [`KvCache`] sized `[L, slots, seq, d]`, and the uploaded
-//! quantized weight bundle. Every [`Engine::step`] runs ONE batched
-//! `decode_step_q` over all occupied slots — sequences at completely
-//! different phases (prompt prefill, mid-decode) share the same
-//! execution, each at its own cache position. Finished sequences free
-//! their slot immediately and the queue backfills it on the next step,
-//! so short requests never wait for long ones to drain (continuous
-//! batching, the vLLM scheduling model at slot granularity).
+//! size), a KV store, and the uploaded quantized weight bundle. Every
+//! [`Engine::step`] runs ONE batched decode step over all occupied slots —
+//! sequences at completely different phases (prompt prefill, mid-decode)
+//! share the same execution, each at its own cache position. Finished
+//! sequences free their slot immediately and the queue backfills it on
+//! the next step, so short requests never wait for long ones to drain
+//! (continuous batching, the vLLM scheduling model at slot granularity).
+//!
+//! Two KV stores exist behind one scheduler:
+//!
+//! - **Dense** (`GenConfig { paged: false }`): the seed `[L, slots,
+//!   T_max, d]` slabs + `decode_step_q`. A slot reserves `T_max` rows
+//!   for its whole lifetime. Kept as the reference engine — the
+//!   differential fuzz harness (`testutil::fuzz`) pins the paged engine
+//!   bitwise against it.
+//! - **Paged** (default): a refcounted [`BlockPool`] of fixed
+//!   `block_tokens` pages, per-sequence block tables, and a [`RadixTree`]
+//!   prefix cache + `decode_step_paged_q`. Admission is by free
+//!   *blocks* (worst case `ceil((prompt + max_new - 1) / block_tokens)`,
+//!   reserved up front so mid-decode allocation can never fail), a
+//!   request whose prompt shares a cached prefix takes references on the
+//!   matched full blocks and starts prefill after them (copy-on-write
+//!   duplicates a partially-matched tail block), finished sequences
+//!   insert their block-aligned prefix into the tree, and admission
+//!   pressure evicts least-recently-used cached prefixes (DESIGN.md §12).
 //!
 //! Prefill feeds prompt tokens one position per step through the same
-//! entry as decode: there is exactly one compute path, which is what
-//! makes the bit-identity contract (module docs in [`super`]) hold by
-//! construction. The [`GenReport`] splits wall time between prefill and
-//! decode by each step's feed mix.
+//! entry as decode: there is exactly one compute path per store, and the
+//! paged gather reads bitwise-identical rows in the identical order, so
+//! the bit-identity contract (module docs in [`super`]) holds across
+//! stores, thread counts, and batch mixes. The [`GenReport`] splits wall
+//! time between prefill and decode by each step's feed mix and carries
+//! the paged pool/prefix counters.
 
 use super::{
-    FinishReason, GenOutput, GenReport, GenRequest, KvCache, RejectCounts, RejectReason, Sampler,
+    BlockPool, FinishReason, GenOutput, GenReport, GenRequest, KvCache, RadixTree, RejectCounts,
+    RejectReason, Sampler,
 };
 use crate::config::ModelConfig;
 use crate::model::Params;
 use crate::quant::QuantizedModel;
 use crate::runtime::{Buffer, Runtime, Value};
 use crate::serve::qmodel_literals;
-use crate::tensor::TensorI32;
+use crate::tensor::{Tensor, TensorI32};
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Default KV page size (tokens per block) for the paged engine.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
 /// Generation settings shared by every sequence of an engine.
 #[derive(Clone, Debug)]
@@ -44,6 +67,20 @@ pub struct GenConfig {
     /// panels, DESIGN.md §11; bit-identical logits). `false` keeps the
     /// per-step dequantizing seed path — the perf bench's baseline.
     pub prepared: bool,
+    /// Block-paged KV cache + radix prefix sharing (DESIGN.md §12)
+    /// instead of the dense `[L, slots, T_max, d]` slabs. Token streams
+    /// are bit-identical either way (pinned by `testutil::fuzz`).
+    pub paged: bool,
+    /// Tokens per KV page (paged only; 0 = [`DEFAULT_BLOCK_TOKENS`]).
+    pub block_tokens: usize,
+    /// Pool size in blocks (paged only; 0 = `slots * ceil(seq /
+    /// block_tokens)`, the dense slab's capacity). Smaller pools trade
+    /// admission concurrency for memory; many short sequences need far
+    /// fewer blocks than `slots * T_max` rows.
+    pub pool_blocks: usize,
+    /// Keep finished prompts' KV blocks in the radix prefix cache so
+    /// later requests sharing the prefix skip that prefill (paged only).
+    pub prefix_cache: bool,
 }
 
 impl Default for GenConfig {
@@ -54,6 +91,10 @@ impl Default for GenConfig {
             seed: 7,
             slots: 0,
             prepared: true,
+            paged: true,
+            block_tokens: 0,
+            pool_blocks: 0,
+            prefix_cache: true,
         }
     }
 }
@@ -64,11 +105,277 @@ struct SeqState {
     prompt_len: usize,
     /// Prompt followed by generated tokens.
     tokens: Vec<i32>,
-    /// Tokens fed through the cache so far (== cache len for the slot).
+    /// Tokens fed through the cache so far (prefix-cache hits start it
+    /// past zero: those positions' KV rows are shared, not re-fed).
     cursor: usize,
     max_new: usize,
     stop_id: Option<i32>,
     sampler: Sampler,
+}
+
+/// The paged KV state: pool + prefix tree + per-slot block tables and
+/// worst-case reservations.
+struct PagedKv {
+    pool: BlockPool,
+    tree: RadixTree,
+    /// Per-slot block table (parallel to `Engine::slots`).
+    tables: Vec<Vec<u32>>,
+    /// Per-slot blocks still to allocate (worst case), pre-reserved at
+    /// admission so a mid-decode `alloc` can never fail.
+    reserved: Vec<usize>,
+    reserved_total: usize,
+    /// Block-table width: `ceil(t_max / block_tokens)`.
+    max_blocks: usize,
+    block_tokens: usize,
+    t_max: usize,
+    prefix_cache: bool,
+    /// Monotonic LRU clock (bumped per admission/insert).
+    clock: u64,
+    prefix_hit_tokens: usize,
+    evicted_refs: usize,
+    peak_in_use: usize,
+}
+
+impl PagedKv {
+    fn new(
+        cfg: &ModelConfig,
+        slots: usize,
+        block_tokens: usize,
+        pool_blocks: usize,
+        prefix_cache: bool,
+    ) -> Self {
+        let bt = if block_tokens == 0 {
+            DEFAULT_BLOCK_TOKENS
+        } else {
+            block_tokens
+        };
+        let max_blocks = cfg.seq.div_ceil(bt);
+        let pool_blocks = if pool_blocks == 0 {
+            slots * max_blocks
+        } else {
+            pool_blocks
+        };
+        Self {
+            pool: BlockPool::new(cfg.n_layer, pool_blocks, bt, cfg.d_model),
+            tree: RadixTree::new(bt),
+            tables: (0..slots).map(|_| Vec::new()).collect(),
+            reserved: vec![0; slots],
+            reserved_total: 0,
+            max_blocks,
+            block_tokens: bt,
+            t_max: cfg.seq,
+            prefix_cache,
+            clock: 0,
+            prefix_hit_tokens: 0,
+            evicted_refs: 0,
+            peak_in_use: 0,
+        }
+    }
+
+    /// Requests whose `prompt + max_new` exceeds this can never be
+    /// admitted (position capacity or worst-case block need > pool).
+    fn capacity(&self) -> usize {
+        self.t_max.min(self.pool.n_blocks() * self.block_tokens + 1)
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_in_use = self.peak_in_use.max(self.pool.in_use_blocks());
+    }
+
+    /// Evict LRU cached prefixes until `target` blocks are free — but
+    /// only if the target is reachable: eviction can free exactly the
+    /// blocks whose every reference is the tree's, so when a waiting
+    /// head couldn't be admitted anyway (blocks held by live sequences
+    /// or admission pins), the cache is left intact instead of being
+    /// pointlessly wiped a step at a time. Returns whether `target` is
+    /// met.
+    fn secure_free(&mut self, target: usize) -> Result<bool> {
+        if self.pool.free_blocks() >= target {
+            return Ok(true);
+        }
+        if self.tree.is_empty() {
+            // Nothing cached: the missing blocks are held by live
+            // sequences; only their completion can free them.
+            return Ok(false);
+        }
+        // Full reachability walk — O(live tree nodes) per blocked
+        // admission attempt. Fine at serving scale (a prefix cache
+        // holds tens of nodes); revisit with an incremental
+        // tree-only-referenced counter if tree sizes grow.
+        let tree_refs = self.tree.block_refs();
+        let freeable = tree_refs
+            .iter()
+            .filter(|&(&b, &refs)| self.pool.refcount(b) == refs)
+            .count();
+        if self.pool.free_blocks() + freeable < target {
+            return Ok(false);
+        }
+        while self.pool.free_blocks() < target {
+            let Some(dropped) = self.tree.evict_lru() else {
+                break;
+            };
+            for b in dropped {
+                self.evicted_refs += 1;
+                self.pool.release(b)?;
+            }
+        }
+        Ok(self.pool.free_blocks() >= target)
+    }
+
+    /// Try to admit a sequence into `slot`: prefix lookup, worst-case
+    /// block reservation (evicting LRU cached prefixes as needed), and
+    /// copy-on-write of a partially matched tail block. Returns the
+    /// starting cursor (prefix tokens skipped) or `None` when the pool
+    /// cannot cover the request right now.
+    fn try_admit(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        prompt_len: usize,
+        max_new: usize,
+    ) -> Result<Option<usize>> {
+        self.clock += 1;
+        let bt = self.block_tokens;
+        let (mut p, chain) = if self.prefix_cache {
+            let (m, c) = self.tree.lookup(&tokens[..prompt_len], self.clock);
+            // The last prompt token is always fed: its logits seed the
+            // first sampled token.
+            (m.min(prompt_len - 1), c)
+        } else {
+            (0, Vec::new())
+        };
+        let nfull = p / bt;
+        let partial = p % bt;
+        // Worst-case rows this sequence ever caches (the final sampled
+        // token is returned, never fed).
+        let rows_worst = prompt_len + max_new - 1;
+        let need_total = rows_worst.div_ceil(bt);
+        debug_assert!(need_total <= self.pool.n_blocks(), "validate() enforces this");
+        let new_needed = need_total - nfull;
+        // Pin every shared block (and the copy-on-write source) BEFORE
+        // evicting, so eviction can only drop the tree's references —
+        // never recycle a block this admission is about to read.
+        let mut pinned: Vec<u32> = Vec::with_capacity(nfull + 1);
+        for &b in chain.iter().take(nfull) {
+            self.pool.retain(b)?;
+            pinned.push(b);
+        }
+        let mut cow_src = if partial > 0 {
+            let src = chain[nfull];
+            self.pool.retain(src)?;
+            Some(src)
+        } else {
+            None
+        };
+        // The free list must cover every outstanding reservation plus
+        // this sequence's worst case.
+        let target = self.reserved_total + new_needed;
+        let mut ok = self.secure_free(target)?;
+        if !ok && cow_src.is_some() {
+            // The partial-tail hit is opportunistic: its pinned COW
+            // source can make the target unreachable at exact pool
+            // capacity (the source can never free while pinned). Drop
+            // the pin, round the hit down to the full-block boundary,
+            // and retry — provably admissible whenever an admission
+            // with no hit at all would be.
+            if let Some(src) = cow_src.take() {
+                self.pool.release(src)?;
+            }
+            p = nfull * bt;
+            ok = self.secure_free(target)?;
+        }
+        if !ok {
+            // Not admissible right now: roll the pins back.
+            for b in pinned {
+                self.pool.release(b)?;
+            }
+            if let Some(src) = cow_src {
+                self.pool.release(src)?;
+            }
+            return Ok(None);
+        }
+        let mut table = pinned;
+        let mut reserve = new_needed;
+        if let Some(src) = cow_src {
+            // Copy-on-write: this sequence appends inside the matched
+            // tail block, so it gets a private copy of the shared rows.
+            let dst = self.pool.alloc()?;
+            self.pool.cow_copy(src, dst, partial)?;
+            self.pool.release(src)?;
+            table.push(dst);
+            reserve -= 1;
+        }
+        self.tables[slot] = table;
+        self.reserved[slot] = reserve;
+        self.reserved_total += reserve;
+        self.prefix_hit_tokens += p;
+        self.note_peak();
+        Ok(Some(p))
+    }
+
+    /// Write one fed token's KV rows at `pos`, allocating the next block
+    /// from the reservation when the position crosses a page boundary.
+    fn append_row(
+        &mut self,
+        slot: usize,
+        pos: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+    ) -> Result<()> {
+        let bt = self.block_tokens;
+        let bi = pos / bt;
+        if bi == self.tables[slot].len() {
+            if self.reserved[slot] == 0 {
+                bail!("slot {slot}: paged append at pos {pos} without a reservation");
+            }
+            let b = self.pool.alloc()?;
+            self.tables[slot].push(b);
+            self.reserved[slot] -= 1;
+            self.reserved_total -= 1;
+        }
+        let block = self.tables[slot][bi];
+        if self.pool.refcount(block) != 1 {
+            bail!(
+                "slot {slot}: writing block {block} with refcount {} (shared blocks \
+                 are read-only; divergence must copy-on-write)",
+                self.pool.refcount(block)
+            );
+        }
+        self.pool.write_row(block, pos % bt, slot, k_new, v_new)?;
+        self.note_peak();
+        Ok(())
+    }
+
+    /// A sequence finished having fed `fed` tokens of `tokens`: cache its
+    /// block-aligned prefix in the radix tree, then drop the sequence's
+    /// own references (blocks the tree kept stay live; the rest free).
+    fn on_finish(&mut self, slot: usize, fed: usize, tokens: &[i32]) -> Result<()> {
+        let bt = self.block_tokens;
+        if self.prefix_cache {
+            let aligned = (fed / bt) * bt;
+            if aligned > 0 {
+                self.clock += 1;
+                let table = &self.tables[slot];
+                let new_refs = self.tree.insert(&tokens[..aligned], |pos| table[pos / bt], self.clock);
+                for b in new_refs {
+                    self.pool.retain(b)?;
+                }
+            }
+        }
+        let table = std::mem::take(&mut self.tables[slot]);
+        for b in table {
+            self.pool.release(b)?;
+        }
+        self.reserved_total -= self.reserved[slot];
+        self.reserved[slot] = 0;
+        Ok(())
+    }
+}
+
+/// The engine's KV store: dense seed slabs or the paged block pool.
+enum KvStore {
+    Dense(KvCache),
+    Paged(PagedKv),
 }
 
 /// The KV-cached continuous-batching generation engine.
@@ -77,7 +384,7 @@ pub struct Engine<'rt> {
     cfg: ModelConfig,
     gen: GenConfig,
     weight_bufs: std::sync::Arc<Vec<Buffer>>,
-    cache: KvCache,
+    store: KvStore,
     slots: Vec<Option<SeqState>>,
     queue: VecDeque<SeqState>,
     // Accumulated report state (across generate calls).
@@ -97,7 +404,8 @@ impl<'rt> Engine<'rt> {
     /// bundle once — by default through the runtime's prepared-state map
     /// (dequantize-once packed panels on the native backend, DESIGN.md
     /// §11; shared across engines over the same artifact) — and sizes
-    /// the cache to `[L, slots, seq, d]`.
+    /// the KV store (paged block pool by default, dense `[L, slots, seq,
+    /// d]` slabs with `paged: false`).
     pub fn new(
         rt: &'rt Runtime,
         cfg: &ModelConfig,
@@ -119,13 +427,23 @@ impl<'rt> Engine<'rt> {
                     .collect::<Result<Vec<_>>>()?,
             )
         };
-        let cache = KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model);
+        let store = if gen.paged {
+            KvStore::Paged(PagedKv::new(
+                cfg,
+                slots,
+                gen.block_tokens,
+                gen.pool_blocks,
+                gen.prefix_cache,
+            ))
+        } else {
+            KvStore::Dense(KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model))
+        };
         Ok(Self {
             rt,
             cfg: cfg.clone(),
             gen,
             weight_bufs,
-            cache,
+            store,
             slots: (0..slots).map(|_| None).collect(),
             queue: VecDeque::new(),
             steps: 0,
@@ -138,6 +456,14 @@ impl<'rt> Engine<'rt> {
             rejected: 0,
             reject_counts: RejectCounts::default(),
         })
+    }
+
+    /// Sequence-capacity cap in tokens (`prompt + max_new` must fit).
+    fn capacity(&self) -> usize {
+        match &self.store {
+            KvStore::Dense(cache) => cache.t_max(),
+            KvStore::Paged(ps) => ps.capacity(),
+        }
     }
 
     /// Why a request cannot be admitted, if anything.
@@ -153,7 +479,7 @@ impl<'rt> Engine<'rt> {
                 return Some(RejectReason::TokenOutOfRange { index, id });
             }
         }
-        let cap = self.cache.t_max();
+        let cap = self.capacity();
         if req.prompt.len() + req.max_new > cap {
             return Some(RejectReason::TooLong {
                 prompt: req.prompt.len(),
@@ -204,18 +530,44 @@ impl<'rt> Engine<'rt> {
         self.slots.iter().filter(|s| s.is_none()).count()
     }
 
-    /// Admit queued sequences into free slots, run one batched decode
-    /// step, and return the sequences that finished on it.
-    pub fn step(&mut self) -> Result<Vec<GenOutput>> {
-        for (slot, state) in self.slots.iter_mut().enumerate() {
-            if state.is_some() {
+    /// Admit queued sequences into free slots. Dense: a free slot is all
+    /// it takes. Paged: the head of the queue also needs its worst-case
+    /// block reservation (FIFO — a stuck head does not let later
+    /// requests starve it of blocks).
+    fn admit(&mut self) -> Result<()> {
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
                 continue;
             }
-            if let Some(st) = self.queue.pop_front() {
-                self.cache.reset(slot);
-                *state = Some(st);
+            let Some(head) = self.queue.front() else {
+                break;
+            };
+            match &mut self.store {
+                KvStore::Dense(cache) => {
+                    cache.reset(slot);
+                    let st = self.queue.pop_front().expect("head exists");
+                    self.slots[slot] = Some(st);
+                }
+                KvStore::Paged(ps) => {
+                    match ps.try_admit(slot, &head.tokens, head.prompt_len, head.max_new)? {
+                        Some(start) => {
+                            let mut st = self.queue.pop_front().expect("head exists");
+                            st.cursor = start;
+                            self.slots[slot] = Some(st);
+                        }
+                        // Head must wait for blocks; keep FIFO order.
+                        None => break,
+                    }
+                }
             }
         }
+        Ok(())
+    }
+
+    /// Admit queued sequences, run one batched decode step, and return
+    /// the sequences that finished on it.
+    pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        self.admit()?;
         let b = self.slots.len();
         let vocab = self.cfg.vocab;
         let mut pos = vec![-1i32; b];
@@ -238,23 +590,55 @@ impl<'rt> Engine<'rt> {
         }
 
         let t0 = Instant::now();
-        let (kt, vt) = self.cache.take()?;
-        let k_buf = Buffer::Host(Value::F32(kt));
-        let v_buf = Buffer::Host(Value::F32(vt));
         let pos_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], pos)?));
         let tok_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], tok)?));
-        let outs = {
-            let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
-            args.extend([&k_buf, &v_buf, &pos_buf, &tok_buf]);
-            self.rt.exec_b(&self.cfg.name, "decode_step_q", &args)
-        };
-        // The slabs go back whether or not the step succeeded.
-        match (k_buf, v_buf) {
-            (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(v))) => {
-                self.cache.put_back(k, v)?
+        let outs = match &mut self.store {
+            KvStore::Dense(cache) => {
+                let (kt, vt) = cache.take()?;
+                let k_buf = Buffer::Host(Value::F32(kt));
+                let v_buf = Buffer::Host(Value::F32(vt));
+                let outs = {
+                    let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
+                    args.extend([&k_buf, &v_buf, &pos_buf, &tok_buf]);
+                    self.rt.exec_b(&self.cfg.name, "decode_step_q", &args)
+                };
+                // The slabs go back whether or not the step succeeded.
+                match (k_buf, v_buf) {
+                    (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(v))) => {
+                        cache.put_back(k, v)?
+                    }
+                    _ => bail!("KV slabs must stay host-resident"),
+                }
+                outs
             }
-            _ => bail!("KV slabs must stay host-resident"),
-        }
+            KvStore::Paged(ps) => {
+                let mut tables = vec![-1i32; b * ps.max_blocks];
+                for (slot, table) in ps.tables.iter().enumerate() {
+                    for (i, &blk) in table.iter().enumerate() {
+                        tables[slot * ps.max_blocks + i] = blk as i32;
+                    }
+                }
+                let tb_buf = Buffer::Host(Value::I32(TensorI32::from_vec(
+                    &[b, ps.max_blocks],
+                    tables,
+                )?));
+                let (kt, vt) = ps.pool.take()?;
+                let k_buf = Buffer::Host(Value::F32(kt));
+                let v_buf = Buffer::Host(Value::F32(vt));
+                let outs = {
+                    let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
+                    args.extend([&k_buf, &v_buf, &tb_buf, &pos_buf, &tok_buf]);
+                    self.rt.exec_b(&self.cfg.name, "decode_step_paged_q", &args)
+                };
+                match (k_buf, v_buf) {
+                    (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(v))) => {
+                        ps.pool.put_back(k, v)?
+                    }
+                    _ => bail!("KV pool must stay host-resident"),
+                }
+                outs
+            }
+        };
         let outs = outs?;
         let dt = t0.elapsed().as_secs_f32();
         self.steps += 1;
@@ -270,7 +654,10 @@ impl<'rt> Engine<'rt> {
         for slot in 0..b {
             let done = {
                 let Some(st) = self.slots[slot].as_mut() else { continue };
-                self.cache.append(slot, k_new, v_new)?;
+                match &mut self.store {
+                    KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
+                    KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
+                }
                 st.cursor += 1;
                 let mut fin = None;
                 if st.cursor >= st.prompt_len {
@@ -287,12 +674,20 @@ impl<'rt> Engine<'rt> {
                         }
                     }
                 }
-                fin.map(|finish| GenOutput {
-                    id: st.id,
-                    prompt_len: st.prompt_len,
-                    tokens: st.tokens[st.prompt_len..].to_vec(),
-                    finish,
-                })
+                match fin {
+                    Some(finish) => {
+                        if let KvStore::Paged(ps) = &mut self.store {
+                            ps.on_finish(slot, st.cursor, &st.tokens)?;
+                        }
+                        Some(GenOutput {
+                            id: st.id,
+                            prompt_len: st.prompt_len,
+                            tokens: st.tokens[st.prompt_len..].to_vec(),
+                            finish,
+                        })
+                    }
+                    None => None,
+                }
             };
             if let Some(out) = done {
                 self.slots[slot] = None;
@@ -305,6 +700,17 @@ impl<'rt> Engine<'rt> {
 
     /// Snapshot of the accumulated throughput/occupancy counters.
     pub fn report(&self) -> GenReport {
+        let (prefix_hit_tokens, peak_blocks_in_use, pool_blocks, block_tokens, evicted_blocks) =
+            match &self.store {
+                KvStore::Dense(_) => (0, 0, 0, 0, 0),
+                KvStore::Paged(ps) => (
+                    ps.prefix_hit_tokens,
+                    ps.peak_in_use,
+                    ps.pool.n_blocks(),
+                    ps.block_tokens,
+                    ps.evicted_refs,
+                ),
+            };
         GenReport {
             sequences: self.completed,
             rejected: self.rejected,
@@ -319,7 +725,128 @@ impl<'rt> Engine<'rt> {
             } else {
                 0.0
             },
+            prefix_hit_tokens,
+            peak_blocks_in_use,
+            pool_blocks,
+            block_tokens,
+            evicted_blocks,
         }
+    }
+
+    /// Paged-pool snapshot `(free, in_use, pool_blocks, reserved_total)`;
+    /// `None` on the dense engine.
+    pub fn pool_stats(&self) -> Option<(usize, usize, usize, usize)> {
+        match &self.store {
+            KvStore::Dense(_) => None,
+            KvStore::Paged(ps) => Some((
+                ps.pool.free_blocks(),
+                ps.pool.in_use_blocks(),
+                ps.pool.n_blocks(),
+                ps.reserved_total,
+            )),
+        }
+    }
+
+    /// Live radix-tree node count; `None` on the dense engine.
+    pub fn prefix_cache_nodes(&self) -> Option<usize> {
+        match &self.store {
+            KvStore::Dense(_) => None,
+            KvStore::Paged(ps) => Some(ps.tree.node_count()),
+        }
+    }
+
+    /// Verify every paged-store invariant (no-op on the dense engine).
+    /// The differential fuzz harness calls this after every step:
+    ///
+    /// 1. pool partition: `free + in_use == pool_blocks`, refcount 0
+    ///    exactly for free-listed blocks (no underflow can have happened —
+    ///    `release` fails loudly instead of wrapping);
+    /// 2. refcount accounting: each block's refcount equals its
+    ///    references from slot tables plus the radix tree;
+    /// 3. reservations are backed: `free >= reserved_total`, and each
+    ///    active slot's `table + reserved` covers its worst case;
+    /// 4. copy-on-write safety: a block shared by two active sequences
+    ///    sits at the same block index and both sequences' tokens agree
+    ///    through the shared span (diverged sequences share nothing).
+    pub fn check_paged_invariants(&self) -> Result<()> {
+        let KvStore::Paged(ps) = &self.store else {
+            return Ok(());
+        };
+        ps.pool.check_invariants()?;
+        if ps.pool.free_blocks() < ps.reserved_total {
+            bail!(
+                "reservations unbacked: {} free < {} reserved",
+                ps.pool.free_blocks(),
+                ps.reserved_total
+            );
+        }
+        if ps.reserved.iter().sum::<usize>() != ps.reserved_total {
+            bail!("reserved_total out of sync with per-slot reservations");
+        }
+        let mut want = ps.tree.block_refs();
+        for table in &ps.tables {
+            for &b in table {
+                *want.entry(b).or_insert(0) += 1;
+            }
+        }
+        for b in 0..ps.pool.n_blocks() as u32 {
+            let rc = ps.pool.refcount(b);
+            let w = want.get(&b).copied().unwrap_or(0);
+            if rc != w {
+                bail!("block {b}: refcount {rc} != {w} (tables + tree)");
+            }
+        }
+        let bt = ps.block_tokens;
+        for (slot, st) in self.slots.iter().enumerate() {
+            match st {
+                None => {
+                    if !ps.tables[slot].is_empty() || ps.reserved[slot] != 0 {
+                        bail!("empty slot {slot} holds blocks or reservations");
+                    }
+                }
+                Some(st) => {
+                    if ps.tables[slot].len() != st.cursor.div_ceil(bt) {
+                        bail!(
+                            "slot {slot}: table {} blocks != ceil(cursor {} / {bt})",
+                            ps.tables[slot].len(),
+                            st.cursor
+                        );
+                    }
+                    let need = (st.prompt_len + st.max_new - 1).div_ceil(bt);
+                    if ps.tables[slot].len() + ps.reserved[slot] != need {
+                        bail!(
+                            "slot {slot}: table {} + reserved {} != worst case {need}",
+                            ps.tables[slot].len(),
+                            ps.reserved[slot]
+                        );
+                    }
+                }
+            }
+        }
+        for a in 0..self.slots.len() {
+            for c in a + 1..self.slots.len() {
+                let (Some(sa), Some(sc)) = (&self.slots[a], &self.slots[c]) else {
+                    continue;
+                };
+                for (ia, &ba) in ps.tables[a].iter().enumerate() {
+                    for (ic, &bc) in ps.tables[c].iter().enumerate() {
+                        if ba != bc {
+                            continue;
+                        }
+                        if ia != ic {
+                            bail!("block {ba} shared at different positions {ia}/{ic}");
+                        }
+                        let l = ((ia + 1) * bt).min(sa.cursor).min(sc.cursor);
+                        if sa.tokens[..l] != sc.tokens[..l] {
+                            bail!(
+                                "diverged sequences in slots {a}/{c} share block {ba}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Convenience driver: submit everything, step until drained, return
@@ -342,15 +869,11 @@ impl<'rt> Engine<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Method, QuantConfig};
-    use crate::quant::quantize_model;
+    use crate::config::Method;
+    use crate::testutil::fixtures;
 
     fn pico_model(rt: &Runtime) -> (ModelConfig, Params, QuantizedModel) {
-        let cfg = ModelConfig::preset("pico").unwrap();
-        let params = Params::init(&cfg, 11);
-        let qcfg = QuantConfig::with_method(Method::Rtn);
-        let qm = quantize_model(rt, &qcfg, &params, None).unwrap();
-        (cfg, params, qm)
+        fixtures::quantized_pico(rt, Method::Rtn, 11)
     }
 
     #[test]
@@ -381,6 +904,197 @@ mod tests {
         assert_eq!(rep.decode_tokens, 24);
         assert!(rep.steps >= 7, "6 seqs over 4 slots need two waves");
         assert!(rep.mean_slot_occupancy > 0.0 && rep.mean_slot_occupancy <= 1.0);
+        // Default engine is paged; everything is released at drain.
+        assert!(rep.pool_blocks > 0 && rep.block_tokens > 0);
+        eng.check_paged_invariants().unwrap();
+    }
+
+    #[test]
+    fn paged_and_dense_generate_identical_tokens() {
+        // THE tentpole contract at engine level: the block-paged store
+        // (with prefix sharing enabled) produces exactly the dense
+        // engine's token streams (DESIGN.md §12; testutil::fuzz sweeps
+        // this over random workloads and thread counts).
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let reqs = || -> Vec<GenRequest> {
+            (0..6)
+                .map(|i| GenRequest {
+                    id: i,
+                    // Three pairs sharing a prompt: the second of each
+                    // pair hits the prefix cache on the paged engine.
+                    prompt: (0..10)
+                        .map(|k| ((k * 3 + (i / 2) * 17) % cfg.vocab) as i32)
+                        .collect(),
+                    max_new: 5,
+                    stop_id: None,
+                })
+                .collect()
+        };
+        let run = |paged: bool, block_tokens: usize| -> Vec<Vec<i32>> {
+            let gen = GenConfig {
+                temperature: 0.8,
+                top_k: 6,
+                seed: 99,
+                slots: 3,
+                paged,
+                block_tokens,
+                ..GenConfig::default()
+            };
+            let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+            let (outs, rep) = eng.generate(reqs()).unwrap();
+            eng.check_paged_invariants().unwrap();
+            if paged {
+                assert!(
+                    rep.prefix_hit_tokens > 0,
+                    "repeated prompts should hit the prefix cache"
+                );
+                let (free, in_use, pool, reserved) = eng.pool_stats().unwrap();
+                assert_eq!(free + in_use, pool);
+                assert_eq!(reserved, 0, "drained engine holds no reservations");
+            }
+            outs.into_iter().map(|o| o.tokens).collect()
+        };
+        let dense = run(false, 0);
+        assert_eq!(dense, run(true, 4), "paged (bt=4) diverged from dense");
+        assert_eq!(dense, run(true, 3), "paged (bt=3) diverged from dense");
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_for_repeated_prompts() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let prompt: Vec<i32> = (0..9).map(|k| ((k * 5 + 2) % cfg.vocab) as i32).collect();
+        let gen = GenConfig {
+            block_tokens: 4,
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let req = |id| GenRequest {
+            id,
+            prompt: prompt.clone(),
+            max_new: 3,
+            stop_id: None,
+        };
+        let (outs_a, rep_a) = eng.generate(vec![req(0)]).unwrap();
+        assert_eq!(rep_a.prefix_hit_tokens, 0, "nothing cached yet");
+        assert_eq!(rep_a.prefill_tokens, 9);
+        // Same prompt again: 8 of 9 prompt tokens (two full bt=4 blocks;
+        // the last prompt token always feeds) come from the cache.
+        let (outs_b, rep_b) = eng.generate(vec![req(1)]).unwrap();
+        assert_eq!(rep_b.prefix_hit_tokens, 8);
+        assert_eq!(rep_b.prefill_tokens - rep_a.prefill_tokens, 1);
+        // Greedy + same prompt => identical continuations.
+        assert_eq!(outs_a[0].tokens, outs_b[0].tokens);
+        eng.check_paged_invariants().unwrap();
+        assert!(eng.prefix_cache_nodes().unwrap() > 0);
+    }
+
+    #[test]
+    fn small_pool_admits_by_blocks_and_evicts_cached_prefixes() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        // 4 slots but only 6 blocks of 4 tokens: a request needing 3
+        // blocks limits concurrency to 2 in-flight sequences, and cached
+        // prefixes must be evicted to admit fresh prompts.
+        let gen = GenConfig {
+            slots: 4,
+            block_tokens: 4,
+            pool_blocks: 6,
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let reqs: Vec<GenRequest> = (0..5)
+            .map(|i| GenRequest {
+                id: i,
+                prompt: (0..8).map(|k| ((k * 7 + i * 31) % cfg.vocab) as i32).collect(),
+                max_new: 4,
+                stop_id: None,
+            })
+            .collect();
+        let (outs, rep) = eng.generate(reqs).unwrap();
+        assert_eq!(outs.len(), 5);
+        assert!(outs.iter().all(|o| o.finish == FinishReason::MaxTokens));
+        assert!(rep.evicted_blocks > 0, "tight pool must evict cached prefixes");
+        assert!(rep.peak_blocks_in_use <= rep.pool_blocks);
+        eng.check_paged_invariants().unwrap();
+    }
+
+    #[test]
+    fn paged_capacity_rejects_what_the_pool_cannot_ever_hold() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            slots: 2,
+            block_tokens: 4,
+            pool_blocks: 3, // capacity: 3 * 4 + 1 = 13 tokens
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let req = |id, prompt_len: usize, max_new| GenRequest {
+            id,
+            prompt: (0..prompt_len).map(|k| (k % cfg.vocab) as i32).collect(),
+            max_new,
+            stop_id: None,
+        };
+        let (outs, rep) = eng.generate(vec![req(0, 10, 4), req(1, 9, 4)]).unwrap();
+        assert!(matches!(
+            outs[0].finish,
+            FinishReason::Rejected(RejectReason::TooLong { cap: 13, .. })
+        ));
+        assert_eq!(outs[1].finish, FinishReason::MaxTokens);
+        assert_eq!(rep.rejected, 1);
+    }
+
+    #[test]
+    fn exact_capacity_partial_prefix_hit_falls_back_instead_of_livelocking() {
+        // Regression: pool_blocks=3, bt=4 (capacity 13). Complete a 9+4
+        // request so the prefix cache holds all three blocks (free = 0),
+        // then submit a request whose 10-token prompt extends the cached
+        // stream with max_new 3 (10 + 3 = 13 — exact capacity). Its
+        // prefix match ends mid-block; the pinned copy-on-write source
+        // makes the free target unreachable, so admission must round
+        // the hit down to the 8-token block boundary (evicting the
+        // cached entry, pins keeping the shared blocks alive) rather
+        // than spin forever.
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            slots: 2,
+            block_tokens: 4,
+            pool_blocks: 3,
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let prompt: Vec<i32> = (0..9).map(|k| ((k * 3 + 1) % cfg.vocab) as i32).collect();
+        let req = |id, prompt: Vec<i32>, max_new| GenRequest {
+            id,
+            prompt,
+            max_new,
+            stop_id: None,
+        };
+        let (outs, _) = eng.generate(vec![req(0, prompt.clone(), 4)]).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+        // The cached 9 prompt tokens + the first generated token: a
+        // strict 10-token prefix of the cached 12-token entry. Drive
+        // step() with a bounded loop so a regression FAILS instead of
+        // hanging the test run.
+        let mut longer = prompt.clone();
+        longer.push(outs[0].tokens[0]);
+        assert!(eng.submit(req(1, longer, 3)).is_none(), "fits exact capacity");
+        let mut outs2 = Vec::new();
+        for _ in 0..200 {
+            outs2.extend(eng.step().unwrap());
+            eng.check_paged_invariants().unwrap();
+            if !eng.has_work() {
+                break;
+            }
+        }
+        assert!(!eng.has_work(), "admission livelocked at exact capacity");
+        assert_eq!(outs2[0].finish, FinishReason::MaxTokens);
+        assert_eq!(outs2[0].tokens.len(), 3);
+        // The hit was rounded down to the block boundary, not dropped.
+        assert_eq!(eng.report().prefix_hit_tokens, 8);
     }
 
     #[test]

@@ -38,7 +38,10 @@ SUBCOMMANDS
   serve     --model M [--requests N]         quantized serving demo
   generate  --model M [--prompts N] [--prompt-len P] [--max-new K]
             [--temperature T] [--top-k K] [--gen-seed S] [--stop-id ID]
-            KV-cached generation (greedy when T <= 0; ID < 0 disables)
+            [--block-tokens B] [--pool-blocks N] [--dense]
+            KV-cached generation (greedy when T <= 0; ID < 0 disables).
+            Paged KV cache + radix prefix sharing by default; --dense
+            pins the seed [L, slots, T, d] slabs (same tokens either way)
   inspect                                    list artifacts + configs
 
 COMMON FLAGS
@@ -238,6 +241,9 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     let gen_seed = args.get_u64("gen-seed", 7)?;
     let stop_id = args.get_i64("stop-id", -1)?;
     let stop_id = (stop_id >= 0).then_some(stop_id as i32);
+    let block_tokens = args.get_usize("block-tokens", 0)?;
+    let pool_blocks = args.get_usize("pool-blocks", 0)?;
+    let dense = args.has("dense");
 
     let pipe = Pipeline::new(rt, cfg.clone());
     let (params, _) = pipe.checkpoint()?;
@@ -266,6 +272,9 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             top_k,
             seed: gen_seed,
             slots: 0,
+            paged: !dense,
+            block_tokens,
+            pool_blocks,
             ..GenConfig::default()
         },
     )?;
@@ -314,6 +323,17 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
         rep.decode_tps(),
         rep.mean_slot_occupancy * 100.0
     );
+    if rep.pool_blocks > 0 {
+        println!(
+            "paged KV: {} tok/block, peak {} of {} blocks in use, \
+             prefix-cache hits {} tok, {} block refs evicted",
+            rep.block_tokens,
+            rep.peak_blocks_in_use,
+            rep.pool_blocks,
+            rep.prefix_hit_tokens,
+            rep.evicted_blocks
+        );
+    }
     Ok(())
 }
 

@@ -172,7 +172,11 @@ impl Runtime {
         let prepared_first = refs
             .first()
             .is_some_and(|b| matches!(*b, Buffer::PreparedQ(_)));
-        let want = if prepared_first && (entry == "fwd_logits_q" || entry == "decode_step_q") {
+        let quantized_entry = matches!(
+            entry,
+            "fwd_logits_q" | "decode_step_q" | "decode_step_paged_q"
+        );
+        let want = if prepared_first && quantized_entry {
             let cfgm = self.manifest.config(cfg)?;
             info.nargs - qweight_nargs(cfgm) + 1
         } else {

@@ -1,8 +1,11 @@
-//! `decode_step_q`: one KV-cached autoregressive step over the quantized
-//! deployment artifact.
+//! `decode_step_q` / `decode_step_paged_q`: one KV-cached autoregressive
+//! step over the quantized deployment artifact.
 //!
-//! Argument layout (after the [`super::qmodel`] weight prefix shared with
-//! `fwd_logits_q` — or a prepared weight bundle in its place):
+//! Both entries share the weight prefix of [`super::qmodel`] (or a
+//! prepared bundle in its place) and the whole per-token forward; they
+//! differ only in how cached key/value rows are addressed:
+//!
+//! **Dense** (`decode_step_q`) trailing args:
 //!
 //! | arg       | shape                | meaning |
 //! |---|---|---|
@@ -11,9 +14,24 @@
 //! | `pos`     | `[B]` i32            | position of the new token per slot; `-1` = inactive |
 //! | `tokens`  | `[B]` i32            | new token id per slot (ignored when inactive) |
 //!
-//! Returns `(logits [B, V], k_new [L, B, d], v_new [L, B, d])`: the
+//! **Paged** (`decode_step_paged_q`) trailing args:
+//!
+//! | arg            | shape                      | meaning |
+//! |---|---|---|
+//! | `k_pool`       | `[NB, L, block_tokens, d]` f32 | block pool of key pages |
+//! | `v_pool`       | `[NB, L, block_tokens, d]` f32 | value pages, same layout |
+//! | `block_tables` | `[B, max_blocks]` i32      | per-slot block ids, `-1` padded |
+//! | `pos`          | `[B]` i32                  | as dense |
+//! | `tokens`       | `[B]` i32                  | as dense |
+//!
+//! Cached position `j` of slot `b` lives in pool block
+//! `block_tables[b][j / block_tokens]` at page row `j % block_tokens` —
+//! the address changes, the f32 values and every arithmetic expression
+//! consuming them do not (DESIGN.md §12).
+//!
+//! Both return `(logits [B, V], k_new [L, B, d], v_new [L, B, d])`: the
 //! next-token logits per slot plus this token's key/value rows, which the
-//! caller appends to its cache at `pos[b]` (the entry never mutates its
+//! caller writes into its store at `pos[b]` (the entry never mutates its
 //! inputs — backends are stateless). Inactive slots get zero rows.
 //!
 //! The quantized linears run through a [`QExec`]: the seed path
@@ -24,23 +42,24 @@
 //! head projection runs for every active row, including prefill rows
 //! whose logits the scheduler discards.
 //!
-//! **Bit-identity contract** (DESIGN.md §10): for any schedule of steps
-//! that feeds a sequence's tokens in order, the logits emitted at
+//! **Bit-identity contract** (DESIGN.md §10, §12): for any schedule of
+//! steps that feeds a sequence's tokens in order, the logits emitted at
 //! position `t` are bitwise equal to `fwd_logits_q`'s logits at position
 //! `t` of the full sequence, for every thread count, any mix of other
-//! sequences sharing the batch, and both `QExec` paths. Every per-row
-//! computation (embedding, RMSNorm, the quantized linears, residual
-//! adds, GELU) is shared with or identical to the full-sequence path,
-//! and the attention below replays `nn::attention_head_fwd`'s row-`t`
-//! arithmetic exactly: scores, the running max, exponentials, and the
-//! output accumulation all run over keys `j = 0..=t` in ascending order
-//! with the same expressions.
+//! sequences sharing the batch, both `QExec` paths, and both cache
+//! layouts. Every per-row computation (embedding, RMSNorm, the quantized
+//! linears, residual adds, GELU) is shared with or identical to the
+//! full-sequence path, and the attention below replays
+//! `nn::attention_head_fwd`'s row-`t` arithmetic exactly: scores, the
+//! running max, exponentials, and the output accumulation all run over
+//! keys `j = 0..=t` in ascending order with the same expressions — the
+//! [`KvView`] only changes which slice each `j` is read from.
 
 use super::nn;
 use super::qmodel::QExec;
 use crate::config::ModelConfig;
 use crate::runtime::value::Value;
-use crate::tensor::{par, Tensor};
+use crate::tensor::{par, Tensor, TensorI32};
 use anyhow::{bail, Context, Result};
 
 /// One active slot this step: (slot index, position, token id).
@@ -50,8 +69,63 @@ struct Active {
     tok: usize,
 }
 
-/// Run one decode step. `targs` is the trailing argument list after the
-/// weight prefix: `[k_cache, v_cache, pos, tokens]`.
+/// Where a slot's cached key/value rows live: dense per-slot slabs or
+/// block-table-indexed pool pages. Purely an addressing layer — the
+/// returned slices feed the exact same arithmetic either way.
+enum KvView<'a> {
+    Dense {
+        k: &'a Tensor,
+        v: &'a Tensor,
+        t_max: usize,
+        b: usize,
+    },
+    Paged {
+        k: &'a Tensor,
+        v: &'a Tensor,
+        tables: &'a TensorI32,
+        max_blocks: usize,
+        block_tokens: usize,
+        n_layer: usize,
+    },
+}
+
+impl KvView<'_> {
+    /// Flat data offset of cached position `j` for (layer, slot), to be
+    /// sliced `[.. + hd]` after adding the head offset.
+    #[inline]
+    fn row_offset(&self, layer: usize, slot: usize, j: usize, d: usize) -> usize {
+        match self {
+            KvView::Dense { t_max, b, .. } => ((layer * b + slot) * t_max + j) * d,
+            KvView::Paged {
+                tables,
+                max_blocks,
+                block_tokens,
+                n_layer,
+                ..
+            } => {
+                let blk = tables.data()[slot * max_blocks + j / block_tokens] as usize;
+                ((blk * n_layer + layer) * block_tokens + j % block_tokens) * d
+            }
+        }
+    }
+
+    #[inline]
+    fn k_data(&self) -> &[f32] {
+        match self {
+            KvView::Dense { k, .. } | KvView::Paged { k, .. } => k.data(),
+        }
+    }
+
+    #[inline]
+    fn v_data(&self) -> &[f32] {
+        match self {
+            KvView::Dense { v, .. } | KvView::Paged { v, .. } => v.data(),
+        }
+    }
+}
+
+/// Run one dense decode step. `targs` is the trailing argument list
+/// after the weight prefix: `[k_cache, v_cache, pos, tokens]`.
 pub(super) fn decode_step_q(
     cfg: &ModelConfig,
     ex: &QExec,
@@ -68,7 +142,7 @@ pub(super) fn decode_step_q(
     let pos = targs[2].as_i32().context("pos must be i32")?;
     let toks = targs[3].as_i32().context("tokens must be i32")?;
 
-    let (l, d, vocab) = (cfg.n_layer, cfg.d_model, cfg.vocab);
+    let (l, d) = (cfg.n_layer, cfg.d_model);
     if pos.shape().len() != 1 || toks.shape() != pos.shape() {
         bail!(
             "decode_step_q: pos {:?} / tokens {:?} must both be [B]",
@@ -85,13 +159,102 @@ pub(super) fn decode_step_q(
         bail!("v_cache {:?} != k_cache {ks:?}", v_cache.shape());
     }
     let t_max = ks[2];
-    if t_max > ex.pos_emb().shape()[0] {
+    let active = collect_active(cfg, ex, pos, toks, t_max)?;
+    let view = KvView::Dense {
+        k: k_cache,
+        v: v_cache,
+        t_max,
+        b,
+    };
+    run_step(cfg, ex, &view, &active, b)
+}
+
+/// Run one paged decode step. `targs` is the trailing argument list
+/// after the weight prefix: `[k_pool, v_pool, block_tables, pos, tokens]`.
+pub(super) fn decode_step_paged_q(
+    cfg: &ModelConfig,
+    ex: &QExec,
+    targs: &[&Value],
+) -> Result<Vec<Value>> {
+    if targs.len() != 5 {
         bail!(
-            "cache T_max={t_max} exceeds pos_emb rows {}",
-            ex.pos_emb().shape()[0]
+            "decode_step_paged_q: got {} trailing args, want 5 \
+             (k_pool, v_pool, block_tables, pos, tokens)",
+            targs.len()
         );
     }
+    let k_pool = targs[0].as_f32().context("k_pool must be f32")?;
+    let v_pool = targs[1].as_f32().context("v_pool must be f32")?;
+    let tables = targs[2].as_i32().context("block_tables must be i32")?;
+    let pos = targs[3].as_i32().context("pos must be i32")?;
+    let toks = targs[4].as_i32().context("tokens must be i32")?;
 
+    let (l, d) = (cfg.n_layer, cfg.d_model);
+    if pos.shape().len() != 1 || toks.shape() != pos.shape() {
+        bail!(
+            "decode_step_paged_q: pos {:?} / tokens {:?} must both be [B]",
+            pos.shape(),
+            toks.shape()
+        );
+    }
+    let b = pos.shape()[0];
+    let ks = k_pool.shape();
+    if ks.len() != 4 || ks[1] != l || ks[3] != d {
+        bail!("k_pool {ks:?} must be [NB, {l}, block_tokens, {d}]");
+    }
+    if v_pool.shape() != ks {
+        bail!("v_pool {:?} != k_pool {ks:?}", v_pool.shape());
+    }
+    let (n_blocks, block_tokens) = (ks[0], ks[2]);
+    if block_tokens == 0 {
+        bail!("k_pool has zero block_tokens");
+    }
+    let ts = tables.shape();
+    if ts.len() != 2 || ts[0] != b {
+        bail!("block_tables {ts:?} must be [{b}, max_blocks]");
+    }
+    let max_blocks = ts[1];
+    let t_cap = max_blocks * block_tokens;
+    let active = collect_active(cfg, ex, pos, toks, t_cap)?;
+    // Every cached position an active slot will read must resolve to a
+    // real pool block (positions `0..pos[b]`; the new token's row comes
+    // from this step's projection, not the pool).
+    for act in &active {
+        let covered = act.pos.div_ceil(block_tokens);
+        for bi in 0..covered {
+            let e = tables.data()[act.slot * max_blocks + bi];
+            if e < 0 || e as usize >= n_blocks {
+                bail!(
+                    "slot {}: block_tables[{bi}] = {e} invalid for pool of {n_blocks} \
+                     (pos {})",
+                    act.slot,
+                    act.pos
+                );
+            }
+        }
+    }
+    let view = KvView::Paged {
+        k: k_pool,
+        v: v_pool,
+        tables,
+        max_blocks,
+        block_tokens,
+        n_layer: l,
+    };
+    run_step(cfg, ex, &view, &active, b)
+}
+
+/// Validate pos/tokens and collect the active slots.
+fn collect_active(
+    cfg: &ModelConfig,
+    ex: &QExec,
+    pos: &TensorI32,
+    toks: &TensorI32,
+    t_cap: usize,
+) -> Result<Vec<Active>> {
+    let vocab = cfg.vocab;
+    let b = pos.shape()[0];
+    let t_max = t_cap.min(ex.pos_emb().shape()[0]);
     let mut active = Vec::with_capacity(b);
     for slot in 0..b {
         let p = pos.data()[slot];
@@ -113,8 +276,21 @@ pub(super) fn decode_step_q(
         });
     }
     if active.is_empty() {
-        bail!("decode_step_q: no active slots (every pos is -1)");
+        bail!("decode step: no active slots (every pos is -1)");
     }
+    Ok(active)
+}
+
+/// The shared per-step forward: embed the new tokens, run every block
+/// (attention against the cache view + MLP), project the head.
+fn run_step(
+    cfg: &ModelConfig,
+    ex: &QExec,
+    view: &KvView<'_>,
+    active: &[Active],
+    b: usize,
+) -> Result<Vec<Value>> {
+    let (l, d, vocab) = (cfg.n_layer, cfg.d_model, cfg.vocab);
     let a = active.len();
 
     // Embed the new tokens: same per-row expression as `nn::embed`.
@@ -142,7 +318,7 @@ pub(super) fn decode_step_q(
             k_new[dst..dst + d].copy_from_slice(&row[d..2 * d]);
             v_new[dst..dst + d].copy_from_slice(&row[2 * d..3 * d]);
         }
-        let att = attention_decode(&qkv, k_cache, v_cache, li, &active, cfg.n_head, t_max, b)?;
+        let att = attention_decode(&qkv, view, li, active, cfg.n_head)?;
         ex.give(qkv);
         let o = ex.lin(li, 1, &att)?;
         let x_mid = x.add(&o)?;
@@ -173,23 +349,20 @@ pub(super) fn decode_step_q(
 /// Causal attention for one new token per active slot against the cache.
 ///
 /// Replays row `pos` of `nn::attention_head_fwd` exactly: for each
-/// (active slot, head) pair the scores over keys `j = 0..=pos` (cache
+/// (active slot, head) pair the scores over keys `j = 0..=pos` (cached
 /// rows for `j < pos`, this step's projection for `j == pos`) are
 /// computed in ascending order with a single-accumulator dot product,
 /// then max-subtracted exponentials and the value accumulation run over
 /// the same ascending range — so each output row is bitwise what the
-/// full-sequence kernel produces at that position. Parallel over
-/// (slot, head) pairs with a fixed-order merge, like the full kernel.
-#[allow(clippy::too_many_arguments)]
+/// full-sequence kernel produces at that position, whichever [`KvView`]
+/// supplies the cached slices. Parallel over (slot, head) pairs with a
+/// fixed-order merge, like the full kernel.
 fn attention_decode(
     qkv: &Tensor,
-    k_cache: &Tensor,
-    v_cache: &Tensor,
+    view: &KvView<'_>,
     layer: usize,
     active: &[Active],
     n_head: usize,
-    t_max: usize,
-    b: usize,
 ) -> Result<Tensor> {
     let d3 = qkv.shape()[1];
     let d = d3 / 3;
@@ -199,8 +372,8 @@ fn attention_decode(
     let hd = d / n_head;
     let scale = 1.0 / (hd as f32).sqrt();
     let a = active.len();
-    let kd = k_cache.data();
-    let vd = v_cache.data();
+    let kd = view.k_data();
+    let vd = view.v_data();
     let max_pos = active.iter().map(|act| act.pos).max().unwrap_or(0);
     let work = 2 * a * n_head * (max_pos + 1) * hd;
     let panels = par::par_map_bounded(a * n_head, par::threads_for(work), |ih| {
@@ -211,13 +384,12 @@ fn attention_decode(
         let qi = &row[o..o + hd];
         let k_step = &row[d + o..d + o + hd];
         let v_step = &row[2 * d + o..2 * d + o + hd];
-        let base = (layer * b + act.slot) * t_max;
         let p = act.pos;
         let mut s = vec![0.0f32; p + 1];
         let mut mx = f32::NEG_INFINITY;
         for (j, sj) in s.iter_mut().enumerate() {
             let kj: &[f32] = if j < p {
-                let off = (base + j) * d + o;
+                let off = view.row_offset(layer, act.slot, j, d) + o;
                 &kd[off..off + hd]
             } else {
                 k_step
@@ -236,7 +408,7 @@ fn attention_decode(
         for (j, &ej) in s.iter().enumerate() {
             let pj = ej / sum;
             let vj: &[f32] = if j < p {
-                let off = (base + j) * d + o;
+                let off = view.row_offset(layer, act.slot, j, d) + o;
                 &vd[off..off + hd]
             } else {
                 v_step

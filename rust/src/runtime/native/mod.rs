@@ -73,6 +73,22 @@ impl NativeBackend {
                 };
                 decode::decode_step_q(cfg, &ex, &args[nw..])
             }
+            "decode_step_paged_q" => {
+                let nw = qmodel::qweight_nargs(cfg);
+                if args.len() != nw + 5 {
+                    bail!(
+                        "decode_step_paged_q: got {} args, want {}",
+                        args.len(),
+                        nw + 5
+                    );
+                }
+                let wts = qmodel::QWeights::parse(cfg, args)?;
+                let ex = qmodel::QExec::Seed {
+                    wts,
+                    group: manifest.group,
+                };
+                decode::decode_step_paged_q(cfg, &ex, &args[nw..])
+            }
             "train_step" => train::train_step(cfg, args),
             other => bail!("native backend has no entry '{other}'"),
         }
@@ -102,6 +118,7 @@ impl NativeBackend {
                 fwd_logits_q(cfg, &ex, trailing[0])
             }
             "decode_step_q" => decode::decode_step_q(cfg, &ex, trailing),
+            "decode_step_paged_q" => decode::decode_step_paged_q(cfg, &ex, trailing),
             other => bail!("prepared weights are not supported for entry '{other}'"),
         }
     }

@@ -195,6 +195,9 @@ impl Manifest {
                 // Same weight prefix as fwd_logits_q, then k_cache,
                 // v_cache, pos, tokens instead of the [B, T] batch.
                 ("decode_step_q".to_string(), q_nargs + 3),
+                // Paged variant: k_pool, v_pool, block_tables, pos,
+                // tokens after the same weight prefix.
+                ("decode_step_paged_q".to_string(), q_nargs + 4),
                 ("train_step".to_string(), 3 * n + 2),
             ];
             for role in crate::model::ROLES {

@@ -9,8 +9,12 @@
 //!   (`fwd_logits_q`, the original path);
 //! - **generation** ([`serve_generate`]): a prompt + sampling budget in,
 //!   generated tokens out, served by the continuous-batching
-//!   [`crate::engine::Engine`] over `decode_step_q` — in-flight sequences
-//!   of different lengths share each batched decode step.
+//!   [`crate::engine::Engine`] — in-flight sequences of different
+//!   lengths share each batched decode step. The engine's KV store is
+//!   block-paged with radix prefix sharing by default (DESIGN.md §12),
+//!   so requests repeating a cached prompt prefix skip that prefill;
+//!   the report's embedded [`GenReport`] carries the prefix-hit token
+//!   count and block-pool occupancy alongside the throughput split.
 //!
 //! Malformed requests are rejected individually with a structured
 //! [`RejectReason`] sent back on the response channel (never a silent

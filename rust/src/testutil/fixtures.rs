@@ -1,0 +1,93 @@
+//! Shared tiny-model fixture builders for the crate's test suites.
+//!
+//! `tests/integration.rs`, `tests/pipeline.rs`, and `tests/props.rs`
+//! (plus in-crate engine tests) all need the same handful of fixtures: a
+//! runtime, the pico preset, random token batches, a tempdir-backed run
+//! configuration, and a quantized pico model. They used to copy-paste
+//! these; this module is the single source so the builders cannot drift.
+
+use crate::config::{Method, ModelConfig, QuantConfig, RunConfig};
+use crate::model::Params;
+use crate::quant::{quantize_model, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::tensor::{Rng, TensorI32};
+use std::path::Path;
+
+/// The test runtime: native CPU by default; under `--features pjrt` with
+/// `make artifacts` the same tests cover the PJRT path.
+pub fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("runtime")
+}
+
+/// The smallest model preset (2 layers, d=64) — every test fixture's
+/// architecture.
+pub fn pico() -> ModelConfig {
+    ModelConfig::preset("pico").expect("pico preset")
+}
+
+/// A seeded `[batch, seq]` batch of valid token ids.
+pub fn random_tokens(cfg: &ModelConfig, seed: u64) -> TensorI32 {
+    let mut rng = Rng::new(seed);
+    let data: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    TensorI32::from_vec(&[cfg.batch, cfg.seq], data).expect("token batch")
+}
+
+/// A pico run configuration with tiny budgets and a tempdir runs/
+/// directory (tagged + pid-suffixed so parallel tests never collide with
+/// each other or with user checkpoints). Callers should remove
+/// `cfg.runs_dir` when done.
+pub fn tiny_run_config(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::new("pico").expect("pico run config");
+    cfg.train_steps = 25;
+    cfg.calib_seqs = 8;
+    cfg.eval_seqs = 4;
+    cfg.task_items = 6;
+    cfg.runs_dir = std::env::temp_dir()
+        .join(format!("faquant_test_runs_{tag}_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+/// Seeded-random pico params quantized with `method` (no calibration —
+/// RTN needs none; AWQ/FAQ degenerate gracefully). The standard fixture
+/// for engine/decode tests that need a deployable artifact fast.
+pub fn quantized_pico(
+    rt: &Runtime,
+    method: Method,
+    seed: u64,
+) -> (ModelConfig, Params, QuantizedModel) {
+    let cfg = pico();
+    let params = Params::init(&cfg, seed);
+    let qcfg = QuantConfig::with_method(method);
+    let qm = quantize_model(rt, &qcfg, &params, None).expect("quantize pico");
+    (cfg, params, qm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_build_and_are_deterministic() {
+        let cfg = pico();
+        assert_eq!(cfg.n_layer, 2);
+        let t1 = random_tokens(&cfg, 5);
+        let t2 = random_tokens(&cfg, 5);
+        assert_eq!(t1, t2);
+        assert!(t1.data().iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+        let rc = tiny_run_config("fixture_smoke");
+        assert!(rc.runs_dir.contains("fixture_smoke"));
+        assert_eq!(rc.train_steps, 25);
+    }
+
+    #[test]
+    fn quantized_pico_is_deployable() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = quantized_pico(&rt, Method::Rtn, 3);
+        assert_eq!(qm.linears.len(), cfg.n_layer * 4);
+        assert_eq!(params.tensors.len(), crate::model::param_specs(&cfg).len());
+    }
+}

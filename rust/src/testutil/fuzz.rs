@@ -1,0 +1,314 @@
+//! Deterministic differential fuzz harness: dense vs paged decode engine.
+//!
+//! Block reuse, prefix sharing, copy-on-write, and LRU eviction are the
+//! kind of bookkeeping where a subtle bug produces *plausible* tokens —
+//! wrong ones, silently. The pin: a seeded workload generator (random
+//! admission times, prompt lengths, shared-prefix families, divergent
+//! suffixes, stop conditions, deliberate rejects) runs the SAME workload
+//! through the dense seed engine and the paged engine and asserts
+//! token-stream equality — every sequence's generated ids, bit for bit —
+//! at 1/2/8 threads, with the paged pool sized tight enough that
+//! admission waits, prefix-cache eviction, and copy-on-write all fire.
+//! Paged-store invariants (`Engine::check_paged_invariants`) are
+//! verified after every scheduler step along the way.
+//!
+//! Everything derives from one `u64` seed, so a CI failure is
+//! reproducible from the single number in the log:
+//! `differential_fuzz_case(seed)` (see the `fuzz-smoke` CI job and
+//! `tests/props.rs`' pinned seeds).
+
+use super::fixtures;
+use crate::config::Method;
+use crate::engine::{Engine, FinishReason, GenConfig, GenOutput, GenRequest};
+use crate::model::Params;
+use crate::quant::QuantizedModel;
+use crate::runtime::Runtime;
+use crate::tensor::{par, Rng};
+use anyhow::{bail, Result};
+
+/// Workload shape, fully derived from one seed.
+#[derive(Clone, Debug)]
+pub struct FuzzSpec {
+    pub seed: u64,
+    pub requests: usize,
+    pub slots: usize,
+    pub block_tokens: usize,
+    pub pool_blocks: usize,
+    /// Cap on `prompt + max_new` for valid requests (also keeps valid
+    /// requests inside the paged capacity, so rejection behavior cannot
+    /// differ between the engines).
+    pub max_total: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+impl FuzzSpec {
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x00FA_C0DE);
+        let block_tokens = 3 + rng.below(6); // 3..=8
+        let slots = 2 + rng.below(3); // 2..=4
+        let max_total = 16 + rng.below(17); // 16..=32
+        let per_seq = (max_total - 1).div_ceil(block_tokens);
+        // Room for ~1.5 worst-case sequences plus a little slack: small
+        // enough that admission regularly waits on blocks and evicts
+        // cached prefixes, large enough that any single request fits.
+        let pool_blocks = per_seq + per_seq / 2 + 1 + rng.below(per_seq + 1);
+        let temperature = [0.0f32, 0.7, 1.0][rng.below(3)];
+        let top_k = [0usize, 8][rng.below(2)];
+        Self {
+            seed,
+            requests: 10 + rng.below(7),
+            slots,
+            block_tokens,
+            pool_blocks,
+            max_total,
+            temperature,
+            top_k,
+        }
+    }
+}
+
+/// Build the workload: `(admission step, request)` pairs in submission
+/// order. Roughly 60% of requests extend a shared-prefix family (with a
+/// random divergent suffix), and a sprinkle are deliberately invalid so
+/// rejection behavior is covered too.
+pub fn build_workload(vocab: usize, seq: usize, spec: &FuzzSpec) -> Vec<(usize, GenRequest)> {
+    let mut rng = Rng::new(spec.seed ^ 0xB10C);
+    let n_fam = 2 + rng.below(3);
+    let families: Vec<Vec<i32>> = (0..n_fam)
+        .map(|_| {
+            let len = 4 + rng.below(spec.max_total / 2);
+            (0..len).map(|_| rng.below(vocab) as i32).collect()
+        })
+        .collect();
+    let mut out = Vec::new();
+    let mut step = 0usize;
+    for id in 0..spec.requests {
+        step += rng.below(4); // random admission times
+        let kind = rng.below(10);
+        let prompt: Vec<i32> = if kind == 0 {
+            // Oversize for BOTH engines: prompt alone exceeds T_max.
+            let plen = seq + 1 + rng.below(8);
+            (0..plen).map(|_| rng.below(vocab) as i32).collect()
+        } else if kind <= 6 {
+            // Shared-prefix family + divergent suffix (mid-block
+            // divergence exercises copy-on-write and radix splits).
+            let fam = &families[rng.below(n_fam)];
+            let keep = 1 + rng.below(fam.len());
+            let mut p: Vec<i32> = fam[..keep].to_vec();
+            for _ in 0..rng.below(4) {
+                p.push(rng.below(vocab) as i32);
+            }
+            p
+        } else {
+            let plen = 2 + rng.below(spec.max_total / 2);
+            (0..plen).map(|_| rng.below(vocab) as i32).collect()
+        };
+        let max_new = if kind == 1 {
+            0 // rejected (ZeroMaxNew) by both engines
+        } else if prompt.len() >= spec.max_total {
+            1 // oversize prompts: any budget, rejected anyway
+        } else {
+            1 + rng.below(spec.max_total - prompt.len())
+        };
+        let stop_id = (rng.below(10) < 3).then(|| rng.below(vocab) as i32);
+        out.push((
+            step,
+            GenRequest {
+                id,
+                prompt,
+                max_new,
+                stop_id,
+            },
+        ));
+    }
+    out
+}
+
+/// Drive one engine through the workload: submissions happen at their
+/// admission step (between decode steps — the continuous-batching
+/// ingress), invariants optionally checked after every step. Returns all
+/// outputs (rejections included) sorted by request id.
+pub fn run_workload(
+    rt: &Runtime,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    workload: &[(usize, GenRequest)],
+    check_invariants: bool,
+) -> Result<Vec<GenOutput>> {
+    let cfg = fixtures::pico();
+    let mut eng = Engine::new(rt, &cfg, params, qm, gen)?;
+    let mut outs = Vec::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    // Generous bound (every workload drains in far fewer steps): an
+    // admission-livelock regression must FAIL with the seed in the log,
+    // not hang the fuzz-smoke job until the CI timeout.
+    let step_bound = 10_000 + workload.iter().map(|(at, _)| *at).max().unwrap_or(0);
+    while next < workload.len() || eng.has_work() {
+        while next < workload.len() && workload[next].0 <= step {
+            if let Some(rejected) = eng.submit(workload[next].1.clone()) {
+                outs.push(rejected);
+            }
+            next += 1;
+        }
+        outs.extend(eng.step()?);
+        if check_invariants {
+            eng.check_paged_invariants()?;
+        }
+        step += 1;
+        if step > step_bound {
+            bail!(
+                "engine failed to drain the workload within {step_bound} steps \
+                 (admission livelock?): {} of {} requests finished",
+                outs.len(),
+                workload.len()
+            );
+        }
+    }
+    outs.sort_by_key(|o| o.id);
+    Ok(outs)
+}
+
+/// Token streams (and finish causes) must match request for request.
+/// Rejection reasons are compared by cause: the paged engine legitimately
+/// reports its own (block-derived) capacity inside `TooLong`.
+pub fn assert_streams_equal(a: &[GenOutput], b: &[GenOutput], ctx: &str) -> Result<()> {
+    if a.len() != b.len() {
+        bail!("{ctx}: {} vs {} outputs", a.len(), b.len());
+    }
+    for (x, y) in a.iter().zip(b) {
+        if x.id != y.id || x.prompt_len != y.prompt_len {
+            bail!("{ctx}: output identity mismatch (ids {} vs {})", x.id, y.id);
+        }
+        if x.tokens != y.tokens {
+            bail!(
+                "{ctx}: request {} token streams diverge:\n  a: {:?}\n  b: {:?}",
+                x.id,
+                x.tokens,
+                y.tokens
+            );
+        }
+        let same_finish = match (&x.finish, &y.finish) {
+            (FinishReason::Rejected(r1), FinishReason::Rejected(r2)) => {
+                r1.cause() == r2.cause()
+            }
+            (f1, f2) => f1 == f2,
+        };
+        if !same_finish {
+            bail!(
+                "{ctx}: request {} finish mismatch: {:?} vs {:?}",
+                x.id,
+                x.finish,
+                y.finish
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One full differential case from a single seed: build a pico artifact
+/// and a workload, run the dense engine (1 thread) as the oracle, and
+/// pin the paged engine against it at 1/2/8 threads (plus the dense
+/// engine at 8 threads, closing the square). Panics on divergence with
+/// the seed in the message; prints the spec so failures reproduce from
+/// the log alone.
+pub fn differential_fuzz_case(seed: u64) -> Result<()> {
+    let spec = FuzzSpec::from_seed(seed);
+    println!("differential fuzz seed {seed}: {spec:?}");
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, seed ^ 0x9E37);
+    let workload = build_workload(cfg.vocab, cfg.seq, &spec);
+    let dense = GenConfig {
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed ^ 1,
+        slots: spec.slots,
+        paged: false,
+        ..GenConfig::default()
+    };
+    let paged = GenConfig {
+        paged: true,
+        block_tokens: spec.block_tokens,
+        pool_blocks: spec.pool_blocks,
+        prefix_cache: true,
+        ..dense.clone()
+    };
+
+    par::set_threads(1);
+    let baseline = run_workload(&rt, &params, &qm, dense.clone(), &workload, false);
+    par::set_threads(0);
+    let baseline = baseline?;
+    if baseline.iter().all(|o| o.tokens.is_empty()) {
+        // Statistically (near-)impossible, but a fresh CI-derived seed
+        // must never fail on workload shape alone — only on divergence.
+        println!("note: degenerate workload (seed {seed}): no tokens generated");
+    }
+
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let got = run_workload(&rt, &params, &qm, paged.clone(), &workload, true);
+        par::set_threads(0);
+        let got = got?;
+        assert_streams_equal(
+            &baseline,
+            &got,
+            &format!("paged vs dense oracle at {threads} threads (fuzz seed {seed})"),
+        )?;
+    }
+    par::set_threads(8);
+    let dense8 = run_workload(&rt, &params, &qm, dense, &workload, false);
+    par::set_threads(0);
+    assert_streams_equal(
+        &baseline,
+        &dense8?,
+        &format!("dense@8 vs dense@1 (fuzz seed {seed})"),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_and_workload_are_seed_deterministic() {
+        let a = FuzzSpec::from_seed(42);
+        let b = FuzzSpec::from_seed(42);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let wa = build_workload(256, 128, &a);
+        let wb = build_workload(256, 128, &b);
+        assert_eq!(wa.len(), wb.len());
+        for ((sa, ra), (sb, rb)) in wa.iter().zip(&wb) {
+            assert_eq!(sa, sb);
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.max_new, rb.max_new);
+            assert_eq!(ra.stop_id, rb.stop_id);
+        }
+        assert_ne!(
+            format!("{:?}", FuzzSpec::from_seed(43)),
+            format!("{a:?}"),
+            "different seeds should shape different workloads"
+        );
+    }
+
+    #[test]
+    fn workload_valid_requests_fit_both_engines() {
+        for seed in [1u64, 99, 12345] {
+            let spec = FuzzSpec::from_seed(seed);
+            // Single-request feasibility on the paged engine.
+            assert!(spec.pool_blocks * spec.block_tokens + 1 >= spec.max_total);
+            for (_, r) in build_workload(256, 128, &spec) {
+                if r.prompt.len() + r.max_new <= spec.max_total {
+                    assert!(r.prompt.iter().all(|&t| t >= 0 && t < 256));
+                } else {
+                    // Deliberately invalid: must be invalid for BOTH
+                    // engines the same way (oversize beyond T_max, or
+                    // zero budget).
+                    assert!(r.prompt.len() > 128 || r.max_new == 0);
+                }
+            }
+        }
+    }
+}

@@ -3,7 +3,15 @@
 //!
 //! proptest is not in the offline registry; crate tests use this for the
 //! coordinator/quantizer invariants (routing, packing round-trips,
-//! Theorem 1's error ordering, …).
+//! Theorem 1's error ordering, …). Two submodules extend the kit:
+//!
+//! - [`fixtures`] — the shared tiny-model builders every test suite
+//!   uses (runtime, pico preset, token batches, quantized artifacts).
+//! - [`fuzz`] — the deterministic differential fuzz harness pinning the
+//!   paged decode engine bitwise against the dense seed engine.
+
+pub mod fixtures;
+pub mod fuzz;
 
 use crate::tensor::{Rng, Tensor};
 

@@ -5,28 +5,13 @@
 //! artifact contract on a fresh offline checkout. Under `--features
 //! pjrt` with `make artifacts`, the same tests cover the PJRT path.
 
-use faquant::config::ModelConfig;
 use faquant::model::Params;
 use faquant::quant::{alpha_scale, scaled_fakequant};
 use faquant::runtime::{lit_f32, lit_i32, scalar_f32, tensor_f32, Runtime};
 use faquant::tensor::{Rng, Tensor, TensorI32};
-use std::path::Path;
-
-fn runtime() -> Runtime {
-    Runtime::new(Path::new("artifacts")).expect("runtime")
-}
-
-fn cfg() -> ModelConfig {
-    ModelConfig::preset("pico").unwrap()
-}
-
-fn tokens(cfg: &ModelConfig, seed: u64) -> TensorI32 {
-    let mut rng = Rng::new(seed);
-    let data: Vec<i32> = (0..cfg.batch * cfg.seq)
-        .map(|_| rng.below(cfg.vocab) as i32)
-        .collect();
-    TensorI32::from_vec(&[cfg.batch, cfg.seq], data).unwrap()
-}
+// Shared tiny-model fixture builders (deduplicated across the crate's
+// test suites into src/testutil/fixtures.rs).
+use faquant::testutil::fixtures::{pico as cfg, random_tokens as tokens, runtime};
 
 #[test]
 fn fwd_logits_shape_and_finite() {

@@ -4,27 +4,11 @@
 //! Runs unconditionally on the native CPU backend (no artifacts/ needed);
 //! uses a tempdir runs/ so tests never collide with user checkpoints.
 
-use faquant::config::{Method, RunConfig};
+use faquant::config::Method;
 use faquant::coordinator::Pipeline;
-use faquant::runtime::Runtime;
-use std::path::Path;
-
-fn runtime() -> Runtime {
-    Runtime::new(Path::new("artifacts")).expect("runtime")
-}
-
-fn test_cfg(tag: &str) -> RunConfig {
-    let mut cfg = RunConfig::new("pico").unwrap();
-    cfg.train_steps = 25;
-    cfg.calib_seqs = 8;
-    cfg.eval_seqs = 4;
-    cfg.task_items = 6;
-    cfg.runs_dir = std::env::temp_dir()
-        .join(format!("faquant_test_runs_{tag}_{}", std::process::id()))
-        .to_string_lossy()
-        .into_owned();
-    cfg
-}
+// Shared tiny-model fixture builders (deduplicated across the crate's
+// test suites into src/testutil/fixtures.rs).
+use faquant::testutil::fixtures::{runtime, tiny_run_config as test_cfg};
 
 #[test]
 fn full_pipeline_all_methods() {
@@ -290,5 +274,73 @@ fn serve_generate_roundtrip() {
     assert!(rep.engine.prefill_tokens > 0 && rep.engine.decode_tokens > 0);
     assert!(rep.engine.mean_slot_occupancy > 0.0);
     assert!(rep.p95_ms >= rep.p50_ms);
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_generate_shared_prefix_reports_hits() {
+    use faquant::engine::GenConfig;
+    use faquant::serve::{GenServeRequest, GenServeResponse};
+
+    let rt = runtime();
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("genprefix");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    // Three requests with the SAME 12-token prompt (the shared-system-
+    // prompt pattern) through a single-slot paged engine: the 2nd and
+    // 3rd each skip the cached prefix (11 of 12 prompt tokens — the
+    // last prompt token always feeds to seed sampling).
+    let shared: Vec<i32> = (0..12)
+        .map(|k| ((k * 3 + 1) % cfg.model.vocab) as i32)
+        .collect();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut responders = Vec::new();
+    for _ in 0..3 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(GenServeRequest {
+            prompt: shared.clone(),
+            max_new: 2,
+            stop_id: None,
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    drop(tx);
+    let rep = faquant::serve::serve_generate(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            slots: 1,
+            block_tokens: 4,
+            ..GenConfig::default()
+        },
+        rx,
+        std::time::Duration::from_millis(1),
+    )
+    .unwrap();
+    let mut streams = Vec::new();
+    for r in responders {
+        match r.recv().unwrap() {
+            GenServeResponse::Done { tokens, .. } => streams.push(tokens),
+            GenServeResponse::Rejected(reason) => panic!("rejected: {reason}"),
+        }
+    }
+    // Greedy + identical prompts: identical continuations, with or
+    // without the prefix-cache fast path (bit-identity, DESIGN.md §12).
+    assert_eq!(streams[0], streams[1]);
+    assert_eq!(streams[1], streams[2]);
+    assert_eq!(rep.engine.sequences, 3);
+    assert_eq!(rep.engine.prefix_hit_tokens, 22, "11 skipped tokens x 2 repeats");
+    // Prefill fed: 12 (first) + 1 + 1 (repeats feed only the last token).
+    assert_eq!(rep.engine.prefill_tokens, 14);
+    assert!(rep.engine.pool_blocks > 0 && rep.engine.peak_blocks_in_use > 0);
+    assert!(rep.engine.block_tokens == 4);
     std::fs::remove_dir_all(&cfg.runs_dir).ok();
 }
