@@ -18,6 +18,10 @@ static BYTES: AtomicUsize = AtomicUsize::new(0);
 /// (allocs, reallocs, and zeroed allocs; deallocations are free).
 pub struct CountingAllocator;
 
+// SAFETY: pure pass-through to `System` — every method forwards the
+// exact layout/pointer it received, so `System`'s GlobalAlloc contract
+// (valid layouts in, valid blocks out) carries over unchanged; the
+// counters are relaxed atomics with no effect on the returned memory.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);

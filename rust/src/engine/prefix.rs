@@ -27,7 +27,7 @@
 //! it dropped; the engine mirrors those into `BlockPool` refcounts (and
 //! the paged invariant check cross-verifies via [`RadixTree::block_refs`]).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 #[derive(Debug)]
 struct Node {
@@ -154,21 +154,22 @@ impl RadixTree {
     }
 
     /// Insert `tokens` (length MUST be a multiple of `block_tokens`)
-    /// with `block_at(pos)` naming the block that holds position `pos`.
-    /// Already-cached prefixes are deduplicated (the existing blocks
-    /// win); only genuinely new suffix nodes reference the caller's
-    /// blocks. Returns every block reference the tree newly took — the
-    /// caller must `retain` each on the pool exactly once.
-    pub fn insert(
-        &mut self,
-        tokens: &[i32],
-        block_at: impl Fn(usize) -> u32,
-        clock: u64,
-    ) -> Vec<u32> {
+    /// with `chain[i]` naming the block that holds span `i` (positions
+    /// `[i*bt, (i+1)*bt)`). Already-cached prefixes are deduplicated
+    /// (the existing blocks win); only genuinely new suffix nodes
+    /// reference the caller's blocks. Returns every block reference the
+    /// tree newly took — the caller must `retain` each on the pool
+    /// exactly once.
+    pub fn insert(&mut self, tokens: &[i32], chain: &[u32], clock: u64) -> Vec<u32> {
         assert_eq!(
             tokens.len() % self.block_tokens,
             0,
             "radix inserts must be block-aligned"
+        );
+        assert_eq!(
+            chain.len(),
+            tokens.len() / self.block_tokens,
+            "one chain entry per block-sized token span"
         );
         let mut new_refs: Vec<u32> = Vec::new();
         let mut id = 0usize;
@@ -179,7 +180,9 @@ impl RadixTree {
                 // No child starts with this token: hang the whole
                 // remaining suffix off `id` as one new node.
                 let edge: Vec<i32> = tokens[pos..].to_vec();
-                let blocks: Vec<u32> = (pos..tokens.len()).map(&block_at).collect();
+                let blocks: Vec<u32> = (pos..tokens.len())
+                    .map(|p| chain[p / self.block_tokens])
+                    .collect();
                 push_distinct_runs(&blocks, &mut new_refs);
                 let node = self.new_node(Node {
                     edge,
@@ -254,7 +257,9 @@ impl RadixTree {
             self.node_mut(mid).children.push((rest_first, child));
             // New suffix node under mid.
             let edge: Vec<i32> = tokens[pos..].to_vec();
-            let blocks: Vec<u32> = (pos..tokens.len()).map(&block_at).collect();
+            let blocks: Vec<u32> = (pos..tokens.len())
+                .map(|p| chain[p / self.block_tokens])
+                .collect();
             push_distinct_runs(&blocks, &mut new_refs);
             let node = self.new_node(Node {
                 edge,
@@ -300,9 +305,11 @@ impl RadixTree {
 
     /// The tree's block-reference multiset: for each live node, each
     /// distinct block run counts one reference. Cross-checked against
-    /// `BlockPool` refcounts by the paged invariant check.
-    pub fn block_refs(&self) -> HashMap<u32, u32> {
-        let mut refs: HashMap<u32, u32> = HashMap::new();
+    /// `BlockPool` refcounts by the paged invariant check. Ordered
+    /// (`BTreeMap`) so callers may iterate it deterministically
+    /// (faq-lint D1: no hash-order iteration on the serving path).
+    pub fn block_refs(&self) -> BTreeMap<u32, u32> {
+        let mut refs: BTreeMap<u32, u32> = BTreeMap::new();
         for slot in self.nodes.iter().flatten() {
             let mut runs = Vec::new();
             push_distinct_runs(&slot.blocks, &mut runs);
@@ -366,10 +373,11 @@ fn push_distinct_runs(blocks: &[u32], out: &mut Vec<u32>) {
 mod tests {
     use super::*;
 
-    /// Insert helper: positions map to synthetic block ids `base + i/bt`.
+    /// Insert helper: span `i` maps to the synthetic block id `base + i`.
     fn ins(t: &mut RadixTree, tokens: &[i32], base: u32) -> Vec<u32> {
         let bt = t.block_tokens();
-        t.insert(tokens, |pos| base + (pos / bt) as u32, 1)
+        let chain: Vec<u32> = (0..tokens.len() / bt).map(|i| base + i as u32).collect();
+        t.insert(tokens, &chain, 1)
     }
 
     #[test]
@@ -442,8 +450,8 @@ mod tests {
     #[test]
     fn lru_eviction_removes_leaves_bottom_up() {
         let mut t = RadixTree::new(2);
-        t.insert(&[1, 2, 3, 4], |p| 10 + (p / 2) as u32, 1);
-        t.insert(&[1, 2, 9, 9], |p| 20 + (p / 2) as u32, 2);
+        t.insert(&[1, 2, 3, 4], &[10, 11], 1);
+        t.insert(&[1, 2, 9, 9], &[20, 21], 2);
         t.check_structure().unwrap();
         assert_eq!(t.node_count(), 3);
         // Oldest leaf first: the [3,4] suffix (stamped at clock 1).
@@ -455,7 +463,7 @@ mod tests {
         assert!(t.evict_lru().is_none());
         assert!(t.is_empty());
         // The slab reuses freed ids.
-        t.insert(&[5, 6], |_| 30, 3);
+        t.insert(&[5, 6], &[30], 3);
         t.check_structure().unwrap();
         assert_eq!(t.lookup(&[5, 6], 4).0, 2);
     }
@@ -475,6 +483,6 @@ mod tests {
     #[should_panic(expected = "block-aligned")]
     fn unaligned_insert_panics() {
         let mut t = RadixTree::new(4);
-        t.insert(&[1, 2, 3], |_| 0, 1);
+        t.insert(&[1, 2, 3], &[0], 1);
     }
 }

@@ -45,7 +45,7 @@ use crate::quant::QuantizedModel;
 use crate::runtime::{Buffer, Runtime, Value};
 use crate::serve::qmodel_literals;
 use crate::tensor::{Tensor, TensorI32};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -236,8 +236,11 @@ impl PagedKv {
     ) -> Result<Option<usize>> {
         self.clock += 1;
         let bt = self.block_tokens;
+        let prompt = tokens
+            .get(..prompt_len)
+            .ok_or_else(|| anyhow!("prompt_len {prompt_len} exceeds the token stream"))?;
         let (mut p, chain) = if self.prefix_cache {
-            let (m, c) = self.tree.lookup(&tokens[..prompt_len], self.clock);
+            let (m, c) = self.tree.lookup(prompt, self.clock);
             // The last prompt token is always fed: its logits seed the
             // first sampled token.
             (m.min(prompt_len - 1), c)
@@ -260,13 +263,15 @@ impl PagedKv {
             self.pool.retain(b)?;
             pinned.push(b);
         }
-        let mut cow_src = if partial > 0 {
-            let src = chain[nfull];
+        let mut cow_src = None;
+        if partial > 0 {
+            let src = chain
+                .get(nfull)
+                .copied()
+                .ok_or_else(|| anyhow!("lookup chain missing its partial tail block"))?;
             self.pool.retain(src)?;
-            Some(src)
-        } else {
-            None
-        };
+            cow_src = Some(src);
+        }
         // The free list must cover every outstanding reservation plus
         // this sequence's worst case.
         let target = self.reserved_total + new_needed;
@@ -305,8 +310,14 @@ impl PagedKv {
             table.push(dst);
             reserve -= 1;
         }
-        self.tables[slot] = table;
-        self.reserved[slot] = reserve;
+        *self
+            .tables
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))? = table;
+        *self
+            .reserved
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))? = reserve;
         self.reserved_total += reserve;
         self.prefix_hit_tokens += p;
         self.note_peak();
@@ -324,24 +335,40 @@ impl PagedKv {
     ) -> Result<()> {
         let bt = self.block_tokens;
         let bi = pos / bt;
-        if bi == self.tables[slot].len() {
-            if self.reserved[slot] == 0 {
+        let Self {
+            pool,
+            tables,
+            reserved,
+            reserved_total,
+            ..
+        } = self;
+        let table = tables
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        let res = reserved
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        if bi == table.len() {
+            if *res == 0 {
                 bail!("slot {slot}: paged append at pos {pos} without a reservation");
             }
-            let b = self.pool.alloc()?;
-            self.tables[slot].push(b);
-            self.reserved[slot] -= 1;
-            self.reserved_total -= 1;
+            let b = pool.alloc()?;
+            table.push(b);
+            *res -= 1;
+            *reserved_total -= 1;
         }
-        let block = self.tables[slot][bi];
-        if self.pool.refcount(block) != 1 {
+        let block = table
+            .get(bi)
+            .copied()
+            .ok_or_else(|| anyhow!("slot {slot}: append at pos {pos} past its block table"))?;
+        if pool.refcount(block) != 1 {
             bail!(
                 "slot {slot}: writing block {block} with refcount {} (shared blocks \
                  are read-only; divergence must copy-on-write)",
-                self.pool.refcount(block)
+                pool.refcount(block)
             );
         }
-        self.pool.write_row(block, pos % bt, slot, k_new, v_new)?;
+        pool.write_row(block, pos % bt, slot, k_new, v_new)?;
         self.note_peak();
         Ok(())
     }
@@ -355,19 +382,34 @@ impl PagedKv {
             let aligned = (fed / bt) * bt;
             if aligned > 0 {
                 self.clock += 1;
-                let table = &self.tables[slot];
-                let new_refs = self.tree.insert(&tokens[..aligned], |pos| table[pos / bt], self.clock);
+                let table = self
+                    .tables
+                    .get(slot)
+                    .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+                let (prefix, chain) = match (tokens.get(..aligned), table.get(..aligned / bt)) {
+                    (Some(p), Some(c)) => (p, c),
+                    _ => bail!("slot {slot}: fed {fed} tokens but stream/table are shorter"),
+                };
+                let new_refs = self.tree.insert(prefix, chain, self.clock);
                 for b in new_refs {
                     self.pool.retain(b)?;
                 }
             }
         }
-        let table = std::mem::take(&mut self.tables[slot]);
+        let table = std::mem::take(
+            self.tables
+                .get_mut(slot)
+                .ok_or_else(|| anyhow!("slot {slot} out of range"))?,
+        );
         for b in table {
             self.pool.release(b)?;
         }
-        self.reserved_total -= self.reserved[slot];
-        self.reserved[slot] = 0;
+        let res = self
+            .reserved
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        self.reserved_total -= *res;
+        *res = 0;
         Ok(())
     }
 }
@@ -535,28 +577,45 @@ impl<'rt> Engine<'rt> {
     /// block reservation (FIFO — a stuck head does not let later
     /// requests starve it of blocks).
     fn admit(&mut self) -> Result<()> {
-        for slot in 0..self.slots.len() {
-            if self.slots[slot].is_some() {
+        let Self {
+            slots,
+            store,
+            queue,
+            ..
+        } = self;
+        for (slot, slot_ref) in slots.iter_mut().enumerate() {
+            if slot_ref.is_some() {
                 continue;
             }
-            let Some(head) = self.queue.front() else {
+            let Some(mut head) = queue.pop_front() else {
                 break;
             };
-            match &mut self.store {
+            match store {
                 KvStore::Dense(cache) => {
                     cache.reset(slot);
-                    let st = self.queue.pop_front().expect("head exists");
-                    self.slots[slot] = Some(st);
+                    *slot_ref = Some(head);
                 }
                 KvStore::Paged(ps) => {
-                    match ps.try_admit(slot, &head.tokens, head.prompt_len, head.max_new)? {
+                    let admitted =
+                        match ps.try_admit(slot, &head.tokens, head.prompt_len, head.max_new) {
+                            Ok(a) => a,
+                            Err(e) => {
+                                // Keep the request queued; the error is the
+                                // caller's to handle.
+                                queue.push_front(head);
+                                return Err(e);
+                            }
+                        };
+                    match admitted {
                         Some(start) => {
-                            let mut st = self.queue.pop_front().expect("head exists");
-                            st.cursor = start;
-                            self.slots[slot] = Some(st);
+                            head.cursor = start;
+                            *slot_ref = Some(head);
                         }
                         // Head must wait for blocks; keep FIFO order.
-                        None => break,
+                        None => {
+                            queue.push_front(head);
+                            break;
+                        }
                     }
                 }
             }
@@ -574,10 +633,14 @@ impl<'rt> Engine<'rt> {
         let mut tok = vec![0i32; b];
         let mut prefill_feeds = 0usize;
         let mut decode_feeds = 0usize;
-        for (slot, st) in self.slots.iter().enumerate() {
+        for ((p, t), st) in pos.iter_mut().zip(tok.iter_mut()).zip(&self.slots) {
             let Some(st) = st else { continue };
-            pos[slot] = st.cursor as i32;
-            tok[slot] = st.tokens[st.cursor];
+            *p = st.cursor as i32;
+            *t = st
+                .tokens
+                .get(st.cursor)
+                .copied()
+                .ok_or_else(|| anyhow!("sequence {}: cursor past its token stream", st.id))?;
             if st.cursor < st.prompt_len {
                 prefill_feeds += 1;
             } else {
@@ -613,9 +676,12 @@ impl<'rt> Engine<'rt> {
             }
             KvStore::Paged(ps) => {
                 let mut tables = vec![-1i32; b * ps.max_blocks];
-                for (slot, table) in ps.tables.iter().enumerate() {
-                    for (i, &blk) in table.iter().enumerate() {
-                        tables[slot * ps.max_blocks + i] = blk as i32;
+                for (row, table) in tables.chunks_mut(ps.max_blocks).zip(&ps.tables) {
+                    if table.len() > row.len() {
+                        bail!("block table wider than {} blocks", ps.max_blocks);
+                    }
+                    for (cell, &blk) in row.iter_mut().zip(table) {
+                        *cell = blk as i32;
                     }
                 }
                 let tb_buf = Buffer::Host(Value::I32(TensorI32::from_vec(
@@ -639,7 +705,11 @@ impl<'rt> Engine<'rt> {
                 outs
             }
         };
-        let outs = outs?;
+        let mut outs = outs?.into_iter();
+        let (Some(logits_v), Some(k_v), Some(v_v)) = (outs.next(), outs.next(), outs.next())
+        else {
+            bail!("decode step returned fewer than three outputs");
+        };
         let dt = t0.elapsed().as_secs_f32();
         self.steps += 1;
         self.occupancy_sum += feeds as f32 / b as f32;
@@ -647,53 +717,54 @@ impl<'rt> Engine<'rt> {
         self.decode_secs += dt * decode_feeds as f32 / feeds as f32;
         self.prefill_tokens += prefill_feeds;
 
-        let logits = outs[0].as_f32()?;
-        let k_new = outs[1].as_f32()?;
-        let v_new = outs[2].as_f32()?;
+        let logits = logits_v.as_f32()?;
+        let k_new = k_v.as_f32()?;
+        let v_new = v_v.as_f32()?;
         let mut finished = Vec::new();
-        for slot in 0..b {
-            let done = {
-                let Some(st) = self.slots[slot].as_mut() else { continue };
-                match &mut self.store {
-                    KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
-                    KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
-                }
-                st.cursor += 1;
-                let mut fin = None;
-                if st.cursor >= st.prompt_len {
-                    // This feed's logits predict the next position.
-                    let row = &logits.data()[slot * vocab..(slot + 1) * vocab];
-                    let next = st.sampler.sample(row) as i32;
-                    if st.stop_id == Some(next) {
-                        fin = Some(FinishReason::Stop);
-                    } else {
-                        st.tokens.push(next);
-                        self.decode_tokens += 1;
-                        if st.tokens.len() - st.prompt_len >= st.max_new {
-                            fin = Some(FinishReason::MaxTokens);
-                        }
-                    }
-                }
-                match fin {
-                    Some(finish) => {
-                        if let KvStore::Paged(ps) = &mut self.store {
-                            ps.on_finish(slot, st.cursor, &st.tokens)?;
-                        }
-                        Some(GenOutput {
-                            id: st.id,
-                            prompt_len: st.prompt_len,
-                            tokens: st.tokens[st.prompt_len..].to_vec(),
-                            finish,
-                        })
-                    }
-                    None => None,
-                }
-            };
-            if let Some(out) = done {
-                self.slots[slot] = None;
-                self.completed += 1;
-                finished.push(out);
+        let Self {
+            slots,
+            store,
+            decode_tokens,
+            completed,
+            ..
+        } = self;
+        for (slot, slot_ref) in slots.iter_mut().enumerate() {
+            let Some(st) = slot_ref.as_mut() else { continue };
+            match store {
+                KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
+                KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
             }
+            st.cursor += 1;
+            let mut fin = None;
+            if st.cursor >= st.prompt_len {
+                // This feed's logits predict the next position.
+                let row = logits
+                    .data()
+                    .get(slot * vocab..(slot + 1) * vocab)
+                    .ok_or_else(|| anyhow!("logits row {slot} out of range"))?;
+                let next = st.sampler.sample(row) as i32;
+                if st.stop_id == Some(next) {
+                    fin = Some(FinishReason::Stop);
+                } else {
+                    st.tokens.push(next);
+                    *decode_tokens += 1;
+                    if st.tokens.len() - st.prompt_len >= st.max_new {
+                        fin = Some(FinishReason::MaxTokens);
+                    }
+                }
+            }
+            let Some(finish) = fin else { continue };
+            if let KvStore::Paged(ps) = store {
+                ps.on_finish(slot, st.cursor, &st.tokens)?;
+            }
+            let Some(st) = slot_ref.take() else { continue };
+            finished.push(GenOutput {
+                id: st.id,
+                prompt_len: st.prompt_len,
+                tokens: st.tokens.get(st.prompt_len..).unwrap_or_default().to_vec(),
+                finish,
+            });
+            *completed += 1;
         }
         Ok(finished)
     }
@@ -797,39 +868,47 @@ impl<'rt> Engine<'rt> {
             }
         }
         let bt = ps.block_tokens;
-        for (slot, st) in self.slots.iter().enumerate() {
+        if ps.tables.len() != self.slots.len() || ps.reserved.len() != self.slots.len() {
+            bail!("paged per-slot arrays out of sync with the slot count");
+        }
+        for (slot, ((st, table), &reserved)) in self
+            .slots
+            .iter()
+            .zip(&ps.tables)
+            .zip(&ps.reserved)
+            .enumerate()
+        {
             match st {
                 None => {
-                    if !ps.tables[slot].is_empty() || ps.reserved[slot] != 0 {
+                    if !table.is_empty() || reserved != 0 {
                         bail!("empty slot {slot} holds blocks or reservations");
                     }
                 }
                 Some(st) => {
-                    if ps.tables[slot].len() != st.cursor.div_ceil(bt) {
+                    if table.len() != st.cursor.div_ceil(bt) {
                         bail!(
                             "slot {slot}: table {} blocks != ceil(cursor {} / {bt})",
-                            ps.tables[slot].len(),
+                            table.len(),
                             st.cursor
                         );
                     }
                     let need = (st.prompt_len + st.max_new - 1).div_ceil(bt);
-                    if ps.tables[slot].len() + ps.reserved[slot] != need {
+                    if table.len() + reserved != need {
                         bail!(
-                            "slot {slot}: table {} + reserved {} != worst case {need}",
-                            ps.tables[slot].len(),
-                            ps.reserved[slot]
+                            "slot {slot}: table {} + reserved {reserved} != worst case {need}",
+                            table.len()
                         );
                     }
                 }
             }
         }
-        for a in 0..self.slots.len() {
-            for c in a + 1..self.slots.len() {
-                let (Some(sa), Some(sc)) = (&self.slots[a], &self.slots[c]) else {
+        for (a, (sa, ta)) in self.slots.iter().zip(&ps.tables).enumerate() {
+            for (c, (sc, tc)) in self.slots.iter().zip(&ps.tables).enumerate().skip(a + 1) {
+                let (Some(sa), Some(sc)) = (sa, sc) else {
                     continue;
                 };
-                for (ia, &ba) in ps.tables[a].iter().enumerate() {
-                    for (ic, &bc) in ps.tables[c].iter().enumerate() {
+                for (ia, &ba) in ta.iter().enumerate() {
+                    for (ic, &bc) in tc.iter().enumerate() {
                         if ba != bc {
                             continue;
                         }
@@ -837,7 +916,11 @@ impl<'rt> Engine<'rt> {
                             bail!("block {ba} shared at different positions {ia}/{ic}");
                         }
                         let l = ((ia + 1) * bt).min(sa.cursor).min(sc.cursor);
-                        if sa.tokens[..l] != sc.tokens[..l] {
+                        let (Some(pa), Some(pc)) = (sa.tokens.get(..l), sc.tokens.get(..l))
+                        else {
+                            bail!("slots {a}/{c}: cursor past the token stream");
+                        };
+                        if pa != pc {
                             bail!(
                                 "diverged sequences in slots {a}/{c} share block {ba}"
                             );

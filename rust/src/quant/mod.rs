@@ -67,6 +67,9 @@ pub struct QuantizedModel {
 impl QuantizedModel {
     /// Total packed weight bytes (codes + dequant params) vs FP32 bytes —
     /// the compression headline.
+    // faq-lint: allow(unordered-reduction) — integer byte counts; the
+    // lexer cannot prove the element type, and usize sums are
+    // order-independent.
     pub fn compression(&self) -> (usize, usize) {
         let packed: usize = self
             .linears
@@ -88,6 +91,8 @@ impl QuantizedModel {
     }
 
     /// Mean reconstruction loss across linears (summary metric).
+    // faq-lint: allow(unordered-reduction) — accumulates in `linears`
+    // Vec order (block-major, fixed at quantization time).
     pub fn mean_loss(&self) -> f32 {
         if self.linears.is_empty() {
             return 0.0;

@@ -30,7 +30,7 @@ pub use registry::{qweight_nargs, ArtifactInfo, Manifest, NATIVE_GROUP, NATIVE_L
 pub use value::{lit_f32, lit_i32, lit_scalar, scalar_f32, tensor_f32, Buffer, Value};
 
 use anyhow::Result;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -49,7 +49,10 @@ pub struct ExecStats {
 pub struct Runtime {
     pub manifest: Manifest,
     backend: Box<dyn Backend>,
-    stats: Mutex<HashMap<String, ExecStats>>,
+    /// Ordered so stats reports (and the float total in
+    /// [`Runtime::total_exec_secs`]) come out byte-stable run-to-run;
+    /// `HashMap` iteration order used to leak into both (faq-lint D1).
+    stats: Mutex<BTreeMap<String, ExecStats>>,
     /// Entries already prepared (compiled/validated) — prepare runs once
     /// per entry, keeping the per-exec hot path free of redundant lookups.
     prepared: Mutex<HashSet<String>>,
@@ -84,7 +87,7 @@ impl Runtime {
         Ok(Self {
             manifest,
             backend,
-            stats: Mutex::new(HashMap::new()),
+            stats: Mutex::new(BTreeMap::new()),
             prepared: Mutex::new(HashSet::new()),
             qweights: Mutex::new(HashMap::new()),
         })
@@ -101,7 +104,7 @@ impl Runtime {
         Self {
             manifest: Manifest::native(),
             backend: Box::new(native::NativeBackend),
-            stats: Mutex::new(HashMap::new()),
+            stats: Mutex::new(BTreeMap::new()),
             prepared: Mutex::new(HashSet::new()),
             qweights: Mutex::new(HashMap::new()),
         }
@@ -113,7 +116,7 @@ impl Runtime {
         Self {
             manifest: Manifest::native_with(group, loss_rows),
             backend: Box::new(native::NativeBackend),
-            stats: Mutex::new(HashMap::new()),
+            stats: Mutex::new(BTreeMap::new()),
             prepared: Mutex::new(HashSet::new()),
             qweights: Mutex::new(HashMap::new()),
         }
@@ -296,7 +299,7 @@ impl Runtime {
         s.exec_secs += secs;
     }
 
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
         self.stats.lock().unwrap().clone()
     }
 

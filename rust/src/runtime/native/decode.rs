@@ -357,6 +357,9 @@ fn run_step(
 /// full-sequence kernel produces at that position, whichever [`KvView`]
 /// supplies the cached slices. Parallel over (slot, head) pairs with a
 /// fixed-order merge, like the full kernel.
+// faq-lint: allow(unordered-reduction) — q·k dot products accumulate
+// over ascending head-dim index within one (slot, head) task; order
+// pinned by construction and covered by the paged-vs-dense props tests.
 fn attention_decode(
     qkv: &Tensor,
     view: &KvView<'_>,

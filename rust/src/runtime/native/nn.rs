@@ -150,6 +150,8 @@ pub fn embed(tok_emb: &Tensor, pos_emb: &Tensor, tokens: &TensorI32) -> Result<T
 
 /// RMSNorm: y = x * g * r with r = 1/sqrt(mean(x^2) + eps), per row.
 /// Returns (y, r per row) — r is cached for the backward pass.
+// faq-lint: allow(unordered-reduction) — per-row mean-square runs in
+// slice index order; order pinned by construction.
 pub fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> Result<(Tensor, Vec<f32>)> {
     let shape = x.shape();
     if shape.len() != 2 || shape[1] != g.len() {
@@ -219,6 +221,9 @@ pub fn dgelu(x: f32) -> f32 {
 /// head's output panel [t, hd] and, when `keep_probs`, its softmax
 /// matrix [t, t] (dropped inside the task otherwise, so the eval/serve
 /// paths never hold b*n_head score matrices at once).
+// faq-lint: allow(unordered-reduction) — q·k dot products accumulate
+// over ascending head-dim index within one (batch, head) task; order
+// pinned by construction.
 fn attention_head_fwd(
     qkv: &Tensor,
     bi: usize,
@@ -322,6 +327,9 @@ pub fn attention_fwd(
 
 /// Attention backward: gradient of the merged output w.r.t. the packed
 /// qkv projections, using the cached softmax matrices.
+// faq-lint: allow(unordered-reduction) — dout·v dot products accumulate
+// over ascending head-dim index within one (batch, head) task; order
+// pinned by construction.
 pub fn attention_bwd(
     qkv: &Tensor,
     probs: &[Tensor],

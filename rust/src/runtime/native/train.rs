@@ -22,6 +22,8 @@ const LR: f32 = 3e-3;
 /// `params` in canonical order; `tokens` [B, T+1] (input = first T
 /// columns, targets = shifted by one). Returns (loss, grads in canonical
 /// order).
+// faq-lint: allow(unordered-reduction) — per-row softmax denominator
+// accumulates over ascending vocab index; order pinned by construction.
 pub fn loss_and_grads(
     cfg: &ModelConfig,
     params: &[&Tensor],

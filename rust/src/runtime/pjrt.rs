@@ -23,12 +23,12 @@ use std::sync::{Arc, Mutex};
 #[derive(Clone)]
 pub struct DeviceBuffer(Arc<xla::PjRtBuffer>);
 
-// Safety: PJRT buffers are immutable once created and the PJRT CPU
+// SAFETY: PJRT buffers are immutable once created and the PJRT CPU
 // client's buffer operations are thread-safe; the binding's types only
 // miss the auto traits because they hold raw pointers. Required by the
 // `Backend: Send + Sync` contract (Phase B executes concurrently).
 unsafe impl Send for DeviceBuffer {}
-unsafe impl Sync for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {} // SAFETY: as above
 
 impl std::fmt::Debug for DeviceBuffer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -44,11 +44,11 @@ pub struct PjrtBackend {
     exes: Mutex<HashMap<(String, String), Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// Safety: see DeviceBuffer — the PJRT C API is thread-safe for
+// SAFETY: see DeviceBuffer — the PJRT C API is thread-safe for
 // compile/execute/upload; all interior mutability here is the mutexed
 // executable cache.
 unsafe impl Send for PjrtBackend {}
-unsafe impl Sync for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {} // SAFETY: as above
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
@@ -165,11 +165,14 @@ impl Backend for PjrtBackend {
 }
 
 fn as_bytes_f32(v: &[f32]) -> &[u8] {
-    // Safety: f32 has no padding; alignment of u8 is 1; LE host.
+    // SAFETY: f32 has no padding; alignment of u8 is 1; the byte length
+    // equals the slice's size; the borrow pins the source slice alive.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
 fn as_bytes_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: same as `as_bytes_f32` — plain-old-data reinterpret with
+    // matching length, alignment 1, and a live source borrow.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 

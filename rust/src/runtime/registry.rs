@@ -14,7 +14,7 @@
 
 use crate::config::ModelConfig;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug)]
@@ -29,11 +29,13 @@ pub struct ArtifactInfo {
 pub struct Manifest {
     pub group: usize,
     pub loss_rows: usize,
-    pub configs: HashMap<String, ModelConfig>,
+    /// Ordered maps throughout: listings, validation failures, and op
+    /// enumerations must come out byte-stable run-to-run (faq-lint D1).
+    pub configs: BTreeMap<String, ModelConfig>,
     /// cfg -> canonical (name, shape) parameter list.
-    pub params: HashMap<String, Vec<(String, Vec<usize>)>>,
+    pub params: BTreeMap<String, Vec<(String, Vec<usize>)>>,
     /// (cfg, entry) -> artifact.
-    pub artifacts: HashMap<(String, String), ArtifactInfo>,
+    pub artifacts: BTreeMap<(String, String), ArtifactInfo>,
 }
 
 /// Number of arguments in the quantized-deployment weight prefix shared
@@ -92,7 +94,7 @@ impl Manifest {
                 }
                 "config" => {
                     let name = toks.next().context("config name missing")?.to_string();
-                    let mut fields: HashMap<&str, usize> = HashMap::new();
+                    let mut fields: BTreeMap<&str, usize> = BTreeMap::new();
                     for tok in toks {
                         let (k, v) = kv(tok, line_no)?;
                         fields.insert(

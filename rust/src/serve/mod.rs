@@ -27,7 +27,7 @@ use crate::model::{Params, ROLES};
 use crate::quant::QuantizedModel;
 use crate::runtime::{lit_f32, tensor_f32, Buffer, Runtime, Value};
 use crate::tensor::{percentile, Tensor, TensorI32};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -235,23 +235,34 @@ pub fn serve_requests(
 
         // Assemble the fixed-shape batch, padding with the last row.
         let mut data = Vec::with_capacity(b * t);
-        for i in 0..b {
-            let (req, _) = &group[i.min(take - 1)];
+        for (req, _) in &group {
             debug_assert_eq!(req.tokens.len(), t, "validated at intake");
             data.extend_from_slice(&req.tokens);
+        }
+        if let Some((last, _)) = group.last() {
+            for _ in group.len()..b {
+                data.extend_from_slice(&last.tokens);
+            }
         }
         let batch = TensorI32::from_vec(&[b, t], data)?;
         let tok_buf = rt.upload_i32(&batch)?;
         let mut args: Vec<&Buffer> = weight_bufs.iter().collect();
         args.push(&tok_buf);
         let outs = rt.exec_b(&cfg.name, "fwd_logits_q", &args)?;
-        let logits = tensor_f32(&outs[0])?; // [B, T, V]
+        let first = outs
+            .first()
+            .ok_or_else(|| anyhow!("fwd_logits_q returned no outputs"))?;
+        let logits = tensor_f32(first)?; // [B, T, V]
         let now = Instant::now();
         batches += 1;
 
         for (i, (req, queued)) in group.into_iter().enumerate() {
             let base = (i * t + (t - 1)) * v;
-            let next = logits.data()[base..base + v].to_vec();
+            let next = logits
+                .data()
+                .get(base..base + v)
+                .ok_or_else(|| anyhow!("logits row {i} out of range"))?
+                .to_vec();
             latencies_ms.push(now.duration_since(queued).as_secs_f32() * 1e3);
             let _ = req.respond.send(Response::Done(Completion {
                 next_logits: next,
@@ -315,11 +326,21 @@ pub fn serve_generate(
             stop_id: req.stop_id,
         });
         match out {
-            Some(rejected) => {
-                let FinishReason::Rejected(reason) = rejected.finish else {
-                    unreachable!("submit only returns rejections");
+            Some(immediate) => {
+                let now = Instant::now();
+                let resp = match immediate.finish {
+                    FinishReason::Rejected(reason) => GenServeResponse::Rejected(reason),
+                    // `submit` only answers immediately with rejections
+                    // today; if that ever changes, a completed (if empty)
+                    // generation must not take the serving loop down.
+                    finish => GenServeResponse::Done {
+                        tokens: immediate.tokens,
+                        finish,
+                        queued_at: now,
+                        done_at: now,
+                    },
                 };
-                let _ = req.respond.send(GenServeResponse::Rejected(reason));
+                let _ = req.respond.send(resp);
             }
             None => {
                 inflight.insert(id, (req.respond, Instant::now()));

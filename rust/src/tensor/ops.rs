@@ -285,6 +285,9 @@ impl Tensor {
     ///
     /// Row-parallel; each element is one single-accumulator dot product
     /// over ascending k (identical to the naive formulation).
+    // faq-lint: allow(unordered-reduction) — per-element dot product over
+    // ascending k inside a fixed row block; order pinned by construction
+    // and covered by the thread-count determinism props tests.
     pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[1] {
             bail!("matmul_nt {:?} @ {:?}^T", self.shape, other.shape);

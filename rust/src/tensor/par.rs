@@ -50,6 +50,9 @@ pub fn threads() -> usize {
     if o > 0 {
         return o;
     }
+    // faq-lint: allow(time-or-env) — the one sanctioned env read: it
+    // selects the worker count, which the determinism props tests pin to
+    // be bitwise-irrelevant to every result.
     if let Ok(v) = std::env::var("FAQUANT_THREADS") {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n > 0 {
@@ -185,14 +188,20 @@ impl Pool {
                     let _guard = CompletionGuard(&batch);
                     let prev = IN_POOL_TASK.with(|c| c.replace(true));
                     if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-                        let mut slot = batch.panic.lock().unwrap();
+                        // Poison recovery: a second panicking job must
+                        // still reach the slot, not double-panic on the
+                        // mutex the first one poisoned.
+                        let mut slot = batch
+                            .panic
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner());
                         if slot.is_none() {
                             *slot = Some(payload);
                         }
                     }
                     IN_POOL_TASK.with(|c| c.set(prev));
                 });
-                // Safety: erased to 'static, but `run_batch` blocks until
+                // SAFETY: erased to 'static, but `run_batch` blocks until
                 // `batch.remaining == 0`, i.e. until every closure (and
                 // everything it borrows from 'env) is done being used.
                 let task: Task = unsafe {
@@ -231,7 +240,12 @@ impl Pool {
                 }
             }
         }
-        if let Some(payload) = batch.panic.lock().unwrap().take() {
+        let payload = batch
+            .panic
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(payload) = payload {
             std::panic::resume_unwind(payload);
         }
     }
@@ -406,5 +420,25 @@ mod tests {
         assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
         // Pool still functional afterwards.
         assert_eq!(par_map(4, |i| i + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn miri_canary_detects_dangling_read() {
+        // Wired to the nightly `miri-par` job's must-fail step: with
+        // FAQUANT_MIRI_CANARY set, a pool task reads through a dangling
+        // pointer and Miri MUST abort the run. If this ever passes under
+        // Miri, the job's UB detection is broken (wrong flags, wrong
+        // filter), not the code. The env gate keeps the UB out of every
+        // normal `cargo test` run.
+        if std::env::var_os("FAQUANT_MIRI_CANARY").is_none() {
+            return;
+        }
+        let addr = {
+            let boxed = Box::new(17u8);
+            std::ptr::from_ref::<u8>(&boxed) as usize
+        };
+        // `boxed` is freed here, so the read below is a use-after-free.
+        let got = par_map(1, move |_| unsafe { std::ptr::read(addr as *const u8) });
+        assert_eq!(got.len(), 1);
     }
 }

@@ -87,6 +87,8 @@ impl Rng {
     }
 
     /// Sample an index from unnormalized non-negative weights.
+    // faq-lint: allow(unordered-reduction) — total runs in slice index
+    // order; order pinned by construction.
     pub fn categorical(&mut self, weights: &[f32]) -> usize {
         let total: f32 = weights.iter().sum();
         debug_assert!(total > 0.0);

@@ -3,6 +3,8 @@
 use super::Tensor;
 
 impl Tensor {
+    // faq-lint: allow(unordered-reduction) — `Sum for f32` folds
+    // left-to-right over a contiguous slice; order pinned by construction.
     pub fn sum(&self) -> f32 {
         self.data.iter().sum()
     }
@@ -11,6 +13,7 @@ impl Tensor {
         if self.data.is_empty() {
             return 0.0;
         }
+        // faq-lint: allow(unordered-reduction) — delegates to in-order `sum`
         self.sum() / self.data.len() as f32
     }
 
@@ -23,6 +26,8 @@ impl Tensor {
     }
 
     /// Mean squared difference to another tensor (quantization error metric).
+    // faq-lint: allow(unordered-reduction) — zip over two contiguous
+    // slices accumulates in index order; order pinned by construction.
     pub fn mse(&self, other: &Tensor) -> f32 {
         debug_assert_eq!(self.shape, other.shape);
         let n = self.data.len().max(1);
@@ -59,6 +64,8 @@ impl Tensor {
 
     /// Excess kurtosis of all elements — used to verify trained activations
     /// develop the heavy-tailed channel structure AWQ/FAQ exploit.
+    // faq-lint: allow(unordered-reduction) — moment sums run in slice
+    // index order; order pinned by construction.
     pub fn kurtosis(&self) -> f32 {
         let n = self.data.len() as f32;
         if n < 4.0 {
@@ -75,6 +82,8 @@ impl Tensor {
 }
 
 /// Mean and (population) standard deviation of a slice — Table 3 reporting.
+// faq-lint: allow(unordered-reduction) — sums run in slice index order;
+// order pinned by construction.
 pub fn mean_std(xs: &[f32]) -> (f32, f32) {
     if xs.is_empty() {
         return (0.0, 0.0);

@@ -1000,3 +1000,34 @@ fn theorem1_collapses_when_no_future_signal() {
     let q2 = scaled_fakequant(&w, &s2, 3, 32).unwrap();
     assert!(q1.mse(&q2) < 1e-10);
 }
+
+// ------------------------------------------------------- sanitizer canary
+
+#[test]
+fn tsan_canary_detects_data_race() {
+    // Wired to the nightly `tsan-determinism` job's must-fail step: with
+    // FAQUANT_TSAN_CANARY set, two threads race on an `UnsafeCell<u64>`
+    // with no synchronization and ThreadSanitizer MUST report the race.
+    // If this ever passes under TSan, the job's race detection is broken
+    // (wrong RUSTFLAGS, missing -Zbuild-std), not the code. The env gate
+    // keeps the race out of every normal `cargo test` run.
+    if std::env::var_os("FAQUANT_TSAN_CANARY").is_none() {
+        return;
+    }
+    struct Racy(std::cell::UnsafeCell<u64>);
+    // SAFETY: deliberately unsound — the whole point of this canary is
+    // to hand two threads unsynchronized mutable access so TSan fires.
+    unsafe impl Sync for Racy {}
+    let racy = Racy(std::cell::UnsafeCell::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..1000 {
+                    unsafe { *racy.0.get() += 1 };
+                }
+            });
+        }
+    });
+    let v = unsafe { *racy.0.get() };
+    assert!(v > 0);
+}

@@ -1,0 +1,1278 @@
+//! faq-lint: repo-specific determinism & soundness static analysis.
+//!
+//! The repo's headline contract (DESIGN.md §13) is that quantized
+//! forward, decode, and paged decode are **bitwise identical** across
+//! thread counts and KV-store layouts. The compiler cannot see that
+//! contract; this tool enforces the source-level invariants behind it:
+//!
+//! - `hash-iteration` (D1): no `HashMap`/`HashSet` *iteration* in
+//!   determinism-critical modules (`tensor/`, `quant/`, `runtime/`,
+//!   `engine/`, `serve/`). Keyed lookup is fine; iteration order
+//!   leaking into results, reports, or error messages is not.
+//! - `unordered-reduction` (D2): no float reduction via `.sum()` or a
+//!   `.fold(float-acc, ..)` in kernel modules (`tensor/`, `quant/`,
+//!   `runtime/native/`) outside functions allow-marked
+//!   `// faq-lint: allow(unordered-reduction)`. Folds seeded with
+//!   `f32::INFINITY`/`NEG_INFINITY`/`MIN`/`MAX` are per-element
+//!   min/max comparisons, not accumulations, and are exempt.
+//! - `panic-in-serve` (D3): no `unwrap()`/`expect()`/panic-family
+//!   macros/direct indexing on the request-serving path (`serve/`,
+//!   `engine/scheduler.rs`) — structured errors only.
+//! - `missing-safety` (S1): every `unsafe` block or `unsafe impl`
+//!   must carry a `// SAFETY:` comment (same line or contiguous
+//!   comment lines immediately above).
+//! - `time-or-env` (S2): no `Instant`/`SystemTime`/`env::` reads in
+//!   kernel modules — wall-clock and environment reads belong to the
+//!   coordinator layer.
+//! - `unused-allow`: an allow-marker that suppresses nothing is
+//!   itself an error, so markers cannot rot in place.
+//!
+//! The analysis is a hand-rolled lexer plus token-pattern rules — no
+//! syn/proc-macro dependencies, matching the repo's zero-dependency
+//! rule. `#[cfg(test)]` items are skipped: the contract binds shipped
+//! code, and tests intentionally use `unwrap()` and ad-hoc sums.
+//!
+//! Known limit: hash-typedness is tracked per file from declarations
+//! (`name: ..HashMap..`, `let name = HashMap::new()`), so a hash map
+//! returned by a function in *another* file is invisible to D1. The
+//! self-check test (`faq-lint` clean on the real tree) plus review
+//! keep that gap from widening.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+/// The rules, in severity/report order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    HashIteration,
+    UnorderedReduction,
+    PanicInServe,
+    MissingSafety,
+    TimeOrEnv,
+    UnusedAllow,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashIteration => "hash-iteration",
+            Rule::UnorderedReduction => "unordered-reduction",
+            Rule::PanicInServe => "panic-in-serve",
+            Rule::MissingSafety => "missing-safety",
+            Rule::TimeOrEnv => "time-or-env",
+            Rule::UnusedAllow => "unused-allow",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "hash-iteration" => Some(Rule::HashIteration),
+            "unordered-reduction" => Some(Rule::UnorderedReduction),
+            "panic-in-serve" => Some(Rule::PanicInServe),
+            "missing-safety" => Some(Rule::MissingSafety),
+            "time-or-env" => Some(Rule::TimeOrEnv),
+            _ => None,
+        }
+    }
+}
+
+/// One finding: `path:line: rule — message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} — {}",
+            self.path,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+    Num(String),
+    Str,
+    Life,
+}
+
+#[derive(Clone, Debug)]
+struct Token {
+    kind: Tok,
+    line: usize,
+}
+
+struct Lexed {
+    tokens: Vec<Token>,
+    /// Per 1-indexed line: all comment text on that line (line comments
+    /// and any block comment overlapping it), or empty.
+    comments: Vec<String>,
+    /// Per 1-indexed line: does any token (code) sit on it?
+    has_code: Vec<bool>,
+    nlines: usize,
+}
+
+fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let nlines = src.split('\n').count();
+    let mut comments = vec![String::new(); nlines + 2];
+    let mut has_code = vec![false; nlines + 2];
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            comments[line].push_str(&text);
+            comments[line].push(' ');
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            let text: String = cs[start..i.min(n)].iter().collect();
+            for l in start_line..=line.min(nlines) {
+                comments[l].push_str(&text);
+                comments[l].push(' ');
+            }
+            continue;
+        }
+        // raw / byte strings, or identifiers starting with r/b
+        if c.is_alphabetic() || c == '_' {
+            if let Some((ni, nl)) = try_raw_or_byte_string(&cs, i, line) {
+                tokens.push(Token {
+                    kind: Tok::Str,
+                    line,
+                });
+                has_code[line] = true;
+                i = ni;
+                line = nl;
+                continue;
+            }
+            let start = i;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            let word: String = cs[start..i].iter().collect();
+            tokens.push(Token {
+                kind: Tok::Ident(word),
+                line,
+            });
+            has_code[line] = true;
+            continue;
+        }
+        // string literal
+        if c == '"' {
+            let (ni, nl) = scan_string(&cs, i, line);
+            tokens.push(Token {
+                kind: Tok::Str,
+                line,
+            });
+            has_code[line] = true;
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // escaped char literal: skip \x, then closing quote
+                let mut j = i + 2;
+                while j < n && cs[j] != '\'' {
+                    if cs[j] == '\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                tokens.push(Token {
+                    kind: Tok::Str,
+                    line,
+                });
+                has_code[line] = true;
+                i = (j + 1).min(n);
+                continue;
+            }
+            let is_life = i + 1 < n
+                && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_')
+                && !(i + 2 < n && cs[i + 2] == '\'');
+            if is_life {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                tokens.push(Token {
+                    kind: Tok::Life,
+                    line,
+                });
+                has_code[line] = true;
+                i = j;
+                continue;
+            }
+            // plain char literal 'x'
+            let mut j = i + 1;
+            while j < n && cs[j] != '\'' && cs[j] != '\n' {
+                j += 1;
+            }
+            tokens.push(Token {
+                kind: Tok::Str,
+                line,
+            });
+            has_code[line] = true;
+            i = (j + 1).min(n);
+            continue;
+        }
+        // number literal
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = cs[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' {
+                    // consume the dot for `1.0` and trailing `1.`, but
+                    // not for ranges (`0..n`) or method calls (`1.max(..)`)
+                    let next = cs.get(i + 1).copied().unwrap_or(' ');
+                    if next.is_ascii_digit() {
+                        i += 2;
+                    } else if next != '.' && !(next.is_alphabetic() || next == '_') {
+                        i += 1;
+                        break;
+                    } else {
+                        break;
+                    }
+                } else if (d == '+' || d == '-')
+                    && matches!(cs.get(i - 1), Some('e') | Some('E'))
+                    && !cs[start..i].iter().collect::<String>().starts_with("0x")
+                {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = cs[start..i].iter().collect();
+            tokens.push(Token {
+                kind: Tok::Num(text),
+                line,
+            });
+            has_code[line] = true;
+            continue;
+        }
+        // punctuation, one char at a time
+        tokens.push(Token {
+            kind: Tok::Punct(c),
+            line,
+        });
+        has_code[line] = true;
+        i += 1;
+    }
+
+    Lexed {
+        tokens,
+        comments,
+        has_code,
+        nlines,
+    }
+}
+
+/// If `cs[i..]` begins a raw string (`r"`, `r#"`), byte string (`b"`),
+/// raw byte string (`br"`), or byte char (`b'`), scan it and return the
+/// (next index, next line). Otherwise None (it is a plain identifier).
+fn try_raw_or_byte_string(cs: &[char], i: usize, line: usize) -> Option<(usize, usize)> {
+    let n = cs.len();
+    let c = cs[i];
+    if c != 'r' && c != 'b' {
+        return None;
+    }
+    let mut j = i + 1;
+    if c == 'b' && j < n && cs[j] == 'r' {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && cs[j] == '"' && (hashes > 0 || c != 'b' || cs[i + 1] == '"' || cs[i + 1] == 'r') {
+        // raw string if any hashes or an r prefix; plain b"..." also lands here
+        let raw = hashes > 0 || c == 'r' || (c == 'b' && i + 1 < n && cs[i + 1] == 'r');
+        if raw {
+            let mut k = j + 1;
+            let mut l = line;
+            while k < n {
+                if cs[k] == '\n' {
+                    l += 1;
+                } else if cs[k] == '"' {
+                    let mut m = 0usize;
+                    while m < hashes && k + 1 + m < n && cs[k + 1 + m] == '#' {
+                        m += 1;
+                    }
+                    if m == hashes {
+                        return Some((k + 1 + hashes, l));
+                    }
+                }
+                k += 1;
+            }
+            return Some((n, l));
+        }
+        // b"..." — ordinary escaped string
+        let (ni, nl) = scan_string(cs, j, line);
+        return Some((ni, nl));
+    }
+    if c == 'b' && hashes == 0 && i + 1 < n && cs[i + 1] == '\'' {
+        // byte char literal b'x' / b'\n'
+        let mut k = i + 2;
+        while k < n && cs[k] != '\'' {
+            if cs[k] == '\\' {
+                k += 1;
+            }
+            k += 1;
+        }
+        return Some(((k + 1).min(n), line));
+    }
+    None
+}
+
+/// Scan a normal `"..."` string starting at the opening quote.
+fn scan_string(cs: &[char], i: usize, line: usize) -> (usize, usize) {
+    let n = cs.len();
+    let mut j = i + 1;
+    let mut l = line;
+    while j < n {
+        match cs[j] {
+            '\\' => j += 2,
+            '\n' => {
+                l += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, l),
+            _ => j += 1,
+        }
+    }
+    (n, l)
+}
+
+// ---------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------
+
+fn is_p(t: &[Token], i: usize, c: char) -> bool {
+    matches!(t.get(i), Some(Token { kind: Tok::Punct(p), .. }) if *p == c)
+}
+
+fn is_id(t: &[Token], i: usize, s: &str) -> bool {
+    matches!(t.get(i), Some(Token { kind: Tok::Ident(w), .. }) if w == s)
+}
+
+fn ident(t: &[Token], i: usize) -> Option<&str> {
+    match t.get(i) {
+        Some(Token {
+            kind: Tok::Ident(w),
+            ..
+        }) => Some(w.as_str()),
+        _ => None,
+    }
+}
+
+/// Index of the token matching `open` at `open_idx` (which must hold
+/// `open`), scanning forward.
+fn match_forward(t: &[Token], open_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, tok) in t.iter().enumerate().skip(open_idx) {
+        if let Tok::Punct(p) = tok.kind {
+            if p == open {
+                depth += 1;
+            } else if p == close {
+                if depth <= 1 {
+                    return if depth == 1 { Some(k) } else { None };
+                }
+                depth -= 1;
+            }
+        }
+    }
+    None
+}
+
+/// Index of the token matching `close` at `close_idx`, scanning backward.
+fn match_backward(t: &[Token], close_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut k = close_idx;
+    loop {
+        if let Tok::Punct(p) = t[k].kind {
+            if p == close {
+                depth += 1;
+            } else if p == open {
+                if depth <= 1 {
+                    return if depth == 1 { Some(k) } else { None };
+                }
+                depth -= 1;
+            }
+        }
+        if k == 0 {
+            return None;
+        }
+        k -= 1;
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type", "unsafe",
+    "use", "where", "while",
+];
+
+// ---------------------------------------------------------------------
+// #[cfg(test)] regions
+// ---------------------------------------------------------------------
+
+/// Per-line mask of `#[cfg(test)]`-gated items (mod/fn/impl bodies).
+fn test_line_mask(lx: &Lexed) -> Vec<bool> {
+    let t = &lx.tokens;
+    let mut mask = vec![false; lx.nlines + 2];
+    let mut i = 0usize;
+    while i < t.len() {
+        let hit = is_p(t, i, '#')
+            && is_p(t, i + 1, '[')
+            && is_id(t, i + 2, "cfg")
+            && is_p(t, i + 3, '(')
+            && is_id(t, i + 4, "test")
+            && is_p(t, i + 5, ')')
+            && is_p(t, i + 6, ']');
+        if !hit {
+            i += 1;
+            continue;
+        }
+        // skip any further attributes, then find the item's body
+        let mut j = i + 7;
+        while is_p(t, j, '#') && is_p(t, j + 1, '[') {
+            match match_forward(t, j + 1, '[', ']') {
+                Some(k) => j = k + 1,
+                None => break,
+            }
+        }
+        let mut k = j;
+        while k < t.len() && !is_p(t, k, '{') && !is_p(t, k, ';') {
+            k += 1;
+        }
+        if is_p(t, k, '{') {
+            if let Some(end) = match_forward(t, k, '{', '}') {
+                for l in t[i].line..=t[end].line.min(lx.nlines) {
+                    mask[l] = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// Allow-markers
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Marker {
+    line: usize,
+    rule: Rule,
+    start: usize,
+    end: usize,
+    used: bool,
+}
+
+fn collect_markers(lx: &Lexed, tmask: &[bool]) -> Vec<Marker> {
+    let mut out = Vec::new();
+    for line in 1..=lx.nlines {
+        if tmask[line] {
+            continue;
+        }
+        let text = &lx.comments[line];
+        let mut rest = text.as_str();
+        while let Some(p) = rest.find("faq-lint: allow(") {
+            let after = &rest[p + "faq-lint: allow(".len()..];
+            if let Some(close) = after.find(')') {
+                if let Some(rule) = Rule::from_name(&after[..close]) {
+                    let (start, end) = marker_range(lx, line);
+                    out.push(Marker {
+                        line,
+                        rule,
+                        start,
+                        end,
+                        used: false,
+                    });
+                }
+                rest = &after[close + 1..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// The line span an allow-marker covers: its own line when trailing
+/// code; otherwise the following item — the whole function body when
+/// the next code begins a `fn`, else just the next code line.
+fn marker_range(lx: &Lexed, line: usize) -> (usize, usize) {
+    if lx.has_code[line] {
+        return (line, line);
+    }
+    let t = &lx.tokens;
+    let mut i = 0usize;
+    while i < t.len() && t[i].line <= line {
+        i += 1;
+    }
+    if i >= t.len() {
+        return (line, line);
+    }
+    // skip attributes on the following item
+    while is_p(t, i, '#') && is_p(t, i + 1, '[') {
+        match match_forward(t, i + 1, '[', ']') {
+            Some(k) => i = k + 1,
+            None => return (line, t[i].line),
+        }
+    }
+    let first_code_line = t[i].line;
+    // fn with optional modifiers: pub(..) const unsafe async extern "C"
+    let mut j = i;
+    loop {
+        match ident(t, j) {
+            Some("pub") => {
+                j += 1;
+                if is_p(t, j, '(') {
+                    match match_forward(t, j, '(', ')') {
+                        Some(k) => j = k + 1,
+                        None => break,
+                    }
+                }
+            }
+            Some("const") | Some("unsafe") | Some("async") => j += 1,
+            Some("extern") => {
+                j += 1;
+                if matches!(t.get(j), Some(Token { kind: Tok::Str, .. })) {
+                    j += 1;
+                }
+            }
+            _ => break,
+        }
+    }
+    if is_id(t, j, "fn") {
+        let mut k = j;
+        while k < t.len() && !is_p(t, k, '{') && !is_p(t, k, ';') {
+            k += 1;
+        }
+        if is_p(t, k, '{') {
+            if let Some(end) = match_forward(t, k, '{', '}') {
+                return (line, t[end].line);
+            }
+        }
+    }
+    (line, first_code_line)
+}
+
+// ---------------------------------------------------------------------
+// Scopes
+// ---------------------------------------------------------------------
+
+struct Scope {
+    d1: bool,
+    d2: bool,
+    d3: bool,
+    s2: bool,
+}
+
+fn scope_of(rel: &str) -> Scope {
+    let kernel = rel.starts_with("tensor/")
+        || rel.starts_with("quant/")
+        || rel.starts_with("runtime/native/");
+    Scope {
+        d1: rel.starts_with("tensor/")
+            || rel.starts_with("quant/")
+            || rel.starts_with("runtime/")
+            || rel.starts_with("engine/")
+            || rel.starts_with("serve/"),
+        d2: kernel,
+        d3: rel.starts_with("serve/") || rel == "engine/scheduler.rs",
+        s2: kernel,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Names declared with a HashMap/HashSet type in this file: typed
+/// bindings/fields/params (`name: ..HashMap..`) and direct constructor
+/// bindings (`let name = HashMap::new()`).
+fn hash_typed_names(t: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..t.len() {
+        if !matches!(ident(t, i), Some("HashMap") | Some("HashSet")) {
+            continue;
+        }
+        let mut j = i;
+        let mut steps = 0usize;
+        while j > 0 && steps < 64 {
+            j -= 1;
+            steps += 1;
+            match &t[j].kind {
+                Tok::Ident(w) => {
+                    if KEYWORDS.contains(&w.as_str()) {
+                        break;
+                    }
+                }
+                Tok::Life => {}
+                Tok::Punct('<') | Tok::Punct('>') | Tok::Punct(',') | Tok::Punct('&')
+                | Tok::Punct('(') => {}
+                Tok::Punct(':') => {
+                    if j > 0 && is_p(t, j - 1, ':') {
+                        j -= 1; // path `::`, keep walking
+                        continue;
+                    }
+                    if j > 0 {
+                        if let Some(name) = ident(t, j - 1) {
+                            if !KEYWORDS.contains(&name) {
+                                names.insert(name.to_string());
+                            }
+                        }
+                    }
+                    break;
+                }
+                Tok::Punct('=') => {
+                    if j > 1 {
+                        if let Some(name) = ident(t, j - 1) {
+                            if is_id(t, j - 2, "let") || is_id(t, j - 2, "mut") {
+                                names.insert(name.to_string());
+                            }
+                        }
+                    }
+                    break;
+                }
+                _ => break,
+            }
+        }
+    }
+    names
+}
+
+/// Walk a postfix chain backward from the `.` at `dot_idx`; return the
+/// first hash-typed name found in the chain, if any.
+fn chain_hash_base(t: &[Token], dot_idx: usize, names: &BTreeSet<String>) -> Option<String> {
+    let mut hit: Option<String> = None;
+    let mut j = dot_idx; // t[j] is '.'
+    let mut steps = 0usize;
+    while j > 0 && steps < 256 {
+        steps += 1;
+        let mut k = j - 1;
+        // skip trailing (), [], ? of the previous chain element
+        loop {
+            if is_p(t, k, ')') {
+                match match_backward(t, k, '(', ')') {
+                    Some(o) if o > 0 => k = o - 1,
+                    _ => return hit,
+                }
+            } else if is_p(t, k, ']') {
+                match match_backward(t, k, '[', ']') {
+                    Some(o) if o > 0 => k = o - 1,
+                    _ => return hit,
+                }
+            } else if is_p(t, k, '?') {
+                if k == 0 {
+                    return hit;
+                }
+                k -= 1;
+            } else {
+                break;
+            }
+        }
+        match &t[k].kind {
+            Tok::Ident(s) => {
+                if names.contains(s) {
+                    hit = Some(s.clone());
+                }
+                if k == 0 {
+                    break;
+                }
+                if is_p(t, k - 1, '.') {
+                    j = k - 1;
+                    continue;
+                }
+                break;
+            }
+            _ => break,
+        }
+    }
+    hit
+}
+
+fn rule_hash_iteration(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    let names = hash_typed_names(t);
+    if names.is_empty() {
+        return;
+    }
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        if let Some(m) = ident(t, i) {
+            if ITER_METHODS.contains(&m)
+                && i > 0
+                && is_p(t, i - 1, '.')
+                && is_p(t, i + 1, '(')
+            {
+                if let Some(base) = chain_hash_base(t, i - 1, &names) {
+                    out.push(Finding {
+                        path: String::new(),
+                        line,
+                        rule: Rule::HashIteration,
+                        message: format!(
+                            "iteration over hash-ordered `{base}` via `.{m}()` — \
+                             order is nondeterministic; use BTreeMap or sort first"
+                        ),
+                    });
+                }
+            }
+        }
+        if is_id(t, i, "for") {
+            // find `in` at bracket depth 0, then scan its expression
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut in_idx = None;
+            while j < t.len() && j < i + 80 {
+                match &t[j].kind {
+                    Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                    Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                    Tok::Punct('{') if depth == 0 => break,
+                    Tok::Ident(w) if w == "in" && depth == 0 => {
+                        in_idx = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(start) = in_idx {
+                let mut depth = 0i32;
+                let mut k = start + 1;
+                while k < t.len() && k < start + 80 {
+                    match &t[k].kind {
+                        Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                        Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                        Tok::Punct('{') if depth == 0 => break,
+                        Tok::Ident(w) if names.contains(w) => {
+                            out.push(Finding {
+                                path: String::new(),
+                                line,
+                                rule: Rule::HashIteration,
+                                message: format!(
+                                    "`for .. in` over hash-ordered `{w}` — order is \
+                                     nondeterministic; use BTreeMap or sort first"
+                                ),
+                            });
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+fn is_float_literal(s: &str) -> bool {
+    if s.starts_with("0x") || s.starts_with("0b") || s.starts_with("0o") {
+        return false;
+    }
+    s.contains('.') || s.ends_with("f32") || s.ends_with("f64") || s.contains('e') || s.contains('E')
+}
+
+/// True when the first argument of `.fold(` (open paren at `open_idx`)
+/// is a float accumulator seed. Folds seeded with f32/f64 INFINITY /
+/// NEG_INFINITY / MIN / MAX are min/max scans, not accumulations.
+fn fold_seeds_float_acc(t: &[Token], open_idx: usize) -> bool {
+    let mut depth = 0usize;
+    let mut j = open_idx + 1;
+    let mut saw_float = false;
+    while j < t.len() {
+        match &t[j].kind {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::Punct(',') if depth == 0 => break,
+            Tok::Ident(w) if w == "f32" || w == "f64" => {
+                if is_p(t, j + 1, ':') && is_p(t, j + 2, ':') {
+                    if let Some(c) = ident(t, j + 3) {
+                        if matches!(c, "INFINITY" | "NEG_INFINITY" | "MIN" | "MAX") {
+                            return false;
+                        }
+                    }
+                }
+                saw_float = true;
+            }
+            Tok::Num(s) if is_float_literal(s) => saw_float = true,
+            _ => {}
+        }
+        j += 1;
+    }
+    saw_float
+}
+
+fn rule_unordered_reduction(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] || i == 0 || !is_p(t, i - 1, '.') {
+            continue;
+        }
+        if is_id(t, i, "sum") && (is_p(t, i + 1, '(') || is_p(t, i + 1, ':')) {
+            out.push(Finding {
+                path: String::new(),
+                line,
+                rule: Rule::UnorderedReduction,
+                message: "`.sum()` reduction in a kernel module — accumulation order \
+                          must be pinned; allow-mark the fn if in-order by construction"
+                    .to_string(),
+            });
+        }
+        if is_id(t, i, "fold") && is_p(t, i + 1, '(') && fold_seeds_float_acc(t, i + 1) {
+            out.push(Finding {
+                path: String::new(),
+                line,
+                rule: Rule::UnorderedReduction,
+                message: "`.fold()` over a float accumulator in a kernel module — \
+                          accumulation order must be pinned; allow-mark the fn if \
+                          in-order by construction"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn rule_panic_in_serve(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        match ident(t, i) {
+            Some(m @ ("unwrap" | "expect"))
+                if i > 0 && is_p(t, i - 1, '.') && is_p(t, i + 1, '(') =>
+            {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::PanicInServe,
+                    message: format!(
+                        "`.{m}()` on the request-serving path — return a structured \
+                         error instead"
+                    ),
+                });
+            }
+            Some(m) if PANIC_MACROS.contains(&m) && is_p(t, i + 1, '!') => {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::PanicInServe,
+                    message: format!(
+                        "`{m}!` on the request-serving path — return a structured \
+                         error instead"
+                    ),
+                });
+            }
+            _ => {}
+        }
+        if is_p(t, i, '[') && i > 0 {
+            let indexing = match &t[i - 1].kind {
+                Tok::Ident(w) => !KEYWORDS.contains(&w.as_str()),
+                Tok::Punct(')') | Tok::Punct(']') => true,
+                _ => false,
+            };
+            if indexing {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::PanicInServe,
+                    message: "direct index (`x[..]`) may panic on the serving path — \
+                              use `.get(..)` and handle the miss"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn has_safety_comment(lx: &Lexed, line: usize) -> bool {
+    if lx.comments[line].contains("SAFETY:") {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let commented = !lx.comments[l].is_empty() && !lx.has_code[l];
+        if !commented {
+            return false;
+        }
+        if lx.comments[l].contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+fn rule_missing_safety(lx: &Lexed, tmask: &[bool], out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if !is_id(t, i, "unsafe") {
+            continue;
+        }
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        let kind = if is_p(t, i + 1, '{') {
+            "block"
+        } else if is_id(t, i + 1, "impl") {
+            "impl"
+        } else {
+            continue; // `unsafe fn` declarations document at the call site
+        };
+        if !has_safety_comment(lx, line) {
+            out.push(Finding {
+                path: String::new(),
+                line,
+                rule: Rule::MissingSafety,
+                message: format!("`unsafe {kind}` without a `// SAFETY:` comment"),
+            });
+        }
+    }
+}
+
+fn rule_time_or_env(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        match ident(t, i) {
+            Some(w @ ("Instant" | "SystemTime")) => {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::TimeOrEnv,
+                    message: format!(
+                        "`{w}` in a kernel module — wall-clock reads break \
+                         reproducibility; time at the coordinator layer instead"
+                    ),
+                });
+            }
+            Some("env") if is_p(t, i + 1, ':') && is_p(t, i + 2, ':') => {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::TimeOrEnv,
+                    message: "`env::` read in a kernel module — environment reads \
+                              break reproducibility; plumb configuration explicitly"
+                        .to_string(),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Lint one file. `rel_path` (forward-slash, relative to the scanned
+/// source root, e.g. `tensor/par.rs`) selects rule scopes;
+/// `display_path` is what findings report.
+pub fn lint_source_at(rel_path: &str, display_path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_line_mask(&lx);
+    let mut markers = collect_markers(&lx, &tmask);
+    let scope = scope_of(rel_path);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    if scope.d1 {
+        rule_hash_iteration(&lx.tokens, &tmask, &mut raw);
+    }
+    if scope.d2 {
+        rule_unordered_reduction(&lx.tokens, &tmask, &mut raw);
+    }
+    if scope.d3 {
+        rule_panic_in_serve(&lx.tokens, &tmask, &mut raw);
+    }
+    rule_missing_safety(&lx, &tmask, &mut raw);
+    if scope.s2 {
+        rule_time_or_env(&lx.tokens, &tmask, &mut raw);
+    }
+
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        let covered = markers
+            .iter_mut()
+            .find(|m| m.rule == f.rule && m.start <= f.line && f.line <= m.end);
+        if let Some(m) = covered {
+            m.used = true;
+            continue;
+        }
+        out.push(f);
+    }
+    for m in &markers {
+        if !m.used {
+            out.push(Finding {
+                path: String::new(),
+                line: m.line,
+                rule: Rule::UnusedAllow,
+                message: format!(
+                    "allow({}) marker suppresses nothing — remove it",
+                    m.rule.name()
+                ),
+            });
+        }
+    }
+    for f in &mut out {
+        f.path = display_path.to_string();
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Lint one file with scope inferred from (and reported as) `rel_path`.
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    lint_source_at(rel_path, rel_path, src)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself when it is a
+/// file). Files are visited in sorted order so output is byte-stable.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    if root.is_file() {
+        files.push(root.to_path_buf());
+    } else {
+        collect_rs(root, &mut files)?;
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel = f.strip_prefix(root).unwrap_or(f);
+        let rel_s = rel.to_string_lossy().replace('\\', "/");
+        let display = f.to_string_lossy().replace('\\', "/");
+        out.extend(lint_source_at(&rel_s, &display, &src));
+    }
+    Ok(out)
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as a JSON array (machine-readable mode).
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"path\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\"}}",
+            json_escape(&f.path),
+            f.line,
+            f.rule.name(),
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<(usize, Rule)> {
+        lint_source(rel, src)
+            .into_iter()
+            .map(|f| (f.line, f.rule))
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_inert() {
+        // `.sum()`, `[0]`, and `unwrap()` inside a comment or string literal
+        // are data, not code, in every scope.
+        let src = "pub fn f() -> String {\n    // .sum() in a comment\n    String::from(\".sum() [0] unwrap()\")\n}\n";
+        assert!(rules("tensor/x.rs", src).is_empty());
+        assert!(rules("serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_string_with_embedded_quote_does_not_derail_the_lexer() {
+        // If the `"` inside the raw string ended the literal early, the lexer
+        // would swallow the real reduction on line 5.
+        let src = "pub fn f() -> &'static str {\n    r#\"contains \" quote\"#\n}\npub fn g(xs: &[f32]) -> f32 {\n    xs.iter().sum()\n}\n";
+        assert_eq!(
+            rules("tensor/x.rs", src),
+            vec![(5, Rule::UnorderedReduction)]
+        );
+    }
+
+    #[test]
+    fn ranges_and_tuple_access_are_not_floats_or_indexing() {
+        let src = "pub fn f(n: usize) -> usize {\n    let pair = (n, n);\n    let mut acc = 0usize;\n    for i in 0..n {\n        acc += i + pair.0;\n    }\n    acc\n}\n";
+        assert!(rules("tensor/x.rs", src).is_empty());
+        assert!(rules("serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scope_selects_which_rules_run() {
+        let src = "pub fn f(xs: &[f32]) -> f32 {\n    xs.iter().sum()\n}\n";
+        assert_eq!(
+            rules("tensor/x.rs", src),
+            vec![(2, Rule::UnorderedReduction)]
+        );
+        // Same source outside any kernel module: D2 does not apply.
+        assert!(rules("cli/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn keyed_hash_access_is_fine_iteration_is_not() {
+        let src = "use std::collections::HashMap;\npub fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n    let _one = m.get(&1).copied();\n    m.values().copied().collect()\n}\n";
+        assert_eq!(rules("engine/x.rs", src), vec![(4, Rule::HashIteration)]);
+    }
+
+    #[test]
+    fn fn_level_marker_covers_the_body_and_is_audited() {
+        let marked = "// faq-lint: allow(unordered-reduction) — summed in index order\npub fn f(xs: &[f32]) -> f32 {\n    xs.iter().sum()\n}\n";
+        assert!(rules("tensor/x.rs", marked).is_empty());
+        // The same marker on a function with nothing to suppress is itself
+        // a finding, so stale exemptions cannot accumulate.
+        let stale = "// faq-lint: allow(unordered-reduction) — stale\npub fn f(x: f32) -> f32 {\n    x\n}\n";
+        assert_eq!(rules("tensor/x.rs", stale), vec![(1, Rule::UnusedAllow)]);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let src = "pub fn f(x: f32) -> f32 {\n    x\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let s: f32 = [1.0f32].iter().sum();\n        assert!(s > 0.0);\n    }\n}\n";
+        assert!(rules("tensor/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn json_output_escapes_quotes_and_backslashes() {
+        let f = Finding {
+            path: "a\"b".into(),
+            line: 3,
+            rule: Rule::PanicInServe,
+            message: "x\\y".into(),
+        };
+        let j = to_json(&[f]);
+        assert!(j.contains("a\\\"b"), "{j}");
+        assert!(j.contains("x\\\\y"), "{j}");
+    }
+}

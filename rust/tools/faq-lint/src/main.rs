@@ -1,0 +1,63 @@
+//! CLI: `faq-lint [--json] [paths...]` — lint `.rs` trees against the
+//! repo's determinism & soundness rules (DESIGN.md §13).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: faq-lint [--json] [paths...]
+Lints Rust source trees against the faquant determinism & soundness
+rules (hash-iteration, unordered-reduction, panic-in-serve,
+missing-safety, time-or-env, unused-allow). With no paths, lints
+rust/src relative to the current directory (the workspace root under
+`cargo run -p faq-lint`).";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            s if s.starts_with('-') => {
+                eprintln!("faq-lint: unknown flag `{s}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            s => paths.push(PathBuf::from(s)),
+        }
+    }
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+
+    let mut findings = Vec::new();
+    for p in &paths {
+        match faq_lint::lint_tree(p) {
+            Ok(fs) => findings.extend(fs),
+            Err(e) => {
+                eprintln!("faq-lint: {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if json {
+        println!("{}", faq_lint::to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        if !findings.is_empty() {
+            eprintln!("faq-lint: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

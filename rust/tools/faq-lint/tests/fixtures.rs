@@ -1,0 +1,157 @@
+//! Fixture corpus for faq-lint.
+//!
+//! Each tree under `tests/fixtures/` is a miniature `rust/src` layout that
+//! exercises exactly one rule: `<rule>-fail` trees must produce a pinned set
+//! of (path, line, rule) findings and `<rule>-pass` trees must lint clean.
+//! Pinning lines (not just rule names) is deliberate — the acceptance test
+//! for this linter is "revert a real fix and the tool points at the exact
+//! line", so the fixtures hold the pointer itself to account.
+
+use faq_lint::{lint_tree, Finding, Rule};
+use std::path::PathBuf;
+
+fn lint_fixture(tree: &str) -> Vec<Finding> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(tree);
+    lint_tree(&root).unwrap_or_else(|e| panic!("fixture tree {tree} unreadable: {e}"))
+}
+
+/// Findings as (path-suffix, line, rule), where the suffix is the last two
+/// path components — enough to identify a fixture file unambiguously.
+fn hits(tree: &str) -> Vec<(String, usize, Rule)> {
+    lint_fixture(tree)
+        .into_iter()
+        .map(|f| {
+            let mut parts = f.path.rsplit('/');
+            let file = parts.next().unwrap_or_default();
+            let dir = parts.next().unwrap_or_default();
+            (format!("{dir}/{file}"), f.line, f.rule)
+        })
+        .collect()
+}
+
+fn expect_clean(tree: &str) {
+    let findings = lint_fixture(tree);
+    assert!(
+        findings.is_empty(),
+        "{tree} should lint clean, got:\n{}",
+        findings
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn d1_hash_iteration() {
+    // d1-fail/runtime/registry.rs is the pre-fix shape of the real
+    // rust/src/runtime/registry.rs (HashMap iterated for display order):
+    // reverting that satellite fix must trip exactly these two findings.
+    assert_eq!(
+        hits("d1-fail"),
+        vec![
+            ("runtime/registry.rs".to_string(), 12, Rule::HashIteration),
+            ("runtime/registry.rs".to_string(), 19, Rule::HashIteration),
+        ]
+    );
+    // Keyed HashMap lookups and BTreeMap iteration are both fine.
+    expect_clean("d1-pass");
+}
+
+#[test]
+fn d2_unordered_reduction() {
+    assert_eq!(
+        hits("d2-fail"),
+        vec![
+            ("tensor/ops.rs".to_string(), 2, Rule::UnorderedReduction),
+            ("tensor/ops.rs".to_string(), 6, Rule::UnorderedReduction),
+        ]
+    );
+    // The min/max fold seeded with NEG_INFINITY in d2-fail is exempt by
+    // construction (order-independent), hence no line-10 finding above.
+    expect_clean("d2-pass");
+}
+
+#[test]
+fn d3_panic_in_serve() {
+    assert_eq!(
+        hits("d3-fail"),
+        vec![
+            ("engine/scheduler.rs".to_string(), 2, Rule::PanicInServe),
+            ("serve/mod.rs".to_string(), 2, Rule::PanicInServe),
+            ("serve/mod.rs".to_string(), 4, Rule::PanicInServe),
+            ("serve/mod.rs".to_string(), 6, Rule::PanicInServe),
+        ]
+    );
+    // Scope precision: d3-fail/engine/mod.rs also calls unwrap(), but only
+    // engine/scheduler.rs (not the rest of engine/) is in the serving path.
+    assert!(
+        !hits("d3-fail").iter().any(|(p, _, _)| p == "engine/mod.rs"),
+        "engine/mod.rs is outside the D3 scope and must not be flagged"
+    );
+    expect_clean("d3-pass");
+}
+
+#[test]
+fn s1_missing_safety() {
+    assert_eq!(
+        hits("s1-fail"),
+        vec![
+            ("util/raw.rs".to_string(), 2, Rule::MissingSafety),
+            ("util/raw.rs".to_string(), 7, Rule::MissingSafety),
+        ]
+    );
+    // Same code with `// SAFETY:` comments, plus an `unsafe fn` declaration
+    // (caller-side contract, no comment required) lints clean.
+    expect_clean("s1-pass");
+}
+
+#[test]
+fn s2_time_or_env() {
+    assert_eq!(
+        hits("s2-fail"),
+        vec![
+            ("tensor/clock.rs".to_string(), 1, Rule::TimeOrEnv),
+            ("tensor/clock.rs".to_string(), 6, Rule::TimeOrEnv),
+        ]
+    );
+    // Instant in serve/ (out of S2 scope) and an allow-marked env read in
+    // tensor/ are both acceptable.
+    expect_clean("s2-pass");
+}
+
+#[test]
+fn cfg_test_code_is_exempt() {
+    // testmask-pass/tensor/sums.rs commits every sin — `.sum()`, hash
+    // iteration, `unwrap()` — but only inside `#[cfg(test)]`.
+    expect_clean("testmask-pass");
+}
+
+#[test]
+fn unused_allow_is_flagged() {
+    assert_eq!(
+        hits("unused-fail"),
+        vec![("tensor/noop.rs".to_string(), 1, Rule::UnusedAllow)]
+    );
+}
+
+#[test]
+fn canary_tree_trips_every_rule() {
+    // CI runs the faq-lint binary over this tree and asserts a nonzero
+    // exit, so a linter that silently stops finding anything cannot green
+    // the pipeline. Keep this assertion in lockstep with that job.
+    assert_eq!(
+        hits("canary-tree"),
+        vec![
+            ("runtime/registry.rs".to_string(), 7, Rule::HashIteration),
+            ("serve/mod.rs".to_string(), 2, Rule::PanicInServe),
+            ("tensor/kernel.rs".to_string(), 2, Rule::UnorderedReduction),
+            ("tensor/kernel.rs".to_string(), 5, Rule::TimeOrEnv),
+            ("tensor/kernel.rs".to_string(), 6, Rule::TimeOrEnv),
+            ("tensor/kernel.rs".to_string(), 9, Rule::UnusedAllow),
+            ("util/raw.rs".to_string(), 2, Rule::MissingSafety),
+        ]
+    );
+}

@@ -1,0 +1,8 @@
+// CI canary: this tree MUST fail faq-lint (one violation per rule).
+// The lint job runs the tool here and asserts a nonzero exit, so a
+// silently broken linter cannot green the pipeline.
+use std::collections::HashMap;
+
+pub fn dump(stats: &HashMap<String, u32>) -> Vec<String> {
+    stats.iter().map(|(k, v)| format!("{k}={v}")).collect()
+}

@@ -1,0 +1,12 @@
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+// faq-lint: allow(unordered-reduction) — covers nothing, must trip unused-allow
+pub fn id(x: f32) -> f32 {
+    x
+}

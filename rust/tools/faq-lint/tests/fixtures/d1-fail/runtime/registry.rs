@@ -1,0 +1,21 @@
+// Fixture: the reverted satellite — a hash-ordered manifest map whose
+// iteration order leaks into the validation report (D1 must flag it).
+use std::collections::HashMap;
+
+pub struct Manifest {
+    configs: HashMap<String, u32>,
+}
+
+impl Manifest {
+    pub fn validate(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (name, cfg) in &self.configs {
+            out.push(format!("{name}: {cfg}"));
+        }
+        out
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.configs.keys().cloned().collect()
+    }
+}

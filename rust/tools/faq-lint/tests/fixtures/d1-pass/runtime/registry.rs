@@ -1,0 +1,22 @@
+// Fixture: ordered iteration (BTreeMap) plus keyed-only HashMap use —
+// both fine under D1.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Manifest {
+    configs: BTreeMap<String, u32>,
+    cache: HashMap<u64, u32>,
+}
+
+impl Manifest {
+    pub fn validate(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (name, cfg) in &self.configs {
+            out.push(format!("{name}: {cfg}"));
+        }
+        out
+    }
+
+    pub fn lookup(&self, key: u64) -> Option<u32> {
+        self.cache.get(&key).copied()
+    }
+}

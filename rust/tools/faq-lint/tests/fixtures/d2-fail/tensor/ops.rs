@@ -1,0 +1,13 @@
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0, |acc, v| acc + v)
+}
+
+pub fn peak(xs: &[f32]) -> f32 {
+    // A fold seeded with f32::NEG_INFINITY is a per-element max scan,
+    // not an accumulation: exempt from D2.
+    xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+}

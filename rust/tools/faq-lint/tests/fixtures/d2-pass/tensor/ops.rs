@@ -1,0 +1,9 @@
+// faq-lint: allow(unordered-reduction) — strictly in-order slice walk
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn mean(xs: &[f32]) -> f32 {
+    let total: f32 = xs.iter().sum(); // faq-lint: allow(unordered-reduction) — in-order
+    total / xs.len() as f32
+}

@@ -1,0 +1,3 @@
+pub fn head(queue: &[u32]) -> u32 {
+    *queue.first().expect("queue is never empty")
+}

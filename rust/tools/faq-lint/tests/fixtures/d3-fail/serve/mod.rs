@@ -1,0 +1,7 @@
+pub fn respond(outs: &[Vec<f32>], idx: usize) -> Vec<f32> {
+    let row = &outs[idx];
+    if row.is_empty() {
+        unreachable!("rows are never empty");
+    }
+    row.first().map(|_| row.clone()).unwrap()
+}

@@ -1,0 +1,18 @@
+use std::fmt;
+
+#[derive(Debug)]
+pub struct EmptyRow;
+
+impl fmt::Display for EmptyRow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("empty logits row")
+    }
+}
+
+pub fn respond(outs: &[Vec<f32>], idx: usize) -> Result<Vec<f32>, EmptyRow> {
+    let row = outs.get(idx).ok_or(EmptyRow)?;
+    match row.first() {
+        Some(_) => Ok(row.clone()),
+        None => Err(EmptyRow),
+    }
+}

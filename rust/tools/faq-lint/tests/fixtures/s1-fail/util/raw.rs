@@ -1,0 +1,7 @@
+pub fn read_first(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}
+
+pub struct Wrapper(*const u8);
+
+unsafe impl Send for Wrapper {}

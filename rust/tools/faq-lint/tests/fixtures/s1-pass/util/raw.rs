@@ -1,0 +1,18 @@
+pub fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees at least one element, so the
+    // pointer read stays in bounds.
+    unsafe { *v.as_ptr() }
+}
+
+pub struct Wrapper(*const u8);
+
+// SAFETY: the pointer is never dereferenced off its owning thread.
+unsafe impl Send for Wrapper {}
+
+/// An `unsafe fn` declaration documents its contract at call sites;
+/// S1 only binds blocks and impls.
+pub unsafe fn untracked(p: *const u8) -> u8 {
+    // SAFETY: caller upholds validity per this fn's contract.
+    unsafe { *p }
+}

@@ -1,0 +1,10 @@
+pub fn elapsed_secs(t0: std::time::Instant) -> f32 {
+    t0.elapsed().as_secs_f32()
+}
+
+pub fn threads() -> usize {
+    match std::env::var("THREADS") {
+        Ok(v) => v.parse().unwrap_or(1),
+        Err(_) => 1,
+    }
+}

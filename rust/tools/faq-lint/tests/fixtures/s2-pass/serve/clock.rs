@@ -1,0 +1,5 @@
+// S2 binds kernel modules only: wall-clock reads are the coordinator
+// layer's job, and serve/ IS that layer.
+pub fn elapsed_secs(t0: std::time::Instant) -> f32 {
+    t0.elapsed().as_secs_f32()
+}

@@ -1,0 +1,8 @@
+// faq-lint: allow(time-or-env) — debug override; the default path
+// never reads the environment.
+pub fn threads() -> usize {
+    match std::env::var("THREADS") {
+        Ok(v) => v.parse().unwrap_or(1),
+        Err(_) => 1,
+    }
+}

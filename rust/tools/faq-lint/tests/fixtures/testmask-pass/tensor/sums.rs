@@ -1,0 +1,22 @@
+pub fn add(a: f32, b: f32) -> f32 {
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn sums_and_maps() {
+        // Tests are exempt from every rule: ad-hoc sums, hash
+        // iteration, and unwraps are all fine here.
+        let v = [1.0f32, 2.0];
+        let s: f32 = v.iter().sum();
+        let mut m: HashMap<u32, f32> = HashMap::new();
+        m.insert(1, s);
+        for (k, val) in m.iter() {
+            assert!(*k == 1 && *val == 3.0);
+        }
+        assert_eq!(v.first().copied().unwrap(), 1.0);
+    }
+}

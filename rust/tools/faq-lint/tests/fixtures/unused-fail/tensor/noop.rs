@@ -1,0 +1,4 @@
+// faq-lint: allow(unordered-reduction) — nothing here reduces
+pub fn id(x: f32) -> f32 {
+    x
+}

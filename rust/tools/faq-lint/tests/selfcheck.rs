@@ -1,0 +1,28 @@
+//! The linter's own acceptance gate: the tree it guards must be clean.
+//!
+//! This is the test-shaped twin of the CI `lint` job — it keeps
+//! `cargo test` sufficient to catch a regression without the workflow.
+
+use std::path::PathBuf;
+
+#[test]
+fn rust_src_lints_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../../..")
+        .join("rust/src");
+    let root = root
+        .canonicalize()
+        .expect("repo layout: rust/tools/faq-lint sits three levels below the root");
+    let findings = faq_lint::lint_tree(&root).expect("lint rust/src");
+    assert!(
+        findings.is_empty(),
+        "faq-lint found {} issue(s) in rust/src — fix them or add an \
+         audited `// faq-lint: allow(<rule>)` marker:\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
