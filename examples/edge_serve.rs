@@ -43,7 +43,7 @@ fn main() -> Result<()> {
     let (tx, rx) = mpsc::channel();
     let mut responders = Vec::new();
     for i in 0..n_requests {
-        let (rtx, rrx) = mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         tx.send(faquant::serve::Request {
             tokens: seqs[i % seqs.len()].data().to_vec(),
             respond: rtx,
@@ -59,6 +59,7 @@ fn main() -> Result<()> {
         &qm,
         rx,
         Duration::from_millis(2),
+        None,
     )?;
 
     // Every client sees its own next-token distribution.

@@ -107,7 +107,7 @@ fn main() -> Result<()> {
     let (tx, rx) = std::sync::mpsc::channel();
     let mut resp = Vec::new();
     for i in 0..32 {
-        let (rtx, rrx) = std::sync::mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         tx.send(faquant::serve::Request {
             tokens: seqs[i % seqs.len()].data().to_vec(),
             respond: rtx,
@@ -122,6 +122,7 @@ fn main() -> Result<()> {
         &qm,
         rx,
         Duration::from_millis(5),
+        None,
     )?;
     let ok = resp
         .into_iter()

@@ -175,6 +175,7 @@ fn main() {
                 prompt: gen_ids[start..start + prompt_len].to_vec(),
                 max_new,
                 stop_id: None,
+                ..Default::default()
             }
         })
         .collect();
@@ -279,6 +280,7 @@ fn main() {
                 prompt: p,
                 max_new,
                 stop_id: None,
+                ..Default::default()
             }
         })
         .collect();

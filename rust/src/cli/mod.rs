@@ -104,6 +104,12 @@ impl Args {
         }
     }
 
+    /// Optional millisecond-duration flag: absent or `0` means "off".
+    pub fn get_ms_opt(&self, name: &str) -> Result<Option<std::time::Duration>> {
+        let ms = self.get_u64(name, 0)?;
+        Ok((ms > 0).then_some(std::time::Duration::from_millis(ms)))
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.mark(name);
         self.switches.iter().any(|s| s == name)
@@ -170,6 +176,19 @@ mod tests {
     fn unknown_flag_rejected() {
         let a = parse("eval --oops 1");
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn ms_flag_zero_means_off() {
+        let a = parse("generate --deadline-ms 0");
+        assert_eq!(a.get_ms_opt("deadline-ms").unwrap(), None);
+        let b = parse("generate --deadline-ms 250");
+        assert_eq!(
+            b.get_ms_opt("deadline-ms").unwrap(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        let c = parse("generate");
+        assert_eq!(c.get_ms_opt("deadline-ms").unwrap(), None);
     }
 
     #[test]

@@ -193,6 +193,29 @@ impl BlockPool {
         self.n_blocks - self.free.len()
     }
 
+    /// Leak check for the drain path: every block must be back on the
+    /// free list. Errors name the still-referenced blocks so a leak
+    /// points at its owner (slot table, reservation, or tree reference
+    /// that was never released).
+    pub fn assert_all_free(&self) -> Result<()> {
+        if self.free.len() == self.n_blocks {
+            return Ok(());
+        }
+        let leaked: Vec<String> = self
+            .refcount
+            .iter()
+            .enumerate()
+            .filter(|(_, &rc)| rc > 0)
+            .map(|(b, &rc)| format!("{b}(rc={rc})"))
+            .collect();
+        bail!(
+            "{} of {} blocks leaked after drain: [{}]",
+            leaked.len(),
+            self.n_blocks,
+            leaked.join(", ")
+        );
+    }
+
     pub fn refcount(&self, block: u32) -> u32 {
         self.refcount[block as usize]
     }
@@ -394,6 +417,18 @@ mod tests {
         let k = Tensor::from_vec(&[l, slots, d], kd).unwrap();
         let v = Tensor::from_vec(&[l, slots, d], vd).unwrap();
         (k, v)
+    }
+
+    #[test]
+    fn assert_all_free_names_leaked_blocks() {
+        let mut pool = BlockPool::new(1, 3, 2, 4);
+        pool.assert_all_free().unwrap();
+        let b = pool.alloc().unwrap();
+        let err = pool.assert_all_free().unwrap_err().to_string();
+        assert!(err.contains("leaked"), "unexpected error '{err}'");
+        assert!(err.contains(&format!("{b}(rc=1)")), "unexpected error '{err}'");
+        pool.release(b).unwrap();
+        pool.assert_all_free().unwrap();
     }
 
     #[test]

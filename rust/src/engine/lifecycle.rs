@@ -1,0 +1,148 @@
+//! Request-lifecycle primitives: cooperative cancellation, the engine
+//! clock (real or virtual), and the fault-injection seam.
+//!
+//! A production serving loop needs more than a happy path: requests get
+//! cancelled, deadlines expire, clients hang up, and a compute step can
+//! fail. This module holds the small, panic-free building blocks the
+//! scheduler composes into that lifecycle (DESIGN.md §14):
+//!
+//! - [`CancelToken`] — a cloneable atomic flag checked between decode
+//!   steps. The serve loops also fire it when a client's response
+//!   channel is found disconnected mid-generation, and reuse it as the
+//!   graceful-shutdown signal.
+//! - [`EngineClock`] — the engine's single source of "now". In
+//!   production it is the wall clock; under the fault-injection harness
+//!   it advances a fixed [`std::time::Duration`] per engine tick, so
+//!   deadline expiry depends only on tick counts and is bitwise
+//!   reproducible across machines and thread counts.
+//! - [`FaultInjector`] — the seam the deterministic harness
+//!   (`testutil::faults`) plugs into: it can fail a compute attempt
+//!   (before any state changes — failed steps are retryable) or stall
+//!   admission as if the block pool were exhausted. Production engines
+//!   carry no injector and pay one `Option` check per step.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Cooperative cancellation flag. Clones share one flag: any clone's
+/// [`CancelToken::cancel`] is observed by every holder. The scheduler
+/// checks it between steps, so cancellation is prompt (one step's
+/// latency) but never tears a step mid-flight.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fire the token. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// The engine's clock: wall time by default, or a deterministic virtual
+/// clock that advances `virtual_step` per engine tick (used by the
+/// fault-injection harness so deadline storms replay bit-for-bit).
+#[derive(Clone, Debug)]
+pub struct EngineClock {
+    t0: Instant,
+    virtual_step: Option<Duration>,
+}
+
+impl EngineClock {
+    pub fn new(virtual_step: Option<Duration>) -> Self {
+        Self {
+            t0: Instant::now(),
+            virtual_step,
+        }
+    }
+
+    /// Current time. Virtual mode returns `t0 + ticks * virtual_step`
+    /// (saturating — a clock must never fail), so two runs that execute
+    /// the same tick sequence observe identical deadline decisions.
+    pub fn now(&self, ticks: usize) -> Instant {
+        match self.virtual_step {
+            None => Instant::now(),
+            Some(step) => {
+                let n = u32::try_from(ticks).unwrap_or(u32::MAX);
+                self.t0.checked_add(step.saturating_mul(n)).unwrap_or(self.t0)
+            }
+        }
+    }
+
+    /// Whether this clock is virtual (tick-driven).
+    pub fn is_virtual(&self) -> bool {
+        self.virtual_step.is_some()
+    }
+}
+
+/// Fault-injection seam at the engine boundary. Implementations decide,
+/// from deterministic inputs only (tick counter, attempt index, the fed
+/// request ids), whether a compute attempt fails or admission stalls —
+/// never from wall time or ambient randomness, so an injected fault
+/// schedule replays exactly (DESIGN.md §14).
+pub trait FaultInjector: Send {
+    /// Called immediately before every compute attempt (initial try,
+    /// bounded retries, and quarantine-bisection probes all count).
+    /// Returning an error makes the attempt fail before any KV append
+    /// or sampler draw, exactly like a backend error at that point.
+    fn before_attempt(&mut self, tick: usize, attempt: usize, fed_ids: &[usize]) -> Result<()>;
+
+    /// When true, admission treats the store as having no free capacity
+    /// this tick (queued requests keep waiting — forced pool
+    /// exhaustion). Default: never stall.
+    fn stall_admission(&mut self, tick: usize) -> bool {
+        let _ = tick;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!t.is_cancelled() && !c.is_cancelled());
+        c.cancel();
+        assert!(t.is_cancelled() && c.is_cancelled());
+        // Idempotent.
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn virtual_clock_is_tick_driven_and_monotone() {
+        let clk = EngineClock::new(Some(Duration::from_millis(2)));
+        assert!(clk.is_virtual());
+        let a = clk.now(0);
+        let b = clk.now(5);
+        assert_eq!(b.duration_since(a), Duration::from_millis(10));
+        // Same tick => same instant, regardless of real elapsed time.
+        assert_eq!(clk.now(5), b);
+        // Saturation: absurd tick counts must not panic.
+        let far = clk.now(usize::MAX);
+        assert!(far >= a);
+    }
+
+    #[test]
+    fn real_clock_advances() {
+        let clk = EngineClock::new(None);
+        assert!(!clk.is_virtual());
+        let a = clk.now(0);
+        let b = clk.now(0);
+        assert!(b >= a);
+    }
+}

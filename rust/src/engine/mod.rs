@@ -29,14 +29,18 @@
 //! O(T²) recompute.
 
 mod kv_cache;
+mod lifecycle;
 mod prefix;
 mod sampler;
 mod scheduler;
 
 pub use kv_cache::{BlockPool, KvCache};
+pub use lifecycle::{CancelToken, EngineClock, FaultInjector};
 pub use prefix::RadixTree;
 pub use sampler::Sampler;
 pub use scheduler::{Engine, GenConfig};
+
+use std::time::Duration;
 
 /// Why a request was refused admission (shared with `serve`'s intake).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -55,6 +59,19 @@ pub enum RejectReason {
         max_new: usize,
         cap: usize,
     },
+    /// Admission queue at its configured bound — backpressure instead of
+    /// unbounded growth (`GenConfig::max_queue`).
+    QueueFull { limit: usize },
+    /// The engine is draining for shutdown; no new admissions.
+    Draining,
+    /// The client's response channel was already gone at dispatch time
+    /// (one-shot serve path; generation treats a mid-flight disconnect
+    /// as a cancel instead).
+    Disconnected,
+    /// Evicted mid-flight by the step-failure quarantine (or another
+    /// internal fault); `detail` carries the underlying error. Tokens
+    /// generated before the fault travel in the `GenOutput`.
+    Internal { detail: String },
 }
 
 impl RejectReason {
@@ -66,6 +83,10 @@ impl RejectReason {
             RejectReason::EmptyPrompt => "empty_prompt",
             RejectReason::ZeroMaxNew => "zero_max_new",
             RejectReason::TooLong { .. } => "too_long",
+            RejectReason::QueueFull { .. } => "queue_full",
+            RejectReason::Draining => "draining",
+            RejectReason::Disconnected => "disconnected",
+            RejectReason::Internal { .. } => "internal",
         }
     }
 }
@@ -84,6 +105,12 @@ impl std::fmt::Display for RejectReason {
             RejectReason::TooLong { prompt, max_new, cap } => {
                 write!(f, "prompt {prompt} + max_new {max_new} exceeds capacity {cap}")
             }
+            RejectReason::QueueFull { limit } => {
+                write!(f, "admission queue full (limit {limit})")
+            }
+            RejectReason::Draining => write!(f, "server draining; not accepting new requests"),
+            RejectReason::Disconnected => write!(f, "client disconnected before dispatch"),
+            RejectReason::Internal { detail } => write!(f, "internal failure: {detail}"),
         }
     }
 }
@@ -96,6 +123,10 @@ pub struct RejectCounts {
     pub empty_prompt: usize,
     pub zero_max_new: usize,
     pub too_long: usize,
+    pub queue_full: usize,
+    pub draining: usize,
+    pub disconnected: usize,
+    pub internal: usize,
 }
 
 impl RejectCounts {
@@ -106,11 +137,23 @@ impl RejectCounts {
             RejectReason::EmptyPrompt => self.empty_prompt += 1,
             RejectReason::ZeroMaxNew => self.zero_max_new += 1,
             RejectReason::TooLong { .. } => self.too_long += 1,
+            RejectReason::QueueFull { .. } => self.queue_full += 1,
+            RejectReason::Draining => self.draining += 1,
+            RejectReason::Disconnected => self.disconnected += 1,
+            RejectReason::Internal { .. } => self.internal += 1,
         }
     }
 
     pub fn total(&self) -> usize {
-        self.wrong_length + self.bad_token + self.empty_prompt + self.zero_max_new + self.too_long
+        self.wrong_length
+            + self.bad_token
+            + self.empty_prompt
+            + self.zero_max_new
+            + self.too_long
+            + self.queue_full
+            + self.draining
+            + self.disconnected
+            + self.internal
     }
 }
 
@@ -121,12 +164,21 @@ pub enum FinishReason {
     MaxTokens,
     /// Sampled the request's stop id (not included in the output).
     Stop,
-    /// Refused at admission; no tokens were generated.
+    /// The request's deadline expired mid-flight; tokens generated
+    /// before expiry are returned (a bitwise prefix of what a
+    /// deadline-free run would have produced).
+    DeadlineExceeded,
+    /// The request's cancel token fired (or its client disconnected
+    /// mid-generation); partial tokens are returned.
+    Cancelled,
+    /// Refused at admission (no tokens generated), or evicted
+    /// mid-flight by the step-failure quarantine
+    /// ([`RejectReason::Internal`]; partial tokens returned).
     Rejected(RejectReason),
 }
 
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct GenRequest {
     /// Caller-chosen id, echoed in the output and used to key the
     /// sequence's sampler stream.
@@ -136,6 +188,13 @@ pub struct GenRequest {
     pub max_new: usize,
     /// Stop generation when this id is sampled.
     pub stop_id: Option<i32>,
+    /// Optional wall-clock budget, measured from submission. When it
+    /// expires the sequence finishes with
+    /// [`FinishReason::DeadlineExceeded`] (checked between steps, on
+    /// the engine's [`EngineClock`]).
+    pub deadline: Option<Duration>,
+    /// Optional cooperative cancel token (checked between steps).
+    pub cancel: Option<CancelToken>,
 }
 
 /// One finished (or rejected) generation.
@@ -143,7 +202,9 @@ pub struct GenRequest {
 pub struct GenOutput {
     pub id: usize,
     pub prompt_len: usize,
-    /// Generated tokens (prompt excluded; empty when rejected).
+    /// Generated tokens (prompt excluded; empty when rejected at
+    /// admission, partial when cancelled / deadline-expired /
+    /// quarantined mid-flight).
     pub tokens: Vec<i32>,
     pub finish: FinishReason,
 }
@@ -177,6 +238,17 @@ pub struct GenReport {
     /// Block references dropped from the prefix cache by LRU eviction
     /// under admission pressure (paged engine only).
     pub evicted_blocks: usize,
+    /// Sequences ended by their cancel token (client disconnects that
+    /// were converted to cancels included).
+    pub cancelled: usize,
+    /// Sequences ended by deadline expiry.
+    pub deadline_exceeded: usize,
+    /// Sequences evicted by the step-failure quarantine.
+    pub quarantined: usize,
+    /// Compute attempts that failed (transient + quarantine bisection).
+    pub step_faults: usize,
+    /// Failed attempts absorbed by the bounded same-batch retry.
+    pub step_retried: usize,
 }
 
 impl GenReport {
@@ -225,6 +297,26 @@ mod tests {
             RejectReason::TokenOutOfRange { index: 2, id: -7 }.cause(),
             "bad_token"
         );
+    }
+
+    #[test]
+    fn lifecycle_reject_causes_counted() {
+        let mut c = RejectCounts::default();
+        c.note(&RejectReason::QueueFull { limit: 4 });
+        c.note(&RejectReason::Draining);
+        c.note(&RejectReason::Disconnected);
+        c.note(&RejectReason::Internal { detail: "step failed".into() });
+        assert_eq!(c.queue_full, 1);
+        assert_eq!(c.draining, 1);
+        assert_eq!(c.disconnected, 1);
+        assert_eq!(c.internal, 1);
+        assert_eq!(c.total(), 4);
+        assert_eq!(RejectReason::QueueFull { limit: 4 }.cause(), "queue_full");
+        assert_eq!(RejectReason::Draining.cause(), "draining");
+        assert_eq!(RejectReason::Disconnected.cause(), "disconnected");
+        let internal = RejectReason::Internal { detail: "boom".into() };
+        assert_eq!(internal.cause(), "internal");
+        assert!(internal.to_string().contains("boom"));
     }
 
     #[test]

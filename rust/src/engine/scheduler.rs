@@ -34,10 +34,26 @@
 //! stores, thread counts, and batch mixes. The [`GenReport`] splits wall
 //! time between prefill and decode by each step's feed mix and carries
 //! the paged pool/prefix counters.
+//!
+//! **Request lifecycle (DESIGN.md §14):** every [`Engine::step`] starts
+//! with a lifecycle sweep — queued and running sequences whose
+//! [`CancelToken`] fired or whose deadline expired finish immediately
+//! with [`FinishReason::Cancelled`]/[`FinishReason::DeadlineExceeded`],
+//! their slot and blocks released (abnormal exits never cache their
+//! prefix). A failed compute attempt changes no engine state (KV
+//! appends and sampler draws happen only after success), so the step is
+//! retried up to `GenConfig::step_retries` times for transient faults;
+//! if the batch still fails, a one-slot-masked bisection identifies the
+//! poisoned sequence and evicts it with
+//! [`RejectReason::Internal`] — survivors keep decoding the same
+//! streams, bit for bit. [`Engine::begin_drain`] stops admission
+//! (fresh submits reject with [`RejectReason::Draining`]) while
+//! in-flight work runs to completion, and `GenConfig::max_queue` bounds
+//! the admission queue ([`RejectReason::QueueFull`] backpressure).
 
 use super::{
-    BlockPool, FinishReason, GenOutput, GenReport, GenRequest, KvCache, RadixTree, RejectCounts,
-    RejectReason, Sampler,
+    BlockPool, CancelToken, EngineClock, FaultInjector, FinishReason, GenOutput, GenReport,
+    GenRequest, KvCache, RadixTree, RejectCounts, RejectReason, Sampler,
 };
 use crate::config::ModelConfig;
 use crate::model::Params;
@@ -47,7 +63,7 @@ use crate::serve::qmodel_literals;
 use crate::tensor::{Tensor, TensorI32};
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default KV page size (tokens per block) for the paged engine.
 pub const DEFAULT_BLOCK_TOKENS: usize = 16;
@@ -81,6 +97,18 @@ pub struct GenConfig {
     /// Keep finished prompts' KV blocks in the radix prefix cache so
     /// later requests sharing the prefix skip that prefill (paged only).
     pub prefix_cache: bool,
+    /// Admission-queue bound: a `submit` that would push the queue past
+    /// this rejects with [`RejectReason::QueueFull`] (backpressure
+    /// instead of unbounded growth). 0 = unbounded.
+    pub max_queue: usize,
+    /// Same-batch retries for a failed compute step before the
+    /// quarantine bisection starts hunting for a poisoned sequence
+    /// (failed attempts change no state, so retrying is always sound).
+    pub step_retries: usize,
+    /// Deterministic virtual clock: advance this much per engine tick
+    /// instead of reading the wall clock (fault-injection harness only;
+    /// `None` = real time).
+    pub virtual_step: Option<Duration>,
 }
 
 impl Default for GenConfig {
@@ -95,6 +123,9 @@ impl Default for GenConfig {
             block_tokens: 0,
             pool_blocks: 0,
             prefix_cache: true,
+            max_queue: 0,
+            step_retries: 2,
+            virtual_step: None,
         }
     }
 }
@@ -111,6 +142,22 @@ struct SeqState {
     max_new: usize,
     stop_id: Option<i32>,
     sampler: Sampler,
+    /// Absolute expiry on the engine clock (budget added at submit).
+    deadline_at: Option<Instant>,
+    cancel: Option<CancelToken>,
+}
+
+/// Cancel / deadline check shared by queued and running sequences.
+/// Cancellation wins when both fired in the same sweep (the client
+/// explicitly asked; the deadline merely ran out).
+fn lifecycle_fate(st: &SeqState, now: Instant) -> Option<FinishReason> {
+    if st.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+        return Some(FinishReason::Cancelled);
+    }
+    if st.deadline_at.is_some_and(|d| now >= d) {
+        return Some(FinishReason::DeadlineExceeded);
+    }
+    None
 }
 
 /// The paged KV state: pool + prefix tree + per-slot block tables and
@@ -396,6 +443,16 @@ impl PagedKv {
                 }
             }
         }
+        self.on_abort(slot)
+    }
+
+    /// A sequence is leaving `slot` abnormally (cancel, deadline,
+    /// quarantine): drop its block references and reservation WITHOUT
+    /// caching its prefix. The rows it wrote are valid, but an abnormal
+    /// exit must leave the pool exactly as if the request never ran —
+    /// keeping its entries cache-hot would make later prefix-hit
+    /// accounting depend on which requests happened to fault.
+    fn on_abort(&mut self, slot: usize) -> Result<()> {
         let table = std::mem::take(
             self.tables
                 .get_mut(slot)
@@ -420,6 +477,16 @@ enum KvStore {
     Paged(PagedKv),
 }
 
+/// One successful batched compute attempt: the kernel's outputs
+/// (`[logits, k_new, v_new]`) plus this attempt's feed metrics.
+struct StepOut {
+    outs: Vec<Value>,
+    prefill_feeds: usize,
+    decode_feeds: usize,
+    feeds: usize,
+    secs: f32,
+}
+
 /// The KV-cached continuous-batching generation engine.
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
@@ -429,6 +496,16 @@ pub struct Engine<'rt> {
     store: KvStore,
     slots: Vec<Option<SeqState>>,
     queue: VecDeque<SeqState>,
+    /// Engine clock (wall or virtual) for deadline decisions.
+    clock: EngineClock,
+    /// Step-call counter: bumped at the top of EVERY [`Engine::step`],
+    /// successful or not (unlike `steps`, which counts computed steps).
+    /// Drives the virtual clock and the fault-injection schedule.
+    ticks: usize,
+    /// Draining: fresh submits reject, in-flight work runs out.
+    draining: bool,
+    /// Fault-injection seam (tests only; `None` in production).
+    fault: Option<Box<dyn FaultInjector>>,
     // Accumulated report state (across generate calls).
     steps: usize,
     prefill_tokens: usize,
@@ -439,6 +516,11 @@ pub struct Engine<'rt> {
     completed: usize,
     rejected: usize,
     reject_counts: RejectCounts,
+    cancelled: usize,
+    deadline_exceeded: usize,
+    quarantined: usize,
+    step_faults: usize,
+    step_retried: usize,
 }
 
 impl<'rt> Engine<'rt> {
@@ -480,6 +562,7 @@ impl<'rt> Engine<'rt> {
         } else {
             KvStore::Dense(KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model))
         };
+        let clock = EngineClock::new(gen.virtual_step);
         Ok(Self {
             rt,
             cfg: cfg.clone(),
@@ -488,6 +571,10 @@ impl<'rt> Engine<'rt> {
             store,
             slots: (0..slots).map(|_| None).collect(),
             queue: VecDeque::new(),
+            clock,
+            ticks: 0,
+            draining: false,
+            fault: None,
             steps: 0,
             prefill_tokens: 0,
             decode_tokens: 0,
@@ -497,6 +584,11 @@ impl<'rt> Engine<'rt> {
             completed: 0,
             rejected: 0,
             reject_counts: RejectCounts::default(),
+            cancelled: 0,
+            deadline_exceeded: 0,
+            quarantined: 0,
+            step_faults: 0,
+            step_retried: 0,
         })
     }
 
@@ -536,7 +628,16 @@ impl<'rt> Engine<'rt> {
     /// when the request cannot be admitted; `None` means it is queued and
     /// will surface from a later [`Engine::step`].
     pub fn submit(&mut self, req: GenRequest) -> Option<GenOutput> {
-        if let Some(reason) = self.validate(&req) {
+        let reason = if self.draining {
+            Some(RejectReason::Draining)
+        } else if self.gen.max_queue > 0 && self.queue.len() >= self.gen.max_queue {
+            Some(RejectReason::QueueFull {
+                limit: self.gen.max_queue,
+            })
+        } else {
+            self.validate(&req)
+        };
+        if let Some(reason) = reason {
             self.rejected += 1;
             self.reject_counts.note(&reason);
             return Some(GenOutput {
@@ -548,6 +649,12 @@ impl<'rt> Engine<'rt> {
         }
         let sampler =
             Sampler::for_sequence(self.gen.temperature, self.gen.top_k, self.gen.seed, req.id);
+        // The deadline is a budget relative to submission, resolved to an
+        // absolute engine-clock instant here (checked: an absurd budget
+        // that overflows the clock simply means "no deadline").
+        let deadline_at = req
+            .deadline
+            .and_then(|budget| self.clock.now(self.ticks).checked_add(budget));
         self.queue.push_back(SeqState {
             id: req.id,
             prompt_len: req.prompt.len(),
@@ -556,6 +663,8 @@ impl<'rt> Engine<'rt> {
             max_new: req.max_new,
             stop_id: req.stop_id,
             sampler,
+            deadline_at,
+            cancel: req.cancel,
         });
         None
     }
@@ -572,11 +681,135 @@ impl<'rt> Engine<'rt> {
         self.slots.iter().filter(|s| s.is_none()).count()
     }
 
+    /// Stop admitting new work: every later [`Engine::submit`] rejects
+    /// with [`RejectReason::Draining`], while queued and running
+    /// sequences run to completion through further [`Engine::step`]
+    /// calls. Irreversible for the engine's lifetime (DESIGN.md §14).
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Install a fault injector (deterministic failure harness,
+    /// `testutil::faults`). Production engines never call this.
+    pub fn set_fault_injector(&mut self, fault: Box<dyn FaultInjector>) {
+        self.fault = Some(fault);
+    }
+
+    /// Drop every cached prefix, releasing its block references. Returns
+    /// the number of block references released. After a drain this takes
+    /// the pool back to fully free (`BlockPool::assert_all_free`) — the
+    /// fault harness's leak check.
+    pub fn flush_prefix_cache(&mut self) -> Result<usize> {
+        let KvStore::Paged(ps) = &mut self.store else {
+            return Ok(0);
+        };
+        let mut dropped = 0usize;
+        while let Some(blocks) = ps.tree.evict_lru() {
+            for b in blocks {
+                ps.pool.release(b)?;
+                dropped += 1;
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Count an abnormal completion in the report totals.
+    fn note_abnormal_finish(&mut self, finish: &FinishReason) {
+        match finish {
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::DeadlineExceeded => self.deadline_exceeded += 1,
+            FinishReason::Rejected(reason) => {
+                self.quarantined += 1;
+                self.rejected += 1;
+                self.reject_counts.note(reason);
+            }
+            FinishReason::Stop | FinishReason::MaxTokens => {}
+        }
+    }
+
+    /// Evict the sequence in `slot` with an abnormal finish: release its
+    /// blocks and reservation (never caching its prefix), count it, and
+    /// emit whatever tokens it had produced so far (always a bitwise
+    /// prefix of the fault-free stream — samplers are keyed by request
+    /// id and failed compute attempts change no state).
+    fn evict_slot(&mut self, slot: usize, finish: FinishReason) -> Result<Option<GenOutput>> {
+        let taken = self
+            .slots
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?
+            .take();
+        let Some(st) = taken else {
+            return Ok(None);
+        };
+        if let KvStore::Paged(ps) = &mut self.store {
+            ps.on_abort(slot)?;
+        }
+        self.note_abnormal_finish(&finish);
+        Ok(Some(GenOutput {
+            id: st.id,
+            prompt_len: st.prompt_len,
+            tokens: st.tokens.get(st.prompt_len..).unwrap_or_default().to_vec(),
+            finish,
+        }))
+    }
+
+    /// Lifecycle sweep: finish every queued or running sequence whose
+    /// cancel token fired or whose deadline expired on the engine clock.
+    /// Runs at the top of each step, so a cancel is observed within one
+    /// step's latency and an expired deadline never feeds another token.
+    fn sweep_lifecycle(&mut self) -> Result<Vec<GenOutput>> {
+        let now = self.clock.now(self.ticks);
+        let mut finished = Vec::new();
+        // Queued first (cheap: no store state to release). Keeper order
+        // is preserved — admission stays FIFO.
+        let queued = std::mem::take(&mut self.queue);
+        for st in queued {
+            match lifecycle_fate(&st, now) {
+                Some(finish) => {
+                    self.note_abnormal_finish(&finish);
+                    finished.push(GenOutput {
+                        id: st.id,
+                        prompt_len: st.prompt_len,
+                        tokens: Vec::new(),
+                        finish,
+                    });
+                }
+                None => self.queue.push_back(st),
+            }
+        }
+        for slot in 0..self.slots.len() {
+            let fate = self
+                .slots
+                .get(slot)
+                .and_then(|s| s.as_ref())
+                .and_then(|st| lifecycle_fate(st, now));
+            if let Some(finish) = fate {
+                if let Some(out) = self.evict_slot(slot, finish)? {
+                    finished.push(out);
+                }
+            }
+        }
+        Ok(finished)
+    }
+
     /// Admit queued sequences into free slots. Dense: a free slot is all
     /// it takes. Paged: the head of the queue also needs its worst-case
     /// block reservation (FIFO — a stuck head does not let later
     /// requests starve it of blocks).
     fn admit(&mut self) -> Result<()> {
+        // Fault seam: a stalled tick behaves exactly like a pool with no
+        // free capacity — queued requests keep waiting, nothing changes.
+        let stalled = match self.fault.as_mut() {
+            Some(f) => f.stall_admission(self.ticks),
+            None => false,
+        };
+        if stalled {
+            return Ok(());
+        }
         let Self {
             slots,
             store,
@@ -623,24 +856,172 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// Admit queued sequences, run one batched decode step, and return
+    /// Run one engine tick: lifecycle sweep (cancellations, expired
+    /// deadlines), admission, ONE batched decode step — with bounded
+    /// retry and quarantine bisection on compute failure — and return
     /// the sequences that finished on it.
     pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        // Tick first: the counter advances on EVERY call (success or
+        // failure), so the virtual clock and fault schedule see a
+        // monotone timeline regardless of what this step does.
+        self.ticks += 1;
+        let mut finished = self.sweep_lifecycle()?;
         self.admit()?;
+
+        // Compute with bounded retry, then — if the batch still fails —
+        // a one-slot-masked bisection: probe with each occupied slot
+        // withheld in turn until an attempt succeeds; the masked slot
+        // holds the poisoned sequence. Failed attempts change no engine
+        // state (KV appends and sampler draws happen only after
+        // success), so every retry and probe re-executes an identical
+        // batch and survivors' streams stay bit-for-bit.
+        let mut masked: Option<usize> = None;
+        let mut attempt = 0usize;
+        let mut last_err: Option<anyhow::Error> = None;
+        let computed = loop {
+            match self.compute_step(masked, attempt) {
+                Ok(out) => break out,
+                Err(err) => {
+                    self.step_faults += 1;
+                    attempt += 1;
+                    if masked.is_none() && attempt <= self.gen.step_retries {
+                        // Transient budget: same batch, try again.
+                        self.step_retried += 1;
+                        last_err = Some(err);
+                        continue;
+                    }
+                    let from = match masked {
+                        None => 0,
+                        Some(m) => m + 1,
+                    };
+                    last_err = Some(err);
+                    let next = self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .skip(from)
+                        .find_map(|(i, s)| s.as_ref().map(|_| i));
+                    match next {
+                        Some(m) => masked = Some(m),
+                        None => {
+                            // Every occupied slot was probed and the
+                            // batch still fails: not one bad request
+                            // but a broken backend. Surface it.
+                            return Err(
+                                last_err.unwrap_or_else(|| anyhow!("decode step failed"))
+                            );
+                        }
+                    }
+                }
+            }
+        };
+        if let Some(slot) = masked {
+            let detail = match &last_err {
+                Some(e) => format!("decode step failed; quarantined after bisection: {e:#}"),
+                None => "decode step failed".to_string(),
+            };
+            let finish = FinishReason::Rejected(RejectReason::Internal { detail });
+            if let Some(out) = self.evict_slot(slot, finish)? {
+                finished.push(out);
+            }
+        }
+        let Some(stepd) = computed else {
+            return Ok(finished);
+        };
+
+        self.steps += 1;
         let b = self.slots.len();
         let vocab = self.cfg.vocab;
+        self.occupancy_sum += stepd.feeds as f32 / b as f32;
+        self.prefill_secs += stepd.secs * stepd.prefill_feeds as f32 / stepd.feeds as f32;
+        self.decode_secs += stepd.secs * stepd.decode_feeds as f32 / stepd.feeds as f32;
+        self.prefill_tokens += stepd.prefill_feeds;
+
+        let mut outs = stepd.outs.into_iter();
+        let (Some(logits_v), Some(k_v), Some(v_v)) = (outs.next(), outs.next(), outs.next())
+        else {
+            bail!("decode step returned fewer than three outputs");
+        };
+        let logits = logits_v.as_f32()?;
+        let k_new = k_v.as_f32()?;
+        let v_new = v_v.as_f32()?;
+        let Self {
+            slots,
+            store,
+            decode_tokens,
+            completed,
+            ..
+        } = self;
+        for (slot, slot_ref) in slots.iter_mut().enumerate() {
+            let Some(st) = slot_ref.as_mut() else { continue };
+            match store {
+                KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
+                KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
+            }
+            st.cursor += 1;
+            let mut fin = None;
+            if st.cursor >= st.prompt_len {
+                // This feed's logits predict the next position.
+                let row = logits
+                    .data()
+                    .get(slot * vocab..(slot + 1) * vocab)
+                    .ok_or_else(|| anyhow!("logits row {slot} out of range"))?;
+                let next = st.sampler.sample(row) as i32;
+                if st.stop_id == Some(next) {
+                    fin = Some(FinishReason::Stop);
+                } else {
+                    st.tokens.push(next);
+                    *decode_tokens += 1;
+                    if st.tokens.len() - st.prompt_len >= st.max_new {
+                        fin = Some(FinishReason::MaxTokens);
+                    }
+                }
+            }
+            let Some(finish) = fin else { continue };
+            if let KvStore::Paged(ps) = store {
+                ps.on_finish(slot, st.cursor, &st.tokens)?;
+            }
+            let Some(st) = slot_ref.take() else { continue };
+            finished.push(GenOutput {
+                id: st.id,
+                prompt_len: st.prompt_len,
+                tokens: st.tokens.get(st.prompt_len..).unwrap_or_default().to_vec(),
+                finish,
+            });
+            *completed += 1;
+        }
+        Ok(finished)
+    }
+
+    /// Build and execute ONE batched decode attempt, withholding the
+    /// `masked` slot (quarantine bisection probe). Returns `Ok(None)`
+    /// when nothing would feed. A failed attempt leaves every KV slab,
+    /// block table, cursor, and sampler untouched — the caller may
+    /// retry or probe again and get the identical batch.
+    fn compute_step(&mut self, masked: Option<usize>, attempt: usize) -> Result<Option<StepOut>> {
+        let b = self.slots.len();
         let mut pos = vec![-1i32; b];
         let mut tok = vec![0i32; b];
         let mut prefill_feeds = 0usize;
         let mut decode_feeds = 0usize;
-        for ((p, t), st) in pos.iter_mut().zip(tok.iter_mut()).zip(&self.slots) {
+        let mut fed_ids = Vec::new();
+        for (slot, ((p, t), st)) in pos
+            .iter_mut()
+            .zip(tok.iter_mut())
+            .zip(&self.slots)
+            .enumerate()
+        {
             let Some(st) = st else { continue };
+            if masked == Some(slot) {
+                continue;
+            }
             *p = st.cursor as i32;
             *t = st
                 .tokens
                 .get(st.cursor)
                 .copied()
                 .ok_or_else(|| anyhow!("sequence {}: cursor past its token stream", st.id))?;
+            fed_ids.push(st.id);
             if st.cursor < st.prompt_len {
                 prefill_feeds += 1;
             } else {
@@ -649,7 +1030,10 @@ impl<'rt> Engine<'rt> {
         }
         let feeds = prefill_feeds + decode_feeds;
         if feeds == 0 {
-            return Ok(Vec::new());
+            return Ok(None);
+        }
+        if let Some(fault) = self.fault.as_mut() {
+            fault.before_attempt(self.ticks, attempt, &fed_ids)?;
         }
 
         let t0 = Instant::now();
@@ -705,68 +1089,15 @@ impl<'rt> Engine<'rt> {
                 outs
             }
         };
-        let mut outs = outs?.into_iter();
-        let (Some(logits_v), Some(k_v), Some(v_v)) = (outs.next(), outs.next(), outs.next())
-        else {
-            bail!("decode step returned fewer than three outputs");
-        };
-        let dt = t0.elapsed().as_secs_f32();
-        self.steps += 1;
-        self.occupancy_sum += feeds as f32 / b as f32;
-        self.prefill_secs += dt * prefill_feeds as f32 / feeds as f32;
-        self.decode_secs += dt * decode_feeds as f32 / feeds as f32;
-        self.prefill_tokens += prefill_feeds;
-
-        let logits = logits_v.as_f32()?;
-        let k_new = k_v.as_f32()?;
-        let v_new = v_v.as_f32()?;
-        let mut finished = Vec::new();
-        let Self {
-            slots,
-            store,
-            decode_tokens,
-            completed,
-            ..
-        } = self;
-        for (slot, slot_ref) in slots.iter_mut().enumerate() {
-            let Some(st) = slot_ref.as_mut() else { continue };
-            match store {
-                KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
-                KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
-            }
-            st.cursor += 1;
-            let mut fin = None;
-            if st.cursor >= st.prompt_len {
-                // This feed's logits predict the next position.
-                let row = logits
-                    .data()
-                    .get(slot * vocab..(slot + 1) * vocab)
-                    .ok_or_else(|| anyhow!("logits row {slot} out of range"))?;
-                let next = st.sampler.sample(row) as i32;
-                if st.stop_id == Some(next) {
-                    fin = Some(FinishReason::Stop);
-                } else {
-                    st.tokens.push(next);
-                    *decode_tokens += 1;
-                    if st.tokens.len() - st.prompt_len >= st.max_new {
-                        fin = Some(FinishReason::MaxTokens);
-                    }
-                }
-            }
-            let Some(finish) = fin else { continue };
-            if let KvStore::Paged(ps) = store {
-                ps.on_finish(slot, st.cursor, &st.tokens)?;
-            }
-            let Some(st) = slot_ref.take() else { continue };
-            finished.push(GenOutput {
-                id: st.id,
-                prompt_len: st.prompt_len,
-                tokens: st.tokens.get(st.prompt_len..).unwrap_or_default().to_vec(),
-                finish,
-            });
-            *completed += 1;
-        }
-        Ok(finished)
+        let outs = outs?;
+        let secs = t0.elapsed().as_secs_f32();
+        Ok(Some(StepOut {
+            outs,
+            prefill_feeds,
+            decode_feeds,
+            feeds,
+            secs,
+        }))
     }
 
     /// Snapshot of the accumulated throughput/occupancy counters.
@@ -801,6 +1132,11 @@ impl<'rt> Engine<'rt> {
             pool_blocks,
             block_tokens,
             evicted_blocks,
+            cancelled: self.cancelled,
+            deadline_exceeded: self.deadline_exceeded,
+            quarantined: self.quarantined,
+            step_faults: self.step_faults,
+            step_retried: self.step_retried,
         }
     }
 
@@ -815,6 +1151,16 @@ impl<'rt> Engine<'rt> {
                 ps.pool.n_blocks(),
                 ps.reserved_total,
             )),
+        }
+    }
+
+    /// Assert the paged pool is fully free — the post-drain,
+    /// post-[`Engine::flush_prefix_cache`] leak check (names leaked
+    /// blocks on failure). No-op on the dense engine.
+    pub fn assert_pool_all_free(&self) -> Result<()> {
+        match &self.store {
+            KvStore::Dense(_) => Ok(()),
+            KvStore::Paged(ps) => ps.pool.assert_all_free(),
         }
     }
 
@@ -970,6 +1316,7 @@ mod tests {
                 prompt: vec![(i as i32 * 3) % cfg.vocab as i32, 1, 2, 5],
                 max_new: 4,
                 stop_id: None,
+                ..Default::default()
             })
             .collect();
         let (outs, rep) = eng.generate(reqs).unwrap();
@@ -1011,6 +1358,7 @@ mod tests {
                         .collect(),
                     max_new: 5,
                     stop_id: None,
+                    ..Default::default()
                 })
                 .collect()
         };
@@ -1058,6 +1406,7 @@ mod tests {
             prompt: prompt.clone(),
             max_new: 3,
             stop_id: None,
+            ..Default::default()
         };
         let (outs_a, rep_a) = eng.generate(vec![req(0)]).unwrap();
         assert_eq!(rep_a.prefix_hit_tokens, 0, "nothing cached yet");
@@ -1093,6 +1442,7 @@ mod tests {
                 prompt: (0..8).map(|k| ((k * 7 + i * 31) % cfg.vocab) as i32).collect(),
                 max_new: 4,
                 stop_id: None,
+                ..Default::default()
             })
             .collect();
         let (outs, rep) = eng.generate(reqs).unwrap();
@@ -1119,6 +1469,7 @@ mod tests {
             prompt: (0..prompt_len).map(|k| (k % cfg.vocab) as i32).collect(),
             max_new,
             stop_id: None,
+            ..Default::default()
         };
         let (outs, rep) = eng.generate(vec![req(0, 10, 4), req(1, 9, 4)]).unwrap();
         assert!(matches!(
@@ -1155,6 +1506,7 @@ mod tests {
             prompt,
             max_new,
             stop_id: None,
+            ..Default::default()
         };
         let (outs, _) = eng.generate(vec![req(0, prompt.clone(), 4)]).unwrap();
         assert_eq!(outs[0].finish, FinishReason::MaxTokens);
@@ -1194,6 +1546,7 @@ mod tests {
                     prompt: vec![(i as i32 * 5) % cfg.vocab as i32, 2, 7],
                     max_new: 5,
                     stop_id: None,
+                    ..Default::default()
                 })
                 .collect()
         };
@@ -1221,6 +1574,7 @@ mod tests {
             prompt,
             max_new,
             stop_id: None,
+            ..Default::default()
         };
         let bad = vec![
             req(0, vec![], 2),
@@ -1265,6 +1619,7 @@ mod tests {
             prompt: vec![3, 1, 4, 1, 5],
             max_new: 3,
             stop_id: None,
+            ..Default::default()
         };
         let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
         let (outs, _) = eng.generate(vec![req(0)]).unwrap();
@@ -1277,5 +1632,313 @@ mod tests {
         assert_eq!(outs[0].finish, FinishReason::Stop);
         assert!(outs[0].tokens.is_empty());
         assert_eq!(rep.sequences, 1);
+    }
+
+    /// Step until drained (bounded so regressions fail, not hang).
+    fn drive(eng: &mut Engine<'_>) -> Vec<GenOutput> {
+        let mut outs = Vec::new();
+        for _ in 0..500 {
+            outs.extend(eng.step().unwrap());
+            if !eng.has_work() {
+                break;
+            }
+        }
+        assert!(!eng.has_work(), "engine failed to drain in 500 steps");
+        outs.sort_by_key(|o| o.id);
+        outs
+    }
+
+    #[test]
+    fn deadline_expires_on_the_virtual_clock() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            virtual_step: Some(Duration::from_millis(1)),
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let queued = eng.submit(GenRequest {
+            id: 0,
+            prompt: vec![3],
+            max_new: 10,
+            deadline: Some(Duration::from_millis(5)),
+            ..Default::default()
+        });
+        assert!(queued.is_none());
+        let outs = drive(&mut eng);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        // Tick-driven and therefore exact: submitted at tick 0, fed on
+        // ticks 1..=4, swept at tick 5 — four tokens, run after run.
+        assert_eq!(outs[0].tokens.len(), 4);
+        let rep = eng.report();
+        assert_eq!(rep.deadline_exceeded, 1);
+        assert_eq!(rep.sequences, 0);
+        eng.check_paged_invariants().unwrap();
+        eng.assert_pool_all_free().unwrap();
+    }
+
+    #[test]
+    fn zero_deadline_expires_before_any_feed() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            virtual_step: Some(Duration::from_millis(1)),
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let queued = eng.submit(GenRequest {
+            id: 0,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            deadline: Some(Duration::ZERO),
+            ..Default::default()
+        });
+        assert!(queued.is_none(), "a zero budget still queues; the sweep expires it");
+        let outs = drive(&mut eng);
+        assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+        assert!(outs[0].tokens.is_empty());
+        let rep = eng.report();
+        assert_eq!(rep.prefill_tokens, 0, "expired in queue: nothing was ever fed");
+        assert_eq!(rep.deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn cancel_token_stops_a_running_sequence() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let token = CancelToken::new();
+        let queued = eng.submit(GenRequest {
+            id: 0,
+            prompt: vec![1, 2],
+            max_new: 50,
+            cancel: Some(token.clone()),
+            ..Default::default()
+        });
+        assert!(queued.is_none());
+        let queued = eng.submit(GenRequest {
+            id: 1,
+            prompt: vec![2, 3],
+            max_new: 5,
+            ..Default::default()
+        });
+        assert!(queued.is_none());
+        let mut outs = Vec::new();
+        for _ in 0..4 {
+            outs.extend(eng.step().unwrap());
+        }
+        token.cancel();
+        for _ in 0..200 {
+            outs.extend(eng.step().unwrap());
+            if !eng.has_work() {
+                break;
+            }
+        }
+        assert!(!eng.has_work());
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].finish, FinishReason::Cancelled);
+        assert!(
+            !outs[0].tokens.is_empty() && outs[0].tokens.len() < 50,
+            "cancel lands mid-generation"
+        );
+        assert_eq!(outs[1].finish, FinishReason::MaxTokens);
+        assert_eq!(outs[1].tokens.len(), 5);
+        let rep = eng.report();
+        assert_eq!(rep.cancelled, 1);
+        assert_eq!(rep.sequences, 1);
+        eng.check_paged_invariants().unwrap();
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_queue_full() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            max_queue: 2,
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let req = |id| GenRequest {
+            id,
+            prompt: vec![1, 2],
+            max_new: 2,
+            ..Default::default()
+        };
+        assert!(eng.submit(req(0)).is_none());
+        assert!(eng.submit(req(1)).is_none());
+        let out = eng.submit(req(2)).unwrap();
+        assert!(matches!(
+            out.finish,
+            FinishReason::Rejected(RejectReason::QueueFull { limit: 2 })
+        ));
+        let outs = drive(&mut eng);
+        assert_eq!(outs.len(), 2);
+        let rep = eng.report();
+        assert_eq!(rep.reject_counts.queue_full, 1);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.sequences, 2);
+    }
+
+    #[test]
+    fn drain_stops_admission_and_finishes_in_flight() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let req = |id| GenRequest {
+            id,
+            prompt: vec![4, 5, 6],
+            max_new: 3,
+            ..Default::default()
+        };
+        assert!(eng.submit(req(0)).is_none());
+        assert!(!eng.draining());
+        eng.begin_drain();
+        assert!(eng.draining());
+        let out = eng.submit(req(1)).unwrap();
+        assert!(matches!(
+            out.finish,
+            FinishReason::Rejected(RejectReason::Draining)
+        ));
+        let outs = drive(&mut eng);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+        assert_eq!(outs[0].tokens.len(), 3);
+        let rep = eng.report();
+        assert_eq!(rep.reject_counts.draining, 1);
+        assert_eq!(rep.sequences, 1);
+    }
+
+    /// Fails every attempt that feeds the victim request id — the
+    /// poisoned-sequence model the quarantine bisection must isolate.
+    struct Blame {
+        victim: usize,
+    }
+
+    impl FaultInjector for Blame {
+        fn before_attempt(&mut self, _tick: usize, _attempt: usize, fed_ids: &[usize]) -> Result<()> {
+            if fed_ids.contains(&self.victim) {
+                bail!("injected poison on request {}", self.victim);
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn quarantine_evicts_poisoned_sequence_and_survivors_match_clean_run() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let reqs = || -> Vec<GenRequest> {
+            (0..3)
+                .map(|i| GenRequest {
+                    id: i,
+                    prompt: vec![(i as i32 * 7 + 1) % cfg.vocab as i32, 2, 4],
+                    max_new: 4,
+                    ..Default::default()
+                })
+                .collect()
+        };
+        let gen = || GenConfig {
+            slots: 3,
+            ..GenConfig::default()
+        };
+        let mut clean = Engine::new(&rt, &cfg, &params, &qm, gen()).unwrap();
+        let (clean_outs, _) = clean.generate(reqs()).unwrap();
+
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen()).unwrap();
+        eng.set_fault_injector(Box::new(Blame { victim: 1 }));
+        let (outs, rep) = eng.generate(reqs()).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert!(matches!(
+            outs[1].finish,
+            FinishReason::Rejected(RejectReason::Internal { .. })
+        ));
+        assert!(
+            outs[1].tokens.is_empty(),
+            "poisoned from its first feed: no tokens survive"
+        );
+        for i in [0usize, 2] {
+            assert_eq!(outs[i].finish, FinishReason::MaxTokens);
+            assert_eq!(outs[i].tokens, clean_outs[i].tokens, "survivor {i} diverged");
+        }
+        assert_eq!(rep.quarantined, 1);
+        assert_eq!(rep.reject_counts.internal, 1);
+        assert_eq!(rep.step_retried, 2, "the transient budget runs out first");
+        assert!(rep.step_faults >= 3, "retries + at least one bisection probe");
+        assert_eq!(rep.sequences, 2);
+        eng.check_paged_invariants().unwrap();
+        eng.flush_prefix_cache().unwrap();
+        eng.assert_pool_all_free().unwrap();
+    }
+
+    /// Fails the first `remaining` compute attempts, then heals — the
+    /// transient-fault model the bounded retry must absorb.
+    struct Flaky {
+        remaining: usize,
+    }
+
+    impl FaultInjector for Flaky {
+        fn before_attempt(&mut self, _tick: usize, _attempt: usize, _fed: &[usize]) -> Result<()> {
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                bail!("transient backend hiccup");
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn transient_step_failures_are_retried_without_quarantine() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let req = || GenRequest {
+            id: 0,
+            prompt: vec![5, 1, 2],
+            max_new: 4,
+            ..Default::default()
+        };
+        let mut clean = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        let (clean_outs, _) = clean.generate(vec![req()]).unwrap();
+
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, GenConfig::default()).unwrap();
+        eng.set_fault_injector(Box::new(Flaky { remaining: 2 }));
+        let (outs, rep) = eng.generate(vec![req()]).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+        assert_eq!(outs[0].tokens, clean_outs[0].tokens, "retries must not change the stream");
+        assert_eq!(rep.step_faults, 2);
+        assert_eq!(rep.step_retried, 2);
+        assert_eq!(rep.quarantined, 0);
+        assert_eq!(rep.sequences, 1);
+    }
+
+    #[test]
+    fn flush_prefix_cache_releases_every_cached_block() {
+        let rt = Runtime::native();
+        let (cfg, params, qm) = pico_model(&rt);
+        let gen = GenConfig {
+            block_tokens: 4,
+            ..GenConfig::default()
+        };
+        let mut eng = Engine::new(&rt, &cfg, &params, &qm, gen).unwrap();
+        let (outs, _) = eng
+            .generate(vec![GenRequest {
+                id: 0,
+                prompt: (0..9).map(|k| ((k * 5 + 1) % cfg.vocab) as i32).collect(),
+                max_new: 3,
+                ..Default::default()
+            }])
+            .unwrap();
+        assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+        assert!(eng.prefix_cache_nodes().unwrap() > 0);
+        assert!(
+            eng.assert_pool_all_free().is_err(),
+            "the cache still holds block references"
+        );
+        let dropped = eng.flush_prefix_cache().unwrap();
+        assert!(dropped >= 2, "two full bt=4 blocks were cached");
+        assert_eq!(eng.prefix_cache_nodes().unwrap(), 0);
+        eng.assert_pool_all_free().unwrap();
+        eng.check_paged_invariants().unwrap();
     }
 }

@@ -39,9 +39,12 @@ SUBCOMMANDS
   generate  --model M [--prompts N] [--prompt-len P] [--max-new K]
             [--temperature T] [--top-k K] [--gen-seed S] [--stop-id ID]
             [--block-tokens B] [--pool-blocks N] [--dense]
+            [--deadline-ms MS] [--max-queue N]
             KV-cached generation (greedy when T <= 0; ID < 0 disables).
             Paged KV cache + radix prefix sharing by default; --dense
-            pins the seed [L, slots, T, d] slabs (same tokens either way)
+            pins the seed [L, slots, T, d] slabs (same tokens either way).
+            --deadline-ms caps each request's wall-clock budget (0 = no
+            deadline); --max-queue bounds admission (0 = unbounded)
   inspect                                    list artifacts + configs
 
 COMMON FLAGS
@@ -244,6 +247,8 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     let block_tokens = args.get_usize("block-tokens", 0)?;
     let pool_blocks = args.get_usize("pool-blocks", 0)?;
     let dense = args.has("dense");
+    let deadline = args.get_ms_opt("deadline-ms")?;
+    let max_queue = args.get_usize("max-queue", 0)?;
 
     let pipe = Pipeline::new(rt, cfg.clone());
     let (params, _) = pipe.checkpoint()?;
@@ -275,6 +280,7 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             paged: !dense,
             block_tokens,
             pool_blocks,
+            max_queue,
             ..GenConfig::default()
         },
     )?;
@@ -286,6 +292,8 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             prompt: p.clone(),
             max_new,
             stop_id,
+            deadline,
+            ..Default::default()
         })
         .collect();
     let (outs, rep) = engine.generate(reqs)?;
@@ -299,6 +307,8 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
                 let tag = match finish {
                     FinishReason::MaxTokens => "max-tokens",
                     FinishReason::Stop => "stop-id",
+                    FinishReason::DeadlineExceeded => "deadline",
+                    FinishReason::Cancelled => "cancelled",
                     FinishReason::Rejected(_) => unreachable!(),
                 };
                 println!(
@@ -323,6 +333,13 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
         rep.decode_tps(),
         rep.mean_slot_occupancy * 100.0
     );
+    if rep.cancelled + rep.deadline_exceeded + rep.quarantined > 0 {
+        println!(
+            "lifecycle: {} cancelled, {} deadline-expired, {} quarantined \
+             ({} step faults, {} retried)",
+            rep.cancelled, rep.deadline_exceeded, rep.quarantined, rep.step_faults, rep.step_retried
+        );
+    }
     if rep.pool_blocks > 0 {
         println!(
             "paged KV: {} tok/block, peak {} of {} blocks in use, \
@@ -357,7 +374,7 @@ fn serve_demo(rt: &Runtime, cfg: &RunConfig, n_requests: usize) -> Result<()> {
     let (tx, rx) = mpsc::channel();
     let mut responders = Vec::new();
     for i in 0..n_requests {
-        let (rtx, rrx) = mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         let tokens = seqs[i % seqs.len()].data().to_vec();
         tx.send(faquant::serve::Request {
             tokens,
@@ -374,6 +391,7 @@ fn serve_demo(rt: &Runtime, cfg: &RunConfig, n_requests: usize) -> Result<()> {
         &qm,
         rx,
         Duration::from_millis(5),
+        None,
     )?;
     let mut got = 0;
     for r in responders {

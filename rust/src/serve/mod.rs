@@ -20,25 +20,37 @@
 //! [`RejectReason`] sent back on the response channel (never a silent
 //! disconnect), counted per cause in the reports, and never abort the
 //! serving loop for the well-formed traffic behind them.
+//!
+//! **Failure model (DESIGN.md §14):** responses travel on drop-aware
+//! [`oneshot`] channels, so both loops observe client hang-ups — the
+//! one-shot batcher skips dead requests at dispatch (counted under
+//! [`RejectReason::Disconnected`]) and the generation loop cancels
+//! their sequences mid-flight. An optional shutdown [`CancelToken`]
+//! drains both loops gracefully: admission stops (late arrivals are
+//! answered [`RejectReason::Draining`]), in-flight work finishes, and
+//! the complete report is returned.
 
 use crate::config::ModelConfig;
-use crate::engine::{Engine, FinishReason, GenConfig, GenReport, GenRequest};
+use crate::engine::{CancelToken, Engine, FinishReason, GenConfig, GenReport, GenRequest};
 use crate::model::{Params, ROLES};
 use crate::quant::QuantizedModel;
 use crate::runtime::{lit_f32, tensor_f32, Buffer, Runtime, Value};
 use crate::tensor::{percentile, Tensor, TensorI32};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+pub mod oneshot;
+
 pub use crate::engine::{RejectCounts, RejectReason};
+pub use oneshot::{oneshot_channel, OneshotReceiver, OneshotSender, RecvError};
 
 /// One scoring request: a full token sequence; the response carries the
 /// logits of the final position (next-token distribution).
 pub struct Request {
     pub tokens: Vec<i32>,
-    pub respond: mpsc::Sender<Response>,
+    pub respond: OneshotSender<Response>,
 }
 
 /// A successful scoring response.
@@ -90,7 +102,14 @@ pub struct GenServeRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub stop_id: Option<i32>,
-    pub respond: mpsc::Sender<GenServeResponse>,
+    /// Optional per-request wall-clock budget, measured from engine
+    /// submission ([`crate::engine::FinishReason::DeadlineExceeded`]).
+    pub deadline: Option<Duration>,
+    /// Optional cooperative cancel token. The serving loop registers
+    /// one itself when absent (it needs one to convert a client
+    /// disconnect into a cancel), so passing `None` costs nothing.
+    pub cancel: Option<CancelToken>,
+    pub respond: OneshotSender<GenServeResponse>,
 }
 
 /// What a generation client hears back.
@@ -110,7 +129,8 @@ pub enum GenServeResponse {
 #[derive(Clone, Debug)]
 pub struct GenServeReport {
     pub engine: GenReport,
-    /// Completed + rejected requests seen on the queue.
+    /// Requests seen on the queue: completed + rejected (quarantined
+    /// included) + cancelled + deadline-expired.
     pub requests: usize,
     pub p50_ms: f32,
     pub p95_ms: f32,
@@ -180,8 +200,10 @@ fn validate_oneshot(tokens: &[i32], want_len: usize, vocab: usize) -> Option<Rej
 }
 
 /// Run the one-shot serving loop over a closed set of requests
-/// (demo/benchmark mode): consumes the receiver until disconnect,
-/// returns the report.
+/// (demo/benchmark mode): consumes the receiver until disconnect — or
+/// until `shutdown` fires, which stops admission (late arrivals are
+/// answered [`RejectReason::Draining`]) while already-accepted requests
+/// still execute — and returns the report.
 pub fn serve_requests(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -189,6 +211,7 @@ pub fn serve_requests(
     qm: &QuantizedModel,
     rx: mpsc::Receiver<Request>,
     max_wait: Duration,
+    shutdown: Option<CancelToken>,
 ) -> Result<ServeReport> {
     // §Perf: the weight bundle is prepared once through the runtime's
     // prepared-state map (dequantize-once packed panels on the native
@@ -206,6 +229,22 @@ pub fn serve_requests(
     let mut done = false;
 
     while !done || !pending.is_empty() {
+        if !done && shutdown.as_ref().is_some_and(|s| s.is_cancelled()) {
+            // Graceful drain: stop admission. Whatever is already
+            // sitting in the intake queue is answered `Draining`
+            // (never silently dropped); accepted requests in `pending`
+            // still execute below.
+            loop {
+                match rx.try_recv() {
+                    Ok(req) => {
+                        reject_counts.note(&RejectReason::Draining);
+                        let _ = req.respond.send(Response::Rejected(RejectReason::Draining));
+                    }
+                    Err(mpsc::TryRecvError::Empty | mpsc::TryRecvError::Disconnected) => break,
+                }
+            }
+            done = true;
+        }
         // Fill the batch window, rejecting malformed requests at intake
         // with a structured reason (a wrong length would corrupt the
         // fixed-shape batch; an out-of-range token id would make the
@@ -226,6 +265,17 @@ pub fn serve_requests(
                 Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
             }
         }
+        // Dispatch-time disconnect check: a client that dropped its
+        // receiver while queued would waste a batch slot (its logits
+        // computed for nobody) — skip it and count the dead request.
+        pending.retain(|(req, _)| {
+            if req.respond.is_disconnected() {
+                reject_counts.note(&RejectReason::Disconnected);
+                false
+            } else {
+                true
+            }
+        });
         if pending.is_empty() {
             continue;
         }
@@ -290,14 +340,32 @@ pub fn serve_requests(
     })
 }
 
+/// One admitted generation request waiting for its engine output.
+struct InflightEntry {
+    respond: OneshotSender<GenServeResponse>,
+    queued_at: Instant,
+    /// The sequence's cancel token (the client's, or one the loop
+    /// registered) — fired when the client's receiver is found dropped.
+    cancel: CancelToken,
+}
+
 /// Run the generation serving loop over a request queue until the sender
-/// disconnects and all in-flight sequences drain.
+/// disconnects and all in-flight sequences drain — or until `shutdown`
+/// fires, which puts the engine into drain mode: fresh requests are
+/// answered [`RejectReason::Draining`] while in-flight sequences run to
+/// completion, and the full report is still returned.
 ///
 /// Requests are admitted into the engine's slot queue as they arrive —
 /// between decode steps, so a request that shows up while long sequences
 /// are mid-generation starts as soon as any slot frees (continuous
 /// batching). Invalid requests are answered immediately with their
-/// [`RejectReason`] and counted per cause in `report.engine`.
+/// [`RejectReason`] and counted per cause in `report.engine`. A client
+/// that drops its response receiver mid-generation has its sequence
+/// cancelled ([`FinishReason::Cancelled`]) instead of decoding tokens
+/// nobody will read; abnormal completions (cancel, deadline expiry,
+/// quarantine) still answer with `Done { finish, .. }` carrying the
+/// partial tokens.
+#[allow(clippy::too_many_arguments)]
 pub fn serve_generate(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -306,24 +374,29 @@ pub fn serve_generate(
     gen: GenConfig,
     rx: mpsc::Receiver<GenServeRequest>,
     max_wait: Duration,
+    shutdown: Option<CancelToken>,
 ) -> Result<GenServeReport> {
-    type Inflight = HashMap<usize, (mpsc::Sender<GenServeResponse>, Instant)>;
-
     /// Submit one queue request to the engine; rejections answer
     /// immediately, admissions wait in `inflight` for their slot.
     fn admit(
         engine: &mut Engine<'_>,
-        inflight: &mut Inflight,
+        inflight: &mut BTreeMap<usize, InflightEntry>,
         next_id: &mut usize,
         req: GenServeRequest,
     ) {
         let id = *next_id;
         *next_id += 1;
+        // Always register a token: the loop needs one to convert a
+        // client disconnect into a cancel, whether or not the client
+        // kept a handle for itself.
+        let cancel = req.cancel.unwrap_or_default();
         let out = engine.submit(GenRequest {
             id,
             prompt: req.prompt,
             max_new: req.max_new,
             stop_id: req.stop_id,
+            deadline: req.deadline,
+            cancel: Some(cancel.clone()),
         });
         match out {
             Some(immediate) => {
@@ -343,18 +416,31 @@ pub fn serve_generate(
                 let _ = req.respond.send(resp);
             }
             None => {
-                inflight.insert(id, (req.respond, Instant::now()));
+                inflight.insert(
+                    id,
+                    InflightEntry {
+                        respond: req.respond,
+                        queued_at: Instant::now(),
+                        cancel,
+                    },
+                );
             }
         }
     }
 
     let mut engine = Engine::new(rt, cfg, params, qm, gen)?;
-    let mut inflight: Inflight = HashMap::new();
+    let mut inflight: BTreeMap<usize, InflightEntry> = BTreeMap::new();
     let mut latencies_ms: Vec<f32> = Vec::new();
     let mut next_id = 0usize;
     let mut done = false;
 
     loop {
+        if !engine.draining() && shutdown.as_ref().is_some_and(|s| s.is_cancelled()) {
+            // Graceful drain: the engine rejects fresh submits with
+            // `Draining` (clients get answered, not ignored) while
+            // everything already admitted runs to completion.
+            engine.begin_drain();
+        }
         // Drain whatever is immediately available (never blocks).
         loop {
             match rx.try_recv() {
@@ -366,8 +452,17 @@ pub fn serve_generate(
                 }
             }
         }
+        // Mid-flight disconnect sweep: a client that dropped its
+        // receiver gets its sequence cancelled (the engine observes
+        // the token at its next lifecycle sweep) instead of burning
+        // decode steps on tokens nobody will read.
+        for entry in inflight.values() {
+            if !entry.cancel.is_cancelled() && entry.respond.is_disconnected() {
+                entry.cancel.cancel();
+            }
+        }
         if !engine.has_work() {
-            if done {
+            if done || engine.draining() {
                 break;
             }
             // Idle: wait for the next request (or the disconnect).
@@ -380,12 +475,12 @@ pub fn serve_generate(
         }
         for out in engine.step()? {
             let now = Instant::now();
-            if let Some((tx, queued_at)) = inflight.remove(&out.id) {
-                latencies_ms.push(now.duration_since(queued_at).as_secs_f32() * 1e3);
-                let _ = tx.send(GenServeResponse::Done {
+            if let Some(entry) = inflight.remove(&out.id) {
+                latencies_ms.push(now.duration_since(entry.queued_at).as_secs_f32() * 1e3);
+                let _ = entry.respond.send(GenServeResponse::Done {
                     tokens: out.tokens,
                     finish: out.finish,
-                    queued_at,
+                    queued_at: entry.queued_at,
                     done_at: now,
                 });
             }
@@ -394,7 +489,10 @@ pub fn serve_generate(
 
     let engine_report = engine.report();
     Ok(GenServeReport {
-        requests: engine_report.sequences + engine_report.rejected,
+        requests: engine_report.sequences
+            + engine_report.rejected
+            + engine_report.cancelled
+            + engine_report.deadline_exceeded,
         engine: engine_report,
         p50_ms: percentile(&latencies_ms, 50.0),
         p95_ms: percentile(&latencies_ms, 95.0),

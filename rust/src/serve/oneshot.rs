@@ -1,0 +1,238 @@
+//! Drop-aware one-shot response channels for the serving loops.
+//!
+//! `std::sync::mpsc` cannot answer "is the other side still there?"
+//! without actually sending, but the fault-tolerant serve paths need
+//! exactly that: the one-shot batcher skips requests whose client hung
+//! up before dispatch (counted under
+//! [`crate::engine::RejectReason::Disconnected`]), and the generation
+//! loop converts a mid-flight disconnect into a cancel instead of
+//! decoding tokens nobody will read. This channel keeps both sides'
+//! liveness flags under the same mutex as the value, so a
+//! `send`/`is_disconnected` check can never race a hang-up: whichever
+//! happens first is the one the other observes.
+//!
+//! Poisoned locks are recovered with `into_inner()` — the state is a
+//! plain value + two booleans, valid after any panic mid-update, and a
+//! response channel must keep working even if some client thread died
+//! (the PR 6 pool-recovery argument, applied to serving).
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+struct State<T> {
+    value: Option<T>,
+    sender_alive: bool,
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> Shared<T> {
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Sending half: consumed by [`OneshotSender::send`]; dropping it
+/// unsent wakes the receiver with [`RecvError::Disconnected`].
+pub struct OneshotSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half: dropping it makes the sender observe
+/// [`OneshotSender::is_disconnected`] and future sends fail.
+pub struct OneshotReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Why a receive returned no value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// The sender was dropped without sending.
+    Disconnected,
+    /// No value arrived within the timeout (the sender may still send).
+    Timeout,
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Disconnected => write!(f, "sender dropped without responding"),
+            RecvError::Timeout => write!(f, "no response within the timeout"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Create a connected one-shot channel pair.
+pub fn oneshot_channel<T>() -> (OneshotSender<T>, OneshotReceiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            value: None,
+            sender_alive: true,
+            receiver_alive: true,
+        }),
+        cv: Condvar::new(),
+    });
+    (
+        OneshotSender {
+            shared: Arc::clone(&shared),
+        },
+        OneshotReceiver { shared },
+    )
+}
+
+impl<T> OneshotSender<T> {
+    /// Deliver the value. Returns it back when the receiver already
+    /// hung up (so the caller can account for the dead client).
+    pub fn send(self, value: T) -> Result<(), T> {
+        let mut st = self.shared.lock();
+        if !st.receiver_alive {
+            return Err(value);
+        }
+        st.value = Some(value);
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Whether the receiving half has been dropped. Checked under the
+    /// same lock a `send` takes, so a `false` here means a send started
+    /// right now would be delivered.
+    pub fn is_disconnected(&self) -> bool {
+        !self.shared.lock().receiver_alive
+    }
+}
+
+impl<T> Drop for OneshotSender<T> {
+    fn drop(&mut self) {
+        // After a successful `send` the value is already in the state;
+        // clearing `sender_alive` then changes nothing the receiver can
+        // observe (it always takes the value first).
+        self.shared.lock().sender_alive = false;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T> OneshotReceiver<T> {
+    /// Block until the value arrives or the sender is dropped.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.shared.lock();
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if !st.sender_alive {
+                return Err(RecvError::Disconnected);
+            }
+            st = self
+                .shared
+                .cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block until the value arrives, the sender is dropped, or
+    /// `timeout` elapses.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut st = self.shared.lock();
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if !st.sender_alive {
+                return Err(RecvError::Disconnected);
+            }
+            let left = deadline
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::MAX);
+            if left.is_zero() {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, _timed_out) = self
+                .shared
+                .cv
+                .wait_timeout(st, left)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+}
+
+impl<T> Drop for OneshotReceiver<T> {
+    fn drop(&mut self) {
+        self.shared.lock().receiver_alive = false;
+        self.shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_recv_delivers() {
+        let (tx, rx) = oneshot_channel();
+        assert!(!tx.is_disconnected());
+        assert!(tx.send(42).is_ok());
+        assert_eq!(rx.recv(), Ok(42));
+        // A second recv sees the (now value-less, sender-dropped) state.
+        assert_eq!(rx.recv(), Err(RecvError::Disconnected));
+    }
+
+    #[test]
+    fn dropped_receiver_is_observed_and_fails_send() {
+        let (tx, rx) = oneshot_channel();
+        drop(rx);
+        assert!(tx.is_disconnected());
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn dropped_sender_wakes_recv_with_disconnected() {
+        let (tx, rx) = oneshot_channel::<i32>();
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError::Disconnected));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn recv_timeout_times_out_while_sender_lives() {
+        let (tx, rx) = oneshot_channel::<i32>();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvError::Timeout)
+        );
+        // Still connected: the send after a timeout is delivered.
+        assert!(tx.send(9).is_ok());
+        assert_eq!(rx.recv_timeout(Duration::from_millis(50)), Ok(9));
+    }
+
+    #[test]
+    fn cross_thread_roundtrip() {
+        let (tx, rx) = oneshot_channel();
+        let h = std::thread::spawn(move || {
+            let _ = tx.send(1234);
+        });
+        assert_eq!(rx.recv(), Ok(1234));
+        assert!(h.join().is_ok());
+    }
+
+    #[test]
+    fn send_delivered_before_sender_drop_is_not_lost() {
+        let (tx, rx) = oneshot_channel();
+        assert!(tx.send(5).is_ok());
+        // Sender is gone (consumed by send) but the value was stored
+        // first; the receiver must get it, not Disconnected.
+        assert_eq!(rx.recv_timeout(Duration::from_millis(50)), Ok(5));
+    }
+}

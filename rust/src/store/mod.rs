@@ -1,12 +1,17 @@
 //! `.fqt` binary tensor store (S2): named-tensor checkpoints.
 //!
-//! Little-endian layout:
+//! Little-endian layout (v2):
 //! ```text
-//! magic   b"FQT1"
+//! magic   b"FQT2"
 //! u32     n_entries
 //! entry*: u16 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
-//!         u8 ndim | u64 dims[ndim] | raw LE payload
+//!         u8 ndim | u64 dims[ndim] | raw LE payload | u64 fnv1a(payload)
 //! ```
+//! The per-tensor FNV-1a checksum catches silent payload corruption
+//! (bit rot, torn writes) at load time, naming the damaged tensor.
+//! Legacy `b"FQT1"` files — same layout minus the checksum word — still
+//! load; `save` always writes v2.
+//!
 //! Used for model checkpoints (rust writes, rust reads), quantized model
 //! bundles, and calibration stat dumps. Python never reads these — the
 //! rust coordinator uploads tensors to PJRT directly.
@@ -17,7 +22,25 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"FQT1";
+const MAGIC_V1: &[u8; 4] = b"FQT1";
+const MAGIC: &[u8; 4] = b"FQT2";
+
+/// Streaming FNV-1a (64-bit); same constants as the runtime's config
+/// fingerprint hasher.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
 
 /// An ordered collection of named tensors.
 #[derive(Default, Clone, Debug)]
@@ -80,15 +103,23 @@ impl TensorStore {
         w.write_all(&(self.len() as u32).to_le_bytes())?;
         for (name, t) in &self.f32s {
             write_header(&mut w, name, 0, t.shape())?;
+            let mut fnv = Fnv::new();
             for v in t.data() {
-                w.write_all(&v.to_le_bytes())?;
+                let le = v.to_le_bytes();
+                fnv.update(&le);
+                w.write_all(&le)?;
             }
+            w.write_all(&fnv.0.to_le_bytes())?;
         }
         for (name, t) in &self.i32s {
             write_header(&mut w, name, 1, t.shape())?;
+            let mut fnv = Fnv::new();
             for v in t.data() {
-                w.write_all(&v.to_le_bytes())?;
+                let le = v.to_le_bytes();
+                fnv.update(&le);
+                w.write_all(&le)?;
             }
+            w.write_all(&fnv.0.to_le_bytes())?;
         }
         Ok(())
     }
@@ -106,9 +137,11 @@ impl TensorStore {
             path,
         };
         let magic = c.bytes(4, "magic")?;
-        if magic != MAGIC {
-            bail!("{}: bad magic {:?}", path.display(), magic);
-        }
+        let checked = match magic {
+            m if m == MAGIC => true,
+            m if m == MAGIC_V1 => false,
+            m => bail!("{}: bad magic {m:?}", path.display()),
+        };
         let n = c.u32("entry count")? as usize;
         let mut store = Self::new();
         for e in 0..n {
@@ -137,6 +170,19 @@ impl TensorStore {
                 .checked_mul(4)
                 .with_context(|| format!("tensor '{name}': payload size overflows"))?;
             let payload = c.bytes(payload_bytes, &name)?;
+            if checked {
+                let want = c.u64(&name)?;
+                let mut fnv = Fnv::new();
+                fnv.update(payload);
+                if fnv.0 != want {
+                    bail!(
+                        "{}: tensor '{name}': checksum mismatch (stored {want:#018x}, \
+                         computed {:#018x}) — corrupted artifact",
+                        path.display(),
+                        fnv.0
+                    );
+                }
+            }
             match dtype {
                 0 => {
                     let data: Vec<f32> = payload
@@ -310,10 +356,11 @@ mod tests {
 
     #[test]
     fn duplicate_tensor_names_rejected() {
-        // Handcraft a file with two entries under the same name.
+        // Handcraft a (legacy, checksum-less) file with two entries
+        // under the same name.
         let p = tmp("dup");
         let mut buf = Vec::new();
-        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(MAGIC_V1);
         buf.extend_from_slice(&2u32.to_le_bytes());
         for _ in 0..2 {
             buf.extend_from_slice(&1u16.to_le_bytes());
@@ -326,6 +373,59 @@ mod tests {
         std::fs::write(&p, &buf).unwrap();
         let err = TensorStore::load(&p).unwrap_err().to_string();
         assert!(err.contains("duplicate"), "unexpected error '{err}'");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn payload_bit_flip_is_detected_and_names_the_tensor() {
+        let mut s = TensorStore::new();
+        let mut rng = Rng::new(11);
+        s.insert("layer.weight", Tensor::randn(&mut rng, &[4, 4], 1.0));
+        let p = tmp("flip");
+        s.save(&p).unwrap();
+        let mut buf = std::fs::read(&p).unwrap();
+        // Flip one bit in the middle of the 64-byte payload (which
+        // starts after magic + count + entry header = 4 + 4 + 2 + 12 +
+        // 1 + 1 + 16 = 40 bytes), leaving every header field intact.
+        let mid = 40 + 32;
+        buf[mid] ^= 0x01;
+        std::fs::write(&p, &buf).unwrap();
+        let err = TensorStore::load(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum mismatch") && err.contains("'layer.weight'"),
+            "unexpected error '{err}'"
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn legacy_fqt1_files_still_load() {
+        // A pre-checksum v1 file: same layout, no trailing fnv word.
+        let p = tmp("v1");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC_V1);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'w');
+        buf.push(0); // dtype f32
+        buf.push(1); // ndim
+        buf.extend_from_slice(&2u64.to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-2.5f32).to_le_bytes());
+        std::fs::write(&p, &buf).unwrap();
+        let back = TensorStore::load(&p).unwrap();
+        assert_eq!(back.get("w").unwrap().data(), &[1.5, -2.5]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn saved_files_carry_the_v2_magic() {
+        let mut s = TensorStore::new();
+        s.insert("x", Tensor::from_vec(&[1], vec![1.0]).unwrap());
+        let p = tmp("magic2");
+        s.save(&p).unwrap();
+        let buf = std::fs::read(&p).unwrap();
+        assert_eq!(&buf[..4], MAGIC);
         std::fs::remove_file(p).ok();
     }
 

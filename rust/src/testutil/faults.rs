@@ -1,0 +1,522 @@
+//! Deterministic fault-injection harness for the request lifecycle.
+//!
+//! The differential fuzz harness ([`super::fuzz`]) pins the HAPPY path:
+//! paged engine == dense engine, bit for bit. This module pins the
+//! FAILURE path (DESIGN.md §14): from one `u64` seed it derives a
+//! [`FaultPlan`] — forced step errors (transient and poisoned-request),
+//! forced admission stalls, a client cancel, and deadline storms — and
+//! replays the same seeded workload under it, asserting after every
+//! step that
+//!
+//! 1. paged-store invariants hold (`Engine::check_paged_invariants`),
+//! 2. the drain epilogue leaks zero blocks (prefix cache flushed, pool
+//!    fully free, reservations zero),
+//! 3. every SURVIVING request's token stream is bitwise identical to
+//!    the fault-free run of the same seed, and every aborted request's
+//!    partial tokens are a bitwise prefix of it,
+//! 4. the whole faulted run is itself bitwise reproducible at 1/2/8
+//!    threads.
+//!
+//! **Why it is deterministic:** every fault decision is a pure function
+//! of the engine's tick counter, the attempt index, and the fed request
+//! ids — never wall time (the engine runs its virtual clock,
+//! [`VIRTUAL_STEP_MS`] per tick) and never ambient randomness. Thread
+//! count changes how a step's arithmetic is scheduled, not which steps
+//! run, so the fault schedule — and therefore every abort — lands on
+//! identical ticks in every configuration.
+
+use super::{fixtures, fuzz};
+use crate::config::Method;
+use crate::engine::{
+    CancelToken, Engine, FaultInjector, FinishReason, GenConfig, GenOutput, GenReport, GenRequest,
+};
+use crate::model::Params;
+use crate::quant::QuantizedModel;
+use crate::runtime::Runtime;
+use crate::tensor::{par, Rng};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Virtual-clock advance per engine tick (milliseconds). Deadlines in a
+/// fault plan are budgets in these units, so expiry is tick-exact.
+pub const VIRTUAL_STEP_MS: u64 = 1;
+
+/// A seeded schedule of faults over one fuzz workload. All request
+/// targets are distinct ids of *valid* requests
+/// ([`fuzz::request_is_valid`]) — faults must land on sequences that
+/// actually decode, or the assertions would be vacuous.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// tick -> number of transient attempt failures to inject there.
+    /// Each budget is <= the engine's `step_retries`, so transients are
+    /// always absorbed by the bounded retry and never quarantine anyone.
+    pub transient: BTreeMap<usize, usize>,
+    /// Poisoned request: every compute attempt feeding it fails once
+    /// `blame_from_tick` is reached — the quarantine bisection must
+    /// isolate exactly this id.
+    pub blamed: Option<usize>,
+    pub blame_from_tick: usize,
+    /// Forced pool exhaustion: admission stalls for ticks in `[a, b)`.
+    pub stall_ticks: Option<(usize, usize)>,
+    /// Client cancel: `(id, delay)` — the token fires `delay` driver
+    /// steps after the request's submission step.
+    pub cancel: Option<(usize, usize)>,
+    /// Deadline storm, instant flavor: this request gets a zero budget
+    /// and must expire in the queue with no tokens.
+    pub zero_deadline: Option<usize>,
+    /// Deadline storm, timed flavor: `(id, budget_ms)` on the virtual
+    /// clock — may expire mid-decode or finish first; either way the
+    /// tokens must prefix the fault-free stream.
+    pub timed_deadline: Option<(usize, u64)>,
+}
+
+impl FaultPlan {
+    /// Derive the plan for `workload` from the case seed alone.
+    pub fn from_seed(seed: u64, workload: &[(usize, GenRequest)], spec: &fuzz::FuzzSpec) -> Self {
+        let mut rng = Rng::new(seed ^ 0x00FA_0717);
+        let mut valid: Vec<usize> = workload
+            .iter()
+            .filter(|(_, r)| fuzz::request_is_valid(r, spec))
+            .map(|(_, r)| r.id)
+            .collect();
+        // Fisher–Yates on the seeded stream: target picks are a pure
+        // function of the seed and the workload order.
+        for i in (1..valid.len()).rev() {
+            let j = rng.below(i + 1);
+            valid.swap(i, j);
+        }
+        let mut picks = valid.into_iter();
+        let blamed = picks.next();
+        let zero_deadline = picks.next();
+        let cancel = picks.next().map(|id| (id, 1 + rng.below(5)));
+        let timed_deadline = picks.next().map(|id| (id, 2 + rng.below(10) as u64));
+        let mut transient = BTreeMap::new();
+        for _ in 0..(1 + rng.below(2)) {
+            transient.insert(rng.below(8), 1 + rng.below(2));
+        }
+        let blame_from_tick = if rng.below(2) == 0 { 0 } else { 2 + rng.below(8) };
+        let stall_ticks = (rng.below(2) == 0).then(|| {
+            let a = 1 + rng.below(4);
+            (a, a + 1 + rng.below(4))
+        });
+        Self {
+            seed,
+            transient,
+            blamed,
+            blame_from_tick,
+            stall_ticks,
+            cancel,
+            zero_deadline,
+            timed_deadline,
+        }
+    }
+
+    fn cancel_id(&self) -> Option<usize> {
+        self.cancel.map(|(id, _)| id)
+    }
+
+    fn timed_deadline_id(&self) -> Option<usize> {
+        self.timed_deadline.map(|(id, _)| id)
+    }
+}
+
+/// Executes a [`FaultPlan`] through the engine's injection seam.
+pub struct PlanInjector {
+    plan: FaultPlan,
+    /// Per-tick transient failures already injected.
+    seen: BTreeMap<usize, usize>,
+}
+
+impl PlanInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            seen: BTreeMap::new(),
+        }
+    }
+}
+
+impl FaultInjector for PlanInjector {
+    fn before_attempt(&mut self, tick: usize, attempt: usize, fed_ids: &[usize]) -> Result<()> {
+        // Transient check FIRST: its budget (<= step_retries) must be
+        // consumed by the bounded retry before any bisection probe, so
+        // a transient tick can never get an innocent slot quarantined —
+        // even when it collides with a tick where the poisoned request
+        // is fed.
+        if let Some(&fails) = self.plan.transient.get(&tick) {
+            let seen = self.seen.entry(tick).or_insert(0);
+            if *seen < fails {
+                *seen += 1;
+                bail!(
+                    "fault plan {:#x}: transient failure {}/{fails} at tick {tick} \
+                     (attempt {attempt})",
+                    self.plan.seed,
+                    *seen
+                );
+            }
+        }
+        if let Some(victim) = self.plan.blamed {
+            if tick >= self.plan.blame_from_tick && fed_ids.contains(&victim) {
+                bail!(
+                    "fault plan {:#x}: poisoned request {victim} fed at tick {tick} \
+                     (attempt {attempt})",
+                    self.plan.seed
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn stall_admission(&mut self, tick: usize) -> bool {
+        self.plan
+            .stall_ticks
+            .is_some_and(|(a, b)| tick >= a && tick < b)
+    }
+}
+
+/// Outputs + report of one faulted run.
+pub struct FaultRunResult {
+    /// All workload outputs (drain-probe rejection excluded), sorted by
+    /// request id.
+    pub outs: Vec<GenOutput>,
+    pub report: GenReport,
+}
+
+/// Drive one engine through the workload under `plan`: per-request
+/// deadline/cancel mutations applied at submit, the injector installed
+/// at the engine seam, paged invariants checked after EVERY step, a
+/// graceful drain (with a probe submit that must answer `Draining`)
+/// once the workload is fully submitted, and a zero-leak pool check at
+/// the end.
+pub fn run_workload_faulted(
+    rt: &Runtime,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    workload: &[(usize, GenRequest)],
+    plan: &FaultPlan,
+) -> Result<FaultRunResult> {
+    if let Some(&max_fails) = plan.transient.values().max() {
+        if gen.step_retries < max_fails {
+            bail!(
+                "fault plan {:#x}: transient budget {max_fails} exceeds step_retries {} — \
+                 an innocent slot could be quarantined",
+                plan.seed,
+                gen.step_retries
+            );
+        }
+    }
+    let cfg = fixtures::pico();
+    let mut eng = Engine::new(rt, &cfg, params, qm, gen)?;
+    eng.set_fault_injector(Box::new(PlanInjector::new(plan.clone())));
+    let cancel_token = CancelToken::new();
+    let mut cancel_fire: Option<usize> = None;
+    let mut outs = Vec::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    let mut draining = false;
+    let step_bound = 10_000 + workload.iter().map(|(at, _)| *at).max().unwrap_or(0);
+    loop {
+        while next < workload.len() && workload[next].0 <= step {
+            let (at, req) = &workload[next];
+            let mut req = req.clone();
+            if plan.zero_deadline == Some(req.id) {
+                req.deadline = Some(Duration::ZERO);
+            }
+            if let Some((id, ms)) = plan.timed_deadline {
+                if id == req.id {
+                    req.deadline = Some(Duration::from_millis(ms));
+                }
+            }
+            if let Some((id, delay)) = plan.cancel {
+                if id == req.id {
+                    req.cancel = Some(cancel_token.clone());
+                    cancel_fire = Some(at + delay);
+                }
+            }
+            if let Some(rejected) = eng.submit(req) {
+                outs.push(rejected);
+            }
+            next += 1;
+        }
+        if next == workload.len() && !draining {
+            draining = true;
+            eng.begin_drain();
+            // Drain gate: a fresh submit must be answered `Draining`
+            // (this also guarantees `reject_counts.draining >= 1`).
+            let probe = eng.submit(GenRequest {
+                id: workload.len() + 1000,
+                prompt: vec![0],
+                max_new: 1,
+                ..Default::default()
+            });
+            let probe_rejected = matches!(
+                probe.as_ref().map(|o| &o.finish),
+                Some(FinishReason::Rejected(r)) if r.cause() == "draining"
+            );
+            if !probe_rejected {
+                bail!(
+                    "fault seed {}: draining engine did not reject a fresh submit: {probe:?}",
+                    plan.seed
+                );
+            }
+        }
+        if cancel_fire == Some(step) {
+            cancel_token.cancel();
+        }
+        if next == workload.len() && !eng.has_work() {
+            break;
+        }
+        outs.extend(eng.step()?);
+        eng.check_paged_invariants()?;
+        step += 1;
+        if step > step_bound {
+            bail!(
+                "fault seed {}: engine failed to drain within {step_bound} steps \
+                 ({} of {} outputs)",
+                plan.seed,
+                outs.len(),
+                workload.len()
+            );
+        }
+    }
+    // Zero leaked blocks after drain: once the prefix cache lets go of
+    // its references, every pool block must be back on the free list
+    // and no reservation may survive.
+    eng.flush_prefix_cache()?;
+    eng.assert_pool_all_free()?;
+    eng.check_paged_invariants()?;
+    if let Some((free, in_use, pool, reserved)) = eng.pool_stats() {
+        if in_use != 0 || reserved != 0 || free != pool {
+            bail!(
+                "fault seed {}: pool leaked after drain: free {free}, in_use {in_use}, \
+                 pool {pool}, reserved {reserved}",
+                plan.seed
+            );
+        }
+    }
+    outs.sort_by_key(|o| o.id);
+    Ok(FaultRunResult {
+        outs,
+        report: eng.report(),
+    })
+}
+
+/// Assert one faulted run against the fault-free baseline of the same
+/// seed: survivors bitwise identical, aborts only where the plan aimed
+/// them and always a bitwise prefix, and the report's fault counters
+/// consistent with the plan.
+pub fn check_faulted_outputs(
+    seed: u64,
+    plan: &FaultPlan,
+    base: &[GenOutput],
+    res: &FaultRunResult,
+) -> Result<()> {
+    if base.len() != res.outs.len() {
+        bail!(
+            "fault seed {seed}: {} baseline vs {} faulted outputs",
+            base.len(),
+            res.outs.len()
+        );
+    }
+    for (b, f) in base.iter().zip(&res.outs) {
+        if b.id != f.id {
+            bail!("fault seed {seed}: output ids diverge ({} vs {})", b.id, f.id);
+        }
+        let prefix_ok = b.tokens.starts_with(&f.tokens);
+        match &f.finish {
+            FinishReason::MaxTokens | FinishReason::Stop => {
+                if f.finish != b.finish || f.tokens != b.tokens {
+                    bail!(
+                        "fault seed {seed}: survivor {} diverged from the fault-free run:\n  \
+                         base: {:?} {:?}\n  got:  {:?} {:?}",
+                        f.id,
+                        b.finish,
+                        b.tokens,
+                        f.finish,
+                        f.tokens
+                    );
+                }
+            }
+            FinishReason::DeadlineExceeded => {
+                let targeted = plan.zero_deadline == Some(f.id)
+                    || plan.timed_deadline_id() == Some(f.id);
+                if !targeted {
+                    bail!("fault seed {seed}: request {} hit a deadline nobody set", f.id);
+                }
+                if plan.zero_deadline == Some(f.id) && !f.tokens.is_empty() {
+                    bail!(
+                        "fault seed {seed}: zero-budget request {} produced {} tokens",
+                        f.id,
+                        f.tokens.len()
+                    );
+                }
+                if !prefix_ok {
+                    bail!(
+                        "fault seed {seed}: request {} deadline tokens are not a prefix \
+                         of the fault-free stream",
+                        f.id
+                    );
+                }
+            }
+            FinishReason::Cancelled => {
+                if plan.cancel_id() != Some(f.id) {
+                    bail!(
+                        "fault seed {seed}: request {} cancelled but the plan targets {:?}",
+                        f.id,
+                        plan.cancel_id()
+                    );
+                }
+                if !prefix_ok {
+                    bail!(
+                        "fault seed {seed}: request {} cancel tokens are not a prefix \
+                         of the fault-free stream",
+                        f.id
+                    );
+                }
+            }
+            FinishReason::Rejected(r) if r.cause() == "internal" => {
+                if plan.blamed != Some(f.id) {
+                    bail!(
+                        "fault seed {seed}: request {} quarantined but the plan blamed {:?}",
+                        f.id,
+                        plan.blamed
+                    );
+                }
+                if !prefix_ok {
+                    bail!(
+                        "fault seed {seed}: request {} quarantine tokens are not a prefix \
+                         of the fault-free stream",
+                        f.id
+                    );
+                }
+            }
+            FinishReason::Rejected(r) => {
+                let same = matches!(&b.finish,
+                    FinishReason::Rejected(rb) if rb.cause() == r.cause());
+                if !same {
+                    bail!(
+                        "fault seed {seed}: request {} rejection mismatch: {:?} vs {:?}",
+                        f.id,
+                        b.finish,
+                        f.finish
+                    );
+                }
+            }
+        }
+    }
+    let rep = &res.report;
+    if rep.reject_counts.draining == 0 {
+        bail!("fault seed {seed}: the drain probe was never counted");
+    }
+    if plan.zero_deadline.is_some() && rep.deadline_exceeded == 0 {
+        bail!("fault seed {seed}: the zero-budget deadline never fired");
+    }
+    if plan.blamed.is_some() && plan.blame_from_tick == 0 && rep.quarantined == 0 {
+        bail!("fault seed {seed}: tick-0 poison never quarantined its victim");
+    }
+    if rep.quarantined > 0 && rep.step_faults == 0 {
+        bail!("fault seed {seed}: quarantine without any recorded step fault");
+    }
+    Ok(())
+}
+
+/// One full fault-injection case from a single seed: seeded workload,
+/// seeded fault plan, fault-free paged baseline (1 thread), then the
+/// faulted run at 1/2/8 threads — per-run checks against the baseline
+/// plus bitwise cross-thread identity of the faulted runs themselves.
+/// Prints spec + plan so a CI failure reproduces from the log alone.
+pub fn fault_injection_case(seed: u64) -> Result<()> {
+    let spec = fuzz::FuzzSpec::from_seed(seed);
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, seed ^ 0x9E37);
+    let workload = fuzz::build_workload(cfg.vocab, cfg.seq, &spec);
+    let plan = FaultPlan::from_seed(seed, &workload, &spec);
+    println!("fault-injection seed {seed}: {spec:?}\n  plan: {plan:?}");
+    let gen = GenConfig {
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed ^ 1,
+        slots: spec.slots,
+        paged: true,
+        block_tokens: spec.block_tokens,
+        pool_blocks: spec.pool_blocks,
+        prefix_cache: true,
+        virtual_step: Some(Duration::from_millis(VIRTUAL_STEP_MS)),
+        ..GenConfig::default()
+    };
+
+    par::set_threads(1);
+    let baseline = fuzz::run_workload(&rt, &params, &qm, gen.clone(), &workload, false);
+    par::set_threads(0);
+    let baseline = baseline?;
+
+    let mut first: Option<FaultRunResult> = None;
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let res = run_workload_faulted(&rt, &params, &qm, gen.clone(), &workload, &plan);
+        par::set_threads(0);
+        let res = res?;
+        check_faulted_outputs(seed, &plan, &baseline, &res)?;
+        if let Some(ref f) = first {
+            fuzz::assert_streams_equal(
+                &f.outs,
+                &res.outs,
+                &format!("faulted run at {threads} threads vs 1 thread (fault seed {seed})"),
+            )?;
+        } else {
+            first = Some(res);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_is_seed_deterministic() {
+        let spec = fuzz::FuzzSpec::from_seed(7);
+        let w = fuzz::build_workload(256, 128, &spec);
+        let a = FaultPlan::from_seed(7, &w, &spec);
+        let b = FaultPlan::from_seed(7, &w, &spec);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn fault_plan_targets_are_distinct_valid_requests() {
+        for seed in [1u64, 42, 0xFA17] {
+            let spec = fuzz::FuzzSpec::from_seed(seed);
+            let w = fuzz::build_workload(256, 128, &spec);
+            let plan = FaultPlan::from_seed(seed, &w, &spec);
+            let targets: Vec<usize> = [
+                plan.blamed,
+                plan.zero_deadline,
+                plan.cancel_id(),
+                plan.timed_deadline_id(),
+            ]
+            .into_iter()
+            .flatten()
+            .collect();
+            for (i, &a) in targets.iter().enumerate() {
+                for &b in targets.iter().skip(i + 1) {
+                    assert_ne!(a, b, "seed {seed}: duplicate fault target");
+                }
+                let req = w
+                    .iter()
+                    .map(|(_, r)| r)
+                    .find(|r| r.id == a)
+                    .expect("target id exists in the workload");
+                assert!(
+                    fuzz::request_is_valid(req, &spec),
+                    "seed {seed}: fault target {a} is not a valid request"
+                );
+            }
+            // Transient budgets stay within the default retry budget.
+            assert!(plan.transient.values().all(|&f| f <= 2));
+        }
+    }
+}

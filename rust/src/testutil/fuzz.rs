@@ -119,10 +119,22 @@ pub fn build_workload(vocab: usize, seq: usize, spec: &FuzzSpec) -> Vec<(usize, 
                 prompt,
                 max_new,
                 stop_id,
+                ..Default::default()
             },
         ));
     }
     out
+}
+
+/// Whether a workload request runs normally on both engines (as opposed
+/// to being one of the deliberately invalid ones rejected at submit).
+/// The fault-injection harness (`testutil::faults`) uses this to pick
+/// its victims: faults must land on requests that actually decode.
+pub fn request_is_valid(r: &GenRequest, spec: &FuzzSpec) -> bool {
+    !r.prompt.is_empty()
+        && r.max_new >= 1
+        && r.prompt.len() + r.max_new <= spec.max_total
+        && r.prompt.iter().all(|&t| t >= 0)
 }
 
 /// Drive one engine through the workload: submissions happen at their

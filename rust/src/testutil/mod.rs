@@ -9,7 +9,12 @@
 //!   uses (runtime, pico preset, token batches, quantized artifacts).
 //! - [`fuzz`] — the deterministic differential fuzz harness pinning the
 //!   paged decode engine bitwise against the dense seed engine.
+//! - [`faults`] — the deterministic fault-injection harness: seeded
+//!   fault plans (step failures, pool stalls, cancels, deadline storms)
+//!   driven through the engine's injection seam, with invariants and
+//!   survivor bit-identity pinned after every fault.
 
+pub mod faults;
 pub mod fixtures;
 pub mod fuzz;
 

@@ -140,7 +140,7 @@ fn serve_roundtrip_quantized() {
     let (tx, rx) = std::sync::mpsc::channel();
     let mut responders = Vec::new();
     for i in 0..6 {
-        let (rtx, rrx) = std::sync::mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         let tokens: Vec<i32> = (0..cfg.model.seq)
             .map(|k| ((k + i * 7) % cfg.model.vocab) as i32)
             .collect();
@@ -155,13 +155,13 @@ fn serve_roundtrip_quantized() {
     // alone — not abort the whole serving loop: one with the wrong
     // sequence length, one with the right length but an out-of-range
     // token id (which would blow up the embedding gather mid-batch).
-    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    let (bad_tx, bad_rx) = faquant::serve::oneshot_channel();
     tx.send(faquant::serve::Request {
         tokens: vec![1, 2, 3],
         respond: bad_tx,
     })
     .unwrap();
-    let (oob_tx, oob_rx) = std::sync::mpsc::channel();
+    let (oob_tx, oob_rx) = faquant::serve::oneshot_channel();
     let mut oob_tokens = vec![1i32; cfg.model.seq];
     oob_tokens[7] = -5;
     tx.send(faquant::serve::Request {
@@ -177,6 +177,7 @@ fn serve_roundtrip_quantized() {
         &qm,
         rx,
         std::time::Duration::from_millis(1),
+        None,
     )
     .unwrap();
     assert_eq!(rep.requests, 6);
@@ -214,22 +215,26 @@ fn serve_generate_roundtrip() {
     let (tx, rx) = std::sync::mpsc::channel();
     let mut responders = Vec::new();
     for i in 0..5usize {
-        let (rtx, rrx) = std::sync::mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         tx.send(GenServeRequest {
             prompt: (0..4 + i).map(|k| ((k * 5 + i) % cfg.model.vocab) as i32).collect(),
             max_new: 3 + i % 3,
             stop_id: None,
+            deadline: None,
+            cancel: None,
             respond: rtx,
         })
         .unwrap();
         responders.push(rrx);
     }
     // One malformed request mid-queue: rejected with a reason, loop lives.
-    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    let (bad_tx, bad_rx) = faquant::serve::oneshot_channel();
     tx.send(GenServeRequest {
         prompt: vec![],
         max_new: 4,
         stop_id: None,
+        deadline: None,
+        cancel: None,
         respond: bad_tx,
     })
     .unwrap();
@@ -249,6 +254,7 @@ fn serve_generate_roundtrip() {
         },
         rx,
         std::time::Duration::from_millis(1),
+        None,
     )
     .unwrap();
 
@@ -300,11 +306,13 @@ fn serve_generate_shared_prefix_reports_hits() {
     let (tx, rx) = std::sync::mpsc::channel();
     let mut responders = Vec::new();
     for _ in 0..3 {
-        let (rtx, rrx) = std::sync::mpsc::channel();
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
         tx.send(GenServeRequest {
             prompt: shared.clone(),
             max_new: 2,
             stop_id: None,
+            deadline: None,
+            cancel: None,
             respond: rtx,
         })
         .unwrap();
@@ -323,6 +331,7 @@ fn serve_generate_shared_prefix_reports_hits() {
         },
         rx,
         std::time::Duration::from_millis(1),
+        None,
     )
     .unwrap();
     let mut streams = Vec::new();
@@ -342,5 +351,194 @@ fn serve_generate_shared_prefix_reports_hits() {
     assert_eq!(rep.engine.prefill_tokens, 14);
     assert!(rep.engine.pool_blocks > 0 && rep.engine.peak_blocks_in_use > 0);
     assert!(rep.engine.block_tokens == 4);
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_skips_disconnected_clients_at_dispatch() {
+    // A one-shot client that hangs up while queued must not burn a
+    // batch slot: its request is dropped at dispatch and counted under
+    // `disconnected`, and everyone else is still served.
+    let rt = runtime();
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("servedisc");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    let tokens = |i: usize| -> Vec<i32> {
+        (0..cfg.model.seq)
+            .map(|k| ((k + i * 7) % cfg.model.vocab) as i32)
+            .collect()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..2 {
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
+        tx.send(faquant::serve::Request {
+            tokens: tokens(i),
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    // A perfectly VALID request whose client already hung up.
+    let (dead_tx, dead_rx) = faquant::serve::oneshot_channel();
+    tx.send(faquant::serve::Request {
+        tokens: tokens(2),
+        respond: dead_tx,
+    })
+    .unwrap();
+    drop(dead_rx);
+    drop(tx);
+    let rep = faquant::serve::serve_requests(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        rx,
+        std::time::Duration::from_millis(1),
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 2, "only the live clients are served");
+    assert_eq!(rep.reject_counts.disconnected, 1);
+    assert_eq!(rep.rejected, 1);
+    for r in responders {
+        let resp = r.recv().unwrap();
+        assert!(resp.completion().is_some(), "live client starved");
+    }
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_generate_disconnect_mid_generation_cancels() {
+    use faquant::engine::{FinishReason, GenConfig};
+    use faquant::serve::{GenServeRequest, GenServeResponse};
+
+    let rt = runtime();
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("gendisc");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    // Victim: a long-budget request whose client hangs up immediately —
+    // the loop must convert the dangling receiver into a cancel instead
+    // of decoding its whole budget.
+    let (victim_tx, victim_rx) = faquant::serve::oneshot_channel();
+    tx.send(GenServeRequest {
+        prompt: vec![1, 2, 3],
+        max_new: 64,
+        stop_id: None,
+        deadline: None,
+        cancel: None,
+        respond: victim_tx,
+    })
+    .unwrap();
+    drop(victim_rx);
+    let (live_tx, live_rx) = faquant::serve::oneshot_channel();
+    tx.send(GenServeRequest {
+        prompt: vec![4, 5, 6, 7],
+        max_new: 4,
+        stop_id: None,
+        deadline: None,
+        cancel: None,
+        respond: live_tx,
+    })
+    .unwrap();
+    drop(tx);
+    let rep = faquant::serve::serve_generate(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            slots: 2,
+            seed: 17,
+            ..GenConfig::default()
+        },
+        rx,
+        std::time::Duration::from_millis(1),
+        None,
+    )
+    .unwrap();
+    match live_rx.recv().unwrap() {
+        GenServeResponse::Done { tokens, finish, .. } => {
+            assert_eq!(finish, FinishReason::MaxTokens);
+            assert_eq!(tokens.len(), 4, "survivor must run to completion");
+        }
+        GenServeResponse::Rejected(r) => panic!("survivor rejected: {r}"),
+    }
+    assert_eq!(rep.engine.cancelled, 1, "disconnect must become a cancel");
+    assert_eq!(rep.engine.sequences, 1);
+    assert_eq!(rep.requests, 2);
+    assert!(
+        rep.engine.decode_tokens < 64,
+        "cancelled sequence decoded its whole budget anyway"
+    );
+    std::fs::remove_dir_all(&cfg.runs_dir).ok();
+}
+
+#[test]
+fn serve_generate_shutdown_drains_queued_requests() {
+    use faquant::engine::{CancelToken, GenConfig};
+    use faquant::serve::{GenServeRequest, GenServeResponse};
+
+    let rt = runtime();
+    std::env::set_var("FAQUANT_QUIET", "1");
+    let cfg = test_cfg("gendrain");
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let (params, _) = pipe.checkpoint().unwrap();
+    let (calib, _) = pipe.calibrate(&params).unwrap();
+    let (qm, _) = pipe.quantize(&params, Some(&calib)).unwrap();
+
+    // Shutdown already signalled before the loop starts: every queued
+    // request must still hear a structured `Draining` answer — never a
+    // silent drop — and the loop must return its report.
+    let shutdown = CancelToken::new();
+    shutdown.cancel();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut responders = Vec::new();
+    for i in 0..3usize {
+        let (rtx, rrx) = faquant::serve::oneshot_channel();
+        tx.send(GenServeRequest {
+            prompt: vec![1, 2, 3 + i as i32],
+            max_new: 4,
+            stop_id: None,
+            deadline: None,
+            cancel: None,
+            respond: rtx,
+        })
+        .unwrap();
+        responders.push(rrx);
+    }
+    drop(tx);
+    let rep = faquant::serve::serve_generate(
+        &rt,
+        &cfg.model,
+        &params,
+        &qm,
+        GenConfig {
+            slots: 2,
+            ..GenConfig::default()
+        },
+        rx,
+        std::time::Duration::from_millis(1),
+        Some(shutdown),
+    )
+    .unwrap();
+    for r in responders {
+        match r.recv().unwrap() {
+            GenServeResponse::Rejected(reason) => assert_eq!(reason.cause(), "draining"),
+            GenServeResponse::Done { .. } => panic!("draining engine accepted a request"),
+        }
+    }
+    assert_eq!(rep.engine.reject_counts.draining, 3);
+    assert_eq!(rep.requests, 3);
+    assert_eq!(rep.engine.sequences, 0);
     std::fs::remove_dir_all(&cfg.runs_dir).ok();
 }

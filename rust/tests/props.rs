@@ -15,7 +15,7 @@ use faquant::runtime::{lit_f32, lit_i32, Buffer, Runtime, Value};
 use faquant::serve::qmodel_literals;
 use faquant::store::TensorStore;
 use faquant::tensor::{par, Rng, Tensor, TensorI32};
-use faquant::testutil::{fixtures, forall, fuzz, TensorGen, UsizeIn};
+use faquant::testutil::{faults, fixtures, forall, fuzz, TensorGen, UsizeIn};
 
 // ---------------------------------------------------------------- packing
 
@@ -625,6 +625,7 @@ fn generation_deterministic_across_threads_and_slot_counts() {
                 prompt: (0..3 + i).map(|k| ((k * 7 + i) % cfg.vocab) as i32).collect(),
                 max_new: 6,
                 stop_id: None,
+                ..Default::default()
             })
             .collect()
     };
@@ -741,6 +742,117 @@ fn fuzz_differential_env_seed() {
     fuzz::differential_fuzz_case(seed).unwrap();
 }
 
+// --------------------------------- request lifecycle: fault injection
+
+// THE ISSUE-7 contract: under a seeded fault plan (transient and
+// poisoned-request step failures, admission stalls, client cancels,
+// deadline storms, a graceful drain), the engine keeps serving — paged
+// invariants hold after every step, the pool leaks zero blocks after the
+// drain, every surviving request's tokens are bitwise identical to the
+// fault-free run of the same seed, and the whole faulted run is itself
+// bitwise reproducible at 1/2/8 threads. Three pinned seeds run here and
+// in the `fault-smoke` CI job (which adds a fresh seed derived from the
+// CI run id, logged for reproduction).
+
+#[test]
+fn fault_injection_pinned_seed_a() {
+    faults::fault_injection_case(0xFA17_0001).unwrap();
+}
+
+#[test]
+fn fault_injection_pinned_seed_b() {
+    faults::fault_injection_case(0xFA17_0002).unwrap();
+}
+
+#[test]
+fn fault_injection_pinned_seed_c() {
+    faults::fault_injection_case(0xFA17_0003).unwrap();
+}
+
+/// CI's fresh-seed entry: `FAQUANT_FAULT_SEED=<u64>` (the fault-smoke
+/// job derives it from the run id and echoes it, so any failure
+/// reproduces locally with the same variable). A no-op when unset.
+#[test]
+fn fault_injection_env_seed() {
+    let Ok(raw) = std::env::var("FAQUANT_FAULT_SEED") else {
+        println!("FAQUANT_FAULT_SEED unset; skipping the fresh-seed fault-injection run");
+        return;
+    };
+    let seed: u64 = raw
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("FAQUANT_FAULT_SEED must be a u64, got '{raw}'"));
+    println!("running fresh-seed fault injection: FAQUANT_FAULT_SEED={seed}");
+    faults::fault_injection_case(seed).unwrap();
+}
+
+// ------------------------------------- thread pool: poison recovery
+
+#[test]
+fn pool_poison_recovery_keeps_results_bitwise_identical() {
+    // A panicking pool task (PR 6: workers recover the poisoned batch
+    // mutex via `into_inner`) must not perturb anything computed after
+    // it: the same matmul and the same decoded tokens, bit for bit, at
+    // every thread count.
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, 808);
+    let decode = || -> Vec<i32> {
+        let mut eng = Engine::new(
+            &rt,
+            &cfg,
+            &params,
+            &qm,
+            GenConfig {
+                temperature: 0.9,
+                top_k: 8,
+                seed: 606,
+                slots: 2,
+                ..GenConfig::default()
+            },
+        )
+        .unwrap();
+        let (outs, _) = eng
+            .generate(vec![GenRequest {
+                id: 0,
+                prompt: vec![1, 2, 3],
+                max_new: 5,
+                stop_id: None,
+                ..Default::default()
+            }])
+            .unwrap();
+        outs.into_iter().next().unwrap().tokens
+    };
+    let mut rng = Rng::new(99);
+    let a = Tensor::randn(&mut rng, &[48, 64], 1.0);
+    let b = Tensor::randn(&mut rng, &[64, 32], 1.0);
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let mm_before = a.matmul(&b).unwrap();
+        let tok_before = decode();
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par::par_map(8, |i| {
+                if i == 3 {
+                    panic!("injected pool-task panic");
+                }
+                i
+            })
+        }));
+        assert!(poisoned.is_err(), "the injected panic must reach the caller");
+        let mm_after = a.matmul(&b).unwrap();
+        let tok_after = decode();
+        par::set_threads(0);
+        assert_eq!(
+            mm_before.data(),
+            mm_after.data(),
+            "matmul diverged after a pool-task panic at {threads} threads"
+        );
+        assert_eq!(
+            tok_before, tok_after,
+            "decode diverged after a pool-task panic at {threads} threads"
+        );
+    }
+}
+
 // ------------------------------------ paged KV cache: pool invariants
 
 #[test]
@@ -802,6 +914,7 @@ fn drained_paged_engine_returns_every_non_cached_block() {
             prompt: (0..5 + i).map(|k| ((k * 11 + i) % cfg.vocab) as i32).collect(),
             max_new: 4,
             stop_id: None,
+            ..Default::default()
         })
         .collect();
     let (outs, rep) = eng.generate(reqs).unwrap();

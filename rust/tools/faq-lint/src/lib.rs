@@ -17,7 +17,8 @@
 //!   min/max comparisons, not accumulations, and are exempt.
 //! - `panic-in-serve` (D3): no `unwrap()`/`expect()`/panic-family
 //!   macros/direct indexing on the request-serving path (`serve/`,
-//!   `engine/scheduler.rs`) — structured errors only.
+//!   `engine/scheduler.rs`, `engine/lifecycle.rs`) — structured
+//!   errors only.
 //! - `missing-safety` (S1): every `unsafe` block or `unsafe impl`
 //!   must carry a `// SAFETY:` comment (same line or contiguous
 //!   comment lines immediately above).
@@ -644,7 +645,9 @@ fn scope_of(rel: &str) -> Scope {
             || rel.starts_with("engine/")
             || rel.starts_with("serve/"),
         d2: kernel,
-        d3: rel.starts_with("serve/") || rel == "engine/scheduler.rs",
+        d3: rel.starts_with("serve/")
+            || rel == "engine/scheduler.rs"
+            || rel == "engine/lifecycle.rs",
         s2: kernel,
     }
 }

@@ -79,6 +79,7 @@ fn d3_panic_in_serve() {
     assert_eq!(
         hits("d3-fail"),
         vec![
+            ("engine/lifecycle.rs".to_string(), 2, Rule::PanicInServe),
             ("engine/scheduler.rs".to_string(), 2, Rule::PanicInServe),
             ("serve/mod.rs".to_string(), 2, Rule::PanicInServe),
             ("serve/mod.rs".to_string(), 4, Rule::PanicInServe),
@@ -86,7 +87,8 @@ fn d3_panic_in_serve() {
         ]
     );
     // Scope precision: d3-fail/engine/mod.rs also calls unwrap(), but only
-    // engine/scheduler.rs (not the rest of engine/) is in the serving path.
+    // engine/scheduler.rs and engine/lifecycle.rs (not the rest of
+    // engine/) are in the serving path.
     assert!(
         !hits("d3-fail").iter().any(|(p, _, _)| p == "engine/mod.rs"),
         "engine/mod.rs is outside the D3 scope and must not be flagged"

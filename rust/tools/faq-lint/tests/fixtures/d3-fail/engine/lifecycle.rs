@@ -1,0 +1,3 @@
+pub fn resolve(deadline: Option<u64>, now: u64) -> u64 {
+    now + deadline.expect("deadline must be set")
+}
