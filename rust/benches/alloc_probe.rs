@@ -9,7 +9,10 @@
 //! 2. a whole steady-state `decode_step_q` allocates fewer bytes than
 //!    the *smallest* dequantized weight matrix of the model — i.e. no
 //!    weight dequantization and no weight-panel packing can be hiding
-//!    anywhere in step time.
+//!    anywhere in step time;
+//! 3. emitting trace events on a *disabled* [`faquant::obs::Trace`]
+//!    performs zero heap allocations — tracing off must be free on the
+//!    decode hot path (DESIGN.md §15).
 //!
 //! Requires the bench-only counting global allocator:
 //!
@@ -100,6 +103,27 @@ fn main() {
         b1 - b0,
         smallest_weight_bytes
     );
+
+    // --- 3. Disabled tracing: emit() is a no-op with 0 allocations. ---
+    use faquant::obs::{Trace, TraceEvent};
+    let trace = Trace::disabled();
+    let (a0, b0) = alloc::snapshot();
+    for tick in 0..1024u64 {
+        trace.emit(tick, TraceEvent::Step { batch: 4, prefill: 1, decode: 3 });
+        trace.emit(tick, TraceEvent::BlockAlloc { block: tick as usize });
+    }
+    let (a1, b1) = alloc::snapshot();
+    println!(
+        "disabled-trace emit x2048: {} allocations, {} bytes",
+        a1 - a0,
+        b1 - b0
+    );
+    assert_eq!(
+        (a1 - a0, b1 - b0),
+        (0, 0),
+        "emitting on a disabled Trace must not allocate"
+    );
+
     par::set_threads(0);
     println!("alloc_probe: OK");
 }

@@ -209,6 +209,9 @@ fn main() {
         grep.mean_slot_occupancy * 100.0,
         grep.steps
     );
+    let lat = grep.latency;
+    println!("  -> {}", lat.summary_line());
+    let us = |v: u64| v as f32 / 1e6;
     stages.push(PerfReport::per_token_stage(
         "prefill_tokens_per_sec",
         grep.prefill_tokens,
@@ -356,14 +359,15 @@ fn main() {
     // overhead: single-threaded, the per-entry exec-seconds sum is
     // directly comparable to wall time.
     par::set_threads(1);
-    let exec_before: f32 = rt.stats().values().map(|s| s.exec_secs).sum();
-    let compile_before: f32 = rt.stats().values().map(|s| s.compile_secs).sum();
+    let exec_before: f64 = rt.stats().values().map(|s| s.exec_secs).sum();
+    let compile_before: f64 = rt.stats().values().map(|s| s.compile_secs).sum();
     let s1 = bench("quantize_e2e(1 thread)", 0, 3, || {
         pipe.quantize(&params, Some(&calib)).expect("quantize");
     });
-    let inside: f32 = rt.stats().values().map(|s| s.exec_secs).sum::<f32>() - exec_before;
-    let compile: f32 =
-        rt.stats().values().map(|s| s.compile_secs).sum::<f32>() - compile_before;
+    let inside =
+        (rt.stats().values().map(|s| s.exec_secs).sum::<f64>() - exec_before) as f32;
+    let compile =
+        (rt.stats().values().map(|s| s.compile_secs).sum::<f64>() - compile_before) as f32;
     println!("{}", report(&s1));
 
     par::set_threads(0);
@@ -403,6 +407,13 @@ fn main() {
         prefix_hit_prefill_savings,
         paged_peak_kv_bytes,
         dense_kv_slab_bytes,
+        ttft_p50: us(lat.ttft_p50_us),
+        ttft_p95: us(lat.ttft_p95_us),
+        ttft_p99: us(lat.ttft_p99_us),
+        per_token_p50: us(lat.per_token_p50_us),
+        per_token_p95: us(lat.per_token_p95_us),
+        per_token_p99: us(lat.per_token_p99_us),
+        queue_wait_p95: us(lat.queue_wait_p95_us),
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

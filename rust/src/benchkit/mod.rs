@@ -214,6 +214,17 @@ pub struct PerfReport {
     /// The dense engine's slab for the same stage: `slots x T_max` rows,
     /// resident for the whole run regardless of sequence lengths.
     pub dense_kv_slab_bytes: f32,
+    /// Time-to-first-token percentiles from the engine's deterministic
+    /// histogram (Hist bucket upper bounds, converted to seconds).
+    pub ttft_p50: f32,
+    pub ttft_p95: f32,
+    pub ttft_p99: f32,
+    /// Per-decode-token latency percentiles (seconds).
+    pub per_token_p50: f32,
+    pub per_token_p95: f32,
+    pub per_token_p99: f32,
+    /// Queue-wait (submit -> admission) p95, seconds.
+    pub queue_wait_p95: f32,
 }
 
 impl PerfReport {
@@ -227,7 +238,10 @@ impl PerfReport {
              \"prefill_tokens_per_sec\": {},\n  \"decode_tokens_per_sec\": {},\n  \
              \"prepare_secs\": {},\n  \"decode_prepared_tokens_per_sec\": {},\n  \
              \"prefix_hit_prefill_savings\": {},\n  \"paged_peak_kv_bytes\": {},\n  \
-             \"dense_kv_slab_bytes\": {}\n}}\n",
+             \"dense_kv_slab_bytes\": {},\n  \
+             \"ttft_p50\": {},\n  \"ttft_p95\": {},\n  \"ttft_p99\": {},\n  \
+             \"per_token_p50\": {},\n  \"per_token_p95\": {},\n  \"per_token_p99\": {},\n  \
+             \"queue_wait_p95\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -243,6 +257,13 @@ impl PerfReport {
             json_f32(self.prefix_hit_prefill_savings),
             json_f32(self.paged_peak_kv_bytes),
             json_f32(self.dense_kv_slab_bytes),
+            json_f32(self.ttft_p50),
+            json_f32(self.ttft_p95),
+            json_f32(self.ttft_p99),
+            json_f32(self.per_token_p50),
+            json_f32(self.per_token_p95),
+            json_f32(self.per_token_p99),
+            json_f32(self.queue_wait_p95),
         )
     }
 
@@ -333,6 +354,13 @@ mod tests {
             prefix_hit_prefill_savings: 0.4,
             paged_peak_kv_bytes: 65536.0,
             dense_kv_slab_bytes: 262144.0,
+            ttft_p50: 0.002,
+            ttft_p95: 0.005,
+            ttft_p99: 0.01,
+            per_token_p50: 0.001,
+            per_token_p95: 0.002,
+            per_token_p99: 0.002,
+            queue_wait_p95: 0.0005,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
@@ -345,6 +373,11 @@ mod tests {
         assert!(j.contains("\"prefix_hit_prefill_savings\""));
         assert!(j.contains("\"paged_peak_kv_bytes\""));
         assert!(j.contains("\"dense_kv_slab_bytes\""));
+        assert!(j.contains("\"ttft_p50\""));
+        assert!(j.contains("\"ttft_p99\""));
+        assert!(j.contains("\"per_token_p50\""));
+        assert!(j.contains("\"per_token_p99\""));
+        assert!(j.contains("\"queue_wait_p95\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).

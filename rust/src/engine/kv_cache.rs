@@ -23,6 +23,7 @@
 //! Both stores use the same take/put_back loan to cross the backend
 //! boundary without copying multi-megabyte tensors each step.
 
+use crate::obs::{Trace, TraceEvent};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 
@@ -158,6 +159,11 @@ pub struct BlockPool {
     refcount: Vec<u32>,
     /// LIFO free list (deterministic allocation order).
     free: Vec<u32>,
+    /// Observability: allocation events ([`TraceEvent::BlockAlloc`])
+    /// stamped with the owner engine's tick. Disabled by default — the
+    /// handle is a no-op unless the engine installed an enabled trace.
+    trace: Trace,
+    tick: u64,
 }
 
 impl BlockPool {
@@ -174,7 +180,20 @@ impl BlockPool {
             refcount: vec![0; n_blocks],
             // Pop from the back => block 0 first (pure convention).
             free: (0..n_blocks as u32).rev().collect(),
+            trace: Trace::disabled(),
+            tick: 0,
         }
+    }
+
+    /// Install the engine's trace handle (cheap clone; disabled = no-op).
+    pub fn set_trace(&mut self, trace: Trace) {
+        self.trace = trace;
+    }
+
+    /// Advance the tick stamped onto this pool's trace events (the
+    /// engine forwards its step counter once per step).
+    pub fn set_tick(&mut self, tick: u64) {
+        self.tick = tick;
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -225,6 +244,8 @@ impl BlockPool {
         let b = self.free.pop().context("block pool exhausted")?;
         debug_assert_eq!(self.refcount[b as usize], 0);
         self.refcount[b as usize] = 1;
+        self.trace
+            .emit(self.tick, TraceEvent::BlockAlloc { block: b as usize });
         Ok(b)
     }
 

@@ -62,6 +62,8 @@ pub struct EngineClock {
 impl EngineClock {
     pub fn new(virtual_step: Option<Duration>) -> Self {
         Self {
+            // faq-lint: allow(untracked-clock) — EngineClock IS the
+            // sanctioned clock seam; this anchors its epoch.
             t0: Instant::now(),
             virtual_step,
         }
@@ -72,6 +74,8 @@ impl EngineClock {
     /// the same tick sequence observe identical deadline decisions.
     pub fn now(&self, ticks: usize) -> Instant {
         match self.virtual_step {
+            // faq-lint: allow(untracked-clock) — the wall arm of the
+            // sanctioned clock seam itself.
             None => Instant::now(),
             Some(step) => {
                 let n = u32::try_from(ticks).unwrap_or(u32::MAX);

@@ -249,6 +249,9 @@ pub struct GenReport {
     pub step_faults: usize,
     /// Failed attempts absorbed by the bounded same-batch retry.
     pub step_retried: usize,
+    /// Latency percentile summary (TTFT, per-token, queue wait) from
+    /// the engine's deterministic histograms (DESIGN.md §15).
+    pub latency: crate::obs::LatencyStats,
 }
 
 impl GenReport {

@@ -80,6 +80,13 @@ impl RadixTree {
         self.node_count() == 0
     }
 
+    /// Total tokens cached across all live edges — the
+    /// `prefix_cached_tokens` gauge exported by the engine metrics
+    /// (DESIGN.md §15).
+    pub fn cached_tokens(&self) -> usize {
+        self.nodes.iter().flatten().map(|n| n.edge.len()).sum()
+    }
+
     fn node(&self, id: usize) -> &Node {
         self.nodes[id].as_ref().expect("dangling node id")
     }
@@ -477,6 +484,19 @@ mod tests {
         assert_eq!(refs[&100], 1);
         assert_eq!(refs[&101], 2, "straddling block referenced by both halves");
         assert_eq!(refs[&201], 1);
+    }
+
+    #[test]
+    fn cached_tokens_tracks_edges_and_eviction() {
+        let mut t = RadixTree::new(4);
+        assert_eq!(t.cached_tokens(), 0);
+        ins(&mut t, &[1, 2, 3, 4, 5, 6, 7, 8], 100);
+        assert_eq!(t.cached_tokens(), 8);
+        // Mid-edge split adds no tokens (6 shared + 2 + 2 suffixes).
+        ins(&mut t, &[1, 2, 3, 4, 5, 6, 9, 9], 200);
+        assert_eq!(t.cached_tokens(), 10);
+        t.evict_lru().unwrap();
+        assert_eq!(t.cached_tokens(), 8);
     }
 
     #[test]

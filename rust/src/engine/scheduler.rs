@@ -57,6 +57,7 @@ use super::{
 };
 use crate::config::ModelConfig;
 use crate::model::Params;
+use crate::obs::{Hist, LatencyStats, Metrics, Trace, TraceEvent};
 use crate::quant::QuantizedModel;
 use crate::runtime::{Buffer, Runtime, Value};
 use crate::serve::qmodel_literals;
@@ -109,6 +110,12 @@ pub struct GenConfig {
     /// instead of reading the wall clock (fault-injection harness only;
     /// `None` = real time).
     pub virtual_step: Option<Duration>,
+    /// Record structured trace events (DESIGN.md §15). Disabled, the
+    /// trace handle is a no-op — no allocation, no clock reads — and
+    /// token streams are bitwise identical either way (pinned by
+    /// `testutil::fuzz::trace_determinism_case`). Timestamps follow
+    /// `virtual_step` when set (deterministic) and wall time otherwise.
+    pub trace: bool,
 }
 
 impl Default for GenConfig {
@@ -126,6 +133,7 @@ impl Default for GenConfig {
             max_queue: 0,
             step_retries: 2,
             virtual_step: None,
+            trace: false,
         }
     }
 }
@@ -145,6 +153,9 @@ struct SeqState {
     /// Absolute expiry on the engine clock (budget added at submit).
     deadline_at: Option<Instant>,
     cancel: Option<CancelToken>,
+    /// Engine-elapsed stamp at submission (µs) — queue-wait and TTFT
+    /// observations subtract it at admission / first token.
+    queued_us: u64,
 }
 
 /// Cancel / deadline check shared by queued and running sequences.
@@ -181,6 +192,10 @@ struct PagedKv {
     prefix_hit_tokens: usize,
     evicted_refs: usize,
     peak_in_use: usize,
+    /// Engine trace handle (cheap clone of the engine's; no-op when
+    /// tracing is off) + the tick stamped onto paged events.
+    trace: Trace,
+    tick: u64,
 }
 
 impl PagedKv {
@@ -190,6 +205,7 @@ impl PagedKv {
         block_tokens: usize,
         pool_blocks: usize,
         prefix_cache: bool,
+        trace: Trace,
     ) -> Self {
         let bt = if block_tokens == 0 {
             DEFAULT_BLOCK_TOKENS
@@ -202,8 +218,10 @@ impl PagedKv {
         } else {
             pool_blocks
         };
+        let mut pool = BlockPool::new(cfg.n_layer, pool_blocks, bt, cfg.d_model);
+        pool.set_trace(trace.clone());
         Self {
-            pool: BlockPool::new(cfg.n_layer, pool_blocks, bt, cfg.d_model),
+            pool,
             tree: RadixTree::new(bt),
             tables: (0..slots).map(|_| Vec::new()).collect(),
             reserved: vec![0; slots],
@@ -216,7 +234,15 @@ impl PagedKv {
             prefix_hit_tokens: 0,
             evicted_refs: 0,
             peak_in_use: 0,
+            trace,
+            tick: 0,
         }
+    }
+
+    /// Forward the engine's tick to paged-event stamps (pool included).
+    fn set_tick(&mut self, tick: u64) {
+        self.tick = tick;
+        self.pool.set_tick(tick);
     }
 
     /// Requests whose `prompt + max_new` exceeds this can never be
@@ -263,6 +289,8 @@ impl PagedKv {
             };
             for b in dropped {
                 self.evicted_refs += 1;
+                self.trace
+                    .emit(self.tick, TraceEvent::BlockEvict { block: b as usize });
                 self.pool.release(b)?;
             }
         }
@@ -353,6 +381,13 @@ impl PagedKv {
             // tail block, so it gets a private copy of the shared rows.
             let dst = self.pool.alloc()?;
             self.pool.cow_copy(src, dst, partial)?;
+            self.trace.emit(
+                self.tick,
+                TraceEvent::BlockCow {
+                    src: src as usize,
+                    dst: dst as usize,
+                },
+            );
             self.pool.release(src)?;
             table.push(dst);
             reserve -= 1;
@@ -506,6 +541,15 @@ pub struct Engine<'rt> {
     draining: bool,
     /// Fault-injection seam (tests only; `None` in production).
     fault: Option<Box<dyn FaultInjector>>,
+    /// Structured event trace (no-op handle unless `GenConfig::trace`).
+    trace: Trace,
+    /// Latency histograms + engine counters/gauges (DESIGN.md §15).
+    metrics: Metrics,
+    /// Accumulated engine time in µs — the latency-metric timebase.
+    /// Virtual clock: `ticks * virtual_step` (advanced at the top of
+    /// every step, deterministic). Wall clock: summed measured compute
+    /// seconds (no extra `Instant` reads on the engine path).
+    elapsed_us: u64,
     // Accumulated report state (across generate calls).
     steps: usize,
     prefill_tokens: usize,
@@ -551,6 +595,16 @@ impl<'rt> Engine<'rt> {
                     .collect::<Result<Vec<_>>>()?,
             )
         };
+        let trace = if gen.trace {
+            match gen.virtual_step {
+                Some(step) => {
+                    Trace::virtual_clock(u64::try_from(step.as_micros()).unwrap_or(u64::MAX))
+                }
+                None => Trace::wall_clock(),
+            }
+        } else {
+            Trace::disabled()
+        };
         let store = if gen.paged {
             KvStore::Paged(PagedKv::new(
                 cfg,
@@ -558,11 +612,16 @@ impl<'rt> Engine<'rt> {
                 gen.block_tokens,
                 gen.pool_blocks,
                 gen.prefix_cache,
+                trace.clone(),
             ))
         } else {
             KvStore::Dense(KvCache::new(cfg.n_layer, slots, cfg.seq, cfg.d_model))
         };
         let clock = EngineClock::new(gen.virtual_step);
+        let mut metrics = Metrics::new();
+        metrics.register_hist("ttft_us");
+        metrics.register_hist("per_token_us");
+        metrics.register_hist("queue_wait_us");
         Ok(Self {
             rt,
             cfg: cfg.clone(),
@@ -575,6 +634,9 @@ impl<'rt> Engine<'rt> {
             ticks: 0,
             draining: false,
             fault: None,
+            trace,
+            metrics,
+            elapsed_us: 0,
             steps: 0,
             prefill_tokens: 0,
             decode_tokens: 0,
@@ -640,6 +702,14 @@ impl<'rt> Engine<'rt> {
         if let Some(reason) = reason {
             self.rejected += 1;
             self.reject_counts.note(&reason);
+            self.metrics.inc("rejected", 1);
+            self.trace.emit(
+                self.ticks as u64,
+                TraceEvent::Reject {
+                    id: req.id,
+                    cause: reason.cause(),
+                },
+            );
             return Some(GenOutput {
                 id: req.id,
                 prompt_len: req.prompt.len(),
@@ -655,6 +725,9 @@ impl<'rt> Engine<'rt> {
         let deadline_at = req
             .deadline
             .and_then(|budget| self.clock.now(self.ticks).checked_add(budget));
+        self.metrics.inc("submitted", 1);
+        self.trace
+            .emit(self.ticks as u64, TraceEvent::Submit { id: req.id });
         self.queue.push_back(SeqState {
             id: req.id,
             prompt_len: req.prompt.len(),
@@ -665,6 +738,7 @@ impl<'rt> Engine<'rt> {
             sampler,
             deadline_at,
             cancel: req.cancel,
+            queued_us: self.elapsed_us,
         });
         None
     }
@@ -686,6 +760,9 @@ impl<'rt> Engine<'rt> {
     /// sequences run to completion through further [`Engine::step`]
     /// calls. Irreversible for the engine's lifetime (DESIGN.md §14).
     pub fn begin_drain(&mut self) {
+        if !self.draining {
+            self.trace.emit(self.ticks as u64, TraceEvent::Drain);
+        }
         self.draining = true;
     }
 
@@ -770,6 +847,7 @@ impl<'rt> Engine<'rt> {
         for st in queued {
             match lifecycle_fate(&st, now) {
                 Some(finish) => {
+                    self.trace_lifecycle(st.id, &finish);
                     self.note_abnormal_finish(&finish);
                     finished.push(GenOutput {
                         id: st.id,
@@ -786,14 +864,25 @@ impl<'rt> Engine<'rt> {
                 .slots
                 .get(slot)
                 .and_then(|s| s.as_ref())
-                .and_then(|st| lifecycle_fate(st, now));
-            if let Some(finish) = fate {
+                .and_then(|st| lifecycle_fate(st, now).map(|f| (st.id, f)));
+            if let Some((id, finish)) = fate {
+                self.trace_lifecycle(id, &finish);
                 if let Some(out) = self.evict_slot(slot, finish)? {
                     finished.push(out);
                 }
             }
         }
         Ok(finished)
+    }
+
+    /// Trace a lifecycle exit (cancel / deadline) for request `id`.
+    fn trace_lifecycle(&self, id: usize, finish: &FinishReason) {
+        let ev = match finish {
+            FinishReason::Cancelled => TraceEvent::Cancel { id },
+            FinishReason::DeadlineExceeded => TraceEvent::Deadline { id },
+            _ => return,
+        };
+        self.trace.emit(self.ticks as u64, ev);
     }
 
     /// Admit queued sequences into free slots. Dense: a free slot is all
@@ -810,10 +899,14 @@ impl<'rt> Engine<'rt> {
         if stalled {
             return Ok(());
         }
+        let tick = self.ticks as u64;
+        let elapsed = self.elapsed_us;
         let Self {
             slots,
             store,
             queue,
+            trace,
+            metrics,
             ..
         } = self;
         for (slot, slot_ref) in slots.iter_mut().enumerate() {
@@ -826,6 +919,23 @@ impl<'rt> Engine<'rt> {
             match store {
                 KvStore::Dense(cache) => {
                     cache.reset(slot);
+                    metrics.observe("queue_wait_us", elapsed.saturating_sub(head.queued_us));
+                    trace.emit(
+                        tick,
+                        TraceEvent::Admit {
+                            id: head.id,
+                            slot,
+                            start: 0,
+                        },
+                    );
+                    trace.emit(
+                        tick,
+                        TraceEvent::PrefillBegin {
+                            id: head.id,
+                            slot,
+                            tokens: head.prompt_len,
+                        },
+                    );
                     *slot_ref = Some(head);
                 }
                 KvStore::Paged(ps) => {
@@ -842,6 +952,33 @@ impl<'rt> Engine<'rt> {
                     match admitted {
                         Some(start) => {
                             head.cursor = start;
+                            metrics
+                                .observe("queue_wait_us", elapsed.saturating_sub(head.queued_us));
+                            if start > 0 {
+                                trace.emit(
+                                    tick,
+                                    TraceEvent::PrefixHit {
+                                        id: head.id,
+                                        tokens: start,
+                                    },
+                                );
+                            }
+                            trace.emit(
+                                tick,
+                                TraceEvent::Admit {
+                                    id: head.id,
+                                    slot,
+                                    start,
+                                },
+                            );
+                            trace.emit(
+                                tick,
+                                TraceEvent::PrefillBegin {
+                                    id: head.id,
+                                    slot,
+                                    tokens: head.prompt_len - start,
+                                },
+                            );
                             *slot_ref = Some(head);
                         }
                         // Head must wait for blocks; keep FIFO order.
@@ -865,6 +1002,17 @@ impl<'rt> Engine<'rt> {
         // failure), so the virtual clock and fault schedule see a
         // monotone timeline regardless of what this step does.
         self.ticks += 1;
+        let tick = self.ticks as u64;
+        if let Some(step) = self.gen.virtual_step {
+            // Virtual timebase advances per tick (matching EngineClock),
+            // computed step or not, so elapsed_us == ticks * step.
+            self.elapsed_us = self
+                .elapsed_us
+                .saturating_add(u64::try_from(step.as_micros()).unwrap_or(u64::MAX));
+        }
+        if let KvStore::Paged(ps) = &mut self.store {
+            ps.set_tick(tick);
+        }
         let mut finished = self.sweep_lifecycle()?;
         self.admit()?;
 
@@ -883,6 +1031,7 @@ impl<'rt> Engine<'rt> {
                 Ok(out) => break out,
                 Err(err) => {
                     self.step_faults += 1;
+                    self.trace.emit(tick, TraceEvent::StepRetry { attempt });
                     attempt += 1;
                     if masked.is_none() && attempt <= self.gen.step_retries {
                         // Transient budget: same batch, try again.
@@ -921,6 +1070,9 @@ impl<'rt> Engine<'rt> {
                 None => "decode step failed".to_string(),
             };
             let finish = FinishReason::Rejected(RejectReason::Internal { detail });
+            if let Some(id) = self.slots.get(slot).and_then(|s| s.as_ref()).map(|st| st.id) {
+                self.trace.emit(tick, TraceEvent::Quarantine { id });
+            }
             if let Some(out) = self.evict_slot(slot, finish)? {
                 finished.push(out);
             }
@@ -936,6 +1088,35 @@ impl<'rt> Engine<'rt> {
         self.prefill_secs += stepd.secs * stepd.prefill_feeds as f32 / stepd.feeds as f32;
         self.decode_secs += stepd.secs * stepd.decode_feeds as f32 / stepd.feeds as f32;
         self.prefill_tokens += stepd.prefill_feeds;
+        // Metrics timebase: virtual mode already advanced at the top of
+        // the step; wall mode accumulates the measured compute time.
+        let step_us = match self.gen.virtual_step {
+            Some(step) => u64::try_from(step.as_micros()).unwrap_or(u64::MAX),
+            None => {
+                let us = (f64::from(stepd.secs) * 1e6) as u64;
+                self.elapsed_us = self.elapsed_us.saturating_add(us);
+                us
+            }
+        };
+        self.trace.emit(
+            tick,
+            TraceEvent::Step {
+                batch: stepd.feeds,
+                prefill: stepd.prefill_feeds,
+                decode: stepd.decode_feeds,
+            },
+        );
+        self.metrics.inc("steps", 1);
+        for _ in 0..stepd.decode_feeds {
+            self.metrics.observe("per_token_us", step_us);
+        }
+        if let KvStore::Paged(ps) = &self.store {
+            let in_use = ps.pool.in_use_blocks() as u64;
+            let cached = ps.tree.cached_tokens() as u64;
+            self.metrics.set_gauge("pool_in_use_blocks", in_use);
+            self.metrics.max_gauge("pool_peak_blocks", in_use);
+            self.metrics.set_gauge("prefix_cached_tokens", cached);
+        }
 
         let mut outs = stepd.outs.into_iter();
         let (Some(logits_v), Some(k_v), Some(v_v)) = (outs.next(), outs.next(), outs.next())
@@ -945,11 +1126,14 @@ impl<'rt> Engine<'rt> {
         let logits = logits_v.as_f32()?;
         let k_new = k_v.as_f32()?;
         let v_new = v_v.as_f32()?;
+        let elapsed = self.elapsed_us;
         let Self {
             slots,
             store,
             decode_tokens,
             completed,
+            trace,
+            metrics,
             ..
         } = self;
         for (slot, slot_ref) in slots.iter_mut().enumerate() {
@@ -958,7 +1142,13 @@ impl<'rt> Engine<'rt> {
                 KvStore::Dense(cache) => cache.append(slot, k_new, v_new)?,
                 KvStore::Paged(ps) => ps.append_row(slot, st.cursor, k_new, v_new)?,
             }
+            let was_prefill = st.cursor < st.prompt_len;
             st.cursor += 1;
+            if was_prefill && st.cursor >= st.prompt_len {
+                // The last prompt position just fed: prefill is over
+                // (its logits seed the first sample below).
+                trace.emit(tick, TraceEvent::PrefillEnd { id: st.id, slot });
+            }
             let mut fin = None;
             if st.cursor >= st.prompt_len {
                 // This feed's logits predict the next position.
@@ -972,6 +1162,10 @@ impl<'rt> Engine<'rt> {
                 } else {
                     st.tokens.push(next);
                     *decode_tokens += 1;
+                    if st.tokens.len() == st.prompt_len + 1 {
+                        // First generated token: time-to-first-token.
+                        metrics.observe("ttft_us", elapsed.saturating_sub(st.queued_us));
+                    }
                     if st.tokens.len() - st.prompt_len >= st.max_new {
                         fin = Some(FinishReason::MaxTokens);
                     }
@@ -982,6 +1176,20 @@ impl<'rt> Engine<'rt> {
                 ps.on_finish(slot, st.cursor, &st.tokens)?;
             }
             let Some(st) = slot_ref.take() else { continue };
+            let cause = match finish {
+                FinishReason::Stop => "stop",
+                _ => "max_tokens",
+            };
+            trace.emit(
+                tick,
+                TraceEvent::Finish {
+                    id: st.id,
+                    slot,
+                    tokens: st.tokens.len() - st.prompt_len,
+                    cause,
+                },
+            );
+            metrics.inc("completed", 1);
             finished.push(GenOutput {
                 id: st.id,
                 prompt_len: st.prompt_len,
@@ -1036,6 +1244,9 @@ impl<'rt> Engine<'rt> {
             fault.before_attempt(self.ticks, attempt, &fed_ids)?;
         }
 
+        // faq-lint: allow(untracked-clock) — measures backend compute
+        // time for the report's prefill/decode split; never feeds
+        // scheduling decisions (deadlines go through EngineClock).
         let t0 = Instant::now();
         let pos_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], pos)?));
         let tok_buf = Buffer::Host(Value::I32(TensorI32::from_vec(&[b], tok)?));
@@ -1137,7 +1348,25 @@ impl<'rt> Engine<'rt> {
             quarantined: self.quarantined,
             step_faults: self.step_faults,
             step_retried: self.step_retried,
+            latency: self.latency(),
         }
+    }
+
+    /// Percentile summary of the engine's latency histograms.
+    pub fn latency(&self) -> LatencyStats {
+        let empty = Hist::new();
+        let h = |name: &str| self.metrics.hist(name).unwrap_or(&empty);
+        LatencyStats::from_hists(h("ttft_us"), h("per_token_us"), h("queue_wait_us"))
+    }
+
+    /// The engine's trace handle (no-op unless `GenConfig::trace`).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// The engine's metrics registry (counters, gauges, histograms).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
     }
 
     /// Paged-pool snapshot `(free, in_use, pool_blocks, reserved_total)`;

@@ -24,6 +24,7 @@
 //! - [`quant`] — RTN / AWQ / FAQ quantizers, grid search, bit-packing
 //! - [`coordinator`] — the end-to-end PTQ pipeline
 //! - [`engine`] — KV-cached decode: continuous batching + sampling
+//! - [`obs`] — deterministic tracing, metrics, Chrome-trace export
 //! - [`eval`] — perplexity and synthetic zero-shot suites
 //! - [`serve`] — batched quantized-model serving demo
 //! - [`benchkit`] / [`testutil`] — in-repo bench + property-test kits
@@ -37,6 +38,7 @@ pub mod corpus;
 pub mod engine;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

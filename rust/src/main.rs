@@ -40,11 +40,15 @@ SUBCOMMANDS
             [--temperature T] [--top-k K] [--gen-seed S] [--stop-id ID]
             [--block-tokens B] [--pool-blocks N] [--dense]
             [--deadline-ms MS] [--max-queue N]
+            [--shared-prefix L] [--trace FILE]
             KV-cached generation (greedy when T <= 0; ID < 0 disables).
             Paged KV cache + radix prefix sharing by default; --dense
             pins the seed [L, slots, T, d] slabs (same tokens either way).
             --deadline-ms caps each request's wall-clock budget (0 = no
-            deadline); --max-queue bounds admission (0 = unbounded)
+            deadline); --max-queue bounds admission (0 = unbounded).
+            --shared-prefix gives every prompt the same first L tokens
+            (exercises the prefix cache); --trace records engine events
+            and writes a Chrome trace-event JSON (load in Perfetto)
   inspect                                    list artifacts + configs
 
 COMMON FLAGS
@@ -249,6 +253,8 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     let dense = args.has("dense");
     let deadline = args.get_ms_opt("deadline-ms")?;
     let max_queue = args.get_usize("max-queue", 0)?;
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
+    let trace_path = args.get("trace");
 
     let pipe = Pipeline::new(rt, cfg.clone());
     let (params, _) = pipe.checkpoint()?;
@@ -260,12 +266,20 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     if ids.len() <= prompt_len {
         anyhow::bail!("corpus too small for --prompt-len {prompt_len}");
     }
-    let prompts: Vec<Vec<i32>> = (0..n_prompts)
+    let mut prompts: Vec<Vec<i32>> = (0..n_prompts)
         .map(|i| {
             let start = (i * prompt_len) % (ids.len() - prompt_len);
             ids[start..start + prompt_len].to_vec()
         })
         .collect();
+    // --shared-prefix: give every prompt an identical head so the radix
+    // prefix cache gets real hits (useful when tracing cache behaviour).
+    let shared = shared_prefix.min(prompt_len);
+    if shared > 0 {
+        for p in &mut prompts {
+            p[..shared].copy_from_slice(&ids[..shared]);
+        }
+    }
 
     let mut engine = Engine::new(
         rt,
@@ -281,6 +295,7 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             block_tokens,
             pool_blocks,
             max_queue,
+            trace: trace_path.is_some(),
             ..GenConfig::default()
         },
     )?;
@@ -349,6 +364,16 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             rep.pool_blocks,
             rep.prefix_hit_tokens,
             rep.evicted_blocks
+        );
+    }
+    println!("{}", rep.latency.summary_line());
+    if let Some(path) = trace_path {
+        let records = engine.trace().snapshot();
+        std::fs::write(&path, faquant::obs::chrome_trace_json(&records))?;
+        println!(
+            "trace: {} events ({} dropped) -> {path}",
+            records.len(),
+            engine.trace().dropped()
         );
     }
     Ok(())

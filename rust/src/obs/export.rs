@@ -1,0 +1,250 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto /
+//! chrome://tracing) and a plain-text dump.
+//!
+//! The JSON exporter is hand-rolled (this crate takes no serialization
+//! dependency) against the Trace Event Format's stable subset:
+//!
+//! - metadata `"M"` events name one **lifecycle** track (tid 1) plus
+//!   one track **per slot** (tid 10+slot), so a loaded trace shows each
+//!   slot's admissions/prefills/finishes as its own row;
+//! - prefill is a `"B"`/`"E"` duration pair on the slot's track;
+//! - everything else is an instant `"i"` event (`"s":"t"`), with the
+//!   payload (ids, block numbers, batch mix, causes) in `args` along
+//!   with the engine tick.
+//!
+//! Timestamps are the record's `ts_us` — already microseconds, the unit
+//! the format requires. Under the virtual clock the exported bytes are
+//! a pure function of the trace content, so the export itself is
+//! golden-testable too.
+
+use super::trace::{TraceEvent, TraceRecord};
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// Chrome trace-event JSON for a canonical record sequence (load the
+/// written file in Perfetto or chrome://tracing).
+pub fn chrome_trace_json(records: &[TraceRecord]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |line: &str, out: &mut String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(line);
+    };
+
+    // Track naming metadata: the lifecycle row plus one row per slot
+    // that actually appears in the trace.
+    push(
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":1,\
+         \"args\":{\"name\":\"lifecycle\"}}",
+        &mut out,
+    );
+    let slots: BTreeSet<usize> = records.iter().filter_map(|r| r.ev.slot()).collect();
+    for s in &slots {
+        push(
+            &format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"name\":\"slot {s}\"}}}}",
+                track_of_slot(*s)
+            ),
+            &mut out,
+        );
+    }
+
+    for r in records {
+        let tid = r.ev.slot().map_or(1, track_of_slot);
+        let ph = match r.ev {
+            TraceEvent::PrefillBegin { .. } => "B",
+            TraceEvent::PrefillEnd { .. } => "E",
+            _ => "i",
+        };
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{{\"name\":\"{}\",\"ph\":\"{ph}\",\"pid\":1,\"tid\":{tid},\"ts\":{}",
+            r.ev.kind(),
+            r.ts_us
+        );
+        if ph == "i" {
+            line.push_str(",\"s\":\"t\"");
+        }
+        let _ = write!(line, ",\"args\":{{\"tick\":{}", r.tick);
+        push_args(&r.ev, &mut line);
+        line.push_str("}}");
+        push(&line, &mut out);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+fn track_of_slot(slot: usize) -> usize {
+    10 + slot
+}
+
+fn push_args(ev: &TraceEvent, out: &mut String) {
+    match *ev {
+        TraceEvent::Submit { id } => {
+            let _ = write!(out, ",\"id\":{id}");
+        }
+        TraceEvent::Reject { id, cause } => {
+            let _ = write!(out, ",\"id\":{id},\"cause\":\"{}\"", escape(cause));
+        }
+        TraceEvent::Admit { id, slot, start } => {
+            let _ = write!(out, ",\"id\":{id},\"slot\":{slot},\"start\":{start}");
+        }
+        TraceEvent::PrefillBegin { id, slot, tokens } => {
+            let _ = write!(out, ",\"id\":{id},\"slot\":{slot},\"tokens\":{tokens}");
+        }
+        TraceEvent::PrefillEnd { id, slot } => {
+            let _ = write!(out, ",\"id\":{id},\"slot\":{slot}");
+        }
+        TraceEvent::Step { batch, prefill, decode } => {
+            let _ = write!(out, ",\"batch\":{batch},\"prefill\":{prefill},\"decode\":{decode}");
+        }
+        TraceEvent::PrefixHit { id, tokens } => {
+            let _ = write!(out, ",\"id\":{id},\"tokens\":{tokens}");
+        }
+        TraceEvent::BlockAlloc { block } => {
+            let _ = write!(out, ",\"block\":{block}");
+        }
+        TraceEvent::BlockCow { src, dst } => {
+            let _ = write!(out, ",\"src\":{src},\"dst\":{dst}");
+        }
+        TraceEvent::BlockEvict { block } => {
+            let _ = write!(out, ",\"block\":{block}");
+        }
+        TraceEvent::StepRetry { attempt } => {
+            let _ = write!(out, ",\"attempt\":{attempt}");
+        }
+        TraceEvent::Quarantine { id }
+        | TraceEvent::Cancel { id }
+        | TraceEvent::Deadline { id } => {
+            let _ = write!(out, ",\"id\":{id}");
+        }
+        TraceEvent::Drain => {}
+        TraceEvent::Finish { id, slot, tokens, cause } => {
+            let _ = write!(
+                out,
+                ",\"id\":{id},\"slot\":{slot},\"tokens\":{tokens},\"cause\":\"{}\"",
+                escape(cause)
+            );
+        }
+    }
+}
+
+/// Minimal JSON string escape. Causes/kinds are static snake_case tags
+/// today; escaping anyway keeps the exporter safe if one ever grows
+/// punctuation.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Plain-text dump: canonical one-line-per-record form plus a trailer
+/// noting ring overflow, if any.
+pub fn text_dump(records: &[TraceRecord], dropped: u64) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# faquant trace: {} events", records.len());
+    for r in records {
+        out.push_str(&r.canonical());
+        out.push('\n');
+    }
+    if dropped > 0 {
+        let _ = writeln!(out, "# ring overflow: {dropped} oldest events dropped");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        vec![
+            TraceRecord {
+                seq: 0,
+                tick: 0,
+                ts_us: 0,
+                ev: TraceEvent::Submit { id: 4 },
+            },
+            TraceRecord {
+                seq: 1,
+                tick: 1,
+                ts_us: 1000,
+                ev: TraceEvent::Admit { id: 4, slot: 0, start: 0 },
+            },
+            TraceRecord {
+                seq: 2,
+                tick: 1,
+                ts_us: 1000,
+                ev: TraceEvent::PrefillBegin { id: 4, slot: 0, tokens: 8 },
+            },
+            TraceRecord {
+                seq: 3,
+                tick: 3,
+                ts_us: 3000,
+                ev: TraceEvent::PrefillEnd { id: 4, slot: 0 },
+            },
+            TraceRecord {
+                seq: 4,
+                tick: 4,
+                ts_us: 4000,
+                ev: TraceEvent::Finish { id: 4, slot: 0, tokens: 2, cause: "max_tokens" },
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_export_names_tracks_and_balances_braces() {
+        let json = chrome_trace_json(&sample_records());
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"lifecycle\""));
+        assert!(json.contains("\"name\":\"slot 0\""));
+        assert!(json.contains("\"ph\":\"B\""));
+        assert!(json.contains("\"ph\":\"E\""));
+        assert!(json.contains("\"ph\":\"i\",\"args\""));
+        assert!(json.contains("\"cause\":\"max_tokens\""));
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced JSON braces:\n{json}");
+        let braks = json.matches('[').count();
+        assert_eq!(braks, json.matches(']').count());
+    }
+
+    #[test]
+    fn chrome_export_is_deterministic() {
+        let recs = sample_records();
+        assert_eq!(chrome_trace_json(&recs), chrome_trace_json(&recs));
+    }
+
+    #[test]
+    fn text_dump_reports_overflow() {
+        let recs = sample_records();
+        let clean = text_dump(&recs, 0);
+        assert!(clean.starts_with("# faquant trace: 5 events\n"));
+        assert!(!clean.contains("ring overflow"));
+        assert_eq!(clean.lines().count(), 6);
+        let shed = text_dump(&recs, 12);
+        assert!(shed.ends_with("# ring overflow: 12 oldest events dropped\n"));
+    }
+
+    #[test]
+    fn escape_handles_quotes_and_controls() {
+        assert_eq!(escape("plain_tag"), "plain_tag");
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+}

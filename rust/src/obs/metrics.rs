@@ -1,0 +1,361 @@
+//! Metrics: counters, gauges, and deterministic fixed-bucket
+//! histograms.
+//!
+//! The histograms are the load-bearing piece. Latency percentiles in
+//! this repo must be *reproducible* — under the virtual clock, two runs
+//! of the same (seed, workload, config) must report identical p50/p95/
+//! p99 — so bucket selection uses integer microseconds against a fixed
+//! 1-2-5 geometric boundary table ([`Hist::BOUNDS_US`]) and percentiles
+//! are an integer rank walk returning the bucket's upper bound. No
+//! float enters the bucket math, so there is no platform- or
+//! optimization-dependent rounding to drift across machines; the cost
+//! is bucket-granular answers (a p95 of 3.1 ms reports as 5 ms), which
+//! is the standard histogram trade every metrics system makes.
+//!
+//! [`Metrics`] is a small registry (BTreeMaps, so the text exposition
+//! is byte-stable) used by the engine for counters/gauges and the
+//! latency histograms; [`LatencyStats`] is the percentile summary that
+//! rides in `GenReport` and feeds both the CLI summary line and
+//! `BENCH_perf.json`.
+
+use std::collections::BTreeMap;
+
+/// Fixed-bucket histogram over integer microseconds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Hist {
+    /// counts[i] = samples with `us <= BOUNDS_US[i]` (and above the
+    /// previous bound); the final slot counts overflow samples.
+    counts: [u64; Self::BOUNDS_US.len() + 1],
+    total: u64,
+    sum_us: u64,
+}
+
+impl Hist {
+    /// 1-2-5 geometric bucket upper bounds, 1 µs .. 1000 s. Chosen once,
+    /// compiled in: every build on every machine buckets identically.
+    pub const BOUNDS_US: [u64; 28] = [
+        1,
+        2,
+        5,
+        10,
+        20,
+        50,
+        100,
+        200,
+        500,
+        1_000,
+        2_000,
+        5_000,
+        10_000,
+        20_000,
+        50_000,
+        100_000,
+        200_000,
+        500_000,
+        1_000_000,
+        2_000_000,
+        5_000_000,
+        10_000_000,
+        20_000_000,
+        50_000_000,
+        100_000_000,
+        200_000_000,
+        500_000_000,
+        1_000_000_000,
+    ];
+
+    /// Reported value for samples beyond the last bound.
+    pub const OVERFLOW_US: u64 = 2_000_000_000;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. Integer-only: the bucket is the first bound
+    /// `>= us` (binary search on a const table).
+    pub fn record(&mut self, us: u64) {
+        let idx = Self::BOUNDS_US.partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// p-th percentile (p in 0..=100) as the owning bucket's upper
+    /// bound; 0 for an empty histogram. Integer rank walk — ceil(total
+    /// * p / 100), clamped to at least rank 1 — so the answer is a pure
+    /// function of the recorded multiset.
+    pub fn percentile(&self, p: u64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((self.total * p).div_ceil(100)).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return if i < Self::BOUNDS_US.len() {
+                    Self::BOUNDS_US[i]
+                } else {
+                    Self::OVERFLOW_US
+                };
+            }
+        }
+        Self::OVERFLOW_US
+    }
+}
+
+/// Percentile summary of an engine run's request latencies, in
+/// microseconds (bucket upper bounds — see [`Hist`]). Attached to
+/// `GenReport`; timebase is the engine's accumulated step time, so
+/// under the virtual clock every field is deterministic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    /// Time to first generated token (submit -> first sample).
+    pub ttft_p50_us: u64,
+    pub ttft_p95_us: u64,
+    pub ttft_p99_us: u64,
+    /// Batched step time attributed to each decoded token.
+    pub per_token_p50_us: u64,
+    pub per_token_p95_us: u64,
+    pub per_token_p99_us: u64,
+    /// Submit -> slot admission.
+    pub queue_wait_p50_us: u64,
+    pub queue_wait_p95_us: u64,
+    pub ttft_samples: u64,
+    pub per_token_samples: u64,
+}
+
+impl LatencyStats {
+    /// Summarize the three engine histograms.
+    pub fn from_hists(ttft: &Hist, per_token: &Hist, queue_wait: &Hist) -> Self {
+        Self {
+            ttft_p50_us: ttft.percentile(50),
+            ttft_p95_us: ttft.percentile(95),
+            ttft_p99_us: ttft.percentile(99),
+            per_token_p50_us: per_token.percentile(50),
+            per_token_p95_us: per_token.percentile(95),
+            per_token_p99_us: per_token.percentile(99),
+            queue_wait_p50_us: queue_wait.percentile(50),
+            queue_wait_p95_us: queue_wait.percentile(95),
+            ttft_samples: ttft.count(),
+            per_token_samples: per_token.count(),
+        }
+    }
+
+    /// One-line human summary (printed by `generate`; format pinned by
+    /// a test — downstream log scrapers may rely on it).
+    pub fn summary_line(&self) -> String {
+        fn ms(us: u64) -> String {
+            format!("{:.3}", us as f64 / 1000.0)
+        }
+        format!(
+            "latency: ttft p50/p95/p99 {}/{}/{} ms | per-token {}/{}/{} ms | queue-wait p95 {} ms",
+            ms(self.ttft_p50_us),
+            ms(self.ttft_p95_us),
+            ms(self.ttft_p99_us),
+            ms(self.per_token_p50_us),
+            ms(self.per_token_p95_us),
+            ms(self.per_token_p99_us),
+            ms(self.queue_wait_p95_us),
+        )
+    }
+}
+
+/// Named counters, gauges, and histograms. Keys are `&'static str` and
+/// storage is BTreeMaps, so [`Metrics::render_text`] is byte-stable and
+/// steady-state updates (key already present) allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, u64>,
+    hists: BTreeMap<&'static str, Hist>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-create a histogram so later `observe` calls hit an existing
+    /// entry (no node allocation on the hot path).
+    pub fn register_hist(&mut self, name: &'static str) {
+        self.hists.entry(name).or_default();
+    }
+
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, v: u64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Gauge that only ratchets upward (high-water marks).
+    pub fn max_gauge(&mut self, name: &'static str, v: u64) {
+        let g = self.gauges.entry(name).or_insert(0);
+        *g = (*g).max(v);
+    }
+
+    pub fn observe(&mut self, name: &'static str, us: u64) {
+        self.hists.entry(name).or_default().record(us);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Human-readable exposition dump: one line per series, sorted by
+    /// kind then name — deterministic byte-for-byte given equal state.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("counter {name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("gauge {name} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!(
+                "hist {name} count {} sum_us {} p50 {} p95 {} p99 {}\n",
+                h.count(),
+                h.sum_us(),
+                h.percentile(50),
+                h.percentile(95),
+                h.percentile(99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection_is_boundary_inclusive() {
+        let mut h = Hist::new();
+        h.record(1); // first bucket (<= 1)
+        h.record(2); // second (<= 2)
+        h.record(3); // third (<= 5)
+        h.record(1_000_000_000); // last real bucket
+        h.record(1_000_000_001); // overflow
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.percentile(100), Hist::OVERFLOW_US);
+    }
+
+    #[test]
+    fn percentiles_walk_integer_ranks() {
+        let mut h = Hist::new();
+        // 90 fast samples at <=1ms, 10 slow at <=100ms.
+        for _ in 0..90 {
+            h.record(800);
+        }
+        for _ in 0..10 {
+            h.record(70_000);
+        }
+        assert_eq!(h.percentile(50), 1_000);
+        assert_eq!(h.percentile(90), 1_000);
+        assert_eq!(h.percentile(95), 100_000);
+        assert_eq!(h.percentile(99), 100_000);
+        // Empty histogram answers 0, not garbage.
+        assert_eq!(Hist::new().percentile(99), 0);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_p() {
+        let mut h = Hist::new();
+        for us in [3u64, 17, 170, 1_700, 17_000, 170_000, 1_700_000] {
+            h.record(us);
+        }
+        let mut prev = 0;
+        for p in 0..=100 {
+            let v = h.percentile(p);
+            assert!(v >= prev, "p{p}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn identical_sample_multisets_give_identical_state() {
+        let samples = [5u64, 900, 1_000, 123_456, 7];
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        for &s in &samples {
+            a.record(s);
+        }
+        for &s in samples.iter().rev() {
+            b.record(s); // order must not matter
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn latency_summary_line_format_is_pinned() {
+        let stats = LatencyStats {
+            ttft_p50_us: 2_000,
+            ttft_p95_us: 5_000,
+            ttft_p99_us: 10_000,
+            per_token_p50_us: 1_000,
+            per_token_p95_us: 2_000,
+            per_token_p99_us: 2_000,
+            queue_wait_p50_us: 200,
+            queue_wait_p95_us: 500,
+            ttft_samples: 12,
+            per_token_samples: 240,
+        };
+        assert_eq!(
+            stats.summary_line(),
+            "latency: ttft p50/p95/p99 2.000/5.000/10.000 ms | \
+             per-token 1.000/2.000/2.000 ms | queue-wait p95 0.500 ms"
+        );
+    }
+
+    #[test]
+    fn metrics_registry_counts_gauges_and_renders_stably() {
+        let mut m = Metrics::new();
+        m.register_hist("ttft_us");
+        m.inc("steps", 1);
+        m.inc("steps", 2);
+        m.set_gauge("pool_in_use", 7);
+        m.max_gauge("pool_peak", 3);
+        m.max_gauge("pool_peak", 9);
+        m.max_gauge("pool_peak", 5);
+        m.observe("ttft_us", 1_500);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.gauge("pool_in_use"), 7);
+        assert_eq!(m.gauge("pool_peak"), 9);
+        assert_eq!(m.hist("ttft_us").unwrap().count(), 1);
+        assert_eq!(m.counter("missing"), 0);
+        let text = m.render_text();
+        assert_eq!(
+            text,
+            "counter steps 3\n\
+             gauge pool_in_use 7\n\
+             gauge pool_peak 9\n\
+             hist ttft_us count 1 sum_us 1500 p50 2000 p95 2000 p99 2000\n"
+        );
+        // Render twice: byte-identical.
+        assert_eq!(text, m.render_text());
+    }
+}

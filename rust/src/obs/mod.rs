@@ -1,0 +1,32 @@
+//! Observability (S17): deterministic tracing, metrics, and exporters.
+//!
+//! Three pieces, all dependency-free (DESIGN.md §15):
+//!
+//! - [`trace`] — typed engine events ([`TraceEvent`]) in per-thread
+//!   lock-light ring buffers, stamped with the engine tick plus a
+//!   timestamp from the trace's [`StampMode`]: virtual (`tick *
+//!   step_us`, a pure function of the tick — golden-testable) or wall
+//!   (production). A disabled [`Trace`] is a no-op handle: no
+//!   allocation, no clock read, one branch per event site.
+//! - [`metrics`] — counters, gauges, and fixed-bucket [`Hist`]ograms
+//!   whose bucket selection and percentile walk are integer-only, so
+//!   p50/p95/p99 TTFT, per-token latency, and queue wait are bitwise
+//!   reproducible under the virtual clock. [`LatencyStats`] carries
+//!   the summary into `GenReport` and `BENCH_perf.json`.
+//! - [`export`] — Chrome trace-event JSON (one track per slot + one
+//!   for the lifecycle; loads in Perfetto / chrome://tracing) and a
+//!   plain-text dump.
+//!
+//! The clock-domain discipline is enforced by faq-lint's
+//! `untracked-clock` rule: `engine/` and `serve/` may not call
+//! `Instant::now()` outside the `EngineClock`/obs seam without an
+//! audited allow marker, so new timing reads cannot silently leak
+//! nondeterminism into the serving path.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{chrome_trace_json, text_dump};
+pub use metrics::{Hist, LatencyStats, Metrics};
+pub use trace::{StampMode, Trace, TraceEvent, TraceRecord};

@@ -1,0 +1,406 @@
+//! Structured event tracing: typed engine events in per-thread,
+//! lock-light ring buffers.
+//!
+//! The engine emits a [`TraceEvent`] at every interesting lifecycle
+//! point (admission, prefill, step composition, prefix-cache hits,
+//! block pool traffic, retries/quarantine, cancel/deadline/drain).
+//! Each event is stamped twice:
+//!
+//! - **tick** — the engine's step counter, the causal coordinate. Two
+//!   runs of the same (seed, workload, config) execute the same tick
+//!   sequence, so ticks are bitwise reproducible by construction.
+//! - **ts_us** — microseconds on the trace's [`StampMode`]: under
+//!   [`StampMode::Virtual`] it is `tick * step_us` (a pure function of
+//!   the tick, golden-testable); under [`StampMode::Wall`] it is real
+//!   elapsed time (what you want in production, and what Perfetto
+//!   renders as the timeline).
+//!
+//! **Zero cost when disabled.** [`Trace`] is a cheap-clone handle over
+//! `Option<Arc<TraceSink>>`. A disabled handle's [`Trace::emit`] is an
+//! inlined `None` check — no allocation, no clock read, no lock — so
+//! production engines that never asked for a trace pay one branch per
+//! event site (pinned by `benches/alloc_probe.rs`). Events carry only
+//! fixed-size payloads (`usize` ids and `&'static str` causes), so
+//! even the enabled path never heap-allocates per event: records land
+//! in ring buffers preallocated at sink construction.
+//!
+//! **Overflow semantics.** Each ring holds a fixed number of records;
+//! when full, the *oldest* record is overwritten and a dropped counter
+//! advances. A long run therefore keeps the most recent window — the
+//! part you want when debugging "what just happened" — and the export
+//! reports how much history was shed ([`Trace::dropped`]).
+//!
+//! **Ordering.** Every record takes a global sequence number from one
+//! atomic counter, so the canonical order ([`Trace::snapshot`] sorts
+//! by it) is the emission order regardless of which thread's ring a
+//! record landed in. The engine emits from its driver thread only, so
+//! under the virtual clock the canonical sequence is a pure function
+//! of (seed, workload, config) — identical at 1/2/8 worker threads
+//! (pinned by `tests/props.rs::trace_determinism_pinned_*`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default total record capacity of a sink (split across shards).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Ring shards per sink. Emission hashes the current thread id to a
+/// shard, so concurrent emitters (if a caller ever drives one engine
+/// from several threads) contend only per-shard, not globally.
+const SHARDS: usize = 8;
+
+/// One typed engine event. Payloads are fixed-size on purpose: no
+/// `String`, no `Vec` — an event can be constructed and recorded
+/// without touching the heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Request accepted into the admission queue.
+    Submit { id: usize },
+    /// Request refused at submission (`cause` = stable reject tag).
+    Reject { id: usize, cause: &'static str },
+    /// Request bound to a slot; `start` is the first cursor position
+    /// actually fed (> 0 when a prefix-cache hit skipped prefill).
+    Admit { id: usize, slot: usize, start: usize },
+    /// First prefill feed for a slot (`tokens` = prompt tokens left).
+    PrefillBegin { id: usize, slot: usize, tokens: usize },
+    /// The slot's cursor crossed its prompt length.
+    PrefillEnd { id: usize, slot: usize },
+    /// One batched compute step: total feeds and the prefill/decode mix.
+    Step { batch: usize, prefill: usize, decode: usize },
+    /// Radix prefix-cache hit at admission (`tokens` skipped).
+    PrefixHit { id: usize, tokens: usize },
+    /// KV pool block handed out.
+    BlockAlloc { block: usize },
+    /// Copy-on-write: `src`'s rows copied into freshly owned `dst`.
+    BlockCow { src: usize, dst: usize },
+    /// Prefix-cache LRU eviction released a block reference.
+    BlockEvict { block: usize },
+    /// A compute attempt failed and the same batch is being retried.
+    StepRetry { attempt: usize },
+    /// Quarantine bisection evicted a poisoned request.
+    Quarantine { id: usize },
+    /// Cancel token observed (queued or mid-decode).
+    Cancel { id: usize },
+    /// Deadline expired (queued or mid-decode).
+    Deadline { id: usize },
+    /// Graceful drain began: no further admissions.
+    Drain,
+    /// Request left its slot (`cause` = finish tag, `tokens` generated).
+    Finish { id: usize, slot: usize, tokens: usize, cause: &'static str },
+}
+
+impl TraceEvent {
+    /// Stable snake_case kind tag (used by both exporters and CI's
+    /// per-category presence check).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "submit",
+            TraceEvent::Reject { .. } => "reject",
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::PrefillBegin { .. } => "prefill_begin",
+            TraceEvent::PrefillEnd { .. } => "prefill_end",
+            TraceEvent::Step { .. } => "step",
+            TraceEvent::PrefixHit { .. } => "prefix_hit",
+            TraceEvent::BlockAlloc { .. } => "block_alloc",
+            TraceEvent::BlockCow { .. } => "block_cow",
+            TraceEvent::BlockEvict { .. } => "block_evict",
+            TraceEvent::StepRetry { .. } => "step_retry",
+            TraceEvent::Quarantine { .. } => "quarantine",
+            TraceEvent::Cancel { .. } => "cancel",
+            TraceEvent::Deadline { .. } => "deadline",
+            TraceEvent::Drain => "drain",
+            TraceEvent::Finish { .. } => "finish",
+        }
+    }
+
+    /// Slot the event belongs to, when it is slot-scoped (drives the
+    /// one-track-per-slot layout of the Chrome export).
+    pub fn slot(&self) -> Option<usize> {
+        match self {
+            TraceEvent::Admit { slot, .. }
+            | TraceEvent::PrefillBegin { slot, .. }
+            | TraceEvent::PrefillEnd { slot, .. }
+            | TraceEvent::Finish { slot, .. } => Some(*slot),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event: global sequence number, engine tick, timestamp
+/// on the sink's [`StampMode`], and the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub seq: u64,
+    pub tick: u64,
+    pub ts_us: u64,
+    pub ev: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Canonical text form — the golden representation the determinism
+    /// tests compare across thread counts.
+    pub fn canonical(&self) -> String {
+        format!("tick={} ts_us={} {:?}", self.tick, self.ts_us, self.ev)
+    }
+}
+
+/// Timestamp domain of a sink.
+#[derive(Clone, Copy, Debug)]
+pub enum StampMode {
+    /// Deterministic: `ts_us = tick * step_us`. Pure function of the
+    /// tick — no clock is ever read.
+    Virtual { step_us: u64 },
+    /// Production: microseconds since the sink was created. The only
+    /// wall-clock read on the tracing path, and it happens here, inside
+    /// an *enabled* sink — a disabled trace never touches a clock.
+    Wall { t0: Instant },
+}
+
+impl StampMode {
+    fn stamp(&self, tick: u64) -> u64 {
+        match self {
+            StampMode::Virtual { step_us } => tick.saturating_mul(*step_us),
+            StampMode::Wall { t0 } => u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX),
+        }
+    }
+}
+
+/// Fixed-capacity ring: full means overwrite-oldest, counting drops.
+struct Ring {
+    buf: Vec<TraceRecord>,
+    cap: usize,
+    /// Index of the oldest record once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, rec: TraceRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec); // within preallocated capacity: no alloc
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain_in_order(&self, out: &mut Vec<TraceRecord>) {
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+    }
+}
+
+/// The shared sink behind an enabled [`Trace`].
+pub struct TraceSink {
+    mode: StampMode,
+    seq: AtomicU64,
+    shards: Vec<Mutex<Ring>>,
+}
+
+impl TraceSink {
+    fn new(mode: StampMode, capacity: usize) -> Self {
+        let per_shard = capacity.div_ceil(SHARDS).max(1);
+        Self {
+            mode,
+            seq: AtomicU64::new(0),
+            shards: (0..SHARDS).map(|_| Mutex::new(Ring::new(per_shard))).collect(),
+        }
+    }
+
+    fn shard_index(&self) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        h.finish() as usize % self.shards.len()
+    }
+
+    fn record(&self, tick: u64, ev: TraceEvent) {
+        let rec = TraceRecord {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            tick,
+            ts_us: self.mode.stamp(tick),
+            ev,
+        };
+        let mut ring = match self.shards[self.shard_index()].lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(), // a panicked emitter must not lose the trace
+        };
+        ring.push(rec);
+    }
+}
+
+/// Cheap-clone tracing handle. [`Trace::default`] /
+/// [`Trace::disabled`] is the no-op sink: `emit` reduces to a branch.
+#[derive(Clone, Default)]
+pub struct Trace(Option<Arc<TraceSink>>);
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Trace")
+            .field(&if self.0.is_some() { "enabled" } else { "disabled" })
+            .finish()
+    }
+}
+
+impl Trace {
+    /// The no-op handle: emit does nothing, reads no clock, allocates
+    /// nothing.
+    pub fn disabled() -> Self {
+        Self(None)
+    }
+
+    /// Enabled sink on the deterministic virtual clock (`step_us`
+    /// microseconds per engine tick).
+    pub fn virtual_clock(step_us: u64) -> Self {
+        Self::with_mode(StampMode::Virtual { step_us }, DEFAULT_CAPACITY)
+    }
+
+    /// Enabled sink stamping wall time (microseconds since creation).
+    pub fn wall_clock() -> Self {
+        Self::with_mode(StampMode::Wall { t0: Instant::now() }, DEFAULT_CAPACITY)
+    }
+
+    /// Enabled sink with an explicit mode and total record capacity.
+    pub fn with_mode(mode: StampMode, capacity: usize) -> Self {
+        Self(Some(Arc::new(TraceSink::new(mode, capacity))))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Record an event at `tick`. The disabled-path contract — no
+    /// allocation, no clock read — is what makes it safe to leave these
+    /// calls unconditionally in the scheduler hot path.
+    #[inline]
+    pub fn emit(&self, tick: u64, ev: TraceEvent) {
+        if let Some(sink) = &self.0 {
+            sink.record(tick, ev);
+        }
+    }
+
+    /// All surviving records merged across shards, in canonical
+    /// (emission) order. Empty for a disabled trace.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        let Some(sink) = &self.0 else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for shard in &sink.shards {
+            let ring = match shard.lock() {
+                Ok(g) => g,
+                Err(poison) => poison.into_inner(),
+            };
+            ring.drain_in_order(&mut out);
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Records overwritten by ring overflow (0 = the full history
+    /// survived).
+    pub fn dropped(&self) -> u64 {
+        let Some(sink) = &self.0 else { return 0 };
+        sink.shards
+            .iter()
+            .map(|s| match s.lock() {
+                Ok(g) => g.dropped,
+                Err(poison) => poison.into_inner().dropped,
+            })
+            .sum()
+    }
+
+    /// Canonical golden form: one line per record, emission order.
+    pub fn canonical_lines(&self) -> Vec<String> {
+        self.snapshot().iter().map(TraceRecord::canonical).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_is_inert() {
+        let t = Trace::disabled();
+        assert!(!t.is_enabled());
+        t.emit(3, TraceEvent::Drain);
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(t.canonical_lines().is_empty());
+    }
+
+    #[test]
+    fn virtual_stamps_are_pure_functions_of_the_tick() {
+        let t = Trace::virtual_clock(1000);
+        t.emit(0, TraceEvent::Submit { id: 7 });
+        t.emit(4, TraceEvent::Step { batch: 2, prefill: 1, decode: 1 });
+        let recs = t.snapshot();
+        assert_eq!(recs.len(), 2);
+        assert_eq!((recs[0].tick, recs[0].ts_us), (0, 0));
+        assert_eq!((recs[1].tick, recs[1].ts_us), (4, 4000));
+        assert_eq!(
+            recs[0].canonical(),
+            "tick=0 ts_us=0 Submit { id: 7 }".to_string()
+        );
+    }
+
+    #[test]
+    fn snapshot_preserves_emission_order() {
+        let t = Trace::virtual_clock(1);
+        for i in 0..100 {
+            t.emit(i, TraceEvent::BlockAlloc { block: i as usize });
+        }
+        let recs = t.snapshot();
+        assert_eq!(recs.len(), 100);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!(r.tick, i as u64);
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        // Tiny sink: capacity 16 split over 8 shards = 2 per shard. A
+        // single emitting thread lands on ONE shard, so 10 emits into a
+        // 2-slot ring keep the newest 2 and drop 8.
+        let t = Trace::with_mode(StampMode::Virtual { step_us: 1 }, 16);
+        for i in 0..10u64 {
+            t.emit(i, TraceEvent::Deadline { id: i as usize });
+        }
+        let recs = t.snapshot();
+        assert_eq!(recs.len(), 2, "newest window survives");
+        assert_eq!(recs[0].tick, 8);
+        assert_eq!(recs[1].tick, 9);
+        assert_eq!(t.dropped(), 8);
+    }
+
+    #[test]
+    fn event_kind_and_slot_tags() {
+        let ev = TraceEvent::Finish {
+            id: 1,
+            slot: 3,
+            tokens: 5,
+            cause: "max_tokens",
+        };
+        assert_eq!(ev.kind(), "finish");
+        assert_eq!(ev.slot(), Some(3));
+        assert_eq!(TraceEvent::Drain.kind(), "drain");
+        assert_eq!(TraceEvent::Drain.slot(), None);
+        assert_eq!(
+            TraceEvent::PrefixHit { id: 0, tokens: 8 }.kind(),
+            "prefix_hit"
+        );
+    }
+}

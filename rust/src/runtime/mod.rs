@@ -35,12 +35,15 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Cumulative execution statistics (per entry name).
+/// Cumulative execution statistics (per entry name). Accumulated in
+/// `f64`: a long serving run adds millions of sub-millisecond durations,
+/// and `f32` accumulation stops advancing once the total dwarfs each
+/// increment (at ~128 s total, adding 5 µs is a no-op in f32).
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     pub calls: usize,
-    pub compile_secs: f32,
-    pub exec_secs: f32,
+    pub compile_secs: f64,
+    pub exec_secs: f64,
 }
 
 /// The process-wide runtime: manifest + backend + stats. `Sync` — safe
@@ -155,7 +158,7 @@ impl Runtime {
         self.ensure_prepared(cfg, entry)?;
         let t0 = Instant::now();
         let outs = self.backend.exec(&self.manifest, cfg, entry, args)?;
-        self.note_exec(cfg, entry, t0.elapsed().as_secs_f32());
+        self.note_exec(cfg, entry, t0.elapsed().as_secs_f64());
         Ok(outs)
     }
 
@@ -196,7 +199,7 @@ impl Runtime {
         let outs = self
             .backend
             .exec_buffers(&self.manifest, cfg, entry, &refs)?;
-        self.note_exec(cfg, entry, t0.elapsed().as_secs_f32());
+        self.note_exec(cfg, entry, t0.elapsed().as_secs_f64());
         Ok(outs)
     }
 
@@ -247,7 +250,7 @@ impl Runtime {
                 .map(|l| self.backend.upload(l.clone()))
                 .collect::<Result<Vec<_>>>()?,
         };
-        let secs = t0.elapsed().as_secs_f32();
+        let secs = t0.elapsed().as_secs_f64();
         {
             let mut stats = self.stats.lock().unwrap();
             let s = stats.entry(format!("{cfg}/prepare_qweights")).or_default();
@@ -287,12 +290,12 @@ impl Runtime {
             .unwrap()
             .entry(key.clone())
             .or_default()
-            .compile_secs += secs;
+            .compile_secs += f64::from(secs);
         self.prepared.lock().unwrap().insert(key);
         Ok(())
     }
 
-    fn note_exec(&self, cfg: &str, entry: &str, secs: f32) {
+    fn note_exec(&self, cfg: &str, entry: &str, secs: f64) {
         let mut stats = self.stats.lock().unwrap();
         let s = stats.entry(format!("{cfg}/{entry}")).or_default();
         s.calls += 1;
@@ -309,7 +312,7 @@ impl Runtime {
     }
 
     /// Total seconds spent inside backend execution calls.
-    pub fn total_exec_secs(&self) -> f32 {
+    pub fn total_exec_secs(&self) -> f64 {
         self.stats.lock().unwrap().values().map(|s| s.exec_secs).sum()
     }
 }

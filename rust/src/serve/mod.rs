@@ -33,9 +33,10 @@
 use crate::config::ModelConfig;
 use crate::engine::{CancelToken, Engine, FinishReason, GenConfig, GenReport, GenRequest};
 use crate::model::{Params, ROLES};
+use crate::obs::{Hist, TraceRecord};
 use crate::quant::QuantizedModel;
 use crate::runtime::{lit_f32, tensor_f32, Buffer, Runtime, Value};
-use crate::tensor::{percentile, Tensor, TensorI32};
+use crate::tensor::{Tensor, TensorI32};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -92,8 +93,12 @@ pub struct ServeReport {
     pub reject_counts: RejectCounts,
     pub batches: usize,
     pub mean_batch_fill: f32,
+    /// Queue-side latency percentiles from the deterministic
+    /// fixed-bucket histogram ([`Hist`], DESIGN.md §15) — values are
+    /// bucket upper bounds, not interpolated.
     pub p50_ms: f32,
     pub p95_ms: f32,
+    pub p99_ms: f32,
     pub throughput_rps: f32,
 }
 
@@ -132,8 +137,15 @@ pub struct GenServeReport {
     /// Requests seen on the queue: completed + rejected (quarantined
     /// included) + cancelled + deadline-expired.
     pub requests: usize,
+    /// Queue-side latency percentiles ([`Hist`] bucket upper bounds).
     pub p50_ms: f32,
     pub p95_ms: f32,
+    pub p99_ms: f32,
+    /// The engine's structured trace (empty unless `GenConfig::trace`);
+    /// export with [`crate::obs::chrome_trace_json`] / [`crate::obs::text_dump`].
+    pub trace: Vec<TraceRecord>,
+    /// Ring-buffer overflow: oldest trace events overwritten.
+    pub trace_dropped: u64,
 }
 
 /// Build the flat argument prefix for `fwd_logits_q`/`decode_step_q`
@@ -183,6 +195,16 @@ fn push_linear(
     Ok(())
 }
 
+/// Integer microseconds of a duration (saturating), for [`Hist`].
+fn duration_us(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+/// A histogram percentile in milliseconds (bucket upper bound).
+fn hist_ms(h: &Hist, p: u64) -> f32 {
+    h.percentile(p) as f32 / 1000.0
+}
+
 /// Why a one-shot scoring request cannot join a batch, if anything.
 fn validate_oneshot(tokens: &[i32], want_len: usize, vocab: usize) -> Option<RejectReason> {
     if tokens.len() != want_len {
@@ -220,11 +242,11 @@ pub fn serve_requests(
     let weight_lits = qmodel_literals(params, qm)?;
     let weight_bufs = rt.prepare_qweights(&cfg.name, &weight_lits)?;
     let (b, t, v) = (cfg.batch, cfg.seq, cfg.vocab);
-    let mut latencies_ms: Vec<f32> = Vec::new();
+    let mut lat = Hist::new();
     let mut fills: Vec<f32> = Vec::new();
     let mut batches = 0usize;
     let mut reject_counts = RejectCounts::default();
-    let started = Instant::now();
+    let started = Instant::now(); // faq-lint: allow(untracked-clock) — report wall time
     let mut pending: Vec<(Request, Instant)> = Vec::new();
     let mut done = false;
 
@@ -249,9 +271,9 @@ pub fn serve_requests(
         // with a structured reason (a wrong length would corrupt the
         // fixed-shape batch; an out-of-range token id would make the
         // embedding gather fail mid-batch and take the whole loop down).
-        let deadline = Instant::now() + max_wait;
+        let deadline = Instant::now() + max_wait; // faq-lint: allow(untracked-clock) — batch window
         while pending.len() < b && !done {
-            let timeout = deadline.saturating_duration_since(Instant::now());
+            let timeout = deadline.saturating_duration_since(Instant::now()); // faq-lint: allow(untracked-clock) — batch window
             match rx.recv_timeout(timeout) {
                 Ok(req) => match validate_oneshot(&req.tokens, t, v) {
                     Some(reason) => {
@@ -259,7 +281,7 @@ pub fn serve_requests(
                         // Receiver may have hung up; that's their business.
                         let _ = req.respond.send(Response::Rejected(reason));
                     }
-                    None => pending.push((req, Instant::now())),
+                    None => pending.push((req, Instant::now())), // faq-lint: allow(untracked-clock) — queue stamp
                 },
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
@@ -303,7 +325,7 @@ pub fn serve_requests(
             .first()
             .ok_or_else(|| anyhow!("fwd_logits_q returned no outputs"))?;
         let logits = tensor_f32(first)?; // [B, T, V]
-        let now = Instant::now();
+        let now = Instant::now(); // faq-lint: allow(untracked-clock) — latency stamp
         batches += 1;
 
         for (i, (req, queued)) in group.into_iter().enumerate() {
@@ -313,7 +335,7 @@ pub fn serve_requests(
                 .get(base..base + v)
                 .ok_or_else(|| anyhow!("logits row {i} out of range"))?
                 .to_vec();
-            latencies_ms.push(now.duration_since(queued).as_secs_f32() * 1e3);
+            lat.record(duration_us(now.duration_since(queued)));
             let _ = req.respond.send(Response::Done(Completion {
                 next_logits: next,
                 queued_at: queued,
@@ -323,7 +345,7 @@ pub fn serve_requests(
     }
 
     let total = started.elapsed().as_secs_f32();
-    let n = latencies_ms.len();
+    let n = usize::try_from(lat.count()).unwrap_or(usize::MAX);
     Ok(ServeReport {
         requests: n,
         rejected: reject_counts.total(),
@@ -334,8 +356,9 @@ pub fn serve_requests(
         } else {
             fills.iter().sum::<f32>() / fills.len() as f32
         },
-        p50_ms: percentile(&latencies_ms, 50.0),
-        p95_ms: percentile(&latencies_ms, 95.0),
+        p50_ms: hist_ms(&lat, 50),
+        p95_ms: hist_ms(&lat, 95),
+        p99_ms: hist_ms(&lat, 99),
         throughput_rps: if total > 0.0 { n as f32 / total } else { 0.0 },
     })
 }
@@ -400,7 +423,7 @@ pub fn serve_generate(
         });
         match out {
             Some(immediate) => {
-                let now = Instant::now();
+                let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
                 let resp = match immediate.finish {
                     FinishReason::Rejected(reason) => GenServeResponse::Rejected(reason),
                     // `submit` only answers immediately with rejections
@@ -420,7 +443,7 @@ pub fn serve_generate(
                     id,
                     InflightEntry {
                         respond: req.respond,
-                        queued_at: Instant::now(),
+                        queued_at: Instant::now(), // faq-lint: allow(untracked-clock) — queue stamp
                         cancel,
                     },
                 );
@@ -430,7 +453,7 @@ pub fn serve_generate(
 
     let mut engine = Engine::new(rt, cfg, params, qm, gen)?;
     let mut inflight: BTreeMap<usize, InflightEntry> = BTreeMap::new();
-    let mut latencies_ms: Vec<f32> = Vec::new();
+    let mut lat = Hist::new();
     let mut next_id = 0usize;
     let mut done = false;
 
@@ -474,9 +497,9 @@ pub fn serve_generate(
             continue;
         }
         for out in engine.step()? {
-            let now = Instant::now();
+            let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
             if let Some(entry) = inflight.remove(&out.id) {
-                latencies_ms.push(now.duration_since(entry.queued_at).as_secs_f32() * 1e3);
+                lat.record(duration_us(now.duration_since(entry.queued_at)));
                 let _ = entry.respond.send(GenServeResponse::Done {
                     tokens: out.tokens,
                     finish: out.finish,
@@ -488,14 +511,19 @@ pub fn serve_generate(
     }
 
     let engine_report = engine.report();
+    let trace = engine.trace().snapshot();
+    let trace_dropped = engine.trace().dropped();
     Ok(GenServeReport {
         requests: engine_report.sequences
             + engine_report.rejected
             + engine_report.cancelled
             + engine_report.deadline_exceeded,
         engine: engine_report,
-        p50_ms: percentile(&latencies_ms, 50.0),
-        p95_ms: percentile(&latencies_ms, 95.0),
+        p50_ms: hist_ms(&lat, 50),
+        p95_ms: hist_ms(&lat, 95),
+        p99_ms: hist_ms(&lat, 99),
+        trace,
+        trace_dropped,
     })
 }
 
@@ -515,12 +543,23 @@ mod tests {
             mean_batch_fill: 0.83,
             p50_ms: 5.0,
             p95_ms: 9.0,
+            p99_ms: 10.0,
             throughput_rps: 100.0,
         };
         assert!(r.p95_ms >= r.p50_ms);
+        assert!(r.p99_ms >= r.p95_ms);
         assert!(r.mean_batch_fill <= 1.0);
         assert_eq!(r.rejected, 1);
         assert_eq!(r.reject_counts.wrong_length, 1);
+    }
+
+    #[test]
+    fn hist_ms_converts_bucket_bounds() {
+        let mut h = Hist::new();
+        h.record(duration_us(Duration::from_millis(3)));
+        // 3 ms lands in the (2ms, 5ms] bucket: upper bound 5 ms.
+        assert_eq!(hist_ms(&h, 50), 5.0);
+        assert_eq!(hist_ms(&Hist::new(), 95), 0.0);
     }
 
     #[test]

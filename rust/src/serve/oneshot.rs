@@ -140,6 +140,9 @@ impl<T> OneshotReceiver<T> {
     /// Block until the value arrives, the sender is dropped, or
     /// `timeout` elapses.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        // faq-lint: allow(untracked-clock) — client-side wait primitive:
+        // bounds a condvar wait against real time; never reaches the
+        // engine's scheduling decisions.
         let deadline = Instant::now().checked_add(timeout);
         let mut st = self.shared.lock();
         loop {
@@ -150,7 +153,7 @@ impl<T> OneshotReceiver<T> {
                 return Err(RecvError::Disconnected);
             }
             let left = deadline
-                .map(|d| d.saturating_duration_since(Instant::now()))
+                .map(|d| d.saturating_duration_since(Instant::now())) // faq-lint: allow(untracked-clock) — client-side wait
                 .unwrap_or(Duration::MAX);
             if left.is_zero() {
                 return Err(RecvError::Timeout);

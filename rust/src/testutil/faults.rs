@@ -182,6 +182,11 @@ pub struct FaultRunResult {
     /// request id.
     pub outs: Vec<GenOutput>,
     pub report: GenReport,
+    /// Canonically rendered trace-event lines: faulted runs always trace
+    /// (retry, quarantine, cancel, deadline, and drain events included),
+    /// and under the virtual clock the lines must be identical at every
+    /// thread count.
+    pub trace_lines: Vec<String>,
 }
 
 /// Drive one engine through the workload under `plan`: per-request
@@ -209,6 +214,10 @@ pub fn run_workload_faulted(
         }
     }
     let cfg = fixtures::pico();
+    // Faulted runs always trace: the failure path is exactly where the
+    // event log must stay deterministic, and the survivor checks against
+    // the untraced baseline double as the observer-effect pin.
+    let gen = GenConfig { trace: true, ..gen };
     let mut eng = Engine::new(rt, &cfg, params, qm, gen)?;
     eng.set_fault_injector(Box::new(PlanInjector::new(plan.clone())));
     let cancel_token = CancelToken::new();
@@ -298,9 +307,11 @@ pub fn run_workload_faulted(
         }
     }
     outs.sort_by_key(|o| o.id);
+    let trace_lines = eng.trace().canonical_lines();
     Ok(FaultRunResult {
         outs,
         report: eng.report(),
+        trace_lines,
     })
 }
 
@@ -460,12 +471,31 @@ pub fn fault_injection_case(seed: u64) -> Result<()> {
         par::set_threads(0);
         let res = res?;
         check_faulted_outputs(seed, &plan, &baseline, &res)?;
+        if res.trace_lines.is_empty() {
+            bail!("fault seed {seed}: traced faulted run produced no events");
+        }
         if let Some(ref f) = first {
             fuzz::assert_streams_equal(
                 &f.outs,
                 &res.outs,
                 &format!("faulted run at {threads} threads vs 1 thread (fault seed {seed})"),
             )?;
+            if f.trace_lines != res.trace_lines {
+                let i = f
+                    .trace_lines
+                    .iter()
+                    .zip(&res.trace_lines)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or_else(|| f.trace_lines.len().min(res.trace_lines.len()));
+                bail!(
+                    "fault seed {seed}: trace diverges at {threads} threads \
+                     ({} vs {} events), first at line {i}:\n  want: {:?}\n  got:  {:?}",
+                    f.trace_lines.len(),
+                    res.trace_lines.len(),
+                    f.trace_lines.get(i),
+                    res.trace_lines.get(i)
+                );
+            }
         } else {
             first = Some(res);
         }

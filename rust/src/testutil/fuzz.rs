@@ -25,6 +25,7 @@ use crate::quant::QuantizedModel;
 use crate::runtime::Runtime;
 use crate::tensor::{par, Rng};
 use anyhow::{bail, Result};
+use std::time::Duration;
 
 /// Workload shape, fully derived from one seed.
 #[derive(Clone, Debug)]
@@ -151,6 +152,32 @@ pub fn run_workload(
 ) -> Result<Vec<GenOutput>> {
     let cfg = fixtures::pico();
     let mut eng = Engine::new(rt, &cfg, params, qm, gen)?;
+    drive(&mut eng, workload, check_invariants)
+}
+
+/// Like [`run_workload`], but also returns the canonically-rendered
+/// trace-event lines (set `gen.trace = true` and a `virtual_step` to get
+/// deterministic, cross-thread-comparable lines).
+pub fn run_workload_traced(
+    rt: &Runtime,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    workload: &[(usize, GenRequest)],
+    check_invariants: bool,
+) -> Result<(Vec<GenOutput>, Vec<String>)> {
+    let cfg = fixtures::pico();
+    let mut eng = Engine::new(rt, &cfg, params, qm, gen)?;
+    let outs = drive(&mut eng, workload, check_invariants)?;
+    let lines = eng.trace().canonical_lines();
+    Ok((outs, lines))
+}
+
+fn drive(
+    eng: &mut Engine<'_>,
+    workload: &[(usize, GenRequest)],
+    check_invariants: bool,
+) -> Result<Vec<GenOutput>> {
     let mut outs = Vec::new();
     let mut next = 0usize;
     let mut step = 0usize;
@@ -277,6 +304,82 @@ pub fn differential_fuzz_case(seed: u64) -> Result<()> {
         &dense8?,
         &format!("dense@8 vs dense@1 (fuzz seed {seed})"),
     )?;
+    Ok(())
+}
+
+/// Trace-determinism pin (DESIGN.md §15), one seed in, two contracts out:
+///
+/// 1. **Observer effect**: enabling tracing must not perturb generation —
+///    the traced paged engine's token streams are bitwise identical to
+///    the untraced run's.
+/// 2. **Reproducibility**: under the virtual clock, the canonically
+///    rendered event sequence is identical at 1/2/8 compute threads (all
+///    events are emitted from the scheduler thread, stamped with tick
+///    time and a global sequence number — worker-thread count must be
+///    invisible).
+pub fn trace_determinism_case(seed: u64) -> Result<()> {
+    let spec = FuzzSpec::from_seed(seed);
+    println!("trace determinism seed {seed}: {spec:?}");
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, seed ^ 0x9E37);
+    let workload = build_workload(cfg.vocab, cfg.seq, &spec);
+    let untraced_cfg = GenConfig {
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed ^ 1,
+        slots: spec.slots,
+        paged: true,
+        block_tokens: spec.block_tokens,
+        pool_blocks: spec.pool_blocks,
+        prefix_cache: true,
+        virtual_step: Some(Duration::from_millis(1)),
+        ..GenConfig::default()
+    };
+    let traced_cfg = GenConfig {
+        trace: true,
+        ..untraced_cfg.clone()
+    };
+
+    par::set_threads(1);
+    let untraced = run_workload(&rt, &params, &qm, untraced_cfg, &workload, false);
+    par::set_threads(0);
+    let untraced = untraced?;
+
+    let mut reference: Option<Vec<String>> = None;
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let got = run_workload_traced(&rt, &params, &qm, traced_cfg.clone(), &workload, true);
+        par::set_threads(0);
+        let (outs, lines) = got?;
+        assert_streams_equal(
+            &untraced,
+            &outs,
+            &format!("traced vs untraced at {threads} threads (trace seed {seed})"),
+        )?;
+        if lines.is_empty() {
+            bail!("trace seed {seed}: traced run produced no events");
+        }
+        match &reference {
+            None => reference = Some(lines),
+            Some(want) => {
+                if *want != lines {
+                    let i = want
+                        .iter()
+                        .zip(&lines)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or_else(|| want.len().min(lines.len()));
+                    bail!(
+                        "trace seed {seed}: event sequence diverges at {threads} threads \
+                         ({} vs {} events), first at line {i}:\n  want: {:?}\n  got:  {:?}",
+                        want.len(),
+                        lines.len(),
+                        want.get(i),
+                        lines.get(i)
+                    );
+                }
+            }
+        }
+    }
     Ok(())
 }
 

@@ -786,6 +786,47 @@ fn fault_injection_env_seed() {
     faults::fault_injection_case(seed).unwrap();
 }
 
+// --------------------------------- observability: trace determinism
+
+// THE ISSUE-8 contract: tracing is an observer, not a participant.
+// Enabling it must leave every token stream bitwise identical, and under
+// the virtual clock the canonically rendered event sequence must be
+// identical at 1/2/8 compute threads (`testutil::fuzz::
+// trace_determinism_case`; the faulted runs in `fault_injection_case`
+// pin the same property on the failure path).
+
+#[test]
+fn trace_determinism_pinned_seed_a() {
+    fuzz::trace_determinism_case(0x7ACE_0001).unwrap();
+}
+
+#[test]
+fn trace_determinism_pinned_seed_b() {
+    fuzz::trace_determinism_case(0x7ACE_0002).unwrap();
+}
+
+#[test]
+fn trace_determinism_pinned_seed_c() {
+    fuzz::trace_determinism_case(0x7ACE_0003).unwrap();
+}
+
+/// CI's fresh-seed entry: `FAQUANT_TRACE_SEED=<u64>` (the trace-smoke
+/// job derives it from the run id and echoes it, so any failure
+/// reproduces locally with the same variable). A no-op when unset.
+#[test]
+fn trace_determinism_env_seed() {
+    let Ok(raw) = std::env::var("FAQUANT_TRACE_SEED") else {
+        println!("FAQUANT_TRACE_SEED unset; skipping the fresh-seed trace run");
+        return;
+    };
+    let seed: u64 = raw
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("FAQUANT_TRACE_SEED must be a u64, got '{raw}'"));
+    println!("running fresh-seed trace determinism: FAQUANT_TRACE_SEED={seed}");
+    fuzz::trace_determinism_case(seed).unwrap();
+}
+
 // ------------------------------------- thread pool: poison recovery
 
 #[test]

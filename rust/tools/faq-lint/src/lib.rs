@@ -25,6 +25,11 @@
 //! - `time-or-env` (S2): no `Instant`/`SystemTime`/`env::` reads in
 //!   kernel modules — wall-clock and environment reads belong to the
 //!   coordinator layer.
+//! - `untracked-clock` (CLK): in `engine/` and `serve/`, clock
+//!   *acquisition* (`Instant::now()`, any `SystemTime`) must go through
+//!   the `EngineClock`/obs seam (DESIGN.md §14/§15); the audited
+//!   exceptions carry `// faq-lint: allow(untracked-clock)`. Storing
+//!   or diffing an `Instant` handed in through the seam is fine.
 //! - `unused-allow`: an allow-marker that suppresses nothing is
 //!   itself an error, so markers cannot rot in place.
 //!
@@ -51,6 +56,7 @@ pub enum Rule {
     PanicInServe,
     MissingSafety,
     TimeOrEnv,
+    UntrackedClock,
     UnusedAllow,
 }
 
@@ -62,6 +68,7 @@ impl Rule {
             Rule::PanicInServe => "panic-in-serve",
             Rule::MissingSafety => "missing-safety",
             Rule::TimeOrEnv => "time-or-env",
+            Rule::UntrackedClock => "untracked-clock",
             Rule::UnusedAllow => "unused-allow",
         }
     }
@@ -73,6 +80,7 @@ impl Rule {
             "panic-in-serve" => Some(Rule::PanicInServe),
             "missing-safety" => Some(Rule::MissingSafety),
             "time-or-env" => Some(Rule::TimeOrEnv),
+            "untracked-clock" => Some(Rule::UntrackedClock),
             _ => None,
         }
     }
@@ -632,6 +640,9 @@ struct Scope {
     d2: bool,
     d3: bool,
     s2: bool,
+    /// untracked-clock: engine/serve code must take time through the
+    /// `EngineClock` / `obs` seam, never read it ad hoc.
+    clk: bool,
 }
 
 fn scope_of(rel: &str) -> Scope {
@@ -649,6 +660,7 @@ fn scope_of(rel: &str) -> Scope {
             || rel == "engine/scheduler.rs"
             || rel == "engine/lifecycle.rs",
         s2: kernel,
+        clk: rel.starts_with("engine/") || rel.starts_with("serve/"),
     }
 }
 
@@ -1055,6 +1067,51 @@ fn rule_time_or_env(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
     }
 }
 
+/// untracked-clock (engine/serve scope): reading the clock directly —
+/// `Instant::now()` or any `SystemTime` use — bypasses the sanctioned
+/// seams (`EngineClock` for scheduling decisions, the `obs` trace/metrics
+/// layer for measurement). Ad-hoc reads are exactly how wall time leaks
+/// into scheduling and breaks the virtual-clock determinism contract
+/// (DESIGN.md §14/§15). Legitimate sites — the clock seam itself,
+/// report-only stamps — carry an audited `allow(untracked-clock)`.
+/// Merely *storing* an `Instant` is fine; only acquisition is flagged.
+fn rule_untracked_clock(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        match ident(t, i) {
+            Some("Instant")
+                if is_p(t, i + 1, ':')
+                    && is_p(t, i + 2, ':')
+                    && ident(t, i + 3) == Some("now") =>
+            {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::UntrackedClock,
+                    message: "`Instant::now()` outside the clock seam — take time \
+                              through `EngineClock`/obs so virtual-clock runs stay \
+                              deterministic"
+                        .to_string(),
+                });
+            }
+            Some("SystemTime") => {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::UntrackedClock,
+                    message: "`SystemTime` in engine/serve code — take time through \
+                              `EngineClock`/obs so virtual-clock runs stay deterministic"
+                        .to_string(),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Entry points
 // ---------------------------------------------------------------------
@@ -1081,6 +1138,9 @@ pub fn lint_source_at(rel_path: &str, display_path: &str, src: &str) -> Vec<Find
     rule_missing_safety(&lx, &tmask, &mut raw);
     if scope.s2 {
         rule_time_or_env(&lx.tokens, &tmask, &mut raw);
+    }
+    if scope.clk {
+        rule_untracked_clock(&lx.tokens, &tmask, &mut raw);
     }
 
     let mut out: Vec<Finding> = Vec::new();
@@ -1258,6 +1318,39 @@ mod tests {
         // a finding, so stale exemptions cannot accumulate.
         let stale = "// faq-lint: allow(unordered-reduction) — stale\npub fn f(x: f32) -> f32 {\n    x\n}\n";
         assert_eq!(rules("tensor/x.rs", stale), vec![(1, Rule::UnusedAllow)]);
+    }
+
+    #[test]
+    fn untracked_clock_flags_acquisition_in_engine_and_serve_only() {
+        let src = "use std::time::Instant;\npub fn f() -> Instant {\n    Instant::now()\n}\n";
+        assert_eq!(rules("engine/x.rs", src), vec![(3, Rule::UntrackedClock)]);
+        assert_eq!(rules("serve/x.rs", src), vec![(3, Rule::UntrackedClock)]);
+        // Outside the scope — obs (the seam itself), coordinator, CLI —
+        // the rule does not run.
+        assert!(rules("obs/x.rs", src).is_empty());
+        assert!(rules("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn untracked_clock_allows_storing_and_diffing_instants() {
+        // Only acquisition is flagged: holding an `Instant` handed in
+        // through the seam, or calling `.elapsed()` on one, is fine.
+        let src = "use std::time::{Duration, Instant};\npub fn f(t0: Instant) -> Duration {\n    let copy: Instant = t0;\n    copy.elapsed()\n}\n";
+        assert!(rules("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn untracked_clock_flags_system_time_anywhere_in_scope() {
+        let src = "pub fn f() -> u64 {\n    let t = std::time::SystemTime::now();\n    t.elapsed().map(|d| d.as_secs()).unwrap_or(0)\n}\n";
+        assert_eq!(rules("serve/x.rs", src), vec![(2, Rule::UntrackedClock)]);
+    }
+
+    #[test]
+    fn untracked_clock_marker_is_audited() {
+        let ok = "use std::time::Instant;\npub fn f() -> Instant {\n    Instant::now() // faq-lint: allow(untracked-clock) — report stamp\n}\n";
+        assert!(rules("serve/x.rs", ok).is_empty());
+        let stale = "// faq-lint: allow(untracked-clock) — stale\npub fn f(x: u32) -> u32 {\n    x\n}\n";
+        assert_eq!(rules("engine/x.rs", stale), vec![(1, Rule::UnusedAllow)]);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use std::process::ExitCode;
 const USAGE: &str = "usage: faq-lint [--json] [paths...]
 Lints Rust source trees against the faquant determinism & soundness
 rules (hash-iteration, unordered-reduction, panic-in-serve,
-missing-safety, time-or-env, unused-allow). With no paths, lints
+missing-safety, time-or-env, untracked-clock, unused-allow). With no
+paths, lints
 rust/src relative to the current directory (the workspace root under
 `cargo run -p faq-lint`).";
 

@@ -125,6 +125,29 @@ fn s2_time_or_env() {
 }
 
 #[test]
+fn clk_untracked_clock() {
+    assert_eq!(
+        hits("untracked-clock-fail"),
+        vec![
+            ("engine/stamp.rs".to_string(), 4, Rule::UntrackedClock),
+            ("serve/timer.rs".to_string(), 1, Rule::UntrackedClock),
+            ("serve/timer.rs".to_string(), 3, Rule::UntrackedClock),
+            ("serve/timer.rs".to_string(), 4, Rule::UntrackedClock),
+        ]
+    );
+    // Scope precision: coordinator/heartbeat.rs in the same tree reads
+    // the wall clock directly, and that is the coordinator's job.
+    assert!(
+        !hits("untracked-clock-fail")
+            .iter()
+            .any(|(p, _, _)| p == "coordinator/heartbeat.rs"),
+        "coordinator/ is outside the untracked-clock scope"
+    );
+    // Storing/diffing Instants and audited allow-marked reads are fine.
+    expect_clean("untracked-clock-pass");
+}
+
+#[test]
 fn cfg_test_code_is_exempt() {
     // testmask-pass/tensor/sums.rs commits every sin — `.sum()`, hash
     // iteration, `unwrap()` — but only inside `#[cfg(test)]`.
@@ -149,6 +172,7 @@ fn canary_tree_trips_every_rule() {
         vec![
             ("runtime/registry.rs".to_string(), 7, Rule::HashIteration),
             ("serve/mod.rs".to_string(), 2, Rule::PanicInServe),
+            ("serve/mod.rs".to_string(), 5, Rule::UntrackedClock),
             ("tensor/kernel.rs".to_string(), 2, Rule::UnorderedReduction),
             ("tensor/kernel.rs".to_string(), 5, Rule::TimeOrEnv),
             ("tensor/kernel.rs".to_string(), 6, Rule::TimeOrEnv),

@@ -1,3 +1,6 @@
 pub fn first(v: &[u32]) -> u32 {
     v.first().copied().unwrap()
 }
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,6 @@
+// The coordinator layer owns wall time: outside the untracked-clock
+// scope, a direct read is legitimate and must NOT be flagged.
+pub fn heartbeat_secs(t0: std::time::Instant) -> f32 {
+    let now = std::time::Instant::now();
+    now.duration_since(t0).as_secs_f32()
+}

@@ -1,0 +1,5 @@
+use std::time::Instant;
+
+pub fn tick_stamp() -> Instant {
+    Instant::now()
+}

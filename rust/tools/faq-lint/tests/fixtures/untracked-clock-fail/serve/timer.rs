@@ -1,0 +1,8 @@
+use std::time::SystemTime;
+
+pub fn now_unix(epoch: SystemTime) -> u64 {
+    SystemTime::now()
+        .duration_since(epoch)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

@@ -1,0 +1,8 @@
+// Report-only stamps are fine when audited with a trailing marker.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // faq-lint: allow(untracked-clock) — report wall time
+}
+
+pub fn wait_secs(queued: std::time::Instant, now: std::time::Instant) -> f32 {
+    now.duration_since(queued).as_secs_f32()
+}
