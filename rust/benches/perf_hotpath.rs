@@ -35,7 +35,7 @@ use faquant::engine::{Engine, GenConfig, GenRequest};
 use faquant::eval::{calib_ids, canonical_tokenizer};
 use faquant::quant::{packing, scaled_quantize_ints, search_alpha};
 use faquant::runtime::{lit_f32, lit_i32, Buffer, Runtime};
-use faquant::serve::qmodel_literals;
+use faquant::serve::{qmodel_literals, router::run_router, RouterConfig, Stepper};
 use faquant::tensor::{par, Rng};
 
 fn main() {
@@ -352,6 +352,52 @@ fn main() {
         n_seqs
     );
 
+    // 6e. Sharded router: the baseline generation workload fanned out
+    // over two crash-isolated engine workers (DESIGN §16). Wall time
+    // includes dispatch/collect overhead; the latency percentiles are
+    // the fleet-merged deterministic engine histograms from the router
+    // report (the `serve bench` subcommand reports the same fields
+    // under live closed-loop load).
+    let router_workers = 2usize;
+    let mut router_lat = faquant::obs::LatencyStats::default();
+    let mut router_line = String::new();
+    let s = bench(
+        &format!("router_generate({n_seqs}seq,{router_workers}workers)"),
+        0,
+        1,
+        || {
+            let (_, rep) = run_router(
+                &rt,
+                &cfg.model,
+                &params,
+                &qm,
+                GenConfig::default(),
+                RouterConfig {
+                    workers: router_workers,
+                    ..RouterConfig::default()
+                },
+                |router| {
+                    let mut n = 0usize;
+                    for req in reqs.clone() {
+                        if router.submit(req).is_some() {
+                            n += 1;
+                        }
+                    }
+                    while router.has_work() {
+                        n += router.step()?.len();
+                    }
+                    Ok(n)
+                },
+            )
+            .expect("router");
+            router_lat = rep.latency;
+            router_line = rep.summary_line();
+        },
+    );
+    println!("{}", report(&s));
+    println!("  -> {router_line}");
+    stages.push(s);
+
     // Threading headline: end-to-end Phase-B quantize, 1 thread vs the
     // effective thread count (same runtime/calibration — results are
     // bit-identical by the determinism contract; only the wall moves).
@@ -414,6 +460,13 @@ fn main() {
         per_token_p95: us(lat.per_token_p95_us),
         per_token_p99: us(lat.per_token_p99_us),
         queue_wait_p95: us(lat.queue_wait_p95_us),
+        router_workers,
+        router_ttft_p50: us(router_lat.ttft_p50_us),
+        router_ttft_p95: us(router_lat.ttft_p95_us),
+        router_ttft_p99: us(router_lat.ttft_p99_us),
+        router_per_token_p50: us(router_lat.per_token_p50_us),
+        router_per_token_p95: us(router_lat.per_token_p95_us),
+        router_per_token_p99: us(router_lat.per_token_p99_us),
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

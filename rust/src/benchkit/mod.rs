@@ -225,6 +225,20 @@ pub struct PerfReport {
     pub per_token_p99: f32,
     /// Queue-wait (submit -> admission) p95, seconds.
     pub queue_wait_p95: f32,
+    /// Worker count of the sharded-router stage (`serve bench` and the
+    /// perf bench's router stage; 0 when the stage didn't run).
+    pub router_workers: usize,
+    /// TTFT percentiles of the same generation workload fanned out over
+    /// the crash-isolated sharded router (fleet-merged deterministic
+    /// histograms from the router report), seconds.
+    pub router_ttft_p50: f32,
+    pub router_ttft_p95: f32,
+    pub router_ttft_p99: f32,
+    /// Per-decode-token latency percentiles over the sharded router,
+    /// seconds.
+    pub router_per_token_p50: f32,
+    pub router_per_token_p95: f32,
+    pub router_per_token_p99: f32,
 }
 
 impl PerfReport {
@@ -241,7 +255,10 @@ impl PerfReport {
              \"dense_kv_slab_bytes\": {},\n  \
              \"ttft_p50\": {},\n  \"ttft_p95\": {},\n  \"ttft_p99\": {},\n  \
              \"per_token_p50\": {},\n  \"per_token_p95\": {},\n  \"per_token_p99\": {},\n  \
-             \"queue_wait_p95\": {}\n}}\n",
+             \"queue_wait_p95\": {},\n  \"router_workers\": {},\n  \
+             \"router_ttft_p50\": {},\n  \"router_ttft_p95\": {},\n  \
+             \"router_ttft_p99\": {},\n  \"router_per_token_p50\": {},\n  \
+             \"router_per_token_p95\": {},\n  \"router_per_token_p99\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -264,6 +281,13 @@ impl PerfReport {
             json_f32(self.per_token_p95),
             json_f32(self.per_token_p99),
             json_f32(self.queue_wait_p95),
+            self.router_workers,
+            json_f32(self.router_ttft_p50),
+            json_f32(self.router_ttft_p95),
+            json_f32(self.router_ttft_p99),
+            json_f32(self.router_per_token_p50),
+            json_f32(self.router_per_token_p95),
+            json_f32(self.router_per_token_p99),
         )
     }
 
@@ -361,6 +385,13 @@ mod tests {
             per_token_p95: 0.002,
             per_token_p99: 0.002,
             queue_wait_p95: 0.0005,
+            router_workers: 2,
+            router_ttft_p50: 0.003,
+            router_ttft_p95: 0.006,
+            router_ttft_p99: 0.012,
+            router_per_token_p50: 0.001,
+            router_per_token_p95: 0.002,
+            router_per_token_p99: 0.003,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
@@ -378,6 +409,11 @@ mod tests {
         assert!(j.contains("\"per_token_p50\""));
         assert!(j.contains("\"per_token_p99\""));
         assert!(j.contains("\"queue_wait_p95\""));
+        assert!(j.contains("\"router_workers\": 2"));
+        assert!(j.contains("\"router_ttft_p50\""));
+        assert!(j.contains("\"router_ttft_p99\""));
+        assert!(j.contains("\"router_per_token_p50\""));
+        assert!(j.contains("\"router_per_token_p99\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).

@@ -1,8 +1,13 @@
-//! CLI argument parser (S14): subcommand + `--flag value` / `--flag`.
+//! CLI argument parser (S14): subcommand + optional mode +
+//! `--flag value` / `--flag`.
 //!
 //! clap is not in the offline registry. The grammar is intentionally
-//! small: `faquant <subcommand> [--key value]... [--switch]...` with
-//! typed accessors and unknown-flag rejection at `finish()`.
+//! small: `faquant <subcommand> [mode] [--key value]... [--switch]...`
+//! with typed accessors and unknown-flag/unused-mode rejection at
+//! `finish()`. The single optional `mode` positional exists for
+//! subcommand families like `serve bench`; a subcommand that never
+//! reads [`Args::mode`] rejects one the same way it rejects a typo'd
+//! flag.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -21,6 +26,8 @@ fn looks_like_flag(tok: &str) -> bool {
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: String,
+    mode: Option<String>,
+    mode_read: std::cell::Cell<bool>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
@@ -33,6 +40,12 @@ impl Args {
         let subcommand = it.next().unwrap_or_default();
         if subcommand.starts_with('-') {
             bail!("expected a subcommand before flags, got '{subcommand}'");
+        }
+        let mut mode = None;
+        if let Some(next) = it.peek() {
+            if !next.starts_with('-') {
+                mode = it.next();
+            }
         }
         let mut flags = BTreeMap::new();
         let mut switches = Vec::new();
@@ -52,6 +65,8 @@ impl Args {
         }
         Ok(Self {
             subcommand,
+            mode,
+            mode_read: Default::default(),
             flags,
             switches,
             consumed: Default::default(),
@@ -64,6 +79,14 @@ impl Args {
 
     fn mark(&self, name: &str) {
         self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    /// The optional positional after the subcommand (`serve bench` ->
+    /// `Some("bench")`). Reading it marks it used; a mode nobody read
+    /// is rejected by [`Args::finish`].
+    pub fn mode(&self) -> Option<&str> {
+        self.mode_read.set(true);
+        self.mode.as_deref()
     }
 
     pub fn get(&self, name: &str) -> Option<String> {
@@ -115,8 +138,15 @@ impl Args {
         self.switches.iter().any(|s| s == name)
     }
 
-    /// Reject flags that no accessor ever looked at (catches typos).
+    /// Reject flags (and a mode positional) that no accessor ever
+    /// looked at — catches typos and stray positionals alike.
     pub fn finish(&self) -> Result<()> {
+        if let (Some(mode), false) = (self.mode.as_deref(), self.mode_read.get()) {
+            bail!(
+                "unexpected positional argument '{mode}' for subcommand '{}'",
+                self.subcommand
+            );
+        }
         let seen = self.consumed.borrow();
         for k in self.flags.keys().chain(self.switches.iter()) {
             if !seen.iter().any(|s| s == k) {
@@ -198,8 +228,26 @@ mod tests {
     }
 
     #[test]
-    fn positional_after_subcommand_rejected() {
-        assert!(Args::parse(["eval".into(), "stray".into()]).is_err());
+    fn mode_positional_parses_and_is_read_once() {
+        let a = parse("serve bench --clients 4");
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.mode(), Some("bench"));
+        assert_eq!(a.get_usize("clients", 1).unwrap(), 4);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unread_mode_rejected_at_finish() {
+        // Parsing accepts the positional (some subcommands take one),
+        // but a subcommand that never reads it must reject it exactly
+        // like an unknown flag.
+        let a = parse("eval stray");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn second_positional_still_rejected() {
+        assert!(Args::parse(["serve".into(), "bench".into(), "stray".into()]).is_err());
     }
 
     #[test]

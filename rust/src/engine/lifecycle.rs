@@ -15,6 +15,9 @@
 //!   it advances a fixed [`std::time::Duration`] per engine tick, so
 //!   deadline expiry depends only on tick counts and is bitwise
 //!   reproducible across machines and thread counts.
+//! - [`Heartbeat`] — a monotone progress counter the sharded router's
+//!   supervisor polls to tell a busy worker from a wedged one without
+//!   reading wall time (DESIGN.md §16).
 //! - [`FaultInjector`] — the seam the deterministic harness
 //!   (`testutil::faults`) plugs into: it can fail a compute attempt
 //!   (before any state changes — failed steps are retryable) or stall
@@ -22,7 +25,7 @@
 //!   carry no injector and pay one `Option` check per step.
 
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -47,6 +50,36 @@ impl CancelToken {
 
     pub fn is_cancelled(&self) -> bool {
         self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Monotone progress counter for stall supervision: a worker thread
+/// bumps it after each completed engine step, and the router's
+/// supervisor compares snapshots across its own idle rounds. A worker
+/// that holds queued work while its heartbeat stays flat is presumed
+/// wedged and quarantined (DESIGN.md §16). Counting *completed work*
+/// rather than reading a clock keeps stall detection free of wall-time
+/// reads on the supervision path — and a false positive is safe, since
+/// quarantine only triggers deterministic re-execution.
+#[derive(Debug, Default)]
+pub struct Heartbeat {
+    beats: AtomicU64,
+}
+
+impl Heartbeat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one unit of completed work. Relaxed ordering suffices:
+    /// the supervisor only compares counts for equality over time.
+    pub fn beat(&self) {
+        self.beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current beat count (compared against a previous snapshot).
+    pub fn snapshot(&self) -> u64 {
+        self.beats.load(Ordering::Relaxed)
     }
 }
 
@@ -139,6 +172,22 @@ mod tests {
         // Saturation: absurd tick counts must not panic.
         let far = clk.now(usize::MAX);
         assert!(far >= a);
+    }
+
+    #[test]
+    fn heartbeat_counts_monotonically_across_threads() {
+        let hb = Arc::new(Heartbeat::new());
+        assert_eq!(hb.snapshot(), 0);
+        let worker = Arc::clone(&hb);
+        let h = std::thread::spawn(move || {
+            for _ in 0..100 {
+                worker.beat();
+            }
+        });
+        assert!(h.join().is_ok());
+        assert_eq!(hb.snapshot(), 100);
+        hb.beat();
+        assert_eq!(hb.snapshot(), 101);
     }
 
     #[test]

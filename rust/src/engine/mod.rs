@@ -35,10 +35,10 @@ mod sampler;
 mod scheduler;
 
 pub use kv_cache::{BlockPool, KvCache};
-pub use lifecycle::{CancelToken, EngineClock, FaultInjector};
+pub use lifecycle::{CancelToken, EngineClock, FaultInjector, Heartbeat};
 pub use prefix::RadixTree;
 pub use sampler::Sampler;
-pub use scheduler::{Engine, GenConfig};
+pub use scheduler::{Engine, GenConfig, DEFAULT_BLOCK_TOKENS};
 
 use std::time::Duration;
 
@@ -72,6 +72,13 @@ pub enum RejectReason {
     /// internal fault); `detail` carries the underlying error. Tokens
     /// generated before the fault travel in the `GenOutput`.
     Internal { detail: String },
+    /// Sharded router: the request's engine worker crashed (or stalled
+    /// and was quarantined) and no healthy worker remained to replay
+    /// it. `worker` is the shard that lost the request. Failover
+    /// normally re-executes crashed work invisibly; this reason
+    /// surfaces only when the whole fleet is down or restarts are
+    /// exhausted.
+    WorkerCrashed { worker: usize },
 }
 
 impl RejectReason {
@@ -87,6 +94,7 @@ impl RejectReason {
             RejectReason::Draining => "draining",
             RejectReason::Disconnected => "disconnected",
             RejectReason::Internal { .. } => "internal",
+            RejectReason::WorkerCrashed { .. } => "worker_crashed",
         }
     }
 }
@@ -111,6 +119,9 @@ impl std::fmt::Display for RejectReason {
             RejectReason::Draining => write!(f, "server draining; not accepting new requests"),
             RejectReason::Disconnected => write!(f, "client disconnected before dispatch"),
             RejectReason::Internal { detail } => write!(f, "internal failure: {detail}"),
+            RejectReason::WorkerCrashed { worker } => {
+                write!(f, "worker {worker} crashed with no healthy worker left to replay")
+            }
         }
     }
 }
@@ -127,6 +138,7 @@ pub struct RejectCounts {
     pub draining: usize,
     pub disconnected: usize,
     pub internal: usize,
+    pub worker_crashed: usize,
 }
 
 impl RejectCounts {
@@ -141,6 +153,7 @@ impl RejectCounts {
             RejectReason::Draining => self.draining += 1,
             RejectReason::Disconnected => self.disconnected += 1,
             RejectReason::Internal { .. } => self.internal += 1,
+            RejectReason::WorkerCrashed { .. } => self.worker_crashed += 1,
         }
     }
 
@@ -154,6 +167,22 @@ impl RejectCounts {
             + self.draining
             + self.disconnected
             + self.internal
+            + self.worker_crashed
+    }
+
+    /// Fold another counter set into this one (sharded router: merge
+    /// per-worker engine accounting into the fleet report).
+    pub fn merge(&mut self, other: &RejectCounts) {
+        self.wrong_length += other.wrong_length;
+        self.bad_token += other.bad_token;
+        self.empty_prompt += other.empty_prompt;
+        self.zero_max_new += other.zero_max_new;
+        self.too_long += other.too_long;
+        self.queue_full += other.queue_full;
+        self.draining += other.draining;
+        self.disconnected += other.disconnected;
+        self.internal += other.internal;
+        self.worker_crashed += other.worker_crashed;
     }
 }
 
@@ -309,17 +338,37 @@ mod tests {
         c.note(&RejectReason::Draining);
         c.note(&RejectReason::Disconnected);
         c.note(&RejectReason::Internal { detail: "step failed".into() });
+        c.note(&RejectReason::WorkerCrashed { worker: 1 });
         assert_eq!(c.queue_full, 1);
         assert_eq!(c.draining, 1);
         assert_eq!(c.disconnected, 1);
         assert_eq!(c.internal, 1);
-        assert_eq!(c.total(), 4);
+        assert_eq!(c.worker_crashed, 1);
+        assert_eq!(c.total(), 5);
         assert_eq!(RejectReason::QueueFull { limit: 4 }.cause(), "queue_full");
         assert_eq!(RejectReason::Draining.cause(), "draining");
         assert_eq!(RejectReason::Disconnected.cause(), "disconnected");
         let internal = RejectReason::Internal { detail: "boom".into() };
         assert_eq!(internal.cause(), "internal");
         assert!(internal.to_string().contains("boom"));
+        let crashed = RejectReason::WorkerCrashed { worker: 3 };
+        assert_eq!(crashed.cause(), "worker_crashed");
+        assert!(crashed.to_string().contains("worker 3"));
+    }
+
+    #[test]
+    fn reject_counts_merge_folds_every_cause() {
+        let mut a = RejectCounts::default();
+        a.note(&RejectReason::EmptyPrompt);
+        a.note(&RejectReason::Draining);
+        let mut b = RejectCounts::default();
+        b.note(&RejectReason::Draining);
+        b.note(&RejectReason::WorkerCrashed { worker: 0 });
+        a.merge(&b);
+        assert_eq!(a.empty_prompt, 1);
+        assert_eq!(a.draining, 2);
+        assert_eq!(a.worker_crashed, 1);
+        assert_eq!(a.total(), 4);
     }
 
     #[test]

@@ -36,11 +36,19 @@ SUBCOMMANDS
   table3    [--model M] [--ns 16,32,64,128]  paper Table 3 (calib bias)
   ablation  --sweep gamma|window [--model M] hyperparameter sweeps
   serve     --model M [--requests N]         quantized serving demo
+  serve bench  [--clients N] [--requests-per-client N] [--prompt-len P]
+            [--max-new K] [--shared-prefix L] [--workers N]
+            [--affinity on|off] [--gen-seed S] [--json FILE]
+            closed-loop load generator over the sharded router: each
+            client keeps one request in flight; reports TTFT/per-token
+            p50/p95/p99 and writes a benchkit perf JSON (default
+            BENCH_perf.json)
   generate  --model M [--prompts N] [--prompt-len P] [--max-new K]
             [--temperature T] [--top-k K] [--gen-seed S] [--stop-id ID]
             [--block-tokens B] [--pool-blocks N] [--dense]
             [--deadline-ms MS] [--max-queue N]
             [--shared-prefix L] [--trace FILE]
+            [--workers N] [--affinity on|off]
             KV-cached generation (greedy when T <= 0; ID < 0 disables).
             Paged KV cache + radix prefix sharing by default; --dense
             pins the seed [L, slots, T, d] slabs (same tokens either way).
@@ -48,7 +56,10 @@ SUBCOMMANDS
             deadline); --max-queue bounds admission (0 = unbounded).
             --shared-prefix gives every prompt the same first L tokens
             (exercises the prefix cache); --trace records engine events
-            and writes a Chrome trace-event JSON (load in Perfetto)
+            and writes a Chrome trace-event JSON (load in Perfetto).
+            --workers > 1 shards the run across crash-isolated engine
+            workers (prefix-affinity routing unless --affinity off);
+            the token streams are bit-identical to --workers 1
   inspect                                    list artifacts + configs
 
 COMMON FLAGS
@@ -219,10 +230,16 @@ fn main() -> Result<()> {
                 other => anyhow::bail!("unknown sweep '{other}' (gamma|window)"),
             }
         }
-        "serve" => {
-            let n_requests = args.get_usize("requests", 64)?;
-            serve_demo(&rt, &cfg, n_requests)?;
-        }
+        "serve" => match args.mode() {
+            Some("bench") => serve_bench(&rt, &cfg, &args)?,
+            Some(other) => {
+                anyhow::bail!("unknown serve mode '{other}' (expected 'serve bench')");
+            }
+            None => {
+                let n_requests = args.get_usize("requests", 64)?;
+                serve_demo(&rt, &cfg, n_requests)?;
+            }
+        },
         "generate" => {
             generate_demo(&rt, &cfg, &args)?;
         }
@@ -255,6 +272,8 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     let max_queue = args.get_usize("max-queue", 0)?;
     let shared_prefix = args.get_usize("shared-prefix", 0)?;
     let trace_path = args.get("trace");
+    let workers = args.get_usize("workers", 1)?;
+    let affinity = parse_affinity(&args.get_or("affinity", "on"))?;
 
     let pipe = Pipeline::new(rt, cfg.clone());
     let (params, _) = pipe.checkpoint()?;
@@ -281,24 +300,18 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
         }
     }
 
-    let mut engine = Engine::new(
-        rt,
-        &cfg.model,
-        &params,
-        &qm,
-        GenConfig {
-            temperature,
-            top_k,
-            seed: gen_seed,
-            slots: 0,
-            paged: !dense,
-            block_tokens,
-            pool_blocks,
-            max_queue,
-            trace: trace_path.is_some(),
-            ..GenConfig::default()
-        },
-    )?;
+    let gen = GenConfig {
+        temperature,
+        top_k,
+        seed: gen_seed,
+        slots: 0,
+        paged: !dense,
+        block_tokens,
+        pool_blocks,
+        max_queue,
+        trace: trace_path.is_some(),
+        ..GenConfig::default()
+    };
     let reqs: Vec<GenRequest> = prompts
         .iter()
         .enumerate()
@@ -311,7 +324,57 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
             ..Default::default()
         })
         .collect();
-    let (outs, rep) = engine.generate(reqs)?;
+    // `--workers > 1`: the same workload through the sharded router
+    // (crash-isolated engine workers, prefix-affinity routing). The
+    // engine bit-identity contract + `(seed, id)`-keyed samplers make
+    // the token streams identical to the single-engine path — only the
+    // placement and the summary lines differ.
+    let (outs, rep, trace_records, trace_dropped, router_summary) = if workers > 1 {
+        use faquant::serve::{router::run_router, RouterConfig, Stepper};
+        // Admission bounds and tracing move up to the router; worker
+        // engines must accept every failover re-dispatch.
+        let gen = GenConfig {
+            max_queue: 0,
+            trace: false,
+            ..gen
+        };
+        let rcfg = RouterConfig {
+            workers,
+            affinity,
+            max_queue,
+            trace: trace_path.is_some(),
+            ..RouterConfig::default()
+        };
+        let (mut outs, report) =
+            run_router(rt, &cfg.model, &params, &qm, gen, rcfg, |router| {
+                let mut outs = Vec::new();
+                for req in reqs {
+                    if let Some(out) = router.submit(req) {
+                        outs.push(out);
+                    }
+                }
+                while router.has_work() {
+                    outs.extend(router.step()?);
+                }
+                Ok(outs)
+            })?;
+        outs.sort_by_key(|o| o.id);
+        let records = report.trace.clone();
+        let dropped = report.trace_dropped;
+        (
+            outs,
+            report.engine.clone(),
+            records,
+            dropped,
+            Some(report.summary_line()),
+        )
+    } else {
+        let mut engine = Engine::new(rt, &cfg.model, &params, &qm, gen)?;
+        let (outs, rep) = engine.generate(reqs)?;
+        let records = engine.trace().snapshot();
+        let dropped = engine.trace().dropped();
+        (outs, rep, records, dropped, None)
+    };
 
     for out in &outs {
         match &out.finish {
@@ -367,15 +430,202 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
         );
     }
     println!("{}", rep.latency.summary_line());
+    if let Some(line) = router_summary {
+        println!("{line}");
+    }
     if let Some(path) = trace_path {
-        let records = engine.trace().snapshot();
-        std::fs::write(&path, faquant::obs::chrome_trace_json(&records))?;
+        std::fs::write(&path, faquant::obs::chrome_trace_json(&trace_records))?;
         println!(
             "trace: {} events ({} dropped) -> {path}",
-            records.len(),
-            engine.trace().dropped()
+            trace_records.len(),
+            trace_dropped
         );
     }
+    Ok(())
+}
+
+/// Parse an `--affinity on|off` flag value.
+fn parse_affinity(v: &str) -> Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("--affinity must be 'on' or 'off', got '{other}'"),
+    }
+}
+
+/// `serve bench`: closed-loop load generator over the sharded router.
+///
+/// `--clients` threads each keep exactly one request in flight
+/// (send, block on the oneshot answer, repeat `--requests-per-client`
+/// times) while the main thread drives `serve_generate_sharded`
+/// across `--workers` crash-isolated engines. TTFT / per-token
+/// percentiles come from the fleet-merged deterministic engine
+/// histograms in the router report; queue percentiles from the serve
+/// loop. The run is summarized on stdout and written as a benchkit
+/// `PerfReport` JSON (default `BENCH_perf.json` — the same schema the
+/// perf bench emits, with the non-serving fields zeroed).
+fn serve_bench(rt: &Runtime, cfg: &RunConfig, args: &Args) -> Result<()> {
+    use faquant::benchkit::PerfReport;
+    use faquant::engine::GenConfig;
+    use faquant::serve::{GenServeRequest, GenServeResponse, RouterConfig};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    let clients = args.get_usize("clients", 4)?.max(1);
+    let per_client = args.get_usize("requests-per-client", 8)?.max(1);
+    let prompt_len = args.get_usize("prompt-len", (cfg.model.seq / 8).max(4))?;
+    let max_new = args.get_usize("max-new", (cfg.model.seq / 8).max(4))?;
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
+    let workers = args.get_usize("workers", 2)?;
+    let affinity = parse_affinity(&args.get_or("affinity", "on"))?;
+    let gen_seed = args.get_u64("gen-seed", 7)?;
+    let json_path = args.get_or("json", "BENCH_perf.json");
+
+    let pipe = Pipeline::new(rt, cfg.clone());
+    let (params, _) = pipe.checkpoint()?;
+    let (calib, _) = pipe.calibrate(&params)?;
+    let (qm, _) = pipe.quantize(&params, Some(&calib))?;
+
+    let tok = faquant::eval::canonical_tokenizer(&cfg.model);
+    let total = clients * per_client;
+    let ids = faquant::eval::calib_ids(&cfg.model, &tok, total + 4, 99);
+    if prompt_len == 0 || ids.len() <= prompt_len {
+        anyhow::bail!("corpus too small for --prompt-len {prompt_len}");
+    }
+    // Same prompt mix shape as `generate`: rotating corpus windows with
+    // an optional shared head (`--shared-prefix`, exercises both the
+    // radix prefix cache and the router's prefix-affinity hash).
+    let shared = shared_prefix.min(prompt_len);
+    let prompts: Vec<Vec<i32>> = (0..total)
+        .map(|i| {
+            let start = (i * prompt_len) % (ids.len() - prompt_len);
+            let mut p = ids[start..start + prompt_len].to_vec();
+            if shared > 0 {
+                p[..shared].copy_from_slice(&ids[..shared]);
+            }
+            p
+        })
+        .collect();
+
+    let gen = GenConfig {
+        seed: gen_seed,
+        ..GenConfig::default()
+    };
+    let rcfg = RouterConfig {
+        workers,
+        affinity,
+        ..RouterConfig::default()
+    };
+    let (gtx, grx) = mpsc::channel::<GenServeRequest>();
+    let (report, served, rejected) = std::thread::scope(|scope| -> Result<_> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let tx = gtx.clone();
+                let prompts = &prompts;
+                scope.spawn(move || {
+                    let (mut done, mut rej) = (0usize, 0usize);
+                    for k in 0..per_client {
+                        let (rtx, rrx) = faquant::serve::oneshot_channel();
+                        let req = GenServeRequest {
+                            prompt: prompts[c * per_client + k].clone(),
+                            max_new,
+                            stop_id: None,
+                            deadline: None,
+                            cancel: None,
+                            respond: rtx,
+                        };
+                        if tx.send(req).is_err() {
+                            break;
+                        }
+                        match rrx.recv() {
+                            Ok(GenServeResponse::Done { .. }) => done += 1,
+                            Ok(GenServeResponse::Rejected(_)) => rej += 1,
+                            Err(_) => break,
+                        }
+                    }
+                    (done, rej)
+                })
+            })
+            .collect();
+        drop(gtx);
+        let report = faquant::serve::serve_generate_sharded(
+            rt,
+            &cfg.model,
+            &params,
+            &qm,
+            gen,
+            rcfg,
+            grx,
+            Duration::from_millis(2),
+            None,
+        )?;
+        let (mut served, mut rejected) = (0usize, 0usize);
+        for h in handles {
+            if let Ok((d, r)) = h.join() {
+                served += d;
+                rejected += r;
+            }
+        }
+        Ok((report, served, rejected))
+    })?;
+
+    let lat = report.router.latency;
+    println!(
+        "bench: {clients} clients x {per_client} reqs -> {} answered \
+         ({served} completed, {rejected} rejected), queue p50/p95/p99 \
+         {:.1}/{:.1}/{:.1} ms",
+        report.requests, report.p50_ms, report.p95_ms, report.p99_ms
+    );
+    println!("{}", lat.summary_line());
+    println!("{}", report.router.summary_line());
+
+    let us = |v: u64| v as f32 / 1e6;
+    let decode_tokens: usize = report.router.engine.decode_tokens;
+    let decode_secs = report.router.engine.decode_secs;
+    let perf = PerfReport {
+        preset: cfg.model.name.clone(),
+        threads: faquant::tensor::par::threads(),
+        cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        stages: vec![
+            PerfReport::per_token_stage(
+                "router_decode_tokens_per_sec",
+                decode_tokens,
+                decode_secs,
+            ),
+            PerfReport::per_token_stage(
+                "router_prefill_tokens_per_sec",
+                report.router.engine.prefill_tokens,
+                report.router.engine.prefill_secs,
+            ),
+        ],
+        quantize_secs_1t: 0.0,
+        quantize_secs_nt: 0.0,
+        speedup: 0.0,
+        coordinator_overhead: 0.0,
+        prefill_tps: report.router.engine.prefill_tps(),
+        decode_tps: report.router.engine.decode_tps(),
+        prepare_secs: 0.0,
+        decode_prepared_tps: 0.0,
+        prefix_hit_prefill_savings: 0.0,
+        paged_peak_kv_bytes: 0.0,
+        dense_kv_slab_bytes: 0.0,
+        ttft_p50: us(lat.ttft_p50_us),
+        ttft_p95: us(lat.ttft_p95_us),
+        ttft_p99: us(lat.ttft_p99_us),
+        per_token_p50: us(lat.per_token_p50_us),
+        per_token_p95: us(lat.per_token_p95_us),
+        per_token_p99: us(lat.per_token_p99_us),
+        queue_wait_p95: us(lat.queue_wait_p95_us),
+        router_workers: workers,
+        router_ttft_p50: us(lat.ttft_p50_us),
+        router_ttft_p95: us(lat.ttft_p95_us),
+        router_ttft_p99: us(lat.ttft_p99_us),
+        router_per_token_p50: us(lat.per_token_p50_us),
+        router_per_token_p95: us(lat.per_token_p95_us),
+        router_per_token_p99: us(lat.per_token_p99_us),
+    };
+    std::fs::write(&json_path, perf.to_json())?;
+    println!("wrote {json_path}");
     Ok(())
 }
 

@@ -124,6 +124,22 @@ fn push_args(ev: &TraceEvent, out: &mut String) {
             let _ = write!(out, ",\"id\":{id}");
         }
         TraceEvent::Drain => {}
+        TraceEvent::WorkerUp { worker, epoch } => {
+            let _ = write!(out, ",\"worker\":{worker},\"epoch\":{epoch}");
+        }
+        TraceEvent::Route { id, worker, affinity } => {
+            let _ = write!(out, ",\"id\":{id},\"worker\":{worker},\"affinity\":{affinity}");
+        }
+        TraceEvent::WorkerCrash { worker, epoch, cause } => {
+            let _ = write!(
+                out,
+                ",\"worker\":{worker},\"epoch\":{epoch},\"cause\":\"{}\"",
+                escape(cause)
+            );
+        }
+        TraceEvent::Failover { id, from, epoch } => {
+            let _ = write!(out, ",\"id\":{id},\"from\":{from},\"epoch\":{epoch}");
+        }
         TraceEvent::Finish { id, slot, tokens, cause } => {
             let _ = write!(
                 out,

@@ -92,6 +92,19 @@ impl Hist {
         self.total == 0
     }
 
+    /// Fold another histogram into this one, bucket by bucket. Buckets
+    /// are a compiled-in constant, so merging per-worker histograms
+    /// into a fleet histogram is exact: the merged percentiles equal
+    /// those of a single histogram fed every sample (sharded router
+    /// latency aggregation).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+    }
+
     /// p-th percentile (p in 0..=100) as the owning bucket's upper
     /// bound; 0 for an empty histogram. Integer rank walk — ceil(total
     /// * p / 100), clamped to at least rank 1 — so the answer is a pure
@@ -308,6 +321,30 @@ mod tests {
             b.record(s); // order must not matter
         }
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merged_hist_equals_single_hist_over_all_samples() {
+        let shard_a = [5u64, 900, 1_000, 123_456];
+        let shard_b = [7u64, 42, 9_999_999];
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut whole = Hist::new();
+        for &s in &shard_a {
+            a.record(s);
+            whole.record(s);
+        }
+        for &s in &shard_b {
+            b.record(s);
+            whole.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert_eq!(a.count(), 7);
+        assert_eq!(a.percentile(99), whole.percentile(99));
+        // Merging an empty histogram is a no-op.
+        a.merge(&Hist::new());
+        assert_eq!(a, whole);
     }
 
     #[test]

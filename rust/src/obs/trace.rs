@@ -88,6 +88,20 @@ pub enum TraceEvent {
     Drain,
     /// Request left its slot (`cause` = finish tag, `tokens` generated).
     Finish { id: usize, slot: usize, tokens: usize, cause: &'static str },
+    /// Router: a worker shard's engine came up and is serving. `epoch`
+    /// counts engine incarnations on that shard (0 = first start; > 0
+    /// means a post-crash restart).
+    WorkerUp { worker: usize, epoch: usize },
+    /// Router: request dispatched to a worker. `affinity` marks a
+    /// prefix-affinity placement (vs least-loaded fallback).
+    Route { id: usize, worker: usize, affinity: bool },
+    /// Router: a worker's engine panicked, erred, or stalled past the
+    /// heartbeat bound and was quarantined (`cause` = stable tag).
+    WorkerCrash { worker: usize, epoch: usize, cause: &'static str },
+    /// Router: an in-flight request lost to a crashed worker was
+    /// requeued for deterministic re-execution (a later `Route` event
+    /// shows its new placement).
+    Failover { id: usize, from: usize, epoch: usize },
 }
 
 impl TraceEvent {
@@ -111,6 +125,10 @@ impl TraceEvent {
             TraceEvent::Deadline { .. } => "deadline",
             TraceEvent::Drain => "drain",
             TraceEvent::Finish { .. } => "finish",
+            TraceEvent::WorkerUp { .. } => "worker_up",
+            TraceEvent::Route { .. } => "route",
+            TraceEvent::WorkerCrash { .. } => "worker_crash",
+            TraceEvent::Failover { .. } => "failover",
         }
     }
 
@@ -402,5 +420,21 @@ mod tests {
             TraceEvent::PrefixHit { id: 0, tokens: 8 }.kind(),
             "prefix_hit"
         );
+    }
+
+    #[test]
+    fn router_event_kinds_are_stable() {
+        let up = TraceEvent::WorkerUp { worker: 1, epoch: 0 };
+        let route = TraceEvent::Route { id: 4, worker: 1, affinity: true };
+        let crash = TraceEvent::WorkerCrash { worker: 1, epoch: 0, cause: "panic" };
+        let fo = TraceEvent::Failover { id: 4, from: 1, epoch: 0 };
+        assert_eq!(up.kind(), "worker_up");
+        assert_eq!(route.kind(), "route");
+        assert_eq!(crash.kind(), "worker_crash");
+        assert_eq!(fo.kind(), "failover");
+        // Router events are fleet-scoped, never slot-scoped.
+        for ev in [up, route, crash, fo] {
+            assert_eq!(ev.slot(), None);
+        }
     }
 }

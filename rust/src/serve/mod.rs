@@ -29,9 +29,19 @@
 //! drains both loops gracefully: admission stops (late arrivals are
 //! answered [`RejectReason::Draining`]), in-flight work finishes, and
 //! the complete report is returned.
+//!
+//! **Sharding (DESIGN.md §16):** the generation loop is generic over
+//! the [`Stepper`] trait — the driving surface a serving back end
+//! exposes. The single [`Engine`] implements it directly
+//! ([`serve_generate`]); [`router::Router`] implements it over N
+//! crash-isolated engine workers with prefix-affinity routing and
+//! deterministic failover ([`serve_generate_sharded`]). One loop, two
+//! back ends.
 
 use crate::config::ModelConfig;
-use crate::engine::{CancelToken, Engine, FinishReason, GenConfig, GenReport, GenRequest};
+use crate::engine::{
+    CancelToken, Engine, FinishReason, GenConfig, GenOutput, GenReport, GenRequest,
+};
 use crate::model::{Params, ROLES};
 use crate::obs::{Hist, TraceRecord};
 use crate::quant::QuantizedModel;
@@ -43,9 +53,58 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 pub mod oneshot;
+pub mod router;
 
 pub use crate::engine::{RejectCounts, RejectReason};
 pub use oneshot::{oneshot_channel, OneshotReceiver, OneshotSender, RecvError};
+pub use router::{route_affinity, RouterConfig, RouterReport, WorkerFaultHook};
+
+/// The uniform driving surface of a generation back end. The single
+/// [`Engine`] implements it directly; the sharded [`router::Router`]
+/// implements it over N crash-isolated workers. The generic serve loop
+/// ([`serve_on`]), the bench driver, and the router fault harness all
+/// drive these five calls and nothing else, so a back end swap never
+/// touches the loop (ROADMAP item 2's suggested refactor).
+pub trait Stepper {
+    /// Submit a request. `Some` is an immediate admission answer (today
+    /// always a rejection); `None` means the request is in flight and
+    /// its output will arrive from a later [`Stepper::step`]. Back ends
+    /// key sampler streams by `(seed, request id)`, so callers must
+    /// keep ids unique among in-flight requests.
+    fn submit(&mut self, req: GenRequest) -> Option<GenOutput>;
+    /// Advance the back end one scheduling round; returns whatever
+    /// finished (possibly empty — a sharded back end's workers run
+    /// free, so outputs arrive when they arrive).
+    fn step(&mut self) -> Result<Vec<GenOutput>>;
+    /// Whether queued or in-flight work remains.
+    fn has_work(&self) -> bool;
+    /// Stop admitting: fresh submits answer [`RejectReason::Draining`];
+    /// everything already accepted runs to completion.
+    fn begin_drain(&mut self);
+    fn draining(&self) -> bool;
+}
+
+impl Stepper for Engine<'_> {
+    fn submit(&mut self, req: GenRequest) -> Option<GenOutput> {
+        Engine::submit(self, req)
+    }
+
+    fn step(&mut self) -> Result<Vec<GenOutput>> {
+        Engine::step(self)
+    }
+
+    fn has_work(&self) -> bool {
+        Engine::has_work(self)
+    }
+
+    fn begin_drain(&mut self) {
+        Engine::begin_drain(self)
+    }
+
+    fn draining(&self) -> bool {
+        Engine::draining(self)
+    }
+}
 
 /// One scoring request: a full token sequence; the response carries the
 /// logits of the final position (next-token distribution).
@@ -59,6 +118,9 @@ pub struct Completion {
     pub next_logits: Vec<f32>,
     pub queued_at: Instant,
     pub done_at: Instant,
+    /// Worker shard whose loop executed the batch (0 for the default
+    /// single-shard [`serve_requests`]).
+    pub served_by: usize,
 }
 
 /// What a scoring client hears back: logits, or a structured reason.
@@ -100,6 +162,11 @@ pub struct ServeReport {
     pub p95_ms: f32,
     pub p99_ms: f32,
     pub throughput_rps: f32,
+    /// Worker shard this loop ran as ([`serve_requests_as`]).
+    pub worker: usize,
+    /// Worker shard that served each dispatched batch, in dispatch
+    /// order (`batch_workers.len() == batches`).
+    pub batch_workers: Vec<usize>,
 }
 
 /// One generation request over the serving queue.
@@ -225,8 +292,27 @@ fn validate_oneshot(tokens: &[i32], want_len: usize, vocab: usize) -> Option<Rej
 /// (demo/benchmark mode): consumes the receiver until disconnect — or
 /// until `shutdown` fires, which stops admission (late arrivals are
 /// answered [`RejectReason::Draining`]) while already-accepted requests
-/// still execute — and returns the report.
+/// still execute — and returns the report. Serves as worker shard 0;
+/// use [`serve_requests_as`] to label another shard.
 pub fn serve_requests(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    rx: mpsc::Receiver<Request>,
+    max_wait: Duration,
+    shutdown: Option<CancelToken>,
+) -> Result<ServeReport> {
+    serve_requests_as(0, rt, cfg, params, qm, rx, max_wait, shutdown)
+}
+
+/// [`serve_requests`] running as a named worker shard: completions
+/// carry `served_by = worker` and the report records which shard served
+/// each batch, so a sharded one-shot deployment can attribute every
+/// batch to the loop that executed it.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_requests_as(
+    worker: usize,
     rt: &Runtime,
     cfg: &ModelConfig,
     params: &Params,
@@ -245,6 +331,7 @@ pub fn serve_requests(
     let mut lat = Hist::new();
     let mut fills: Vec<f32> = Vec::new();
     let mut batches = 0usize;
+    let mut batch_workers: Vec<usize> = Vec::new();
     let mut reject_counts = RejectCounts::default();
     let started = Instant::now(); // faq-lint: allow(untracked-clock) — report wall time
     let mut pending: Vec<(Request, Instant)> = Vec::new();
@@ -327,6 +414,7 @@ pub fn serve_requests(
         let logits = tensor_f32(first)?; // [B, T, V]
         let now = Instant::now(); // faq-lint: allow(untracked-clock) — latency stamp
         batches += 1;
+        batch_workers.push(worker);
 
         for (i, (req, queued)) in group.into_iter().enumerate() {
             let base = (i * t + (t - 1)) * v;
@@ -340,6 +428,7 @@ pub fn serve_requests(
                 next_logits: next,
                 queued_at: queued,
                 done_at: now,
+                served_by: worker,
             }));
         }
     }
@@ -360,6 +449,8 @@ pub fn serve_requests(
         p95_ms: hist_ms(&lat, 95),
         p99_ms: hist_ms(&lat, 99),
         throughput_rps: if total > 0.0 { n as f32 / total } else { 0.0 },
+        worker,
+        batch_workers,
     })
 }
 
@@ -372,11 +463,151 @@ struct InflightEntry {
     cancel: CancelToken,
 }
 
-/// Run the generation serving loop over a request queue until the sender
-/// disconnects and all in-flight sequences drain — or until `shutdown`
-/// fires, which puts the engine into drain mode: fresh requests are
-/// answered [`RejectReason::Draining`] while in-flight sequences run to
-/// completion, and the full report is still returned.
+/// Submit one queue request to the back end; rejections answer
+/// immediately, admissions wait in `inflight` for their output.
+fn admit<S: Stepper>(
+    stepper: &mut S,
+    inflight: &mut BTreeMap<usize, InflightEntry>,
+    next_id: &mut usize,
+    req: GenServeRequest,
+) {
+    let id = *next_id;
+    *next_id += 1;
+    // Always register a token: the loop needs one to convert a
+    // client disconnect into a cancel, whether or not the client
+    // kept a handle for itself.
+    let cancel = req.cancel.unwrap_or_default();
+    let out = stepper.submit(GenRequest {
+        id,
+        prompt: req.prompt,
+        max_new: req.max_new,
+        stop_id: req.stop_id,
+        deadline: req.deadline,
+        cancel: Some(cancel.clone()),
+    });
+    match out {
+        Some(immediate) => {
+            let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
+            let resp = match immediate.finish {
+                FinishReason::Rejected(reason) => GenServeResponse::Rejected(reason),
+                // `submit` only answers immediately with rejections
+                // today; if that ever changes, a completed (if empty)
+                // generation must not take the serving loop down.
+                finish => GenServeResponse::Done {
+                    tokens: immediate.tokens,
+                    finish,
+                    queued_at: now,
+                    done_at: now,
+                },
+            };
+            let _ = req.respond.send(resp);
+        }
+        None => {
+            inflight.insert(
+                id,
+                InflightEntry {
+                    respond: req.respond,
+                    queued_at: Instant::now(), // faq-lint: allow(untracked-clock) — queue stamp
+                    cancel,
+                },
+            );
+        }
+    }
+}
+
+/// The generic generation serve loop: drive any [`Stepper`] through the
+/// request queue until the sender disconnects and all in-flight
+/// sequences drain — or until `shutdown` fires, which puts the back end
+/// into drain mode. Returns the queue-side latency histogram and the
+/// number of requests answered (completions and rejections alike).
+///
+/// Note one asymmetry between back ends: a request the single engine
+/// rejects at `submit` answers [`GenServeResponse::Rejected`], while a
+/// sharded back end validates on the worker — the same rejection then
+/// arrives from [`Stepper::step`] and answers `Done { finish:
+/// Rejected(..), .. }` with empty tokens. The cause accounting is
+/// identical either way.
+fn serve_on<S: Stepper>(
+    stepper: &mut S,
+    rx: &mpsc::Receiver<GenServeRequest>,
+    max_wait: Duration,
+    shutdown: Option<CancelToken>,
+) -> Result<(Hist, usize)> {
+    let mut inflight: BTreeMap<usize, InflightEntry> = BTreeMap::new();
+    let mut lat = Hist::new();
+    let mut next_id = 0usize;
+    let mut answered = 0usize;
+    let mut done = false;
+
+    loop {
+        if !stepper.draining() && shutdown.as_ref().is_some_and(|s| s.is_cancelled()) {
+            // Graceful drain: the back end rejects fresh submits with
+            // `Draining` (clients get answered, not ignored) while
+            // everything already admitted runs to completion.
+            stepper.begin_drain();
+        }
+        // Drain whatever is immediately available (never blocks).
+        loop {
+            match rx.try_recv() {
+                Ok(r) => {
+                    admit(stepper, &mut inflight, &mut next_id, r);
+                    answered += 1;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        // Mid-flight disconnect sweep: a client that dropped its
+        // receiver gets its sequence cancelled (the back end observes
+        // the token at its next lifecycle sweep) instead of burning
+        // decode steps on tokens nobody will read.
+        for entry in inflight.values() {
+            if !entry.cancel.is_cancelled() && entry.respond.is_disconnected() {
+                entry.cancel.cancel();
+            }
+        }
+        if !stepper.has_work() {
+            if done || stepper.draining() {
+                break;
+            }
+            // Idle: wait for the next request (or the disconnect).
+            match rx.recv_timeout(max_wait) {
+                Ok(r) => {
+                    admit(stepper, &mut inflight, &mut next_id, r);
+                    answered += 1;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
+            }
+            continue;
+        }
+        for out in stepper.step()? {
+            let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
+            if let Some(entry) = inflight.remove(&out.id) {
+                lat.record(duration_us(now.duration_since(entry.queued_at)));
+                let _ = entry.respond.send(GenServeResponse::Done {
+                    tokens: out.tokens,
+                    finish: out.finish,
+                    queued_at: entry.queued_at,
+                    done_at: now,
+                });
+            }
+        }
+    }
+    // `answered` counted admissions; in-flight entries whose clients
+    // vanished still got a terminal output above, so every admission
+    // was answered (or its client hung up — same count either way).
+    Ok((lat, answered))
+}
+
+/// Run the generation serving loop on a single [`Engine`] until the
+/// sender disconnects and all in-flight sequences drain — or until
+/// `shutdown` fires, which puts the engine into drain mode: fresh
+/// requests are answered [`RejectReason::Draining`] while in-flight
+/// sequences run to completion, and the full report is still returned.
 ///
 /// Requests are admitted into the engine's slot queue as they arrive —
 /// between decode steps, so a request that shows up while long sequences
@@ -399,116 +630,8 @@ pub fn serve_generate(
     max_wait: Duration,
     shutdown: Option<CancelToken>,
 ) -> Result<GenServeReport> {
-    /// Submit one queue request to the engine; rejections answer
-    /// immediately, admissions wait in `inflight` for their slot.
-    fn admit(
-        engine: &mut Engine<'_>,
-        inflight: &mut BTreeMap<usize, InflightEntry>,
-        next_id: &mut usize,
-        req: GenServeRequest,
-    ) {
-        let id = *next_id;
-        *next_id += 1;
-        // Always register a token: the loop needs one to convert a
-        // client disconnect into a cancel, whether or not the client
-        // kept a handle for itself.
-        let cancel = req.cancel.unwrap_or_default();
-        let out = engine.submit(GenRequest {
-            id,
-            prompt: req.prompt,
-            max_new: req.max_new,
-            stop_id: req.stop_id,
-            deadline: req.deadline,
-            cancel: Some(cancel.clone()),
-        });
-        match out {
-            Some(immediate) => {
-                let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
-                let resp = match immediate.finish {
-                    FinishReason::Rejected(reason) => GenServeResponse::Rejected(reason),
-                    // `submit` only answers immediately with rejections
-                    // today; if that ever changes, a completed (if empty)
-                    // generation must not take the serving loop down.
-                    finish => GenServeResponse::Done {
-                        tokens: immediate.tokens,
-                        finish,
-                        queued_at: now,
-                        done_at: now,
-                    },
-                };
-                let _ = req.respond.send(resp);
-            }
-            None => {
-                inflight.insert(
-                    id,
-                    InflightEntry {
-                        respond: req.respond,
-                        queued_at: Instant::now(), // faq-lint: allow(untracked-clock) — queue stamp
-                        cancel,
-                    },
-                );
-            }
-        }
-    }
-
     let mut engine = Engine::new(rt, cfg, params, qm, gen)?;
-    let mut inflight: BTreeMap<usize, InflightEntry> = BTreeMap::new();
-    let mut lat = Hist::new();
-    let mut next_id = 0usize;
-    let mut done = false;
-
-    loop {
-        if !engine.draining() && shutdown.as_ref().is_some_and(|s| s.is_cancelled()) {
-            // Graceful drain: the engine rejects fresh submits with
-            // `Draining` (clients get answered, not ignored) while
-            // everything already admitted runs to completion.
-            engine.begin_drain();
-        }
-        // Drain whatever is immediately available (never blocks).
-        loop {
-            match rx.try_recv() {
-                Ok(r) => admit(&mut engine, &mut inflight, &mut next_id, r),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    done = true;
-                    break;
-                }
-            }
-        }
-        // Mid-flight disconnect sweep: a client that dropped its
-        // receiver gets its sequence cancelled (the engine observes
-        // the token at its next lifecycle sweep) instead of burning
-        // decode steps on tokens nobody will read.
-        for entry in inflight.values() {
-            if !entry.cancel.is_cancelled() && entry.respond.is_disconnected() {
-                entry.cancel.cancel();
-            }
-        }
-        if !engine.has_work() {
-            if done || engine.draining() {
-                break;
-            }
-            // Idle: wait for the next request (or the disconnect).
-            match rx.recv_timeout(max_wait) {
-                Ok(r) => admit(&mut engine, &mut inflight, &mut next_id, r),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => done = true,
-            }
-            continue;
-        }
-        for out in engine.step()? {
-            let now = Instant::now(); // faq-lint: allow(untracked-clock) — response stamp
-            if let Some(entry) = inflight.remove(&out.id) {
-                lat.record(duration_us(now.duration_since(entry.queued_at)));
-                let _ = entry.respond.send(GenServeResponse::Done {
-                    tokens: out.tokens,
-                    finish: out.finish,
-                    queued_at: entry.queued_at,
-                    done_at: now,
-                });
-            }
-        }
-    }
+    let (lat, _answered) = serve_on(&mut engine, &rx, max_wait, shutdown)?;
 
     let engine_report = engine.report();
     let trace = engine.trace().snapshot();
@@ -524,6 +647,49 @@ pub fn serve_generate(
         p99_ms: hist_ms(&lat, 99),
         trace,
         trace_dropped,
+    })
+}
+
+/// Summary of a sharded generation serving run: fleet-level router
+/// report (crashes, failovers, per-worker occupancy, merged engine
+/// accounting) plus the queue-side latency percentiles.
+#[derive(Clone, Debug)]
+pub struct ShardedServeReport {
+    pub router: RouterReport,
+    /// Requests answered on the queue (completions + rejections).
+    pub requests: usize,
+    /// Queue-side latency percentiles ([`Hist`] bucket upper bounds).
+    pub p50_ms: f32,
+    pub p95_ms: f32,
+    pub p99_ms: f32,
+}
+
+/// [`serve_generate`] over the crash-isolated sharded router: the same
+/// generic loop drives a [`router::Router`] owning `rcfg.workers`
+/// engine workers with prefix-affinity routing; a worker panic or
+/// stall is absorbed by quarantine + deterministic re-execution
+/// instead of taking the serving loop down (DESIGN.md §16).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_generate_sharded(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    rcfg: RouterConfig,
+    rx: mpsc::Receiver<GenServeRequest>,
+    max_wait: Duration,
+    shutdown: Option<CancelToken>,
+) -> Result<ShardedServeReport> {
+    let ((lat, answered), report) = router::run_router(rt, cfg, params, qm, gen, rcfg, |r| {
+        serve_on(r, &rx, max_wait, shutdown)
+    })?;
+    Ok(ShardedServeReport {
+        router: report,
+        requests: answered,
+        p50_ms: hist_ms(&lat, 50),
+        p95_ms: hist_ms(&lat, 95),
+        p99_ms: hist_ms(&lat, 99),
     })
 }
 
@@ -545,12 +711,16 @@ mod tests {
             p95_ms: 9.0,
             p99_ms: 10.0,
             throughput_rps: 100.0,
+            worker: 2,
+            batch_workers: vec![2, 2, 2],
         };
         assert!(r.p95_ms >= r.p50_ms);
         assert!(r.p99_ms >= r.p95_ms);
         assert!(r.mean_batch_fill <= 1.0);
         assert_eq!(r.rejected, 1);
         assert_eq!(r.reject_counts.wrong_length, 1);
+        assert_eq!(r.batch_workers.len(), r.batches);
+        assert!(r.batch_workers.iter().all(|&w| w == r.worker));
     }
 
     #[test]

@@ -1,0 +1,1564 @@
+//! Supervised multi-engine router: crash-isolated sharded serving with
+//! prefix-affinity routing and deterministic failover (DESIGN.md §16).
+//!
+//! The router owns `N` engine workers, each on its own thread with its
+//! own [`Engine`] (own KV pool, prefix cache, samplers). A supervisor
+//! (the [`Router`], driven through the [`Stepper`] trait by the generic
+//! serve loop) routes admitted requests, watches worker health, and
+//! re-executes the in-flight work of a crashed or wedged worker on a
+//! healthy one.
+//!
+//! **Why failover is sound.** The engine's bit-identity contract plus
+//! samplers keyed by `(seed, request id)` make a request's token stream
+//! a pure function of `(prompt, gen seed, id, sampling params)` — never
+//! of which worker ran it, what else was batched with it, or how far a
+//! dead worker got before dying. Re-executing a request from scratch on
+//! another worker therefore reproduces the exact stream the crashed
+//! worker would have produced, and the router-level fault harness pins
+//! that bitwise (`testutil::router_faults`).
+//!
+//! **Exactly-once answers.** Every dispatch carries the worker's epoch;
+//! outputs are matched against the inflight entry's recorded
+//! `(worker, epoch)`. A worker that stalls, is quarantined, and later
+//! wakes up can only emit stale-epoch outputs, which the router drops —
+//! the failover copy's output is the only one that counts. Workers
+//! likewise drop stale-epoch dispatches after a restart.
+//!
+//! **Stall detection without a clock.** Each worker bumps a
+//! [`Heartbeat`] after every completed step. The supervisor counts its
+//! own *idle rounds* — event-pump rounds in which nothing arrived — and
+//! quarantines a worker whose heartbeat stays flat across
+//! `stall_rounds` such rounds while it holds queued work. No wall-time
+//! read is involved (the `untracked-clock` lint stays clean), and a
+//! false positive only triggers a harmless deterministic re-execution:
+//! the quarantined worker's late outputs are stale-epoch and dropped.
+//!
+//! **Drain.** Worker engines never enter engine-level drain — a drained
+//! engine would reject the very re-dispatches failover depends on.
+//! Draining is enforced at router admission; `Drain` asks each worker
+//! to report back once idle with its final [`GenReport`], latency
+//! histograms, and a pool-leak check (`flush_prefix_cache` →
+//! `check_paged_invariants` → `assert_pool_all_free`).
+
+use crate::config::ModelConfig;
+use crate::engine::{
+    Engine, FinishReason, GenConfig, GenOutput, GenReport, GenRequest, Heartbeat, RejectCounts,
+    RejectReason, DEFAULT_BLOCK_TOKENS,
+};
+use crate::model::Params;
+use crate::obs::{Hist, LatencyStats, Metrics, Trace, TraceEvent, TraceRecord};
+use crate::quant::QuantizedModel;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use super::Stepper;
+
+/// How long an idle worker blocks on its mailbox per round.
+const IDLE_WAIT: Duration = Duration::from_millis(1);
+/// How long the router blocks for worker events when it has in-flight
+/// work but nothing to do.
+const EVENT_WAIT: Duration = Duration::from_millis(1);
+/// Startup barrier bound: rounds waited for every worker to report Up
+/// or Down before routing begins (engine construction may prepare
+/// weights, so this is generous; each idle round waits [`EVENT_WAIT`]).
+const STARTUP_ROUNDS: usize = 120_000;
+/// Shutdown bounds: idle rounds stepping a draining router, and rounds
+/// waiting for per-worker drained reports.
+const FINISH_ROUNDS: usize = 60_000;
+const DRAIN_COLLECT_ROUNDS: usize = 30_000;
+
+/// Leading prompt blocks hashed for prefix-affinity routing. Shared
+/// system prompts dominate the first few blocks; hashing more would
+/// spread requests that share a long prefix across workers and defeat
+/// the point.
+pub const AFFINITY_BLOCKS: usize = 4;
+
+/// Prefix-affinity routing: hash the prompt's leading complete blocks
+/// (up to [`AFFINITY_BLOCKS`] of `block_tokens` tokens each) to a
+/// worker index, so traffic sharing a system prompt lands on the worker
+/// whose radix tree already caches it.
+///
+/// Pure function of `(prompt, block_tokens, workers)` — a pinned
+/// property test holds it to that. Returns `None` when no complete
+/// block exists (or `workers`/`block_tokens` is zero): such prompts
+/// cannot hit the prefix cache anyway, so they fall back to
+/// least-loaded placement.
+pub fn route_affinity(prompt: &[i32], block_tokens: usize, workers: usize) -> Option<usize> {
+    if workers == 0 || block_tokens == 0 {
+        return None;
+    }
+    let blocks = (prompt.len() / block_tokens).min(AFFINITY_BLOCKS);
+    if blocks == 0 {
+        return None;
+    }
+    // FNV-1a over the little-endian bytes of the hashed tokens: stable
+    // across platforms, cheap, and with no dependency on the std
+    // hasher's per-process seed.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in prompt.iter().take(blocks * block_tokens) {
+        for b in (*t as u32).to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    Some((h % workers as u64) as usize)
+}
+
+/// Fault seam at the worker boundary, called immediately before every
+/// step attempt with a cumulative attempt counter (monotone across
+/// restarts, so a plan keyed on attempt numbers fires each fault
+/// exactly once). Returning `true` simulates a wedge: the worker stops
+/// making progress — heartbeat flat, mailbox ignored except Shutdown —
+/// until the supervisor quarantines it. A hook may also panic to
+/// simulate a crash; the worker's `catch_unwind` absorbs it.
+///
+/// Implementations live in `testutil::router_faults`; production
+/// routers carry no hook and pay one `Option` check per step.
+pub trait WorkerFaultHook: Send {
+    fn before_step(&mut self, worker: usize, epoch: usize, attempt: u64) -> bool;
+}
+
+/// Per-worker hook factory (worker index → hook), so a fault plan can
+/// target one worker and leave the rest clean.
+pub type HookFactory = Arc<dyn Fn(usize) -> Option<Box<dyn WorkerFaultHook>> + Send + Sync>;
+
+/// Sharded-router configuration. `Default` is production-shaped: two
+/// workers, affinity on, no fault hook.
+#[derive(Clone)]
+pub struct RouterConfig {
+    /// Worker (engine) count; 0 is treated as 1.
+    pub workers: usize,
+    /// Prefix-affinity routing ([`route_affinity`]); when off, every
+    /// request goes to the least-loaded eligible worker.
+    pub affinity: bool,
+    /// Global admission bound on pending + in-flight requests
+    /// (0 = unbounded). Overflow rejects with [`RejectReason::QueueFull`].
+    pub max_queue: usize,
+    /// Per-worker dispatch bound (backpressure): a worker holding this
+    /// many in-flight requests is ineligible for more until one
+    /// completes. 0 resolves to 2 × engine slots.
+    pub worker_queue: usize,
+    /// Supervisor idle rounds with a flat heartbeat (while holding
+    /// queued work) before a worker is presumed wedged and quarantined.
+    /// 0 disables stall detection.
+    pub stall_rounds: usize,
+    /// Sleep between a worker crash and its restart attempt.
+    pub restart_backoff: Duration,
+    /// Restarts allowed per worker before it is marked permanently
+    /// down (so `max_restarts + 1` engine lifetimes).
+    pub max_restarts: usize,
+    /// Record router trace events (worker_up / route / worker_crash /
+    /// failover) into the report.
+    pub trace: bool,
+    /// Virtual trace-stamp step (see `obs::Trace::virtual_clock`);
+    /// `None` stamps wall time.
+    pub virtual_step: Option<Duration>,
+    /// Fault-injection seam for the deterministic failover harness.
+    pub hook: Option<HookFactory>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            affinity: true,
+            max_queue: 0,
+            worker_queue: 0,
+            stall_rounds: 200,
+            restart_backoff: Duration::from_millis(10),
+            max_restarts: 4,
+            trace: false,
+            virtual_step: None,
+            hook: None,
+        }
+    }
+}
+
+impl fmt::Debug for RouterConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RouterConfig")
+            .field("workers", &self.workers)
+            .field("affinity", &self.affinity)
+            .field("max_queue", &self.max_queue)
+            .field("worker_queue", &self.worker_queue)
+            .field("stall_rounds", &self.stall_rounds)
+            .field("restart_backoff", &self.restart_backoff)
+            .field("max_restarts", &self.max_restarts)
+            .field("trace", &self.trace)
+            .field("virtual_step", &self.virtual_step)
+            .field("hook", &self.hook.as_ref().map(|_| "<factory>"))
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// State shared between a worker thread and the supervisor.
+#[derive(Debug, Default)]
+struct WorkerShared {
+    heartbeat: Heartbeat,
+    /// Set by the supervisor to quarantine a presumed-wedged worker;
+    /// the worker consumes it (`swap(false)`) and restarts its engine.
+    quarantined: AtomicBool,
+}
+
+enum WorkerMsg {
+    /// A request routed at the given worker epoch. A worker that has
+    /// since restarted drops stale-epoch dispatches — the router
+    /// already failed them over.
+    Dispatch(GenRequest, usize),
+    /// Router-level drain: report back (once idle) with the engine
+    /// report, latency histograms, and a pool-leak check. Deliberately
+    /// NOT engine-level drain — a drained engine would reject the
+    /// re-dispatches failover depends on.
+    Drain,
+    Shutdown,
+}
+
+/// A worker's final accounting, sent on drain.
+#[derive(Clone, Debug)]
+struct DrainedInfo {
+    report: GenReport,
+    ttft: Hist,
+    per_token: Hist,
+    queue_wait: Hist,
+    /// `Some(description)` when the post-drain pool check failed.
+    leak: Option<String>,
+}
+
+enum WorkerEvent {
+    Up {
+        worker: usize,
+        epoch: usize,
+    },
+    Out {
+        worker: usize,
+        epoch: usize,
+        out: GenOutput,
+    },
+    Crash {
+        worker: usize,
+        epoch: usize,
+        cause: &'static str,
+        detail: String,
+    },
+    Drained {
+        worker: usize,
+        info: Box<DrainedInfo>,
+    },
+    /// Permanently down: restart budget exhausted or the engine could
+    /// not be constructed.
+    Down {
+        worker: usize,
+        detail: String,
+    },
+}
+
+enum EpochEnd {
+    Shutdown,
+    Crashed,
+}
+
+enum Applied {
+    Continue,
+    Shutdown,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    worker: usize,
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    backoff: Duration,
+    max_restarts: usize,
+    shared: Arc<WorkerShared>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    tx: mpsc::Sender<WorkerEvent>,
+    mut hook: Option<Box<dyn WorkerFaultHook>>,
+) {
+    // Cumulative across epochs so an attempt-keyed fault plan passes
+    // each attempt number exactly once (no re-firing after restart).
+    let mut attempt: u64 = 0;
+    let mut epoch = 0usize;
+    loop {
+        if epoch > max_restarts {
+            let _ = tx.send(WorkerEvent::Down {
+                worker,
+                detail: format!("restart budget exhausted after {epoch} engine lifetimes"),
+            });
+            wait_for_shutdown(&rx);
+            return;
+        }
+        let mut engine = match Engine::new(rt, cfg, params, qm, gen.clone()) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = tx.send(WorkerEvent::Down {
+                    worker,
+                    detail: format!("engine construction failed: {e:#}"),
+                });
+                wait_for_shutdown(&rx);
+                return;
+            }
+        };
+        if tx.send(WorkerEvent::Up { worker, epoch }).is_err() {
+            return;
+        }
+        match serve_epoch(
+            worker,
+            epoch,
+            &mut engine,
+            &shared,
+            &rx,
+            &tx,
+            &mut hook,
+            &mut attempt,
+        ) {
+            EpochEnd::Shutdown => return,
+            EpochEnd::Crashed => {
+                // Free the dead epoch's engine (KV pool, caches) before
+                // backing off; the replacement gets a fresh one.
+                drop(engine);
+                std::thread::sleep(backoff);
+                epoch += 1;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_epoch(
+    worker: usize,
+    epoch: usize,
+    engine: &mut Engine<'_>,
+    shared: &WorkerShared,
+    rx: &mpsc::Receiver<WorkerMsg>,
+    tx: &mpsc::Sender<WorkerEvent>,
+    hook: &mut Option<Box<dyn WorkerFaultHook>>,
+    attempt: &mut u64,
+) -> EpochEnd {
+    let mut drain_requested = false;
+    let mut drained_sent = false;
+    loop {
+        if shared.quarantined.swap(false, Ordering::SeqCst) {
+            // Supervisor presumed us wedged (a false positive is safe —
+            // our in-flight work was already failed over; anything this
+            // epoch might still emit is stale and dropped).
+            return EpochEnd::Crashed;
+        }
+        // Drain the mailbox without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => match apply_msg(
+                    msg,
+                    worker,
+                    epoch,
+                    engine,
+                    tx,
+                    &mut drain_requested,
+                    &mut drained_sent,
+                ) {
+                    Applied::Continue => {}
+                    Applied::Shutdown => return EpochEnd::Shutdown,
+                },
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return EpochEnd::Shutdown,
+            }
+        }
+        if engine.has_work() {
+            // Count the attempt BEFORE trying it, so a plan crash at
+            // attempt k fires exactly once: the re-execution after
+            // restart runs under later attempt numbers.
+            *attempt += 1;
+            let this_attempt = *attempt;
+            let stepped = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(h) = hook.as_deref_mut() {
+                    if h.before_step(worker, epoch, this_attempt) {
+                        return Ok(None);
+                    }
+                }
+                engine.step().map(Some)
+            }));
+            match stepped {
+                Ok(Ok(Some(outs))) => {
+                    shared.heartbeat.beat();
+                    for out in outs {
+                        if tx.send(WorkerEvent::Out { worker, epoch, out }).is_err() {
+                            return EpochEnd::Shutdown;
+                        }
+                    }
+                }
+                Ok(Ok(None)) => return park_stalled(shared, rx),
+                Ok(Err(e)) => {
+                    let _ = tx.send(WorkerEvent::Crash {
+                        worker,
+                        epoch,
+                        cause: "step_error",
+                        detail: format!("{e:#}"),
+                    });
+                    return EpochEnd::Crashed;
+                }
+                Err(payload) => {
+                    let _ = tx.send(WorkerEvent::Crash {
+                        worker,
+                        epoch,
+                        cause: "panic",
+                        detail: panic_detail(payload),
+                    });
+                    return EpochEnd::Crashed;
+                }
+            }
+        } else {
+            if drain_requested && !drained_sent {
+                let info = drain_check(engine);
+                if tx
+                    .send(WorkerEvent::Drained {
+                        worker,
+                        info: Box::new(info),
+                    })
+                    .is_err()
+                {
+                    return EpochEnd::Shutdown;
+                }
+                drained_sent = true;
+            }
+            // Idle: block briefly for the next message.
+            match rx.recv_timeout(IDLE_WAIT) {
+                Ok(msg) => match apply_msg(
+                    msg,
+                    worker,
+                    epoch,
+                    engine,
+                    tx,
+                    &mut drain_requested,
+                    &mut drained_sent,
+                ) {
+                    Applied::Continue => {}
+                    Applied::Shutdown => return EpochEnd::Shutdown,
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return EpochEnd::Shutdown,
+            }
+        }
+    }
+}
+
+fn apply_msg(
+    msg: WorkerMsg,
+    worker: usize,
+    epoch: usize,
+    engine: &mut Engine<'_>,
+    tx: &mpsc::Sender<WorkerEvent>,
+    drain_requested: &mut bool,
+    drained_sent: &mut bool,
+) -> Applied {
+    match msg {
+        WorkerMsg::Dispatch(req, for_epoch) => {
+            if for_epoch != epoch {
+                // Routed at a previous epoch of this worker; the router
+                // has already failed it over. Running it here would
+                // double-execute the request.
+                return Applied::Continue;
+            }
+            // New work arriving during a drain (failover re-dispatch)
+            // invalidates any drained report we already sent; we will
+            // re-send one when idle again, and the router keeps the
+            // latest.
+            *drained_sent = false;
+            if let Some(out) = engine.submit(req) {
+                // Immediate rejection: surfaces through the normal
+                // output path with the epoch tag.
+                let _ = tx.send(WorkerEvent::Out { worker, epoch, out });
+            }
+        }
+        WorkerMsg::Drain => *drain_requested = true,
+        WorkerMsg::Shutdown => return Applied::Shutdown,
+    }
+    Applied::Continue
+}
+
+/// Cooperative-stall parking (fault hook returned `true`): make no
+/// progress — heartbeat flat, dispatches ignored — until the
+/// supervisor's quarantine flag arrives or the router shuts down.
+/// Models a wedged worker faithfully: work dispatched to it is simply
+/// lost until failover.
+fn park_stalled(shared: &WorkerShared, rx: &mpsc::Receiver<WorkerMsg>) -> EpochEnd {
+    loop {
+        if shared.quarantined.swap(false, Ordering::SeqCst) {
+            return EpochEnd::Crashed;
+        }
+        match rx.recv_timeout(IDLE_WAIT) {
+            Ok(WorkerMsg::Shutdown) => return EpochEnd::Shutdown,
+            Ok(_) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return EpochEnd::Shutdown,
+        }
+    }
+}
+
+/// The post-drain leak check + final accounting for one worker engine.
+fn drain_check(engine: &mut Engine<'_>) -> DrainedInfo {
+    let leak = verify_pool_clean(engine).err().map(|e| format!("{e:#}"));
+    let report = engine.report();
+    let m = engine.metrics();
+    DrainedInfo {
+        report,
+        ttft: m.hist("ttft_us").cloned().unwrap_or_else(Hist::new),
+        per_token: m.hist("per_token_us").cloned().unwrap_or_else(Hist::new),
+        queue_wait: m.hist("queue_wait_us").cloned().unwrap_or_else(Hist::new),
+        leak,
+    }
+}
+
+/// Same leak discipline as the engine fault harness: drop the prefix
+/// cache's block references, re-check the paged invariants, and require
+/// the pool fully free.
+fn verify_pool_clean(engine: &mut Engine<'_>) -> Result<()> {
+    engine.flush_prefix_cache()?;
+    engine.check_paged_invariants()?;
+    engine.assert_pool_all_free()?;
+    Ok(())
+}
+
+fn wait_for_shutdown(rx: &mpsc::Receiver<WorkerMsg>) {
+    loop {
+        match rx.recv() {
+            Ok(WorkerMsg::Shutdown) | Err(_) => return,
+            Ok(_) => {}
+        }
+    }
+}
+
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervisor / router side
+// ---------------------------------------------------------------------------
+
+/// Per-worker metric names are static (the [`Metrics`] registry keys on
+/// `&'static str`); workers beyond the table share the last slot.
+const QUEUE_PEAK_GAUGES: [&str; 8] = [
+    "router_w0_queue_peak",
+    "router_w1_queue_peak",
+    "router_w2_queue_peak",
+    "router_w3_queue_peak",
+    "router_w4_queue_peak",
+    "router_w5_queue_peak",
+    "router_w6_queue_peak",
+    "router_w7_queue_peak",
+];
+const RESTART_COUNTERS: [&str; 8] = [
+    "router_w0_restarts",
+    "router_w1_restarts",
+    "router_w2_restarts",
+    "router_w3_restarts",
+    "router_w4_restarts",
+    "router_w5_restarts",
+    "router_w6_restarts",
+    "router_w7_restarts",
+];
+
+fn worker_metric(names: &'static [&'static str; 8], w: usize) -> &'static str {
+    let i = w.min(names.len() - 1);
+    names.get(i).copied().unwrap_or("router_w7_overflow")
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<WorkerMsg>,
+    shared: Arc<WorkerShared>,
+    epoch: usize,
+    serving: bool,
+    down: bool,
+    /// Dispatched-but-unanswered requests (router-side view).
+    queued: usize,
+    peak_queued: usize,
+    completed: usize,
+    crashes: usize,
+    stalls: usize,
+    restarts: usize,
+    last_beat: u64,
+    /// Consecutive supervisor idle rounds with a flat heartbeat while
+    /// holding queued work.
+    idle_flat: usize,
+    drained: Option<DrainedInfo>,
+}
+
+impl WorkerHandle {
+    fn new(tx: mpsc::Sender<WorkerMsg>, shared: Arc<WorkerShared>) -> Self {
+        Self {
+            tx,
+            shared,
+            epoch: 0,
+            serving: false,
+            down: false,
+            queued: 0,
+            peak_queued: 0,
+            completed: 0,
+            crashes: 0,
+            stalls: 0,
+            restarts: 0,
+            last_beat: 0,
+            idle_flat: 0,
+            drained: None,
+        }
+    }
+}
+
+struct Inflight {
+    /// Kept for failover re-execution (the cancel token is shared with
+    /// the copy, so a client cancel still lands after a reroute).
+    req: GenRequest,
+    worker: usize,
+    epoch: usize,
+}
+
+/// The supervisor: owns the worker fleet, routes requests, and
+/// implements [`Stepper`] so the generic serve loop (and the fault
+/// harness) can drive it exactly like a single engine.
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+    events: mpsc::Receiver<WorkerEvent>,
+    pending: VecDeque<GenRequest>,
+    inflight: BTreeMap<usize, Inflight>,
+    ready: Vec<GenOutput>,
+    affinity: bool,
+    block_tokens: usize,
+    max_queue: usize,
+    worker_queue: usize,
+    stall_rounds: usize,
+    draining: bool,
+    tick: u64,
+    completed: usize,
+    rerouted: usize,
+    crashes: usize,
+    stalls: usize,
+    dispatches: usize,
+    affinity_routed: usize,
+    orphaned: usize,
+    /// Most recent crashed/stalled worker — named by terminal
+    /// [`RejectReason::WorkerCrashed`] rejections when the whole fleet
+    /// is down.
+    last_crashed: usize,
+    down_details: Vec<String>,
+    reject_counts: RejectCounts,
+    trace: Trace,
+    metrics: Metrics,
+}
+
+impl Stepper for Router {
+    fn submit(&mut self, req: GenRequest) -> Option<GenOutput> {
+        self.submit_inner(req)
+    }
+
+    fn step(&mut self) -> Result<Vec<GenOutput>> {
+        Ok(self.step_inner())
+    }
+
+    fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.inflight.is_empty() || !self.ready.is_empty()
+    }
+
+    fn begin_drain(&mut self) {
+        self.begin_drain_inner();
+    }
+
+    fn draining(&self) -> bool {
+        self.draining
+    }
+}
+
+impl Router {
+    fn submit_inner(&mut self, req: GenRequest) -> Option<GenOutput> {
+        self.trace.emit(self.tick, TraceEvent::Submit { id: req.id });
+        let reason = if self.draining {
+            Some(RejectReason::Draining)
+        } else if self.max_queue > 0 && self.pending.len() + self.inflight.len() >= self.max_queue
+        {
+            Some(RejectReason::QueueFull {
+                limit: self.max_queue,
+            })
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            return Some(self.reject(req, reason));
+        }
+        self.pending.push_back(req);
+        // Keep the worker view fresh so routing sees completions that
+        // already happened, then try to place immediately.
+        self.pump_events();
+        self.flush_pending();
+        None
+    }
+
+    fn reject(&mut self, req: GenRequest, reason: RejectReason) -> GenOutput {
+        self.reject_counts.note(&reason);
+        self.metrics.inc("router_rejected", 1);
+        self.trace.emit(
+            self.tick,
+            TraceEvent::Reject {
+                id: req.id,
+                cause: reason.cause(),
+            },
+        );
+        GenOutput {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            finish: FinishReason::Rejected(reason),
+        }
+    }
+
+    fn step_inner(&mut self) -> Vec<GenOutput> {
+        self.tick = self.tick.saturating_add(1);
+        let mut progressed = self.pump_events();
+        self.flush_pending();
+        if !progressed && self.ready.is_empty() && !self.inflight.is_empty() {
+            // Nothing surfaced and callers expect progress: block
+            // briefly for the free-running workers.
+            progressed = self.wait_events();
+            if progressed {
+                self.pump_events();
+            }
+            self.flush_pending();
+        }
+        self.supervise(!progressed);
+        // Supervision may have requeued a quarantined worker's work.
+        self.flush_pending();
+        std::mem::take(&mut self.ready)
+    }
+
+    fn begin_drain_inner(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        self.trace.emit(self.tick, TraceEvent::Drain);
+        for ws in &self.workers {
+            if !ws.down {
+                let _ = ws.tx.send(WorkerMsg::Drain);
+            }
+        }
+    }
+
+    /// Non-blocking event pump; returns whether anything arrived.
+    fn pump_events(&mut self) -> bool {
+        let mut any = false;
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => {
+                    any = true;
+                    self.handle_event(ev);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.handle_fleet_gone();
+                    break;
+                }
+            }
+        }
+        any
+    }
+
+    /// Blocking (bounded) wait for one event; returns whether one came.
+    fn wait_events(&mut self) -> bool {
+        match self.events.recv_timeout(EVENT_WAIT) {
+            Ok(ev) => {
+                self.handle_event(ev);
+                true
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => false,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.handle_fleet_gone();
+                false
+            }
+        }
+    }
+
+    fn handle_event(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Up { worker, epoch } => {
+                let draining = self.draining;
+                let Some(ws) = self.workers.get_mut(worker) else {
+                    return;
+                };
+                ws.epoch = epoch;
+                ws.serving = true;
+                ws.idle_flat = 0;
+                ws.last_beat = ws.shared.heartbeat.snapshot();
+                if epoch > 0 {
+                    ws.restarts += 1;
+                    self.metrics.inc(worker_metric(&RESTART_COUNTERS, worker), 1);
+                    self.metrics.inc("router_restarts", 1);
+                }
+                self.trace.emit(self.tick, TraceEvent::WorkerUp { worker, epoch });
+                if draining {
+                    // The drain request died with the old epoch; the
+                    // replacement must also report a drained engine.
+                    if let Some(ws) = self.workers.get(worker) {
+                        let _ = ws.tx.send(WorkerMsg::Drain);
+                    }
+                }
+            }
+            WorkerEvent::Out { worker, epoch, out } => {
+                let current = self
+                    .inflight
+                    .get(&out.id)
+                    .is_some_and(|e| e.worker == worker && e.epoch == epoch);
+                if !current {
+                    // Stale epoch (output raced a quarantine and the
+                    // request was failed over) or an id we already
+                    // answered: drop. This is what makes failover
+                    // exactly-once.
+                    return;
+                }
+                self.inflight.remove(&out.id);
+                if let Some(ws) = self.workers.get_mut(worker) {
+                    ws.queued = ws.queued.saturating_sub(1);
+                    ws.completed += 1;
+                }
+                self.completed += 1;
+                self.ready.push(out);
+            }
+            WorkerEvent::Crash {
+                worker,
+                epoch,
+                cause,
+                detail: _,
+            } => {
+                let current = self
+                    .workers
+                    .get(worker)
+                    .is_some_and(|ws| ws.serving && !ws.down && ws.epoch == epoch);
+                if current {
+                    self.fail_worker(worker, epoch, cause, false);
+                }
+            }
+            WorkerEvent::Drained { worker, info } => {
+                if let Some(ws) = self.workers.get_mut(worker) {
+                    // Latest wins: a failover re-dispatch after an
+                    // earlier report invalidates it and the worker
+                    // re-sends once idle again.
+                    ws.drained = Some(*info);
+                }
+            }
+            WorkerEvent::Down { worker, detail } => {
+                let Some(ws) = self.workers.get_mut(worker) else {
+                    return;
+                };
+                if ws.down {
+                    return;
+                }
+                let epoch = ws.epoch;
+                ws.down = true;
+                ws.serving = false;
+                ws.queued = 0;
+                self.down_details.push(format!("worker {worker}: {detail}"));
+                // Usually empty (a Crash at the same epoch already
+                // requeued), but covers construction failures mid-run.
+                self.requeue_lost(worker, epoch);
+            }
+        }
+    }
+
+    /// The events channel can only disconnect when every worker thread
+    /// has exited (each holds a sender clone) — shutdown, or something
+    /// catastrophic. Requeue everything so accounting stays honest.
+    fn handle_fleet_gone(&mut self) {
+        for w in 0..self.workers.len() {
+            let Some(ws) = self.workers.get_mut(w) else {
+                continue;
+            };
+            if ws.down {
+                continue;
+            }
+            let epoch = ws.epoch;
+            ws.down = true;
+            ws.serving = false;
+            ws.queued = 0;
+            self.requeue_lost(w, epoch);
+        }
+    }
+
+    /// Quarantine a crashed or stalled worker and fail its in-flight
+    /// work over (deterministic re-execution; see module docs).
+    fn fail_worker(&mut self, worker: usize, epoch: usize, cause: &'static str, stall: bool) {
+        if let Some(ws) = self.workers.get_mut(worker) {
+            ws.serving = false;
+            ws.queued = 0;
+            ws.idle_flat = 0;
+            if stall {
+                ws.stalls += 1;
+                self.stalls += 1;
+                self.metrics.inc("router_stalls", 1);
+                // The worker consumes this flag and restarts with a
+                // fresh engine at the next epoch.
+                ws.shared.quarantined.store(true, Ordering::SeqCst);
+            } else {
+                ws.crashes += 1;
+                self.crashes += 1;
+                self.metrics.inc("router_crashes", 1);
+            }
+        }
+        self.last_crashed = worker;
+        self.trace
+            .emit(self.tick, TraceEvent::WorkerCrash { worker, epoch, cause });
+        self.requeue_lost(worker, epoch);
+    }
+
+    /// Move the given `(worker, epoch)`'s in-flight requests back to
+    /// the FRONT of the pending queue in ascending-id order, so
+    /// rerouted work is re-placed before newer admissions and in a
+    /// deterministic order.
+    fn requeue_lost(&mut self, worker: usize, epoch: usize) {
+        let lost: Vec<usize> = self
+            .inflight
+            .iter()
+            .filter(|(_, e)| e.worker == worker && e.epoch == epoch)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in lost.iter().rev() {
+            if let Some(entry) = self.inflight.remove(id) {
+                self.rerouted += 1;
+                self.metrics.inc("router_rerouted", 1);
+                self.trace.emit(
+                    self.tick,
+                    TraceEvent::Failover {
+                        id: *id,
+                        from: worker,
+                        epoch,
+                    },
+                );
+                self.pending.push_front(entry.req);
+            }
+        }
+    }
+
+    /// Clock-free stall supervision (see module docs): count only the
+    /// router's own idle rounds, and only against workers that hold
+    /// queued work with a flat heartbeat.
+    fn supervise(&mut self, idle_round: bool) {
+        if self.stall_rounds == 0 {
+            return;
+        }
+        for w in 0..self.workers.len() {
+            let stalled_epoch = {
+                let Some(ws) = self.workers.get_mut(w) else {
+                    continue;
+                };
+                if ws.down || !ws.serving || ws.queued == 0 {
+                    ws.idle_flat = 0;
+                    continue;
+                }
+                let beat = ws.shared.heartbeat.snapshot();
+                if beat != ws.last_beat {
+                    ws.last_beat = beat;
+                    ws.idle_flat = 0;
+                    continue;
+                }
+                if !idle_round {
+                    continue;
+                }
+                ws.idle_flat += 1;
+                if ws.idle_flat >= self.stall_rounds {
+                    Some(ws.epoch)
+                } else {
+                    None
+                }
+            };
+            if let Some(epoch) = stalled_epoch {
+                self.fail_worker(w, epoch, "stall", true);
+            }
+        }
+    }
+
+    fn eligible(&self, w: usize) -> bool {
+        self.workers
+            .get(w)
+            .is_some_and(|ws| ws.serving && !ws.down && ws.queued < self.worker_queue)
+    }
+
+    /// Routing decision for a prompt: affinity target when eligible,
+    /// else least-loaded eligible worker (ties to the lowest index, so
+    /// placement is deterministic given the worker view).
+    fn route(&self, prompt: &[i32]) -> Option<(usize, bool)> {
+        if self.affinity {
+            if let Some(w) = route_affinity(prompt, self.block_tokens, self.workers.len()) {
+                if self.eligible(w) {
+                    return Some((w, true));
+                }
+            }
+        }
+        let mut best: Option<(usize, usize)> = None; // (queued, worker)
+        for (w, ws) in self.workers.iter().enumerate() {
+            if !self.eligible(w) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((q, _)) => ws.queued < q,
+            };
+            if better {
+                best = Some((ws.queued, w));
+            }
+        }
+        best.map(|(_, w)| (w, false))
+    }
+
+    /// Head-of-line dispatch: place pending requests until the head
+    /// has no eligible worker (backpressure keeps FIFO order — no
+    /// overtaking based on which worker happens to have room).
+    fn flush_pending(&mut self) {
+        loop {
+            let decision = match self.pending.front() {
+                None => break,
+                Some(req) => self.route(&req.prompt),
+            };
+            match decision {
+                Some((w, aff)) => {
+                    let Some(req) = self.pending.pop_front() else {
+                        break;
+                    };
+                    let id = req.id;
+                    let Some(ws) = self.workers.get_mut(w) else {
+                        self.pending.push_front(req);
+                        break;
+                    };
+                    let epoch = ws.epoch;
+                    if ws.tx.send(WorkerMsg::Dispatch(req.clone(), epoch)).is_err() {
+                        // Worker thread died without a Down event:
+                        // mark it and retry routing elsewhere.
+                        ws.down = true;
+                        ws.serving = false;
+                        ws.queued = 0;
+                        self.pending.push_front(req);
+                        continue;
+                    }
+                    ws.queued += 1;
+                    if ws.queued > ws.peak_queued {
+                        ws.peak_queued = ws.queued;
+                    }
+                    let depth = ws.queued as u64;
+                    self.metrics
+                        .max_gauge(worker_metric(&QUEUE_PEAK_GAUGES, w), depth);
+                    self.dispatches += 1;
+                    self.metrics.inc("router_dispatches", 1);
+                    if aff {
+                        self.affinity_routed += 1;
+                        self.metrics.inc("router_affinity_routed", 1);
+                    }
+                    self.trace.emit(
+                        self.tick,
+                        TraceEvent::Route {
+                            id,
+                            worker: w,
+                            affinity: aff,
+                        },
+                    );
+                    self.inflight.insert(id, Inflight { req, worker: w, epoch });
+                }
+                None => {
+                    if self.workers.iter().all(|ws| ws.down) {
+                        // No worker will ever come back: answer the
+                        // whole backlog with the terminal cause.
+                        if let Some(req) = self.pending.pop_front() {
+                            let worker = self.last_crashed;
+                            let out = self.reject(req, RejectReason::WorkerCrashed { worker });
+                            self.ready.push(out);
+                            continue;
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Startup barrier: wait (bounded) until every worker reported Up
+    /// or Down. Routing against a fully-started fleet makes affinity
+    /// placement independent of construction timing — and guarantees a
+    /// fault plan's target worker actually receives its dispatches.
+    fn await_fleet_up(&mut self) {
+        let mut rounds = 0usize;
+        while rounds < STARTUP_ROUNDS {
+            if self.workers.iter().all(|ws| ws.serving || ws.down) {
+                return;
+            }
+            if !self.pump_events() && !self.wait_events() {
+                rounds += 1;
+            }
+        }
+    }
+
+    /// Drain, collect per-worker reports, shut the fleet down, and
+    /// build the run report. Called exactly once by [`run_router`] —
+    /// also on the error path, since the worker threads are scoped and
+    /// must be released before the scope can join.
+    fn finish(&mut self) -> RouterReport {
+        self.begin_drain_inner();
+        let mut idle = 0usize;
+        while Stepper::has_work(self) && idle < FINISH_ROUNDS {
+            let outs = self.step_inner();
+            if outs.is_empty() {
+                idle += 1;
+            } else {
+                idle = 0;
+                // Outputs surfacing after the driving loop stopped
+                // stepping were admitted but never delivered.
+                self.orphaned += outs.len();
+            }
+        }
+        self.orphaned += self.pending.len() + self.inflight.len();
+        self.pending.clear();
+        self.inflight.clear();
+        let mut rounds = 0usize;
+        while rounds < DRAIN_COLLECT_ROUNDS {
+            if self
+                .workers
+                .iter()
+                .all(|ws| ws.down || ws.drained.is_some())
+            {
+                break;
+            }
+            if !self.pump_events() && !self.wait_events() {
+                rounds += 1;
+            }
+        }
+        for ws in &self.workers {
+            let _ = ws.tx.send(WorkerMsg::Shutdown);
+        }
+        self.build_report()
+    }
+
+    fn build_report(&mut self) -> RouterReport {
+        let mut per = Vec::with_capacity(self.workers.len());
+        let mut leaks = Vec::new();
+        let mut ttft = Hist::new();
+        let mut per_token = Hist::new();
+        let mut queue_wait = Hist::new();
+        for (w, ws) in self.workers.iter_mut().enumerate() {
+            let mut drained_clean = false;
+            let mut report = None;
+            match ws.drained.take() {
+                Some(info) => {
+                    drained_clean = info.leak.is_none();
+                    if let Some(l) = info.leak {
+                        leaks.push(format!("worker {w}: {l}"));
+                    }
+                    ttft.merge(&info.ttft);
+                    per_token.merge(&info.per_token);
+                    queue_wait.merge(&info.queue_wait);
+                    report = Some(info.report);
+                }
+                None => {
+                    if !ws.down {
+                        leaks.push(format!("worker {w} never reported a drained engine"));
+                    }
+                }
+            }
+            per.push(RouterWorkerReport {
+                worker: w,
+                completed: ws.completed,
+                crashes: ws.crashes,
+                stalls: ws.stalls,
+                restarts: ws.restarts,
+                peak_queue: ws.peak_queued,
+                drained_clean,
+                report,
+            });
+        }
+        let latency = LatencyStats::from_hists(&ttft, &per_token, &queue_wait);
+        let engine = aggregate_engine(&per, latency.clone());
+        let mut reject_counts = self.reject_counts.clone();
+        reject_counts.merge(&engine.reject_counts);
+        let rejected = reject_counts.total();
+        RouterReport {
+            workers: self.workers.len(),
+            completed: self.completed,
+            dispatches: self.dispatches,
+            affinity_routed: self.affinity_routed,
+            rerouted: self.rerouted,
+            crashes: self.crashes,
+            stalls: self.stalls,
+            restarts: per.iter().map(|p| p.restarts).sum(),
+            rejected,
+            reject_counts,
+            orphaned: self.orphaned,
+            leaks,
+            down: std::mem::take(&mut self.down_details),
+            latency,
+            engine,
+            per_worker: per,
+            trace: self.trace.snapshot(),
+            trace_dropped: self.trace.dropped(),
+            metrics_text: self.metrics.render_text(),
+        }
+    }
+}
+
+/// Fold the surviving workers' final engine reports into one fleet
+/// view. Counts from engine lifetimes lost to crashes are not in here
+/// (the engine died with them) — router-side counters (`completed`,
+/// `rerouted`, `crashes`) track the fleet truth for those.
+fn aggregate_engine(per: &[RouterWorkerReport], latency: LatencyStats) -> GenReport {
+    let mut agg = GenReport::default();
+    let mut occ = 0f32;
+    for wr in per {
+        let Some(r) = &wr.report else { continue };
+        agg.sequences += r.sequences;
+        agg.rejected += r.rejected;
+        agg.reject_counts.merge(&r.reject_counts);
+        agg.steps += r.steps;
+        agg.prefill_tokens += r.prefill_tokens;
+        agg.decode_tokens += r.decode_tokens;
+        agg.prefill_secs += r.prefill_secs;
+        agg.decode_secs += r.decode_secs;
+        occ += r.mean_slot_occupancy * r.steps as f32;
+        agg.prefix_hit_tokens += r.prefix_hit_tokens;
+        agg.peak_blocks_in_use += r.peak_blocks_in_use;
+        agg.pool_blocks += r.pool_blocks;
+        agg.block_tokens = agg.block_tokens.max(r.block_tokens);
+        agg.evicted_blocks += r.evicted_blocks;
+        agg.cancelled += r.cancelled;
+        agg.deadline_exceeded += r.deadline_exceeded;
+        agg.quarantined += r.quarantined;
+        agg.step_faults += r.step_faults;
+        agg.step_retried += r.step_retried;
+    }
+    if agg.steps > 0 {
+        agg.mean_slot_occupancy = occ / agg.steps as f32;
+    }
+    agg.latency = latency;
+    agg
+}
+
+/// Per-worker slice of a [`RouterReport`].
+#[derive(Clone, Debug)]
+pub struct RouterWorkerReport {
+    pub worker: usize,
+    /// Requests this worker answered (completions and rejections).
+    pub completed: usize,
+    pub crashes: usize,
+    pub stalls: usize,
+    pub restarts: usize,
+    /// High-water mark of dispatched-but-unanswered requests.
+    pub peak_queue: usize,
+    /// Whether the final engine drained with a clean pool check.
+    pub drained_clean: bool,
+    /// The final engine lifetime's report (`None` if permanently down
+    /// before drain).
+    pub report: Option<GenReport>,
+}
+
+/// Fleet-level summary of a sharded router run.
+#[derive(Clone, Debug)]
+pub struct RouterReport {
+    pub workers: usize,
+    /// Requests answered by workers (completions and worker-validated
+    /// rejections; router-level rejections are only in `rejected`).
+    pub completed: usize,
+    /// Dispatches sent to workers (failover re-dispatches included).
+    pub dispatches: usize,
+    /// Dispatches placed by prefix affinity (vs least-loaded).
+    pub affinity_routed: usize,
+    /// Requests re-executed on another worker after a crash or stall.
+    pub rerouted: usize,
+    pub crashes: usize,
+    pub stalls: usize,
+    pub restarts: usize,
+    /// Total rejections (router admission + worker validation).
+    pub rejected: usize,
+    pub reject_counts: RejectCounts,
+    /// Requests that were admitted but never delivered to the caller —
+    /// always 0 when the driving loop runs the router to completion.
+    pub orphaned: usize,
+    /// Pool-leak findings from per-worker drain checks (empty = clean).
+    pub leaks: Vec<String>,
+    /// Workers that went permanently down, with cause.
+    pub down: Vec<String>,
+    /// Fleet latency percentiles (exact: per-worker histograms share
+    /// compiled-in buckets and merge by addition).
+    pub latency: LatencyStats,
+    /// Merged engine accounting across surviving workers.
+    pub engine: GenReport,
+    pub per_worker: Vec<RouterWorkerReport>,
+    pub trace: Vec<TraceRecord>,
+    pub trace_dropped: u64,
+    pub metrics_text: String,
+}
+
+impl RouterReport {
+    /// One-line fleet + per-worker occupancy/restart summary (printed
+    /// by the CLI; format pinned by a test).
+    pub fn summary_line(&self) -> String {
+        let mut s = format!(
+            "router: {} workers | {} done, {} rerouted, {} crashes, {} stalls, {} restarts, {} affinity-routed",
+            self.workers,
+            self.completed,
+            self.rerouted,
+            self.crashes,
+            self.stalls,
+            self.restarts,
+            self.affinity_routed
+        );
+        for w in &self.per_worker {
+            let occ = w
+                .report
+                .as_ref()
+                .map(|r| r.mean_slot_occupancy)
+                .unwrap_or(0.0);
+            let _ = std::fmt::Write::write_fmt(
+                &mut s,
+                format_args!(
+                    " | w{}: {} done, occ {:.2}, peak q {}, {} restarts",
+                    w.worker, w.completed, occ, w.peak_queue, w.restarts
+                ),
+            );
+        }
+        s
+    }
+}
+
+/// Run a worker fleet, hand the supervising [`Router`] to `f` (the
+/// serve loop, the bench driver, or the fault harness), then always
+/// drain, leak-check, and join the fleet — even when `f` errs, since
+/// the workers are scoped threads and must be released first.
+#[allow(clippy::too_many_arguments)]
+pub fn run_router<R>(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    rcfg: RouterConfig,
+    f: impl FnOnce(&mut Router) -> Result<R>,
+) -> Result<(R, RouterReport)> {
+    let n = rcfg.workers.max(1);
+    let slots = if gen.slots == 0 { cfg.batch } else { gen.slots };
+    let worker_queue = if rcfg.worker_queue == 0 {
+        slots.saturating_mul(2).max(1)
+    } else {
+        rcfg.worker_queue
+    };
+    let block_tokens = if gen.block_tokens == 0 {
+        DEFAULT_BLOCK_TOKENS
+    } else {
+        gen.block_tokens
+    };
+    let trace = if rcfg.trace {
+        match rcfg.virtual_step {
+            Some(step) => {
+                Trace::virtual_clock(u64::try_from(step.as_micros()).unwrap_or(u64::MAX))
+            }
+            None => Trace::wall_clock(),
+        }
+    } else {
+        Trace::disabled()
+    };
+    let (etx, erx) = mpsc::channel();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (wtx, wrx) = mpsc::channel::<WorkerMsg>();
+            let shared = Arc::new(WorkerShared::default());
+            let hook = rcfg.hook.as_ref().and_then(|mk| mk(w));
+            let tx = etx.clone();
+            let worker_shared = Arc::clone(&shared);
+            let wgen = gen.clone();
+            let backoff = rcfg.restart_backoff;
+            let max_restarts = rcfg.max_restarts;
+            scope.spawn(move || {
+                worker_loop(
+                    w,
+                    rt,
+                    cfg,
+                    params,
+                    qm,
+                    wgen,
+                    backoff,
+                    max_restarts,
+                    worker_shared,
+                    wrx,
+                    tx,
+                    hook,
+                );
+            });
+            handles.push(WorkerHandle::new(wtx, shared));
+        }
+        drop(etx);
+        let mut router = Router {
+            workers: handles,
+            events: erx,
+            pending: VecDeque::new(),
+            inflight: BTreeMap::new(),
+            ready: Vec::new(),
+            affinity: rcfg.affinity,
+            block_tokens,
+            max_queue: rcfg.max_queue,
+            worker_queue,
+            stall_rounds: rcfg.stall_rounds,
+            draining: false,
+            tick: 0,
+            completed: 0,
+            rerouted: 0,
+            crashes: 0,
+            stalls: 0,
+            dispatches: 0,
+            affinity_routed: 0,
+            orphaned: 0,
+            last_crashed: 0,
+            down_details: Vec::new(),
+            reject_counts: RejectCounts::default(),
+            trace,
+            metrics: Metrics::new(),
+        };
+        router.await_fleet_up();
+        let out = f(&mut router);
+        // ALWAYS finish — the scoped workers block the scope's join
+        // until they see Shutdown (or their channels close).
+        let report = router.finish();
+        Ok((out?, report))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_is_deterministic_and_in_range() {
+        for seed in 0..64i32 {
+            let prompt: Vec<i32> = (0..40).map(|i| (i * 7 + seed) % 97).collect();
+            for workers in 1..=8 {
+                let a = route_affinity(&prompt, 4, workers);
+                let b = route_affinity(&prompt, 4, workers);
+                assert_eq!(a, b);
+                let w = a.expect("prompt has complete blocks");
+                assert!(w < workers);
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_ignores_tokens_beyond_hashed_blocks() {
+        // 4 blocks of 4 tokens are hashed; everything after token 16
+        // must not move the placement.
+        let base: Vec<i32> = (0..16).collect();
+        let mut longer = base.clone();
+        longer.extend([99, -5, 1234, 7, 0, 42]);
+        for workers in 1..=8 {
+            assert_eq!(
+                route_affinity(&base, 4, workers),
+                route_affinity(&longer, 4, workers)
+            );
+        }
+    }
+
+    #[test]
+    fn affinity_declines_without_a_complete_block() {
+        assert_eq!(route_affinity(&[1, 2, 3], 4, 4), None);
+        assert_eq!(route_affinity(&[], 4, 4), None);
+        assert_eq!(route_affinity(&[1, 2, 3, 4], 0, 4), None);
+        assert_eq!(route_affinity(&[1, 2, 3, 4], 4, 0), None);
+        // Exactly one complete block is enough.
+        assert!(route_affinity(&[1, 2, 3, 4], 4, 4).is_some());
+    }
+
+    #[test]
+    fn router_config_defaults_are_production_shaped() {
+        let c = RouterConfig::default();
+        assert_eq!(c.workers, 2);
+        assert!(c.affinity);
+        assert_eq!(c.max_queue, 0);
+        assert_eq!(c.worker_queue, 0);
+        assert_eq!(c.stall_rounds, 200);
+        assert_eq!(c.max_restarts, 4);
+        assert!(!c.trace);
+        assert!(c.hook.is_none());
+        // Debug must not choke on the non-Debug hook field.
+        let dbg = format!("{c:?}");
+        assert!(dbg.contains("workers: 2"));
+    }
+
+    #[test]
+    fn worker_metric_names_are_static_and_bounded() {
+        assert_eq!(worker_metric(&QUEUE_PEAK_GAUGES, 0), "router_w0_queue_peak");
+        assert_eq!(worker_metric(&RESTART_COUNTERS, 7), "router_w7_restarts");
+        // Workers beyond the table share the last slot instead of
+        // panicking.
+        assert_eq!(worker_metric(&QUEUE_PEAK_GAUGES, 64), "router_w7_queue_peak");
+    }
+
+    #[test]
+    fn summary_line_format_is_pinned() {
+        let report = RouterReport {
+            workers: 2,
+            completed: 10,
+            dispatches: 12,
+            affinity_routed: 7,
+            rerouted: 2,
+            crashes: 1,
+            stalls: 0,
+            restarts: 1,
+            rejected: 0,
+            reject_counts: RejectCounts::default(),
+            orphaned: 0,
+            leaks: vec![],
+            down: vec![],
+            latency: LatencyStats::default(),
+            engine: GenReport::default(),
+            per_worker: vec![
+                RouterWorkerReport {
+                    worker: 0,
+                    completed: 6,
+                    crashes: 1,
+                    stalls: 0,
+                    restarts: 1,
+                    peak_queue: 3,
+                    drained_clean: true,
+                    report: Some(GenReport {
+                        mean_slot_occupancy: 0.5,
+                        ..GenReport::default()
+                    }),
+                },
+                RouterWorkerReport {
+                    worker: 1,
+                    completed: 4,
+                    crashes: 0,
+                    stalls: 0,
+                    restarts: 0,
+                    peak_queue: 2,
+                    drained_clean: true,
+                    report: None,
+                },
+            ],
+            trace: vec![],
+            trace_dropped: 0,
+            metrics_text: String::new(),
+        };
+        assert_eq!(
+            report.summary_line(),
+            "router: 2 workers | 10 done, 2 rerouted, 1 crashes, 0 stalls, 1 restarts, \
+             7 affinity-routed | w0: 6 done, occ 0.50, peak q 3, 1 restarts \
+             | w1: 4 done, occ 0.00, peak q 2, 0 restarts"
+        );
+    }
+}

@@ -13,10 +13,15 @@
 //!   fault plans (step failures, pool stalls, cancels, deadline storms)
 //!   driven through the engine's injection seam, with invariants and
 //!   survivor bit-identity pinned after every fault.
+//! - [`router_faults`] — the router-level extension: seeded
+//!   worker-crash/stall/restart plans against the sharded router,
+//!   pinning deterministic failover (streams bitwise equal to the
+//!   fault-free run) and zero leaked KV blocks after drain.
 
 pub mod faults;
 pub mod fixtures;
 pub mod fuzz;
+pub mod router_faults;
 
 use crate::tensor::{Rng, Tensor};
 

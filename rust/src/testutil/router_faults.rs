@@ -1,0 +1,435 @@
+//! Router-level extension of the deterministic fault harness: seeded
+//! worker-crash/stall/restart plans driven through the sharded router's
+//! [`WorkerFaultHook`] seam, asserting the failover soundness contract
+//! (DESIGN.md §16):
+//!
+//! - every request's final token stream is **bitwise identical** to the
+//!   fault-free single-engine run of the same workload — untargeted and
+//!   re-routed requests alike, at 1, 2, and 8 compute threads;
+//! - nothing is answered twice or dropped (exactly-once answers, zero
+//!   orphaned queue entries);
+//! - every surviving worker drains with a clean pool check (zero leaked
+//!   KV blocks).
+//!
+//! Faults are keyed on each worker's **cumulative step-attempt
+//! counter**, not on wall time, so a plan replays exactly: the crash at
+//! attempt `k` fires the first time the target reaches attempt `>= k`
+//! and never again (re-execution after restart runs under later
+//! attempt numbers).
+//!
+//! Worker timing is still free-running — only the *streams* are pinned
+//! bitwise, which the engine's placement-invariance contract makes
+//! sufficient (a stream depends only on `(prompt, gen seed, id,
+//! sampling params)`, never on worker placement or batch composition).
+
+use crate::config::Method;
+use crate::engine::{GenConfig, GenOutput};
+use crate::quant::QuantizedModel;
+use crate::model::Params;
+use crate::runtime::Runtime;
+use crate::serve::router::{run_router, HookFactory, RouterConfig, RouterReport};
+use crate::serve::{route_affinity, Stepper, WorkerFaultHook};
+use crate::tensor::{par, Rng};
+use crate::testutil::{fixtures, fuzz};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One planned fault against one worker, armed when the worker's
+/// cumulative attempt counter reaches `at`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterFault {
+    /// Panic inside the step path (absorbed by the worker's
+    /// `catch_unwind`; the supervisor restarts it after backoff).
+    Crash { worker: usize, at: u64 },
+    /// Cooperative wedge: the worker stops making progress with work
+    /// queued, until heartbeat supervision quarantines it.
+    Stall { worker: usize, at: u64 },
+}
+
+impl RouterFault {
+    fn worker(&self) -> usize {
+        match *self {
+            RouterFault::Crash { worker, .. } | RouterFault::Stall { worker, .. } => worker,
+        }
+    }
+}
+
+/// A seeded schedule of worker faults over one fuzz workload.
+#[derive(Clone, Debug)]
+pub struct RouterFaultPlan {
+    pub seed: u64,
+    pub workers: usize,
+    pub faults: Vec<RouterFault>,
+    /// True when the plan provably fires at least one crash: the
+    /// primary target is the prefix-affinity worker of a valid request
+    /// (so it receives work) and its crash arms at attempt 1 (so it
+    /// fires on the target's very first step). Cases assert
+    /// `crashes >= 1` only under this flag — later-attempt faults are
+    /// best-effort extra chaos.
+    pub guaranteed: bool,
+}
+
+impl RouterFaultPlan {
+    /// Derive the plan from the case seed alone. The primary crash
+    /// targets the worker that prefix-affinity routing will send the
+    /// first *valid* complete-block request to — the one worker certain
+    /// to hold in-flight work worth failing over.
+    pub fn from_seed(
+        seed: u64,
+        workers: usize,
+        workload: &[(usize, crate::engine::GenRequest)],
+        spec: &fuzz::FuzzSpec,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x0040_F7A1);
+        let mut faults = Vec::new();
+        let mut guaranteed = false;
+        let primary = workload
+            .iter()
+            .filter(|(_, r)| fuzz::request_is_valid(r, spec))
+            .find_map(|(_, r)| route_affinity(&r.prompt, spec.block_tokens, workers));
+        if let Some(target) = primary {
+            faults.push(RouterFault::Crash { worker: target, at: 1 });
+            guaranteed = true;
+            // Best-effort second crash on the same worker, later in its
+            // (cumulative) attempt stream: exercises crash-after-restart.
+            if rng.below(2) == 0 {
+                faults.push(RouterFault::Crash {
+                    worker: target,
+                    at: 4 + rng.below(6) as u64,
+                });
+            }
+            // Best-effort stall on a different worker when the fleet
+            // has one: exercises heartbeat quarantine + re-execution.
+            if workers > 1 && rng.below(2) == 0 {
+                let other = (target + 1 + rng.below(workers - 1)) % workers;
+                faults.push(RouterFault::Stall {
+                    worker: other,
+                    at: 1 + rng.below(3) as u64,
+                });
+            }
+        }
+        Self {
+            seed,
+            workers,
+            faults,
+            guaranteed,
+        }
+    }
+
+    /// The harness router configuration: affinity on (the plan's
+    /// targeting depends on it), generous per-worker queue so dispatch
+    /// never falls back for capacity reasons, tight supervision knobs
+    /// so quarantine/restart land within test budgets, and router
+    /// tracing on so cases can assert crash/failover events fired.
+    pub fn router_config(&self) -> RouterConfig {
+        let plan = self.clone();
+        let hook: HookFactory = Arc::new(move |w| plan.hook_for(w));
+        RouterConfig {
+            workers: self.workers,
+            affinity: true,
+            max_queue: 0,
+            worker_queue: 64,
+            stall_rounds: 25,
+            restart_backoff: Duration::from_millis(2),
+            max_restarts: 6,
+            trace: true,
+            virtual_step: Some(Duration::from_millis(1)),
+            hook: Some(hook),
+        }
+    }
+
+    fn hook_for(&self, worker: usize) -> Option<Box<dyn WorkerFaultHook>> {
+        let mine: Vec<ArmedFault> = self
+            .faults
+            .iter()
+            .filter(|f| f.worker() == worker)
+            .map(|&fault| ArmedFault { fault, fired: false })
+            .collect();
+        if mine.is_empty() {
+            return None;
+        }
+        Some(Box::new(PlanHook {
+            seed: self.seed,
+            faults: mine,
+        }))
+    }
+}
+
+struct ArmedFault {
+    fault: RouterFault,
+    fired: bool,
+}
+
+/// The [`WorkerFaultHook`] executing one worker's slice of the plan.
+struct PlanHook {
+    seed: u64,
+    faults: Vec<ArmedFault>,
+}
+
+impl WorkerFaultHook for PlanHook {
+    fn before_step(&mut self, worker: usize, epoch: usize, attempt: u64) -> bool {
+        for f in &mut self.faults {
+            if f.fired {
+                continue;
+            }
+            match f.fault {
+                RouterFault::Crash { at, .. } if attempt >= at => {
+                    f.fired = true;
+                    panic!(
+                        "router fault plan {:#x}: injected crash on worker {worker} \
+                         (epoch {epoch}, attempt {attempt})",
+                        self.seed
+                    );
+                }
+                RouterFault::Stall { at, .. } if attempt >= at => {
+                    f.fired = true;
+                    return true;
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+}
+
+/// Drive the sharded router through a fuzz workload exactly like
+/// `fuzz::run_workload` drives a single engine: submissions at their
+/// admission step, then step until drained. Returns outputs sorted by
+/// request id plus the run's [`RouterReport`].
+pub fn run_sharded_workload(
+    rt: &Runtime,
+    params: &Params,
+    qm: &QuantizedModel,
+    gen: GenConfig,
+    rcfg: RouterConfig,
+    workload: &[(usize, crate::engine::GenRequest)],
+) -> Result<(Vec<GenOutput>, RouterReport)> {
+    let cfg = fixtures::pico();
+    run_router(rt, &cfg, params, qm, gen, rcfg, |router| {
+        let mut outs = Vec::new();
+        let mut next = 0usize;
+        let mut step = 0usize;
+        // Router steps block ~1ms when idle with in-flight work, so
+        // this bound also caps wall time if something wedges without
+        // being caught — the case FAILS with the seed in the log
+        // rather than hanging the job.
+        let step_bound = 100_000 + workload.iter().map(|(at, _)| *at).max().unwrap_or(0);
+        while next < workload.len() || router.has_work() {
+            while next < workload.len() && workload[next].0 <= step {
+                if let Some(rejected) = router.submit(workload[next].1.clone()) {
+                    outs.push(rejected);
+                }
+                next += 1;
+            }
+            outs.extend(router.step()?);
+            step += 1;
+            if step > step_bound {
+                bail!(
+                    "router failed to drain the workload within {step_bound} steps: \
+                     {} of {} requests answered",
+                    outs.len(),
+                    workload.len()
+                );
+            }
+        }
+        outs.sort_by_key(|o| o.id);
+        Ok(outs)
+    })
+}
+
+/// The full failover case for one seed and worker count: fault-free
+/// single-engine baseline at 1 thread, then the faulted sharded run at
+/// 1/2/8 threads, asserting stream bit-identity against the baseline
+/// plus the zero-orphan / zero-leak / no-permanent-down contract.
+pub fn router_failover_case(seed: u64, workers: usize) -> Result<()> {
+    let spec = fuzz::FuzzSpec::from_seed(seed);
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, seed ^ 0x9E37);
+    let workload = fuzz::build_workload(cfg.vocab, cfg.seq, &spec);
+    let plan = RouterFaultPlan::from_seed(seed, workers, &workload, &spec);
+    println!("router-failover seed {seed} ({workers} workers): {spec:?}\n  plan: {plan:?}");
+    if plan.guaranteed {
+        println!("  (injected worker panics below are expected — absorbed by catch_unwind)");
+    }
+    let gen = GenConfig {
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed ^ 1,
+        slots: spec.slots,
+        paged: true,
+        block_tokens: spec.block_tokens,
+        pool_blocks: spec.pool_blocks,
+        prefix_cache: true,
+        ..GenConfig::default()
+    };
+
+    par::set_threads(1);
+    let baseline = fuzz::run_workload(&rt, &params, &qm, gen.clone(), &workload, false);
+    par::set_threads(0);
+    let baseline = baseline?;
+
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let res = run_sharded_workload(
+            &rt,
+            &params,
+            &qm,
+            gen.clone(),
+            plan.router_config(),
+            &workload,
+        );
+        par::set_threads(0);
+        let (outs, report) = res?;
+        let ctx = format!("sharded vs single engine at {threads} threads (router seed {seed})");
+        fuzz::assert_streams_equal(&baseline, &outs, &ctx)?;
+        check_router_accounting(seed, threads, workload.len(), &outs, &report)?;
+        if plan.guaranteed {
+            if report.crashes == 0 {
+                bail!(
+                    "router seed {seed}: guaranteed crash plan fired no crash at \
+                     {threads} threads\n  report: {}",
+                    report.summary_line()
+                );
+            }
+            if !report.trace.iter().any(|r| r.ev.kind() == "worker_crash") {
+                bail!("router seed {seed}: crash happened but no worker_crash trace event");
+            }
+            if report.rerouted > 0 && !report.trace.iter().any(|r| r.ev.kind() == "failover") {
+                bail!("router seed {seed}: rerouted {} requests without failover trace events",
+                    report.rerouted
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The exactly-once / zero-orphan / zero-leak contract shared by the
+/// failover cases and the clean-drain accounting test.
+pub fn check_router_accounting(
+    seed: u64,
+    threads: usize,
+    expected_answers: usize,
+    outs: &[GenOutput],
+    report: &RouterReport,
+) -> Result<()> {
+    if outs.len() != expected_answers {
+        bail!(
+            "router seed {seed} at {threads} threads: {} answers for {expected_answers} requests",
+            outs.len()
+        );
+    }
+    for pair in outs.windows(2) {
+        if let [a, b] = pair {
+            if a.id == b.id {
+                bail!("router seed {seed}: request {} answered twice", a.id);
+            }
+        }
+    }
+    if report.orphaned != 0 {
+        bail!(
+            "router seed {seed} at {threads} threads: {} orphaned queue entries after drain",
+            report.orphaned
+        );
+    }
+    if !report.leaks.is_empty() {
+        bail!(
+            "router seed {seed} at {threads} threads: leaked KV blocks after drain: {:?}",
+            report.leaks
+        );
+    }
+    if !report.down.is_empty() {
+        bail!(
+            "router seed {seed} at {threads} threads: workers went permanently down: {:?}",
+            report.down
+        );
+    }
+    let per_worker_done: usize = report.per_worker.iter().map(|w| w.completed).sum();
+    if per_worker_done != report.completed {
+        bail!(
+            "router seed {seed}: per-worker answers ({per_worker_done}) disagree with \
+             fleet total ({})",
+            report.completed
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_seed_deterministic() {
+        let spec = fuzz::FuzzSpec::from_seed(11);
+        let w = fuzz::build_workload(256, 128, &spec);
+        let a = RouterFaultPlan::from_seed(11, 4, &w, &spec);
+        let b = RouterFaultPlan::from_seed(11, 4, &w, &spec);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn guaranteed_plans_arm_their_primary_crash_at_attempt_one() {
+        for seed in [1u64, 2, 3, 0x40F7_0001, 0x40F7_0002, 0x40F7_0003] {
+            let spec = fuzz::FuzzSpec::from_seed(seed);
+            let w = fuzz::build_workload(256, 128, &spec);
+            for workers in [1usize, 2, 4, 8] {
+                let plan = RouterFaultPlan::from_seed(seed, workers, &w, &spec);
+                if plan.guaranteed {
+                    assert!(
+                        plan.faults
+                            .iter()
+                            .any(|f| matches!(f, RouterFault::Crash { at: 1, .. })),
+                        "seed {seed}: guaranteed plan lacks an attempt-1 crash: {plan:?}"
+                    );
+                }
+                for f in &plan.faults {
+                    assert!(f.worker() < workers, "seed {seed}: fault off-fleet: {f:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stall_never_targets_the_crash_worker() {
+        for seed in 0..32u64 {
+            let spec = fuzz::FuzzSpec::from_seed(seed);
+            let w = fuzz::build_workload(256, 128, &spec);
+            let plan = RouterFaultPlan::from_seed(seed, 4, &w, &spec);
+            let crash_workers: Vec<usize> = plan
+                .faults
+                .iter()
+                .filter(|f| matches!(f, RouterFault::Crash { .. }))
+                .map(|f| f.worker())
+                .collect();
+            for f in &plan.faults {
+                if matches!(f, RouterFault::Stall { .. }) {
+                    assert!(
+                        !crash_workers.contains(&f.worker()),
+                        "seed {seed}: stall and crash share worker: {plan:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hook_fires_each_fault_exactly_once() {
+        let plan = RouterFaultPlan {
+            seed: 0xD00D,
+            workers: 2,
+            faults: vec![RouterFault::Stall { worker: 1, at: 3 }],
+            guaranteed: false,
+        };
+        let mut hook = plan.hook_for(1).expect("worker 1 has a fault");
+        assert!(!hook.before_step(1, 0, 1));
+        assert!(!hook.before_step(1, 0, 2));
+        assert!(hook.before_step(1, 0, 3), "stall must fire at its attempt");
+        assert!(
+            !hook.before_step(1, 0, 4),
+            "a fired fault must never re-fire"
+        );
+        assert!(plan.hook_for(0).is_none(), "clean workers carry no hook");
+    }
+}

@@ -1305,6 +1305,28 @@ mod tests {
     }
 
     #[test]
+    fn router_module_is_pinned_inside_serve_scope() {
+        // The sharded-router supervisor (serve/router.rs) must stay
+        // under the D3 no-panic / no-indexing rule, the untracked-clock
+        // rule, and D1 — its crash-isolation and failover-determinism
+        // guarantees lean on exactly these lints. Pinning the scope
+        // here means moving the file out of serve/ (or an edit to
+        // scope_of) fails loudly instead of silently dropping coverage.
+        let s = scope_of("serve/router.rs");
+        assert!(s.d3, "serve/router.rs must be in the D3 no-panic scope");
+        assert!(s.clk, "serve/router.rs must be in the untracked-clock scope");
+        assert!(s.d1, "serve/router.rs must be in the D1 float-determinism scope");
+        // And the rules actually fire there, not just the scope bits.
+        let src = "pub fn f(xs: &[i32]) -> i32 {\n    xs[0]\n}\n";
+        assert_eq!(rules("serve/router.rs", src), vec![(2, Rule::PanicInServe)]);
+        let clk = "pub fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert_eq!(
+            rules("serve/router.rs", clk),
+            vec![(2, Rule::UntrackedClock)]
+        );
+    }
+
+    #[test]
     fn keyed_hash_access_is_fine_iteration_is_not() {
         let src = "use std::collections::HashMap;\npub fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n    let _one = m.get(&1).copied();\n    m.values().copied().collect()\n}\n";
         assert_eq!(rules("engine/x.rs", src), vec![(4, Rule::HashIteration)]);
