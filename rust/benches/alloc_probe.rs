@@ -12,7 +12,11 @@
 //!    anywhere in step time;
 //! 3. emitting trace events on a *disabled* [`faquant::obs::Trace`]
 //!    performs zero heap allocations — tracing off must be free on the
-//!    decode hot path (DESIGN.md §15).
+//!    decode hot path (DESIGN.md §15);
+//! 4. a steady-state *integer* quantized linear (DESIGN.md §17: row
+//!    int8 quantize + fused int8×int4 kernel + f32 fixup) performs
+//!    **zero** heap allocations — the i8/i32 scratch is thread-local
+//!    and resized in place, the f32 ends cycle through the arena.
 //!
 //! Requires the bench-only counting global allocator:
 //!
@@ -122,6 +126,30 @@ fn main() {
         (a1 - a0, b1 - b0),
         (0, 0),
         "emitting on a disabled Trace must not allocate"
+    );
+
+    // --- 4. The int linear path: exactly 0 allocations once warm. ---
+    // The first calls may grow the thread-local i8/i32 scratch; steady
+    // state must not touch the allocator at all.
+    if let Some(reason) = pm.int_reason() {
+        panic!("pico RTN codes must fit int4: {reason}");
+    }
+    for _ in 0..4 {
+        native::prepared_int_qlin_probe(pm, 0, 0, &x).expect("int probe warmup");
+    }
+    let (a0, b0) = alloc::snapshot();
+    let numel = native::prepared_int_qlin_probe(pm, 0, 0, &x).expect("int probe");
+    let (a1, b1) = alloc::snapshot();
+    println!(
+        "prepared int qlin (out numel {numel}): {} allocations, {} bytes",
+        a1 - a0,
+        b1 - b0
+    );
+    assert_eq!(
+        a1 - a0,
+        0,
+        "steady-state int quantized linear (activation quantize + int8xint4 \
+         kernel + fixup) must not allocate"
     );
 
     par::set_threads(0);

@@ -2,13 +2,27 @@
 //!
 //! Times the request-path stages in isolation so the optimization loop
 //! can attribute regressions:
-//!   1. grid-search step  — one layer_loss sweep (fakequant path)
-//!   2. capture batch     — one fwd_capture execution (absmean path)
-//!   3. eval batch        — one fwd_logits execution (attention kernel)
-//!   4. qserve batch      — one fwd_logits_q execution (qmatmul path)
-//!   5. host quantize     — rust-side scaled_quantize_ints + bit-pack
-//!   6. generation        — KV-cached continuous-batching decode engine
+//!   1.  grid-search step — one layer_loss sweep (fakequant path)
+//!   2.  capture batch    — one fwd_capture execution (absmean path)
+//!   3.  eval batch       — one fwd_logits execution (attention kernel)
+//!   4.  qserve batch     — one fwd_logits_q execution (qmatmul path)
+//!   4b. weight prepare   — one-time dequantize-once panel pack (§11)
+//!   4c. prepared batch   — fwd_logits_q over the prepared bundle
+//!   4d. int batch        — fwd_logits_qi, the integer W4A8 path (§17)
+//!   5.  host quantize    — rust-side scaled_quantize_ints + bit-pack
+//!   6.  generation       — KV-cached continuous-batching decode engine
 //!                          (prefill/decode tokens-per-second split)
+//!   6b. prepared decode  — same workload, prepared bundle (the
+//!                          decode_prepared_tokens_per_sec headline)
+//!   6c. shared prefix    — paged engine + radix prefix cache (§12);
+//!                          fraction of prompt tokens never fed
+//!   6d. paged memory     — peak in-use KV bytes vs the dense slab
+//!   6e. sharded router   — workload fanned over crash-isolated engine
+//!                          workers (§16); fleet-merged router_ttft_* /
+//!                          router_per_token_* latency percentiles
+//!   6f. int decode       — decode on the int8xint4 kernel (§17):
+//!                          decode_int_tokens_per_sec + per-pass weight
+//!                          bytes read, f32 panels vs packed int codes
 //!
 //! Then the threading headline: the end-to-end Phase-B quantize at
 //! 1 thread vs the effective `FAQUANT_THREADS`, and the coordinator
@@ -144,6 +158,25 @@ fn main() {
         s.throughput(1.0) / fwdq_its
     );
     stages.push(s);
+
+    // 4d. Same prepared bundle through the integer W4A8 path (int8
+    // activations x stored int4 codes, DESIGN §17). Skipped when the
+    // artifact's codes don't fit int4 (bits > 4).
+    let int_ready = match qbufs.first() {
+        Some(Buffer::PreparedQ(pm)) => pm.int_reason().is_none(),
+        _ => false,
+    };
+    if int_ready {
+        let s = bench("fwd_logits_qi(batch=4xT128)", 1, 8, || {
+            let mut args: Vec<&Buffer> = qbufs.iter().collect();
+            args.push(&tok_buf);
+            rt.exec_b(&cfg.model.name, "fwd_logits_qi", &args).expect("exec");
+        });
+        println!("{}", report(&s));
+        stages.push(s);
+    } else {
+        println!("fwd_logits_qi: skipped (codes don't fit int4)");
+    }
 
     // 5. host-side quantize + pack (per linear).
     let mut rng = Rng::new(1);
@@ -398,6 +431,62 @@ fn main() {
     println!("  -> {router_line}");
     stages.push(s);
 
+    // 6f. Int decode (DESIGN §17): the baseline workload again, dense
+    // prepared engine, but decoding through the fused int8xint4 kernel
+    // on the stored codes — directly comparable to 6b. The weight-bytes
+    // accounting is the bandwidth story: what one full block-linear
+    // pass reads on each path (the head is shared and excluded).
+    let mut decode_int_tps = 0.0f32;
+    let mut int_kernel = String::new();
+    let mut weight_bytes_f32 = 0.0f32;
+    let mut weight_bytes_int = 0.0f32;
+    if int_ready {
+        let mut engine_i = Engine::new(
+            &rt,
+            &cfg.model,
+            &params,
+            &qm,
+            GenConfig {
+                paged: false,
+                int_compute: true,
+                ..GenConfig::default()
+            },
+        )
+        .expect("engine(int)");
+        let s = bench(
+            &format!("generate_int({n_seqs}seq,prefill{prompt_len},decode{max_new})"),
+            0,
+            1,
+            || {
+                engine_i.generate(reqs.clone()).expect("generate");
+            },
+        );
+        println!("{}", report(&s));
+        stages.push(s);
+        let grep_i = engine_i.report();
+        decode_int_tps = grep_i.decode_tps();
+        int_kernel = faquant::tensor::intkern::active_kernel().to_string();
+        if let Some(Buffer::PreparedQ(pm)) = qbufs.first() {
+            let (f, i) = pm.weight_bytes();
+            weight_bytes_f32 = f as f32;
+            weight_bytes_int = i as f32;
+        }
+        println!(
+            "  -> int decode {decode_int_tps:.0} tok/s on the {int_kernel} kernel \
+             ({:.2}x prepared f32 decode); weight read/pass {:.0} KiB int vs {:.0} KiB f32",
+            decode_int_tps / decode_prepared_tps.max(1e-9),
+            weight_bytes_int / 1024.0,
+            weight_bytes_f32 / 1024.0
+        );
+        stages.push(PerfReport::per_token_stage(
+            "decode_int_tokens_per_sec",
+            grep_i.decode_tokens,
+            grep_i.decode_secs,
+        ));
+    } else {
+        println!("generate_int: skipped (codes don't fit int4)");
+    }
+
     // Threading headline: end-to-end Phase-B quantize, 1 thread vs the
     // effective thread count (same runtime/calibration — results are
     // bit-identical by the determinism contract; only the wall moves).
@@ -467,6 +556,10 @@ fn main() {
         router_per_token_p50: us(router_lat.per_token_p50_us),
         router_per_token_p95: us(router_lat.per_token_p95_us),
         router_per_token_p99: us(router_lat.per_token_p99_us),
+        decode_int_tps,
+        int_kernel,
+        weight_bytes_f32,
+        weight_bytes_int,
     };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perf.json");
     std::fs::write(&path, perf.to_json()).expect("write BENCH_perf.json");

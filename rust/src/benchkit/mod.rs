@@ -239,6 +239,23 @@ pub struct PerfReport {
     pub router_per_token_p50: f32,
     pub router_per_token_p95: f32,
     pub router_per_token_p99: f32,
+    /// Decode tokens per second on the integer W4A8 path (int8
+    /// activations x stored int4 codes, DESIGN.md §17) over the same
+    /// prepared bundle as `decode_prepared_tps` — the two rows are
+    /// directly comparable. 0 when the stage didn't run (codes wider
+    /// than int4).
+    pub decode_int_tps: f32,
+    /// Which int kernel lane ran ("scalar", "avx2", "neon"; "" when the
+    /// int stage didn't run).
+    pub int_kernel: String,
+    /// Weight bytes one full block-linear pass reads per token on the
+    /// f32 prepared path (dequantized panels; excludes the head, which
+    /// both paths share — see `head_bytes`).
+    pub weight_bytes_f32: f32,
+    /// Same pass on the int path: packed int4 codes + dequant params.
+    /// The f32/int ratio is the memory-traffic headroom the int kernel
+    /// has on bandwidth-bound decode.
+    pub weight_bytes_int: f32,
 }
 
 impl PerfReport {
@@ -258,7 +275,9 @@ impl PerfReport {
              \"queue_wait_p95\": {},\n  \"router_workers\": {},\n  \
              \"router_ttft_p50\": {},\n  \"router_ttft_p95\": {},\n  \
              \"router_ttft_p99\": {},\n  \"router_per_token_p50\": {},\n  \
-             \"router_per_token_p95\": {},\n  \"router_per_token_p99\": {}\n}}\n",
+             \"router_per_token_p95\": {},\n  \"router_per_token_p99\": {},\n  \
+             \"decode_int_tokens_per_sec\": {},\n  \"int_kernel\": \"{}\",\n  \
+             \"weight_read_bytes_f32\": {},\n  \"weight_read_bytes_int\": {}\n}}\n",
             json_escape(&self.preset),
             self.threads,
             self.cores,
@@ -288,6 +307,10 @@ impl PerfReport {
             json_f32(self.router_per_token_p50),
             json_f32(self.router_per_token_p95),
             json_f32(self.router_per_token_p99),
+            json_f32(self.decode_int_tps),
+            json_escape(&self.int_kernel),
+            json_f32(self.weight_bytes_f32),
+            json_f32(self.weight_bytes_int),
         )
     }
 
@@ -392,6 +415,10 @@ mod tests {
             router_per_token_p50: 0.001,
             router_per_token_p95: 0.002,
             router_per_token_p99: 0.003,
+            decode_int_tps: 1100.0,
+            int_kernel: "avx2".into(),
+            weight_bytes_f32: 4096.0,
+            weight_bytes_int: 640.0,
         };
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"faquant-perf-v1\""));
@@ -414,6 +441,10 @@ mod tests {
         assert!(j.contains("\"router_ttft_p99\""));
         assert!(j.contains("\"router_per_token_p50\""));
         assert!(j.contains("\"router_per_token_p99\""));
+        assert!(j.contains("\"decode_int_tokens_per_sec\""));
+        assert!(j.contains("\"int_kernel\": \"avx2\""));
+        assert!(j.contains("\"weight_read_bytes_f32\""));
+        assert!(j.contains("\"weight_read_bytes_int\""));
         assert!(j.contains("stage \\\"x\\\""));
         assert_eq!(j.matches("\"mean_s\"").count(), 2);
         // Balanced braces/brackets (cheap well-formedness check).

@@ -116,6 +116,15 @@ pub struct GenConfig {
     /// `testutil::fuzz::trace_determinism_case`). Timestamps follow
     /// `virtual_step` when set (deterministic) and wall time otherwise.
     pub trace: bool,
+    /// Decode on the integer W4A8 path (DESIGN.md §17): per-row int8
+    /// activation quantization feeding the fused int8×int4 kernel on
+    /// the stored codes, instead of the dequantized f32 panels. Logits
+    /// are *close* (derived per-row bound), not bit-identical, to the
+    /// f32 prepared path — greedy token streams agree on well-margined
+    /// inputs (pinned seeds in `testutil::fuzz`). Requires `prepared`
+    /// and codes that fit int4 (bits <= 4); `Engine::new` fails fast
+    /// otherwise.
+    pub int_compute: bool,
 }
 
 impl Default for GenConfig {
@@ -134,6 +143,7 @@ impl Default for GenConfig {
             step_retries: 2,
             virtual_step: None,
             trace: false,
+            int_compute: false,
         }
     }
 }
@@ -586,6 +596,9 @@ impl<'rt> Engine<'rt> {
             n => n,
         };
         let lits = qmodel_literals(params, qm)?;
+        if gen.int_compute && !gen.prepared {
+            bail!("int_compute requires prepared weights (GenConfig.prepared)");
+        }
         let weight_bufs = if gen.prepared {
             rt.prepare_qweights(&cfg.name, &lits)?
         } else {
@@ -595,6 +608,15 @@ impl<'rt> Engine<'rt> {
                     .collect::<Result<Vec<_>>>()?,
             )
         };
+        // Fail fast at construction, not mid-step: a bundle whose codes
+        // don't fit int4 can never serve the int path.
+        if gen.int_compute {
+            if let Some(Buffer::PreparedQ(pm)) = weight_bufs.first() {
+                if let Some(reason) = pm.int_reason() {
+                    bail!("int_compute unavailable for this artifact — {reason}");
+                }
+            }
+        }
         let trace = if gen.trace {
             match gen.virtual_step {
                 Some(step) => {
@@ -1255,10 +1277,15 @@ impl<'rt> Engine<'rt> {
                 let (kt, vt) = cache.take()?;
                 let k_buf = Buffer::Host(Value::F32(kt));
                 let v_buf = Buffer::Host(Value::F32(vt));
+                let entry = if self.gen.int_compute {
+                    "decode_step_qi"
+                } else {
+                    "decode_step_q"
+                };
                 let outs = {
                     let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
                     args.extend([&k_buf, &v_buf, &pos_buf, &tok_buf]);
-                    self.rt.exec_b(&self.cfg.name, "decode_step_q", &args)
+                    self.rt.exec_b(&self.cfg.name, entry, &args)
                 };
                 // The slabs go back whether or not the step succeeded.
                 match (k_buf, v_buf) {
@@ -1286,10 +1313,15 @@ impl<'rt> Engine<'rt> {
                 let (kt, vt) = ps.pool.take()?;
                 let k_buf = Buffer::Host(Value::F32(kt));
                 let v_buf = Buffer::Host(Value::F32(vt));
+                let entry = if self.gen.int_compute {
+                    "decode_step_paged_qi"
+                } else {
+                    "decode_step_paged_q"
+                };
                 let outs = {
                     let mut args: Vec<&Buffer> = self.weight_bufs.iter().collect();
                     args.extend([&k_buf, &v_buf, &tb_buf, &pos_buf, &tok_buf]);
-                    self.rt.exec_b(&self.cfg.name, "decode_step_paged_q", &args)
+                    self.rt.exec_b(&self.cfg.name, entry, &args)
                 };
                 match (k_buf, v_buf) {
                     (Buffer::Host(Value::F32(k)), Buffer::Host(Value::F32(v))) => {

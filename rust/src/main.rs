@@ -48,10 +48,13 @@ SUBCOMMANDS
             [--block-tokens B] [--pool-blocks N] [--dense]
             [--deadline-ms MS] [--max-queue N]
             [--shared-prefix L] [--trace FILE]
-            [--workers N] [--affinity on|off]
+            [--workers N] [--affinity on|off] [--int-compute]
             KV-cached generation (greedy when T <= 0; ID < 0 disables).
             Paged KV cache + radix prefix sharing by default; --dense
             pins the seed [L, slots, T, d] slabs (same tokens either way).
+            --int-compute decodes on the integer W4A8 path (int8
+            activations x stored int4 codes, DESIGN.md §17): logits are
+            close-but-not-bitwise vs the f32 panels; needs bits <= 4.
             --deadline-ms caps each request's wall-clock budget (0 = no
             deadline); --max-queue bounds admission (0 = unbounded).
             --shared-prefix gives every prompt the same first L tokens
@@ -274,6 +277,7 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
     let trace_path = args.get("trace");
     let workers = args.get_usize("workers", 1)?;
     let affinity = parse_affinity(&args.get_or("affinity", "on"))?;
+    let int_compute = args.has("int-compute");
 
     let pipe = Pipeline::new(rt, cfg.clone());
     let (params, _) = pipe.checkpoint()?;
@@ -310,6 +314,7 @@ fn generate_demo(rt: &Runtime, cfg: &RunConfig, args: &faquant::cli::Args) -> Re
         pool_blocks,
         max_queue,
         trace: trace_path.is_some(),
+        int_compute,
         ..GenConfig::default()
     };
     let reqs: Vec<GenRequest> = prompts
@@ -623,6 +628,10 @@ fn serve_bench(rt: &Runtime, cfg: &RunConfig, args: &Args) -> Result<()> {
         router_per_token_p50: us(lat.per_token_p50_us),
         router_per_token_p95: us(lat.per_token_p95_us),
         router_per_token_p99: us(lat.per_token_p99_us),
+        decode_int_tps: 0.0,
+        int_kernel: String::new(),
+        weight_bytes_f32: 0.0,
+        weight_bytes_int: 0.0,
     };
     std::fs::write(&json_path, perf.to_json())?;
     println!("wrote {json_path}");

@@ -180,7 +180,12 @@ impl Runtime {
             .is_some_and(|b| matches!(*b, Buffer::PreparedQ(_)));
         let quantized_entry = matches!(
             entry,
-            "fwd_logits_q" | "decode_step_q" | "decode_step_paged_q"
+            "fwd_logits_q"
+                | "decode_step_q"
+                | "decode_step_paged_q"
+                | "fwd_logits_qi"
+                | "decode_step_qi"
+                | "decode_step_paged_qi"
         );
         let want = if prepared_first && quantized_entry {
             let cfgm = self.manifest.config(cfg)?;

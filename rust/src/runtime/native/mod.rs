@@ -90,6 +90,12 @@ impl NativeBackend {
                 decode::decode_step_paged_q(cfg, &ex, &args[nw..])
             }
             "train_step" => train::train_step(cfg, args),
+            // The int8×int4 entries compute on packed code panels, which
+            // only exist in a prepared bundle — there is deliberately no
+            // seed (per-call pack) fallback to pay for.
+            "fwd_logits_qi" | "decode_step_qi" | "decode_step_paged_qi" => {
+                bail!("entry '{entry}' requires prepared weights (GenConfig.prepared)")
+            }
             other => bail!("native backend has no entry '{other}'"),
         }
     }
@@ -106,19 +112,34 @@ impl NativeBackend {
     ) -> Result<Vec<Value>> {
         let cfg = manifest.config(cfg_name)?;
         pm.check_matches(cfg, manifest.group)?;
-        let ex = qmodel::QExec::Prepared(pm);
+        // The `_qi` twins of the quantized entries run the same forward/
+        // decode loops over QExec::PreparedInt — the only difference is
+        // which kernel QExec::lin dispatches to.
+        let int = entry.ends_with("_qi");
+        if int {
+            if let Some(reason) = pm.int_reason() {
+                bail!("entry '{entry}': int compute unavailable — {reason}");
+            }
+        }
+        let ex = if int {
+            qmodel::QExec::PreparedInt(pm)
+        } else {
+            qmodel::QExec::Prepared(pm)
+        };
         match entry {
-            "fwd_logits_q" => {
+            "fwd_logits_q" | "fwd_logits_qi" => {
                 if trailing.len() != 1 {
                     bail!(
-                        "fwd_logits_q(prepared): got {} trailing args, want 1 (tokens)",
+                        "{entry}(prepared): got {} trailing args, want 1 (tokens)",
                         trailing.len()
                     );
                 }
                 fwd_logits_q(cfg, &ex, trailing[0])
             }
-            "decode_step_q" => decode::decode_step_q(cfg, &ex, trailing),
-            "decode_step_paged_q" => decode::decode_step_paged_q(cfg, &ex, trailing),
+            "decode_step_q" | "decode_step_qi" => decode::decode_step_q(cfg, &ex, trailing),
+            "decode_step_paged_q" | "decode_step_paged_qi" => {
+                decode::decode_step_paged_q(cfg, &ex, trailing)
+            }
             other => bail!("prepared weights are not supported for entry '{other}'"),
         }
     }
@@ -200,6 +221,24 @@ pub fn prepared_qlin_probe(
     x: &Tensor,
 ) -> Result<usize> {
     let ex = qmodel::QExec::Prepared(pm);
+    let out = ex.lin(block, role, x)?;
+    let numel = out.numel();
+    ex.give(out);
+    Ok(numel)
+}
+
+/// Bench-only probe: the int8×int4 twin of [`prepared_qlin_probe`] —
+/// `inv_s` scaling, per-row i8 activation quantize, fused int kernel,
+/// f32 fixup — asserted allocation-free once arena + int scratch are
+/// warm (`benches/alloc_probe.rs`).
+#[doc(hidden)]
+pub fn prepared_int_qlin_probe(
+    pm: &PreparedQModel,
+    block: usize,
+    role: usize,
+    x: &Tensor,
+) -> Result<usize> {
+    let ex = qmodel::QExec::PreparedInt(pm);
     let out = ex.lin(block, role, x)?;
     let numel = out.numel();
     ex.give(out);
@@ -503,6 +542,35 @@ mod tests {
         let args: Vec<&super::Buffer> = bufs.iter().collect();
         let err = be.exec_buffers(&m, "pico", "fwd_logits", &args).unwrap_err();
         assert!(err.to_string().contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn int_entry_needs_prepared_weights() {
+        // Seed (non-prepared) execution of a `_qi` entry is refused with
+        // a pointer at the prepared path; the prepared bundle runs it.
+        let m = Manifest::native();
+        let cfg = pico();
+        let params = Params::init(&cfg, 5);
+        let qcfg = crate::config::QuantConfig::with_method(crate::config::Method::Rtn);
+        let rt = crate::runtime::Runtime::native();
+        let qm = crate::quant::quantize_model(&rt, &qcfg, &params, None).unwrap();
+        let lits = crate::serve::qmodel_literals(&params, &qm).unwrap();
+        let be = NativeBackend;
+        let err = be
+            .exec(&m, "pico", "fwd_logits_qi", &[lits[0].clone()])
+            .unwrap_err();
+        assert!(err.to_string().contains("prepared"), "{err}");
+        let bufs = be.prepare_weights(&m, "pico", &lits).unwrap().unwrap();
+        let toks = tokens(&cfg, 4);
+        let tok_buf = super::Buffer::Host(Value::I32(toks));
+        let mut args: Vec<&super::Buffer> = bufs.iter().collect();
+        args.push(&tok_buf);
+        let out = be
+            .exec_buffers(&m, "pico", "fwd_logits_qi", &args)
+            .unwrap();
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(logits.shape(), &[cfg.batch, cfg.seq, cfg.vocab]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -27,7 +27,7 @@
 use super::qmodel::{self, QLin, QWeights};
 use crate::config::ModelConfig;
 use crate::runtime::value::Value;
-use crate::tensor::{arena, PackedB, Tensor};
+use crate::tensor::{arena, intkern, PackedB, PackedIntB, Tensor};
 use anyhow::{bail, Result};
 
 /// One linear, prepared: dequantized weight panels + its smoothing scale.
@@ -37,10 +37,17 @@ pub(super) struct PreparedLin {
     pub inv_s: Vec<f32>,
     /// `dequant(q)` `[n, m]`, packed once into the matmul panel layout.
     pub w: PackedB,
+    /// The same codes packed for the int8×int4 kernel, when they fit in
+    /// int4 (bits <= 4). `None` carries no loss of function — the f32
+    /// panels above are always present — it only gates `int_compute`.
+    pub wi: Option<PackedIntB>,
 }
 
 impl PreparedLin {
-    fn build(l: &QLin, group: usize) -> Result<Self> {
+    /// Build the f32 panels (always) and the int panels (when the codes
+    /// are int4-representable). Returns the reason the int panels are
+    /// unavailable, if they are.
+    fn build(l: &QLin, group: usize) -> Result<(Self, Option<String>)> {
         let (n, m) = (l.q.shape()[0], l.q.shape()[1]);
         if l.inv_s.numel() != n {
             bail!("inv_s len {} != codes rows {n}", l.inv_s.numel());
@@ -49,10 +56,18 @@ impl PreparedLin {
         // the panel buffer the kernel will consume.
         let mut panels = vec![0.0f32; n * m];
         qmodel::dequant_into(l, group, &mut panels)?;
-        Ok(Self {
-            inv_s: l.inv_s.data().to_vec(),
-            w: PackedB::from_parts(n, m, panels)?,
-        })
+        let (wi, int_reason) = match PackedIntB::from_codes(l.q, l.delta, l.zero, group) {
+            Ok(p) => (Some(p), None),
+            Err(e) => (None, Some(e.to_string())),
+        };
+        Ok((
+            Self {
+                inv_s: l.inv_s.data().to_vec(),
+                w: PackedB::from_parts(n, m, panels)?,
+                wi,
+            },
+            int_reason,
+        ))
     }
 }
 
@@ -79,6 +94,9 @@ pub struct PreparedQModel {
     pub(super) blocks: Vec<PreparedBlock>,
     pub(super) lnf_g: Vec<f32>,
     pub(super) w_head: PackedB,
+    /// Why the int8×int4 path is unavailable (first offending linear),
+    /// `None` when every block linear packed int panels.
+    int_reason: Option<String>,
 }
 
 impl PreparedQModel {
@@ -96,12 +114,16 @@ impl PreparedQModel {
         }
         let wts = QWeights::parse(cfg, args)?;
         let mut blocks = Vec::with_capacity(wts.blocks.len());
+        let mut int_reason: Option<String> = None;
         for blk in &wts.blocks {
-            let lins = blk
-                .lins
-                .iter()
-                .map(|l| PreparedLin::build(l, group))
-                .collect::<Result<Vec<_>>>()?;
+            let mut lins = Vec::with_capacity(blk.lins.len());
+            for l in &blk.lins {
+                let (lin, reason) = PreparedLin::build(l, group)?;
+                if int_reason.is_none() {
+                    int_reason = reason;
+                }
+                lins.push(lin);
+            }
             blocks.push(PreparedBlock {
                 ln1: blk.ln1.data().to_vec(),
                 ln2: blk.ln2.data().to_vec(),
@@ -116,6 +138,7 @@ impl PreparedQModel {
             blocks,
             lnf_g: wts.lnf_g.data().to_vec(),
             w_head: PackedB::from_tensor(wts.w_head)?,
+            int_reason,
         })
     }
 
@@ -155,6 +178,99 @@ impl PreparedQModel {
         arena::give(scaled);
         res?;
         Ok(out)
+    }
+
+    /// Quantized linear on the int8×int4 path: scale the activation rows
+    /// by `inv_s` into a scratch buffer (identical bits to the f32 path's
+    /// scaling), then quantize each row to i8 and run the fused kernel on
+    /// the packed codes. Zero weight dequantization ever; zero
+    /// allocations once arena + int scratch are warm.
+    pub(super) fn lin_int(&self, b: usize, role: usize, x: &Tensor) -> Result<Tensor> {
+        let lin = &self.blocks[b].lins[role];
+        let Some(wi) = &lin.wi else {
+            bail!(
+                "no int panels for block {b} linear {role}: {}",
+                self.int_reason.as_deref().unwrap_or("not packed")
+            );
+        };
+        let n = x.shape()[1];
+        if lin.inv_s.len() != n {
+            bail!("inv_s len {} != activation cols {n}", lin.inv_s.len());
+        }
+        let rows = x.shape()[0];
+        let mut scaled = arena::take(&[rows, n]);
+        qmodel::scale_rows(x.data(), &lin.inv_s, rows, n, scaled.data_mut());
+        let mut out = arena::take(&[rows, wi.c()]);
+        let res = intkern::matmul_int(&scaled, wi, out.data_mut());
+        arena::give(scaled);
+        res?;
+        Ok(out)
+    }
+
+    /// Test support for the differential props tests (DESIGN.md §17):
+    /// one prepared linear through BOTH paths on the same activations.
+    /// Returns `(scaled activations, dequantized panel, f32 out, int
+    /// out)` — the scaled rows and panel columns are exactly the inputs
+    /// [`intkern::row_error_bound`] derives the tolerance from. The
+    /// panel is recovered through the packed matmul itself (identity
+    /// activations), so the comparison sees the same weights the f32
+    /// kernel reads.
+    #[doc(hidden)]
+    pub fn qlin_diff(
+        &self,
+        b: usize,
+        role: usize,
+        x: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let lin = &self.blocks[b].lins[role];
+        let rows = x.shape()[0];
+        let n = x.shape()[1];
+        if lin.inv_s.len() != n {
+            bail!("inv_s len {} != activation cols {n}", lin.inv_s.len());
+        }
+        let mut scaled = Tensor::zeros(&[rows, n]);
+        qmodel::scale_rows(x.data(), &lin.inv_s, rows, n, scaled.data_mut());
+        let mut eye = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            eye.data_mut()[i * n + i] = 1.0;
+        }
+        let mut wdq = Tensor::zeros(&[n, lin.w.c()]);
+        eye.matmul_prepacked(&lin.w, wdq.data_mut())?;
+        let f = self.lin(b, role, x)?;
+        let i = self.lin_int(b, role, x)?;
+        Ok((scaled, wdq, f, i))
+    }
+
+    /// Why `int_compute` is unavailable for this bundle, or `None` when
+    /// every block linear carries int panels. Engines check this at
+    /// construction so a misconfigured request fails fast, not mid-step.
+    pub fn int_reason(&self) -> Option<&str> {
+        self.int_reason.as_deref()
+    }
+
+    /// Weight bytes a full pass over the block linears reads:
+    /// `(f32 panel bytes, int panel bytes)`. The int side counts packed
+    /// codes + dequant params ([`PackedIntB::packed_bytes`]); linears
+    /// without int panels count their f32 panels on both sides (the
+    /// kernel would fall back). The bench divides by tokens to report
+    /// weight traffic per token.
+    pub fn weight_bytes(&self) -> (usize, usize) {
+        let mut f = 0usize;
+        let mut i = 0usize;
+        for blk in &self.blocks {
+            for lin in &blk.lins {
+                let fb = lin.w.k() * lin.w.c() * 4;
+                f += fb;
+                i += lin.wi.as_ref().map_or(fb, |wi| wi.packed_bytes());
+            }
+        }
+        (f, i)
+    }
+
+    /// f32 bytes of the (unquantized) head projection panels — read by
+    /// both paths on every step that produces logits.
+    pub fn head_bytes(&self) -> usize {
+        self.w_head.k() * self.w_head.c() * 4
     }
 
     /// Head projection on the prepacked `w_head` panels (arena-backed).

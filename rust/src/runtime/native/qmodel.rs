@@ -213,62 +213,70 @@ pub(super) fn scale_rows(x: &[f32], inv_s: &[f32], rows: usize, n: usize, out: &
 }
 
 /// One execution of the quantized model: the seed (per-call dequant)
-/// path or the prepared (dequantize-once, packed-panel) path, behind a
-/// single accessor surface so `fwd_logits_q` and `decode_step_q` are
-/// each written exactly once and cannot drift between paths.
+/// path, the prepared (dequantize-once, packed-panel) f32 path, or the
+/// prepared int8×int4 path — behind a single accessor surface so
+/// `fwd_logits_q` and `decode_step_q` are each written exactly once and
+/// cannot drift between paths. `PreparedInt` differs from `Prepared`
+/// only inside [`QExec::lin`] (the fused integer kernel instead of the
+/// f32 panel matmul); embeddings, norms, attention, and the head are
+/// byte-for-byte the same code.
 pub(super) enum QExec<'a> {
     Seed { wts: QWeights<'a>, group: usize },
     Prepared(&'a PreparedQModel),
+    PreparedInt(&'a PreparedQModel),
 }
 
 impl QExec<'_> {
     pub fn tok_emb(&self) -> &Tensor {
         match self {
             QExec::Seed { wts, .. } => wts.tok_emb,
-            QExec::Prepared(pm) => &pm.tok_emb,
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => &pm.tok_emb,
         }
     }
 
     pub fn pos_emb(&self) -> &Tensor {
         match self {
             QExec::Seed { wts, .. } => wts.pos_emb,
-            QExec::Prepared(pm) => &pm.pos_emb,
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => &pm.pos_emb,
         }
     }
 
     pub fn ln1(&self, b: usize) -> &[f32] {
         match self {
             QExec::Seed { wts, .. } => wts.blocks[b].ln1.data(),
-            QExec::Prepared(pm) => &pm.blocks[b].ln1,
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => &pm.blocks[b].ln1,
         }
     }
 
     pub fn ln2(&self, b: usize) -> &[f32] {
         match self {
             QExec::Seed { wts, .. } => wts.blocks[b].ln2.data(),
-            QExec::Prepared(pm) => &pm.blocks[b].ln2,
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => &pm.blocks[b].ln2,
         }
     }
 
     pub fn lnf(&self) -> &[f32] {
         match self {
             QExec::Seed { wts, .. } => wts.lnf_g.data(),
-            QExec::Prepared(pm) => &pm.lnf_g,
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => &pm.lnf_g,
         }
     }
 
     /// Run quantized linear `role` (ROLES order) of block `b` on `x`.
     /// The returned tensor comes from the per-thread scratch arena on
-    /// both paths — pass it back via [`QExec::give`] when done.
+    /// all paths — pass it back via [`QExec::give`] when done.
     pub fn lin(&self, b: usize, role: usize, x: &Tensor) -> Result<Tensor> {
         match self {
             QExec::Seed { wts, group } => qlin(x, &wts.blocks[b].lins[role], *group),
             QExec::Prepared(pm) => pm.lin(b, role, x),
+            QExec::PreparedInt(pm) => pm.lin_int(b, role, x),
         }
     }
 
     /// Head projection `hf @ w_head` (not quantized; prepacked on the
-    /// prepared path). Arena-backed like [`QExec::lin`].
+    /// prepared paths — the int path shares the f32 head, which keeps
+    /// the logit layer at full precision). Arena-backed like
+    /// [`QExec::lin`].
     pub fn head(&self, hf: &Tensor) -> Result<Tensor> {
         match self {
             QExec::Seed { wts, .. } => {
@@ -278,7 +286,7 @@ impl QExec<'_> {
                 hf.matmul_into(wts.w_head, out.data_mut())?;
                 Ok(out)
             }
-            QExec::Prepared(pm) => pm.head(hf),
+            QExec::Prepared(pm) | QExec::PreparedInt(pm) => pm.head(hf),
         }
     }
 

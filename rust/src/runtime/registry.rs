@@ -200,6 +200,12 @@ impl Manifest {
                 // Paged variant: k_pool, v_pool, block_tables, pos,
                 // tokens after the same weight prefix.
                 ("decode_step_paged_q".to_string(), q_nargs + 4),
+                // Int8×int4 twins: identical signatures (the weight
+                // prefix is the same codes; only the kernel differs).
+                // Prepared-bundle-only at execution time.
+                ("fwd_logits_qi".to_string(), q_nargs),
+                ("decode_step_qi".to_string(), q_nargs + 3),
+                ("decode_step_paged_qi".to_string(), q_nargs + 4),
                 ("train_step".to_string(), 3 * n + 2),
             ];
             for role in crate::model::ROLES {
@@ -357,6 +363,18 @@ mod tests {
                 m.artifact(name, "decode_step_q").unwrap().nargs,
                 2 + cfg.n_layer * 18 + 6
             );
+            // The int entries mirror their f32 twins' arities exactly —
+            // the engine swaps entry names without touching its args.
+            for (f32_entry, qi_entry) in [
+                ("fwd_logits_q", "fwd_logits_qi"),
+                ("decode_step_q", "decode_step_qi"),
+                ("decode_step_paged_q", "decode_step_paged_qi"),
+            ] {
+                assert_eq!(
+                    m.artifact(name, qi_entry).unwrap().nargs,
+                    m.artifact(name, f32_entry).unwrap().nargs,
+                );
+            }
             assert_eq!(m.artifact(name, "layer_loss_qkv_b3").unwrap().nargs, 3);
             assert!(m.artifact(name, "layer_loss_sweep_down_b4").is_ok());
         }

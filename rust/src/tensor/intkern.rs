@@ -1,0 +1,717 @@
+//! Integer W4A8 microkernel: int8 activations × packed int4 weight codes.
+//!
+//! The prepared f32 path ([`super::ops::PackedB`]) dequantizes the codes
+//! once and pays f32 weight traffic on every decode step. This module
+//! computes directly on the stored codes instead: activations are
+//! quantized per row to i8 (absmax / 127, round-ties-even), the codes
+//! stay packed two-per-byte, and each output element is produced by an
+//! exact widening i32 accumulation followed by one f32 scale fixup per
+//! quantization group. Weight-side memory traffic drops ~8× vs the f32
+//! panels (1 byte per 2 codes vs 4 bytes per dequantized value).
+//!
+//! Numerics contract (DESIGN.md §17):
+//!
+//! - The i32 group accumulation is *exact* — every |xq·code| ≤ 127·15 and
+//!   a group contributes ≤ `group` terms, so no i32 (or f32, for
+//!   group ≤ 8192: |acc| < 2^24) rounding occurs. Integer addition is
+//!   associative, so the scalar and SIMD lanes are **bit-identical by
+//!   construction**: they differ only in how the exact integers are
+//!   computed, never in their values.
+//! - All f32 arithmetic (activation quantize, per-group fixup in
+//!   ascending-g order, final row scale) lives in shared scalar code, so
+//!   kernel choice and thread count cannot move a single float op.
+//!   Rows are distributed via [`par::par_row_blocks`] with each output
+//!   row owned by exactly one task.
+//! - Versus the f32 prepared path only a *tolerance* holds: the i8
+//!   activation rounding injects ≤ 0.5·a_scale per input element (see
+//!   [`row_error_bound`]). The f32 path therefore stays the differential
+//!   oracle, never the twin.
+//! - NaN/Inf activations are not propagated (quantization clamps; `as`
+//!   casts saturate). The differential tests use finite inputs; the f32
+//!   path is the place NaN debugging belongs.
+
+use super::{par, Tensor};
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// The B operand of [`matmul_int`]: quantization codes packed two per
+/// byte, plus the per-(group, column) dequant params. Analogous to
+/// [`super::ops::PackedB`] but ~8× smaller on the code side.
+///
+/// Layout: `codes[kp * c + j]` holds rows `2kp` (low nibble) and
+/// `2kp + 1` (high nibble) of column `j` — k-major like the f32 panels,
+/// so the kernel streams bytes in ascending-k order. `delta`/`zero` are
+/// `[k/group, c]` row-major, exactly as stored in the artifact.
+#[derive(Clone, Debug)]
+pub struct PackedIntB {
+    k: usize,
+    c: usize,
+    group: usize,
+    codes: Vec<u8>,
+    delta: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+impl PackedIntB {
+    /// Pack a `[k, c]` tensor of integer codes (stored as f32, as the
+    /// quantizer emits them) with its `[k/group, c]` dequant params.
+    ///
+    /// Fails — with the reason the int path is unavailable — when any
+    /// code is not an integer in `[0, 15]` (bits > 4) or the shapes
+    /// don't line up. The caller records the reason instead of packing.
+    pub fn from_codes(q: &Tensor, delta: &Tensor, zero: &Tensor, group: usize) -> Result<Self> {
+        if q.shape().len() != 2 {
+            bail!("PackedIntB: codes shape {:?} is not 2-D", q.shape());
+        }
+        let (k, c) = (q.shape()[0], q.shape()[1]);
+        if group == 0 || group % 2 != 0 || k % group != 0 {
+            bail!("PackedIntB: group {group} does not tile k {k} in byte pairs");
+        }
+        let ng = k / group;
+        if delta.shape() != [ng, c] || zero.shape() != [ng, c] {
+            bail!(
+                "PackedIntB: dequant params {:?}/{:?} want [{ng}, {c}]",
+                delta.shape(),
+                zero.shape()
+            );
+        }
+        let nibble = |v: f32| -> Result<u8> {
+            if !(0.0..=15.0).contains(&v) || v.fract() != 0.0 {
+                bail!("code {v} is not an int4 value — int compute needs bits <= 4");
+            }
+            Ok(v as u8)
+        };
+        let qd = q.data();
+        let mut codes = vec![0u8; (k / 2) * c];
+        for kp in 0..k / 2 {
+            let lo_row = &qd[(2 * kp) * c..(2 * kp + 1) * c];
+            let hi_row = &qd[(2 * kp + 1) * c..(2 * kp + 2) * c];
+            let out = &mut codes[kp * c..(kp + 1) * c];
+            for ((o, &lo), &hi) in out.iter_mut().zip(lo_row).zip(hi_row) {
+                *o = nibble(lo)? | (nibble(hi)? << 4);
+            }
+        }
+        Ok(Self {
+            k,
+            c,
+            group,
+            codes,
+            delta: delta.data().to_vec(),
+            zero: zero.data().to_vec(),
+        })
+    }
+
+    /// Rows (the contraction dimension k).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Columns (the output dimension c).
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Quantization group size along k.
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Bytes the kernel reads per full pass: packed codes + dequant
+    /// params. The weight-traffic accounting the bench reports against
+    /// the f32 panels' `k * c * 4`.
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + (self.delta.len() + self.zero.len()) * 4
+    }
+}
+
+/// Kernel selection for the group accumulator. `Auto` resolves to SIMD
+/// when the CPU has it (AVX2 on x86_64, NEON on aarch64), else scalar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntKernel {
+    Auto,
+    Scalar,
+    Simd,
+}
+
+/// Process-wide programmatic override (tests/benches force a lane the
+/// same way [`par::set_threads`] forces a thread count — an atomic, not
+/// env mutation, so concurrent tests cannot race the environment).
+static KERNEL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Force the accumulator lane ([`IntKernel::Auto`] restores detection).
+pub fn set_int_kernel(k: IntKernel) {
+    let v = match k {
+        IntKernel::Auto => 0,
+        IntKernel::Scalar => 1,
+        IntKernel::Simd => 2,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// Whether a SIMD lane exists on this CPU.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Parse a forced-dispatch request (the `FAQUANT_INT_KERNEL` value).
+fn kernel_from_str(s: &str) -> Option<IntKernel> {
+    match s.trim() {
+        "scalar" => Some(IntKernel::Scalar),
+        "simd" => Some(IntKernel::Simd),
+        "auto" | "" => Some(IntKernel::Auto),
+        _ => None,
+    }
+}
+
+/// The env-var override, read once (a per-call `env::var` would allocate
+/// on the decode hot path and break the zero-allocation contract).
+fn env_kernel() -> IntKernel {
+    static ENV_KERNEL: OnceLock<IntKernel> = OnceLock::new();
+    *ENV_KERNEL.get_or_init(|| {
+        // faq-lint: allow(time-or-env) — forced-dispatch override for the
+        // scalar-vs-SIMD CI lanes; the bitwise-equality props tests pin
+        // the choice to be irrelevant to every result.
+        std::env::var("FAQUANT_INT_KERNEL")
+            .ok()
+            .and_then(|v| kernel_from_str(&v))
+            .unwrap_or(IntKernel::Auto)
+    })
+}
+
+/// Resolve the lane for this call: programmatic override > env > auto.
+fn use_simd() -> bool {
+    let k = match KERNEL_OVERRIDE.load(Ordering::SeqCst) {
+        1 => IntKernel::Scalar,
+        2 => IntKernel::Simd,
+        _ => env_kernel(),
+    };
+    match k {
+        IntKernel::Scalar => false,
+        // A forced "simd" on hardware without it degrades to scalar —
+        // the equality tests then compare scalar to itself, trivially.
+        IntKernel::Simd | IntKernel::Auto => simd_available(),
+    }
+}
+
+/// Human-readable name of the lane [`matmul_int`] would use right now
+/// (bench reports record it next to the int tokens/sec).
+pub fn active_kernel() -> &'static str {
+    if !use_simd() {
+        return "scalar";
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        "avx2"
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "scalar"
+    }
+}
+
+/// Round to nearest, ties to even, then clamp to the symmetric i8 range.
+/// Hand-rolled (not `f32::round`, which rounds ties away from zero) so
+/// the activation grid matches the convention hardware int8 paths use.
+/// Exact for |v| < 2^22: `v - floor(v)` loses no bits there.
+fn rte_i8(v: f32) -> i8 {
+    let f = v.floor();
+    let d = v - f;
+    let r = if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f * 0.5).fract() == 0.0 {
+        f
+    } else {
+        f + 1.0
+    };
+    // NaN falls through every comparison to here and saturates to 0.
+    r.clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize one activation row to i8: symmetric absmax grid,
+/// round-ties-even. Returns the dequant scale `a_scale = absmax / 127`
+/// (0 for an all-zero row, which quantizes to all zeros).
+///
+/// Shared by every kernel lane *and* by the differential tests' bound
+/// computation, so the grid is defined in exactly one place.
+pub fn quantize_row_i8(xs: &[f32], xq: &mut [i8]) -> f32 {
+    debug_assert_eq!(xs.len(), xq.len());
+    let mut absmax = 0.0f32;
+    for &v in xs {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    if absmax == 0.0 || !absmax.is_finite() {
+        xq.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / absmax;
+    for (q, &v) in xq.iter_mut().zip(xs) {
+        *q = rte_i8(v * inv);
+    }
+    absmax / 127.0
+}
+
+/// Per-element error bound of the int path vs the f32 oracle for one
+/// activation row, in f64: `0.5 * a_scale * L1_j + slack`, where `L1_j`
+/// is the column-j L1 norm of the dequantized weights (the worst case of
+/// the ≤ half-step activation rounding) and `slack` covers f32
+/// re-association between the two paths' summation orders. Derived from
+/// the quantizer's own constants — no magic epsilon (DESIGN.md §17).
+pub fn row_error_bound(a_scale: f32, col_l1: f64, col_abs_moment: f64, k: usize) -> f64 {
+    let rounding = 0.5 * a_scale as f64 * col_l1;
+    let slack = col_abs_moment * f32::EPSILON as f64 * (k as f64).sqrt() * 8.0;
+    rounding + slack + 1e-6
+}
+
+/// Exact i32 accumulation of one quantization group, scalar lane:
+/// `acc[j] = Σ_kp xq[2kp]·lo(codes[kp, j]) + xq[2kp+1]·hi(codes[kp, j])`.
+/// `codes` is the group's `[group/2, c]` byte panel. The sum is exact in
+/// i32 (|term| ≤ 127·15, ≤ `group` terms), so although the loop runs in
+/// ascending-k order the value is order-independent — which is what
+/// licenses the SIMD lanes to compute the same integers their own way.
+// faq-lint: accum(ascending-k) — widening i32 MAC; exact, order pinned.
+fn accum_group_scalar(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32]) {
+    acc.fill(0);
+    for (kp, pair) in codes.chunks_exact(c).enumerate() {
+        let x0 = xq[2 * kp] as i32;
+        let x1 = xq[2 * kp + 1] as i32;
+        for (a, &b) in acc.iter_mut().zip(pair) {
+            *a += x0 * ((b & 0xF) as i32) + x1 * ((b >> 4) as i32);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod lane {
+    /// AVX2 group accumulator: 8 columns per vector, codes widened with
+    /// `cvtepu8` and split into nibbles in registers; the accumulator
+    /// stays in a register across the whole group (one store per column
+    /// block). Computes the exact same i32 values as the scalar lane.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`super::simd_available`])
+    /// and that `codes.len()` is a multiple of `c` with `acc.len() >= c`.
+    // faq-lint: accum(ascending-k) — widening i32 MAC; exact, order pinned.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_group(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let pairs = codes.len() / c;
+        let mask = _mm256_set1_epi32(0xF);
+        let mut j = 0;
+        while j + 8 <= c {
+            let mut av = _mm256_setzero_si256();
+            for kp in 0..pairs {
+                let x0 = _mm256_set1_epi32(xq[2 * kp] as i32);
+                let x1 = _mm256_set1_epi32(xq[2 * kp + 1] as i32);
+                // SAFETY: kp * c + j + 8 <= pairs * c = codes.len().
+                let bytes = _mm_loadl_epi64(codes.as_ptr().add(kp * c + j) as *const __m128i);
+                let w = _mm256_cvtepu8_epi32(bytes);
+                av = _mm256_add_epi32(av, _mm256_mullo_epi32(_mm256_and_si256(w, mask), x0));
+                av = _mm256_add_epi32(av, _mm256_mullo_epi32(_mm256_srli_epi32::<4>(w), x1));
+            }
+            // SAFETY: j + 8 <= c <= acc.len().
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, av);
+            j += 8;
+        }
+        super::accum_tail(xq, codes, c, acc, j);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod lane {
+    /// NEON group accumulator: 8 columns per iteration as two i32x4
+    /// register accumulators; nibbles split after an u8→u16 widen.
+    /// Computes the exact same i32 values as the scalar lane.
+    ///
+    /// # Safety
+    /// Caller must ensure `codes.len()` is a multiple of `c` with
+    /// `acc.len() >= c` (NEON itself is baseline on aarch64).
+    // faq-lint: accum(ascending-k) — widening i32 MAC; exact, order pinned.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accum_group(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32]) {
+        use std::arch::aarch64::*;
+        let pairs = codes.len() / c;
+        let mut j = 0;
+        while j + 8 <= c {
+            let mut av0 = vdupq_n_s32(0);
+            let mut av1 = vdupq_n_s32(0);
+            for kp in 0..pairs {
+                let x0 = xq[2 * kp] as i32;
+                let x1 = xq[2 * kp + 1] as i32;
+                // SAFETY: kp * c + j + 8 <= pairs * c = codes.len().
+                let bytes = vld1_u8(codes.as_ptr().add(kp * c + j));
+                let w = vmovl_u8(bytes);
+                let lo = vandq_u16(w, vdupq_n_u16(0xF));
+                let hi = vshrq_n_u16::<4>(w);
+                let lo0 = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(lo)));
+                let lo1 = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(lo)));
+                let hi0 = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(hi)));
+                let hi1 = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(hi)));
+                av0 = vmlaq_n_s32(av0, lo0, x0);
+                av0 = vmlaq_n_s32(av0, hi0, x1);
+                av1 = vmlaq_n_s32(av1, lo1, x0);
+                av1 = vmlaq_n_s32(av1, hi1, x1);
+            }
+            // SAFETY: j + 8 <= c <= acc.len().
+            vst1q_s32(acc.as_mut_ptr().add(j), av0);
+            vst1q_s32(acc.as_mut_ptr().add(j + 4), av1);
+            j += 8;
+        }
+        super::accum_tail(xq, codes, c, acc, j);
+    }
+}
+
+/// Scalar tail for the SIMD lanes: columns `[j0, c)` that don't fill a
+/// vector. Same exact integers, one column at a time.
+// faq-lint: accum(ascending-k) — widening i32 MAC; exact, order pinned.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn accum_tail(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32], j0: usize) {
+    for j in j0..c {
+        let mut s = 0i32;
+        for (kp, pair) in codes.chunks_exact(c).enumerate() {
+            let b = pair[j];
+            s += (xq[2 * kp] as i32) * ((b & 0xF) as i32)
+                + (xq[2 * kp + 1] as i32) * ((b >> 4) as i32);
+        }
+        acc[j] = s;
+    }
+}
+
+/// Dispatch to the SIMD lane. Only called when [`use_simd`] returned
+/// true, which implies the feature check passed.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn accum_group_simd(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32]) {
+    // SAFETY: use_simd() gates this path on simd_available(), and the
+    // slices come from PackedIntB's checked layout (codes is [pairs, c],
+    // acc is exactly c wide).
+    unsafe { lane::accum_group(xq, codes, c, acc) }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn accum_group_simd(xq: &[i8], codes: &[u8], c: usize, acc: &mut [i32]) {
+    accum_group_scalar(xq, codes, c, acc)
+}
+
+thread_local! {
+    /// Per-thread int scratch (the f32 [`super::arena`] can't hold i8/i32
+    /// rows): quantized activation row + one group-accumulator row.
+    /// Capacity is retained across calls, so steady-state decode makes
+    /// zero allocations (pinned by `benches/alloc_probe.rs`).
+    static SCRATCH: RefCell<(Vec<i8>, Vec<i32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// One activation row through the int path: quantize, accumulate each
+/// group with the chosen lane, fix up in f32. All f32 ops here are
+/// shared scalar code in a fixed (ascending-g, ascending-j) order — the
+/// lane choice only swaps how the exact i32 values are produced.
+fn row_int(
+    xs_row: &[f32],
+    b: &PackedIntB,
+    simd: bool,
+    xq: &mut [i8],
+    acc: &mut [i32],
+    out: &mut [f32],
+) {
+    let a_scale = quantize_row_i8(xs_row, xq);
+    let gp = b.group / 2;
+    for g in 0..b.k / b.group {
+        let xg = &xq[g * b.group..(g + 1) * b.group];
+        let mut rowsum = 0i32;
+        for &q in xg {
+            // faq-lint: accum(ascending-k) — i32 rowsum of the group, exact.
+            rowsum += q as i32;
+        }
+        let codes = &b.codes[g * gp * b.c..(g + 1) * gp * b.c];
+        if simd {
+            accum_group_simd(xg, codes, b.c, acc);
+        } else {
+            accum_group_scalar(xg, codes, b.c, acc);
+        }
+        let dg = &b.delta[g * b.c..(g + 1) * b.c];
+        let zg = &b.zero[g * b.c..(g + 1) * b.c];
+        let rs = rowsum as f32;
+        // The fixup: Σ_k xq·dequant(q) == Σ_g delta_g·(acc_g − zero_g·rowsum_g),
+        // accumulated per element in ascending-g order (bit-identical for
+        // every lane and thread count; the adds are f32, hence ordered).
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += dg[j] * (acc[j] as f32 - zg[j] * rs);
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= a_scale;
+    }
+}
+
+/// `out = intpath(xs [r, k] @ b [k, c])`: per-row dynamic i8 activation
+/// quantization feeding the fused int8×int4 kernel, `out` zero-initialized
+/// by the caller. Parallel over row blocks like the f32 matmuls; each
+/// output row is produced by exactly one task, so results are
+/// bit-identical for every thread count and kernel lane.
+pub fn matmul_int(xs: &Tensor, b: &PackedIntB, out: &mut [f32]) -> Result<()> {
+    if xs.shape().len() != 2 || xs.shape()[1] != b.k {
+        bail!("matmul_int {:?} @ packed [{}, {}]", xs.shape(), b.k, b.c);
+    }
+    let (r, k) = (xs.shape()[0], xs.shape()[1]);
+    let c = b.c;
+    if out.len() != r * c {
+        bail!("matmul_int out len {} != {r} * {c}", out.len());
+    }
+    let simd = use_simd();
+    let t = par::threads_for(r * k * c);
+    let a = xs.data();
+    par::par_row_blocks(out, c, t, |row0, block| {
+        SCRATCH.with(|s| {
+            let (xq, acc) = &mut *s.borrow_mut();
+            if xq.len() < k {
+                xq.resize(k, 0);
+            }
+            if acc.len() < c {
+                acc.resize(c, 0);
+            }
+            for (rr, orow) in block.chunks_mut(c).enumerate() {
+                let row = row0 + rr;
+                row_int(&a[row * k..(row + 1) * k], b, simd, &mut xq[..k], &mut acc[..c], orow);
+            }
+        });
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// Random int4 codes + dequant params shaped like a quantized linear.
+    fn random_packed(rng: &mut Rng, k: usize, c: usize, group: usize) -> (Tensor, Tensor, Tensor) {
+        let q: Vec<f32> = (0..k * c).map(|_| (rng.below(16)) as f32).collect();
+        let ng = k / group;
+        let delta: Vec<f32> = (0..ng * c).map(|_| 0.01 + rng.uniform() * 0.05).collect();
+        let zero: Vec<f32> = (0..ng * c).map(|_| (rng.below(16)) as f32).collect();
+        (
+            Tensor::from_vec(&[k, c], q).unwrap(),
+            Tensor::from_vec(&[ng, c], delta).unwrap(),
+            Tensor::from_vec(&[ng, c], zero).unwrap(),
+        )
+    }
+
+    /// Naive reference replaying the exact f32 op order of [`row_int`]
+    /// with i64 accumulators and no packing — the packing/kernels are
+    /// what's under test.
+    fn naive_int(xs: &Tensor, q: &Tensor, delta: &Tensor, zero: &Tensor, group: usize) -> Vec<f32> {
+        let (r, k) = (xs.shape()[0], xs.shape()[1]);
+        let c = q.shape()[1];
+        let mut out = vec![0.0f32; r * c];
+        let mut xq = vec![0i8; k];
+        for i in 0..r {
+            let a_scale = quantize_row_i8(xs.row(i), &mut xq);
+            for g in 0..k / group {
+                let rowsum: i64 = xq[g * group..(g + 1) * group]
+                    .iter()
+                    .map(|&v| v as i64)
+                    .sum();
+                for j in 0..c {
+                    let mut acc = 0i64;
+                    for l in g * group..(g + 1) * group {
+                        acc += xq[l] as i64 * q.at2(l, j) as i64;
+                    }
+                    out[i * c + j] += delta.at2(g, j)
+                        * (acc as i32 as f32 - zero.at2(g, j) * (rowsum as i32 as f32));
+                }
+            }
+            for o in &mut out[i * c..(i + 1) * c] {
+                *o *= a_scale;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rte_ties_go_to_even() {
+        assert_eq!(rte_i8(0.5), 0);
+        assert_eq!(rte_i8(1.5), 2);
+        assert_eq!(rte_i8(2.5), 2);
+        assert_eq!(rte_i8(-0.5), 0);
+        assert_eq!(rte_i8(-1.5), -2);
+        assert_eq!(rte_i8(-2.5), -2);
+        assert_eq!(rte_i8(3.2), 3);
+        assert_eq!(rte_i8(-3.7), -4);
+        assert_eq!(rte_i8(126.6), 127);
+        assert_eq!(rte_i8(200.0), 127);
+        assert_eq!(rte_i8(-200.0), -127);
+        assert_eq!(rte_i8(f32::NAN), 0);
+    }
+
+    #[test]
+    fn quantize_row_zero_and_roundtrip() {
+        let mut xq = vec![0i8; 4];
+        assert_eq!(quantize_row_i8(&[0.0; 4], &mut xq), 0.0);
+        assert!(xq.iter().all(|&v| v == 0));
+        // The absmax element lands exactly on ±127.
+        let s = quantize_row_i8(&[1.0, -2.0, 0.5, 0.0], &mut xq);
+        assert_eq!(xq[1], -127);
+        assert!((s * 127.0 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_codes_validates() {
+        let ok = Tensor::from_vec(&[4, 2], vec![0., 15., 7., 3., 1., 2., 4., 5.]).unwrap();
+        let d = Tensor::from_vec(&[2, 2], vec![0.1; 4]).unwrap();
+        let z = Tensor::from_vec(&[2, 2], vec![1.0; 4]).unwrap();
+        assert!(PackedIntB::from_codes(&ok, &d, &z, 2).is_ok());
+        // Non-integral and out-of-range codes are refused with a reason.
+        let bad = Tensor::from_vec(&[4, 2], vec![0.5; 8]).unwrap();
+        assert!(PackedIntB::from_codes(&bad, &d, &z, 2).is_err());
+        let wide = Tensor::from_vec(&[4, 2], vec![16.0; 8]).unwrap();
+        assert!(PackedIntB::from_codes(&wide, &d, &z, 2).is_err());
+        // Group must tile k in pairs; params must match [k/group, c].
+        assert!(PackedIntB::from_codes(&ok, &d, &z, 3).is_err());
+        assert!(PackedIntB::from_codes(&ok, &d, &z, 8).is_err());
+        let b = PackedIntB::from_codes(&ok, &d, &z, 2).unwrap();
+        assert_eq!((b.k(), b.c(), b.group()), (4, 2, 2));
+        assert_eq!(b.packed_bytes(), 4 + 8 * 4);
+    }
+
+    #[test]
+    fn matmul_int_matches_naive_all_lanes() {
+        let mut rng = Rng::new(11);
+        // Shapes straddle the 8-column vector edge (tails of 0..7).
+        let shapes = [(3usize, 8usize, 9usize, 4usize), (5, 64, 16, 64), (2, 32, 7, 8)];
+        for (r, k, c, group) in shapes {
+            let (q, d, z) = random_packed(&mut rng, k, c, group);
+            let b = PackedIntB::from_codes(&q, &d, &z, group).unwrap();
+            let xs = Tensor::randn(&mut rng, &[r, k], 1.0);
+            let want = naive_int(&xs, &q, &d, &z, group);
+            for kern in [IntKernel::Scalar, IntKernel::Simd] {
+                set_int_kernel(kern);
+                let mut out = vec![0.0f32; r * c];
+                matmul_int(&xs, &b, &mut out).unwrap();
+                for (g, w) in out.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "lane {kern:?}");
+                }
+            }
+            set_int_kernel(IntKernel::Auto);
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_bitwise_identical_across_threads() {
+        let mut rng = Rng::new(23);
+        let (q, d, z) = random_packed(&mut rng, 64, 33, 8);
+        let b = PackedIntB::from_codes(&q, &d, &z, 8).unwrap();
+        let xs = Tensor::randn(&mut rng, &[7, 64], 1.5);
+        set_int_kernel(IntKernel::Scalar);
+        let mut want = vec![0.0f32; 7 * 33];
+        matmul_int(&xs, &b, &mut want).unwrap();
+        for threads in [1usize, 2, 8] {
+            crate::tensor::par::set_threads(threads);
+            for kern in [IntKernel::Scalar, IntKernel::Simd] {
+                set_int_kernel(kern);
+                let mut out = vec![0.0f32; 7 * 33];
+                matmul_int(&xs, &b, &mut out).unwrap();
+                for (g, w) in out.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "lane {kern:?} threads {threads}");
+                }
+            }
+        }
+        crate::tensor::par::set_threads(0);
+        set_int_kernel(IntKernel::Auto);
+    }
+
+    #[test]
+    fn int_path_within_derived_bound_of_f32() {
+        let mut rng = Rng::new(37);
+        let (q, d, z) = random_packed(&mut rng, 64, 24, 8);
+        let b = PackedIntB::from_codes(&q, &d, &z, 8).unwrap();
+        let xs = Tensor::randn(&mut rng, &[4, 64], 1.0);
+        let mut out = vec![0.0f32; 4 * 24];
+        matmul_int(&xs, &b, &mut out).unwrap();
+        // f32 oracle: dequantize and matmul.
+        let wdq: Vec<f32> = (0..64 * 24)
+            .map(|i| {
+                let (l, j) = (i / 24, i % 24);
+                (q.at2(l, j) - z.at2(l / 8, j)) * d.at2(l / 8, j)
+            })
+            .collect();
+        let wt = Tensor::from_vec(&[64, 24], wdq.clone()).unwrap();
+        let want = xs.matmul(&wt).unwrap();
+        let mut xq = vec![0i8; 64];
+        for i in 0..4 {
+            let a_scale = quantize_row_i8(xs.row(i), &mut xq);
+            for j in 0..24 {
+                let col_l1: f64 = (0..64).map(|l| (wdq[l * 24 + j] as f64).abs()).sum();
+                let moment: f64 = (0..64)
+                    .map(|l| (wdq[l * 24 + j] as f64 * xs.at2(i, l) as f64).abs())
+                    .sum();
+                let bound = row_error_bound(a_scale, col_l1, moment, 64);
+                let err = (out[i * 24 + j] as f64 - want.at2(i, j) as f64).abs();
+                assert!(err <= bound, "err {err} > bound {bound} at ({i}, {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_agree_without_dispatch_globals() {
+        // Calls the group accumulators directly — no override atomic, no
+        // thread pool — so a lane bug cannot hide behind a concurrent
+        // test flipping the global dispatch state.
+        let mut rng = Rng::new(53);
+        for c in [1usize, 7, 8, 9, 24, 33] {
+            let pairs = 16;
+            let codes: Vec<u8> = (0..pairs * c).map(|_| rng.below(256) as u8).collect();
+            let xq: Vec<i8> = (0..2 * pairs).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let mut a = vec![0i32; c];
+            let mut b = vec![0i32; c];
+            accum_group_scalar(&xq, &codes, c, &mut a);
+            if simd_available() {
+                accum_group_simd(&xq, &codes, c, &mut b);
+                assert_eq!(a, b, "c = {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_from_str_parses_forced_dispatch() {
+        assert_eq!(kernel_from_str("scalar"), Some(IntKernel::Scalar));
+        assert_eq!(kernel_from_str(" simd\n"), Some(IntKernel::Simd));
+        assert_eq!(kernel_from_str("auto"), Some(IntKernel::Auto));
+        assert_eq!(kernel_from_str("avx512"), None);
+        // The active-kernel label is always one of the known lanes.
+        assert!(["scalar", "avx2", "neon"].contains(&active_kernel()));
+    }
+
+    #[test]
+    fn matmul_int_shape_checks() {
+        let q = Tensor::from_vec(&[4, 2], vec![1.0; 8]).unwrap();
+        let d = Tensor::from_vec(&[1, 2], vec![0.1; 2]).unwrap();
+        let z = Tensor::from_vec(&[1, 2], vec![0.0; 2]).unwrap();
+        let b = PackedIntB::from_codes(&q, &d, &z, 4).unwrap();
+        let xs = Tensor::zeros(&[2, 3]);
+        let mut out = vec![0.0f32; 4];
+        assert!(matmul_int(&xs, &b, &mut out).is_err()); // k mismatch
+        let xs = Tensor::zeros(&[2, 4]);
+        let mut short = vec![0.0f32; 3];
+        assert!(matmul_int(&xs, &b, &mut short).is_err());
+    }
+}

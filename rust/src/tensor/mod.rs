@@ -12,11 +12,13 @@
 //! artifact executed by [`crate::runtime`].
 
 pub mod arena;
+pub mod intkern;
 mod ops;
 pub mod par;
 mod rng;
 mod stats;
 
+pub use intkern::PackedIntB;
 pub use ops::PackedB;
 pub use rng::Rng;
 pub use stats::*;

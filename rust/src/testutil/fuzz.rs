@@ -307,6 +307,119 @@ pub fn differential_fuzz_case(seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Differential fuzz for the integer W4A8 decode path (DESIGN.md §17),
+/// one seed in, two contracts out:
+///
+/// 1. **Int-vs-int determinism** (always asserted): the int path is a
+///    deterministic function of the tokens fed — dense-int at 1 thread
+///    is the oracle, paged-int must match it bit for bit at 1/2/8
+///    threads (and dense-int at 8 threads closes the square). Kernel
+///    lane and thread count never change int logits, so any divergence
+///    here is a paging/scheduling bug, same as the f32 harness.
+/// 2. **Int-vs-f32 greedy agreement** (counted, asserted only with
+///    `require_exact`): int logits track the f32 prepared path within
+///    the derived bound, not bitwise, so greedy argmax can flip on
+///    near-tied logits. Every run reports per-request prefix agreement
+///    against the f32 oracle; pinned seeds (pre-screened for top-2
+///    margin, `tests/props.rs`) demand full-stream equality, fresh CI
+///    seeds (`FAQUANT_INT_SEED`) only report the count — they must
+///    never fail on margin luck alone.
+///
+/// The workload is the shared fuzz workload with sampling forced greedy
+/// (temperature/top_k randomness would compound a one-ULP probability
+/// shift into guaranteed divergence, pinning nothing).
+pub fn int_compute_fuzz_case(seed: u64, require_exact: bool) -> Result<()> {
+    let mut spec = FuzzSpec::from_seed(seed);
+    spec.temperature = 0.0;
+    spec.top_k = 0;
+    println!("int-compute fuzz seed {seed}: {spec:?}");
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, seed ^ 0x9E37);
+    let workload = build_workload(cfg.vocab, cfg.seq, &spec);
+    let f32_dense = GenConfig {
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed ^ 1,
+        slots: spec.slots,
+        paged: false,
+        ..GenConfig::default()
+    };
+    let int_dense = GenConfig {
+        int_compute: true,
+        ..f32_dense.clone()
+    };
+    let int_paged = GenConfig {
+        paged: true,
+        block_tokens: spec.block_tokens,
+        pool_blocks: spec.pool_blocks,
+        prefix_cache: true,
+        ..int_dense.clone()
+    };
+
+    par::set_threads(1);
+    let oracle_f32 = run_workload(&rt, &params, &qm, f32_dense, &workload, false);
+    let oracle_int = run_workload(&rt, &params, &qm, int_dense.clone(), &workload, false);
+    par::set_threads(0);
+    let oracle_f32 = oracle_f32?;
+    let oracle_int = oracle_int?;
+
+    // Contract 1: int-vs-int, bit for bit, across stores and threads.
+    for &threads in &[1usize, 2, 8] {
+        par::set_threads(threads);
+        let got = run_workload(&rt, &params, &qm, int_paged.clone(), &workload, true);
+        par::set_threads(0);
+        assert_streams_equal(
+            &oracle_int,
+            &got?,
+            &format!("paged-int vs dense-int oracle at {threads} threads (int seed {seed})"),
+        )?;
+    }
+    par::set_threads(8);
+    let int8t = run_workload(&rt, &params, &qm, int_dense, &workload, false);
+    par::set_threads(0);
+    assert_streams_equal(
+        &oracle_int,
+        &int8t?,
+        &format!("dense-int@8 vs dense-int@1 (int seed {seed})"),
+    )?;
+
+    // Contract 2: greedy agreement vs the f32 prepared oracle. Only the
+    // common prefix is comparable — after the first flipped token the
+    // two decodes condition on different contexts.
+    let mut agreed = 0usize;
+    let mut total = 0usize;
+    let mut flipped = 0usize;
+    for (f, i) in oracle_f32.iter().zip(&oracle_int) {
+        if f.id != i.id {
+            bail!("int seed {seed}: output ids diverge ({} vs {})", f.id, i.id);
+        }
+        let pre = f
+            .tokens
+            .iter()
+            .zip(&i.tokens)
+            .take_while(|(a, b)| a == b)
+            .count();
+        agreed += pre;
+        total += f.tokens.len().max(i.tokens.len());
+        if pre < f.tokens.len().max(i.tokens.len()) {
+            flipped += 1;
+        }
+    }
+    println!(
+        "int seed {seed}: int-vs-f32 greedy agreement {agreed}/{total} tokens \
+         ({flipped} of {} requests flipped)",
+        oracle_f32.len()
+    );
+    if require_exact {
+        assert_streams_equal(
+            &oracle_f32,
+            &oracle_int,
+            &format!("int vs f32 greedy streams (pinned int seed {seed})"),
+        )?;
+    }
+    Ok(())
+}
+
 /// Trace-determinism pin (DESIGN.md §15), one seed in, two contracts out:
 ///
 /// 1. **Observer effect**: enabling tracing must not perturb generation —

@@ -14,7 +14,7 @@ use faquant::quant::{
 use faquant::runtime::{lit_f32, lit_i32, Buffer, Runtime, Value};
 use faquant::serve::qmodel_literals;
 use faquant::store::TensorStore;
-use faquant::tensor::{par, Rng, Tensor, TensorI32};
+use faquant::tensor::{intkern, par, Rng, Tensor, TensorI32};
 use faquant::serve::{route_affinity, RouterConfig};
 use faquant::testutil::{faults, fixtures, forall, fuzz, router_faults, Pair, TensorGen, UsizeIn};
 
@@ -741,6 +741,147 @@ fn fuzz_differential_env_seed() {
         .unwrap_or_else(|_| panic!("FAQUANT_FUZZ_SEED must be a u64, got '{raw}'"));
     println!("running fresh-seed differential fuzz: FAQUANT_FUZZ_SEED={seed}");
     fuzz::differential_fuzz_case(seed).unwrap();
+}
+
+// ------------------------------------------ int8×int4 compute path (W4A8)
+
+// THE ISSUE-10 contract (DESIGN.md §17): the integer compute path is
+// pinned twice over. WITHIN the int path every step is exact integer
+// arithmetic plus a deterministic f32 fixup, so results are bitwise
+// identical across thread counts AND across kernel lanes (scalar vs
+// SIMD) — a forced-dispatch bit-equality test, not a tolerance. AGAINST
+// the f32 path the int path runs a different activation quantizer, so
+// the contract there is a *derived* tolerance: per output element, the
+// half-step bound computed from the quantizer's own constants
+// (`intkern::row_error_bound`) — no hand-tuned epsilon anywhere.
+
+#[test]
+fn int_linear_within_derived_bound_of_f32_for_every_linear() {
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, 91);
+    let lits = qmodel_literals(&params, &qm).unwrap();
+    let bufs = rt.prepare_qweights(&cfg.name, &lits).unwrap();
+    let Buffer::PreparedQ(pm) = &bufs[0] else {
+        panic!("native prepare_qweights must return a prepared bundle");
+    };
+    assert_eq!(pm.int_reason(), None, "pico RTN bundle must pack int panels");
+    let mut rng = Rng::new(4242);
+    let rows = 5usize;
+    let mut max_err = 0.0f64;
+    for b in 0..cfg.n_layer {
+        // ROLES order (qkv, o, up, down): input widths from the config.
+        let widths = [cfg.d_model, cfg.d_model, cfg.d_model, cfg.d_ff];
+        for (role, &k) in widths.iter().enumerate() {
+            let x = Tensor::randn(&mut rng, &[rows, k], 1.0);
+            let (xs, wdq, yf, yi) = pm.qlin_diff(b, role, &x).unwrap();
+            let c = wdq.shape()[1];
+            let mut xq = vec![0i8; k];
+            for r in 0..rows {
+                let a_scale = intkern::quantize_row_i8(xs.row(r), &mut xq);
+                for j in 0..c {
+                    let col_l1: f64 = (0..k).map(|l| (wdq.at2(l, j) as f64).abs()).sum();
+                    let moment: f64 = (0..k)
+                        .map(|l| (wdq.at2(l, j) as f64 * xs.at2(r, l) as f64).abs())
+                        .sum();
+                    let bound = intkern::row_error_bound(a_scale, col_l1, moment, k);
+                    let err = (yi.at2(r, j) as f64 - yf.at2(r, j) as f64).abs();
+                    assert!(
+                        err <= bound,
+                        "block {b} role {role} ({r}, {j}): err {err} > derived bound {bound}"
+                    );
+                    max_err = max_err.max(err);
+                }
+            }
+        }
+    }
+    // The tolerance is doing real work: the two paths genuinely differ.
+    assert!(max_err > 0.0, "int and f32 paths never differed — vacuous bound");
+}
+
+#[test]
+fn int_fwd_logits_bitwise_stable_across_threads_and_lanes() {
+    // Forcing the kernel lane mid-run is safe for concurrently running
+    // tests: the lanes are bitwise interchangeable (pinned by intkern's
+    // in-module tests), so a dispatch flip never changes any output.
+    let rt = Runtime::native();
+    let (cfg, params, qm) = fixtures::quantized_pico(&rt, Method::Rtn, 58);
+    let (b, t) = (4usize, 16usize);
+    let mut rng = Rng::new(777);
+    let toks = TensorI32::from_vec(
+        &[b, t],
+        (0..b * t).map(|_| rng.below(cfg.vocab) as i32).collect(),
+    )
+    .unwrap();
+    let lits = qmodel_literals(&params, &qm).unwrap();
+    let bufs = rt.prepare_qweights(&cfg.name, &lits).unwrap();
+    let tok_buf = rt.upload_i32(&toks).unwrap();
+    let mut bargs: Vec<&Buffer> = bufs.iter().collect();
+    bargs.push(&tok_buf);
+
+    let run = |kernel: intkern::IntKernel, threads: usize| -> Tensor {
+        intkern::set_int_kernel(kernel);
+        par::set_threads(threads);
+        let outs = rt.exec_b(&cfg.name, "fwd_logits_qi", &bargs).unwrap();
+        par::set_threads(0);
+        intkern::set_int_kernel(intkern::IntKernel::Auto);
+        outs[0].as_f32().unwrap().clone()
+    };
+    let base = run(intkern::IntKernel::Scalar, 1);
+    for &threads in &[2usize, 8] {
+        let got = run(intkern::IntKernel::Scalar, threads);
+        let ctx = format!("int logits, scalar lane at {threads} threads");
+        assert_bits_eq(got.data(), base.data(), &ctx);
+    }
+    if intkern::simd_available() {
+        for &threads in &[1usize, 2, 8] {
+            let got = run(intkern::IntKernel::Simd, threads);
+            let ctx = format!("int logits, simd lane at {threads} threads");
+            assert_bits_eq(got.data(), base.data(), &ctx);
+        }
+    } else {
+        println!("no SIMD int lane on this host; scalar-only bit-stability checked");
+    }
+}
+
+// Pinned int-compute seeds: `require_exact` demands the int greedy
+// streams match the f32 prepared oracle token for token. That is NOT
+// true of arbitrary seeds (the int path is a different quantizer; a
+// near-tied argmax can legitimately flip) — these three were screened
+// offline for comfortable top-2 margins on every greedy position of
+// both paths, so they pin exact agreement stably. Fresh CI seeds go
+// through `int_compute_env_seed` below, which checks every bitwise
+// contract but not exactness-vs-f32.
+
+#[test]
+fn int_compute_pinned_seed_a() {
+    fuzz::int_compute_fuzz_case(0xFAC7_10D4, true).unwrap();
+}
+
+#[test]
+fn int_compute_pinned_seed_b() {
+    fuzz::int_compute_fuzz_case(0xFAC7_11A6, true).unwrap();
+}
+
+#[test]
+fn int_compute_pinned_seed_c() {
+    fuzz::int_compute_fuzz_case(0xFAC7_2102, true).unwrap();
+}
+
+/// CI's fresh-seed entry: `FAQUANT_INT_SEED=<u64>` (the int-smoke job
+/// derives it from the run id and echoes it, so any failure reproduces
+/// locally with the same variable). A no-op when the variable is unset.
+#[test]
+fn int_compute_env_seed() {
+    let Ok(raw) = std::env::var("FAQUANT_INT_SEED") else {
+        println!("FAQUANT_INT_SEED unset; skipping the fresh-seed int-compute run");
+        return;
+    };
+    let seed: u64 = raw
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("FAQUANT_INT_SEED must be a u64, got '{raw}'"));
+    println!("running fresh-seed int-compute fuzz: FAQUANT_INT_SEED={seed}");
+    fuzz::int_compute_fuzz_case(seed, false).unwrap();
 }
 
 // --------------------------------- request lifecycle: fault injection

@@ -15,6 +15,15 @@
 //!   `// faq-lint: allow(unordered-reduction)`. Folds seeded with
 //!   `f32::INFINITY`/`NEG_INFINITY`/`MIN`/`MAX` are per-element
 //!   min/max comparisons, not accumulations, and are exempt.
+//! - `int-accum-order` (D2b): widening integer accumulation in kernel
+//!   modules — `+= .. as i32/i64` statements and integer-SIMD
+//!   accumulate intrinsics (`_mm*_add_epi*`, `vmla*`, `vaddq_s*`) —
+//!   must carry a `// faq-lint: accum(ascending-k)` marker. The i32
+//!   sums are exact, so their *value* is order-independent; the marker
+//!   pins the traversal-order convention that licenses the scalar and
+//!   SIMD int kernels (`tensor/intkern.rs`, DESIGN.md §17) to claim
+//!   bit-identity with each other. A stale marker is flagged like a
+//!   stale allow.
 //! - `panic-in-serve` (D3): no `unwrap()`/`expect()`/panic-family
 //!   macros/direct indexing on the request-serving path (`serve/`,
 //!   `engine/scheduler.rs`, `engine/lifecycle.rs`) — structured
@@ -53,6 +62,7 @@ use std::path::Path;
 pub enum Rule {
     HashIteration,
     UnorderedReduction,
+    IntAccumOrder,
     PanicInServe,
     MissingSafety,
     TimeOrEnv,
@@ -65,6 +75,7 @@ impl Rule {
         match self {
             Rule::HashIteration => "hash-iteration",
             Rule::UnorderedReduction => "unordered-reduction",
+            Rule::IntAccumOrder => "int-accum-order",
             Rule::PanicInServe => "panic-in-serve",
             Rule::MissingSafety => "missing-safety",
             Rule::TimeOrEnv => "time-or-env",
@@ -77,6 +88,7 @@ impl Rule {
         match s {
             "hash-iteration" => Some(Rule::HashIteration),
             "unordered-reduction" => Some(Rule::UnorderedReduction),
+            "int-accum-order" => Some(Rule::IntAccumOrder),
             "panic-in-serve" => Some(Rule::PanicInServe),
             "missing-safety" => Some(Rule::MissingSafety),
             "time-or-env" => Some(Rule::TimeOrEnv),
@@ -539,6 +551,10 @@ struct Marker {
     start: usize,
     end: usize,
     used: bool,
+    /// An `accum(ascending-k)` ordering marker rather than an
+    /// `allow(..)` suppression — same span rules, different stale
+    /// message.
+    accum: bool,
 }
 
 fn collect_markers(lx: &Lexed, tmask: &[bool]) -> Vec<Marker> {
@@ -560,12 +576,26 @@ fn collect_markers(lx: &Lexed, tmask: &[bool]) -> Vec<Marker> {
                         start,
                         end,
                         used: false,
+                        accum: false,
                     });
                 }
                 rest = &after[close + 1..];
             } else {
                 break;
             }
+        }
+        let mut rest = text.as_str();
+        while let Some(p) = rest.find("faq-lint: accum(ascending-k)") {
+            let (start, end) = marker_range(lx, line);
+            out.push(Marker {
+                line,
+                rule: Rule::IntAccumOrder,
+                start,
+                end,
+                used: false,
+                accum: true,
+            });
+            rest = &rest[p + "faq-lint: accum(ascending-k)".len()..];
         }
     }
     out
@@ -933,6 +963,76 @@ fn rule_unordered_reduction(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>)
     }
 }
 
+/// int-accum-order (D2b): widening integer accumulation sites in
+/// kernel modules must carry a `// faq-lint: accum(ascending-k)`
+/// marker. Two idioms are recognized: a `+=` statement whose
+/// right-hand side widens with `as i32`/`as i64`, and integer-SIMD
+/// accumulate intrinsics (`_mm*_add_epi*`, `vmla*`, `vaddq_s*`). The
+/// exact i32 sums are order-independent in *value*; the marker keeps
+/// the ascending-k traversal convention auditable, which is what lets
+/// the scalar and SIMD int kernels claim bit-identity.
+fn rule_int_accum_order(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if tmask[line] {
+            continue;
+        }
+        if let Some(w) = ident(t, i) {
+            let simd_acc = (w.starts_with("_mm") && w.contains("add_epi"))
+                || w.starts_with("vmla")
+                || w.starts_with("vaddq_s");
+            if simd_acc {
+                out.push(Finding {
+                    path: String::new(),
+                    line,
+                    rule: Rule::IntAccumOrder,
+                    message: format!(
+                        "integer-SIMD accumulate `{w}` without an \
+                         `accum(ascending-k)` marker — pin the traversal-order \
+                         convention on the enclosing fn"
+                    ),
+                });
+                continue;
+            }
+        }
+        if !(is_p(t, i, '+') && is_p(t, i + 1, '=')) {
+            continue;
+        }
+        // Scan the right-hand side (to the `;` ending the statement) for
+        // a widening integer cast.
+        let mut depth = 0i32;
+        let mut j = i + 2;
+        while j < t.len() {
+            match &t[j].kind {
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                    if depth == 0 {
+                        break;
+                    }
+                    depth -= 1;
+                }
+                Tok::Punct(';') if depth == 0 => break,
+                Tok::Ident(w) if w == "as" => {
+                    if matches!(ident(t, j + 1), Some("i32") | Some("i64")) {
+                        out.push(Finding {
+                            path: String::new(),
+                            line,
+                            rule: Rule::IntAccumOrder,
+                            message: "widening integer `+=` accumulation without an \
+                                      `accum(ascending-k)` marker — pin the traversal \
+                                      order the loop runs in"
+                                .to_string(),
+                        });
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+}
+
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
 
 fn rule_panic_in_serve(t: &[Token], tmask: &[bool], out: &mut Vec<Finding>) {
@@ -1131,6 +1231,7 @@ pub fn lint_source_at(rel_path: &str, display_path: &str, src: &str) -> Vec<Find
     }
     if scope.d2 {
         rule_unordered_reduction(&lx.tokens, &tmask, &mut raw);
+        rule_int_accum_order(&lx.tokens, &tmask, &mut raw);
     }
     if scope.d3 {
         rule_panic_in_serve(&lx.tokens, &tmask, &mut raw);
@@ -1160,10 +1261,13 @@ pub fn lint_source_at(rel_path: &str, display_path: &str, src: &str) -> Vec<Find
                 path: String::new(),
                 line: m.line,
                 rule: Rule::UnusedAllow,
-                message: format!(
-                    "allow({}) marker suppresses nothing — remove it",
-                    m.rule.name()
-                ),
+                message: if m.accum {
+                    "accum(ascending-k) marker covers no integer accumulation — \
+                     remove it"
+                        .to_string()
+                } else {
+                    format!("allow({}) marker suppresses nothing — remove it", m.rule.name())
+                },
             });
         }
     }
@@ -1340,6 +1444,30 @@ mod tests {
         // a finding, so stale exemptions cannot accumulate.
         let stale = "// faq-lint: allow(unordered-reduction) — stale\npub fn f(x: f32) -> f32 {\n    x\n}\n";
         assert_eq!(rules("tensor/x.rs", stale), vec![(1, Rule::UnusedAllow)]);
+    }
+
+    #[test]
+    fn int_accum_order_covers_intkern_scope() {
+        // tensor/intkern.rs sits in the kernel scope: both the D2 float
+        // rule and the D2b integer rule run there. This pin keeps a
+        // future scope refactor from silently dropping the int kernel.
+        let src = "pub fn f(xq: &[i8]) -> i32 {\n    let mut s = 0i32;\n    for &q in xq {\n        s += q as i32;\n    }\n    s\n}\n";
+        assert_eq!(
+            rules("tensor/intkern.rs", src),
+            vec![(4, Rule::IntAccumOrder)]
+        );
+        assert!(rules("engine/mod.rs", src).is_empty());
+        let marked = "// faq-lint: accum(ascending-k) — in slice order\npub fn f(xq: &[i8]) -> i32 {\n    let mut s = 0i32;\n    for &q in xq {\n        s += q as i32;\n    }\n    s\n}\npub fn g(xs: &[f32]) -> f32 {\n    xs.iter().sum()\n}\n";
+        assert_eq!(
+            rules("tensor/intkern.rs", marked),
+            vec![(10, Rule::UnorderedReduction)]
+        );
+        // A stale accum marker is flagged just like a stale allow.
+        let stale = "// faq-lint: accum(ascending-k) — stale\npub fn f(x: i32) -> i32 {\n    x\n}\n";
+        assert_eq!(
+            rules("tensor/intkern.rs", stale),
+            vec![(1, Rule::UnusedAllow)]
+        );
     }
 
     #[test]

@@ -75,6 +75,31 @@ fn d2_unordered_reduction() {
 }
 
 #[test]
+fn d2b_int_accum_order() {
+    // Both recognized idioms trip: the widening `+= .. as i32` MAC and
+    // rowsum loops (lines 4, 12), and the integer-SIMD accumulate
+    // intrinsics (lines 19, 20).
+    assert_eq!(
+        hits("int-accum-fail"),
+        vec![
+            ("tensor/mac.rs".to_string(), 4, Rule::IntAccumOrder),
+            ("tensor/mac.rs".to_string(), 12, Rule::IntAccumOrder),
+            ("tensor/mac.rs".to_string(), 19, Rule::IntAccumOrder),
+            ("tensor/mac.rs".to_string(), 20, Rule::IntAccumOrder),
+        ]
+    );
+    // Scope precision: the identical accumulation in engine/ is outside
+    // the kernel scope and must not be flagged.
+    assert!(
+        !hits("int-accum-fail").iter().any(|(p, _, _)| p == "engine/mix.rs"),
+        "engine/ is outside the int-accum-order scope"
+    );
+    // Marked fns (fn-level and statement-level markers), float and usize
+    // accumulators, all clean — and no stale-marker findings either.
+    expect_clean("int-accum-pass");
+}
+
+#[test]
 fn d3_panic_in_serve() {
     assert_eq!(
         hits("d3-fail"),
@@ -173,6 +198,7 @@ fn canary_tree_trips_every_rule() {
             ("runtime/registry.rs".to_string(), 7, Rule::HashIteration),
             ("serve/mod.rs".to_string(), 2, Rule::PanicInServe),
             ("serve/mod.rs".to_string(), 5, Rule::UntrackedClock),
+            ("tensor/intmac.rs".to_string(), 4, Rule::IntAccumOrder),
             ("tensor/kernel.rs".to_string(), 2, Rule::UnorderedReduction),
             ("tensor/kernel.rs".to_string(), 5, Rule::TimeOrEnv),
             ("tensor/kernel.rs".to_string(), 6, Rule::TimeOrEnv),

@@ -1,0 +1,7 @@
+pub fn unmarked_mac(xq: &[i8], codes: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for (x, b) in xq.iter().zip(codes) {
+        acc += (*x as i32) * ((*b & 0xF) as i32);
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+pub fn histogram_total(counts: &[u8]) -> i32 {
+    let mut total = 0i32;
+    for &c in counts {
+        total += c as i32;
+    }
+    total
+}

@@ -1,0 +1,22 @@
+pub fn dot_q(xq: &[i8], codes: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for (x, b) in xq.iter().zip(codes) {
+        acc += (*x as i32) * ((*b & 0xF) as i32);
+    }
+    acc
+}
+
+pub fn rowsum(xq: &[i8]) -> i32 {
+    let mut s = 0i32;
+    for &q in xq {
+        s += q as i32;
+    }
+    s
+}
+
+pub unsafe fn accum_lane(acc: *mut i32) {
+    // SAFETY: fixture; the intrinsic name alone is what the rule sees.
+    let av = _mm256_add_epi32(acc, acc);
+    let bv = vmlaq_n_s32(av, av, 2);
+    drop(bv);
+}

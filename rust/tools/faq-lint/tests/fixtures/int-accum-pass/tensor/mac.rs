@@ -1,0 +1,34 @@
+// faq-lint: accum(ascending-k) — exact i32 MAC, traversal pinned ascending.
+pub fn dot_q(xq: &[i8], codes: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for (x, b) in xq.iter().zip(codes) {
+        acc += (*x as i32) * ((*b & 0xF) as i32);
+    }
+    acc
+}
+
+pub fn rowsum(xq: &[i8]) -> i32 {
+    let mut s = 0i32;
+    for &q in xq {
+        // faq-lint: accum(ascending-k) — exact i32 sum in slice order.
+        s += q as i32;
+    }
+    s
+}
+
+// faq-lint: accum(ascending-k) — same integers as the scalar lane.
+pub unsafe fn accum_lane(acc: *mut i32) {
+    // SAFETY: fixture; the intrinsic name alone is what the rule sees.
+    let av = _mm256_add_epi32(acc, acc);
+    drop(av);
+}
+
+pub fn float_and_index_accum(xs: &[f32]) -> (f32, usize) {
+    let mut total = 0.0f32;
+    let mut steps = 0usize;
+    for &x in xs {
+        total += x * 2.0;
+        steps += 1;
+    }
+    (total, steps)
+}
